@@ -1,0 +1,148 @@
+"""AOT exporter: lower every registered model to HLO text + metadata.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax≥0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model entry this writes into --out:
+  <name>_fwdbwd.hlo.txt    (flat_params, *batch)  -> (loss, flat_grads)
+  <name>_predict.hlo.txt   (flat_params, *inputs) -> (outputs...)
+  <name>.meta.json         input/output specs, param layout, batch sizes
+  <name>.params.bin        initial flat params, little-endian f32
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+from jax.flatten_util import ravel_pytree
+
+from . import model as registry
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def _param_layout(params):
+    """Flat offsets per leaf, in ravel_pytree order (sorted dict keys)."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    layout, off = [], 0
+    for path, leaf in leaves:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        layout.append({
+            "name": jax.tree_util.keystr(path),
+            "offset": off,
+            "size": size,
+            "shape": list(leaf.shape),
+        })
+        off += size
+    return layout, off
+
+
+def export_entry(name: str, entry, out_dir: str) -> dict:
+    mod, cfg = entry.module, entry.module.config(entry.scale)
+    params = mod.init_params(jax.random.PRNGKey(42), entry.scale if False else cfg)
+    flat, unravel = ravel_pytree(params)
+    flat = flat.astype(jnp.float32)
+    layout, total = _param_layout(params)
+    assert total == flat.shape[0], f"{name}: layout {total} != flat {flat.shape[0]}"
+
+    meta = {
+        "name": name,
+        "scale": entry.scale,
+        "param_count": total,
+        "param_layout": layout,
+        "config": {k: (list(v) if isinstance(v, tuple) else v) for k, v in cfg.items()},
+        "entries": {},
+    }
+
+    pspec = jax.ShapeDtypeStruct((total,), jnp.float32)
+
+    if entry.train_batch > 0:
+        bspec = mod.batch_spec(cfg, entry.train_batch)
+
+        def fwd_bwd(flat_params, *batch):
+            def loss_of(fp):
+                return mod.loss_fn(unravel(fp), batch, cfg)
+
+            loss, grads = jax.value_and_grad(loss_of)(flat_params)
+            return loss, grads
+
+        lowered = jax.jit(fwd_bwd).lower(pspec, *bspec)
+        path = os.path.join(out_dir, f"{name}_fwdbwd.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        meta["entries"]["fwd_bwd"] = {
+            "file": os.path.basename(path),
+            "batch_size": entry.train_batch,
+            "inputs": [_spec_json(pspec)] + [_spec_json(s) for s in bspec],
+            "outputs": [
+                {"shape": [], "dtype": "float32"},
+                {"shape": [total], "dtype": "float32"},
+            ],
+        }
+
+    if entry.predict_batch > 0:
+        ispec = mod.predict_spec(cfg, entry.predict_batch)
+
+        def predict(flat_params, *inputs):
+            return mod.predict_fn(unravel(flat_params), inputs, cfg)
+
+        lowered = jax.jit(predict).lower(pspec, *ispec)
+        path = os.path.join(out_dir, f"{name}_predict.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        out_shapes = jax.eval_shape(predict, pspec, *ispec)
+        meta["entries"]["predict"] = {
+            "file": os.path.basename(path),
+            "batch_size": entry.predict_batch,
+            "inputs": [_spec_json(pspec)] + [_spec_json(s) for s in ispec],
+            "outputs": [_spec_json(s) for s in out_shapes],
+        }
+
+    np.asarray(flat).astype("<f4").tofile(os.path.join(out_dir, f"{name}.params.bin"))
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of model names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = args.only or list(registry.ENTRIES)
+    for name in names:
+        entry = registry.ENTRIES[name]
+        meta = export_entry(name, entry, args.out)
+        sizes = {k: v["batch_size"] for k, v in meta["entries"].items()}
+        print(f"[aot] {name}: params={meta['param_count']} entries={sizes}")
+    # Build stamp consumed by the Makefile.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("\n".join(sorted(names)) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the model HLO).
+
+NOTE: function re-exports deliberately avoid shadowing the submodules
+(`kernels.layernorm` stays importable as a module).
+"""
+
+from . import layernorm, matmul, ref  # noqa: F401  (submodules)
+from .matmul import matmul_bias_act, mxu_utilization, vmem_bytes  # noqa: F401

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: fused LayerNorm (mean/var/normalize/scale/shift).
+
+Row-blocked: each grid step loads a [bm, D] tile into VMEM, computes the
+row statistics and writes the normalized tile — one HBM read + one write
+per element instead of the ~4 passes a naive composition would take.
+Used by the transformer LM blocks. interpret=True on this image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128  # rows per tile
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def layernorm(x, gamma, beta, *, eps: float = 1e-5, bm: int = BM,
+              interpret: bool = True):
+    """LayerNorm over the last axis of x: [M, D] -> [M, D]."""
+    m, d = x.shape
+    bm = min(bm, max(8, ((m + 7) // 8) * 8))
+    rem = (-m) % bm
+    xp = jnp.pad(x, ((0, rem), (0, 0))) if rem else x
+    grid = (xp.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, gamma, beta)
+    return out[:m]

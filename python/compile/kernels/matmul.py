@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the MXU hot-spot of every model in the repo (NCF MLP towers,
+transformer projections/FFN, text-classifier dense layers, im2col conv).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): BigDL's per-replica hot
+spot is a cache-blocked MKL GEMM on Xeon; here the same insight is expressed
+as a VMEM-tiled Pallas kernel targeting the MXU systolic array:
+
+  * grid = (M/bm, N/bn, K/bk); the K axis is the innermost ("arbitrary")
+    grid dimension so the f32 accumulator block stays resident in VMEM
+    across the whole K loop (revisiting the same output block),
+  * the bias add + activation run as a fused epilogue on the last K step,
+    saving an HBM round-trip (the analogue of MKL-DNN post-ops),
+  * block shapes default to MXU-friendly 128x128 (8x128 lane layout).
+
+On this image Pallas MUST run with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is checked against kernels.ref, and TPU
+efficiency is *estimated* from the BlockSpec footprint (see tools/vmem.py
+and EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-friendly tile sizes. bm/bn match the 128x128 systolic array;
+# bk=128 keeps x/w tiles at 64KiB each (f32) so tiles + accumulator fit
+# comfortably in ~16MiB VMEM with room for double-buffering.
+BM, BN, BK = 128, 128, 128
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]; epilogue at k=nk-1.
+
+    The output block is revisited for every k, so it doubles as the VMEM
+    accumulator (avoids a scratch buffer; f32 accumulate as on the MXU).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        act = _ACTIVATIONS[activation]
+        o_ref[...] = act(o_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _pad_to(x, multiples):
+    pads = []
+    for dim, m in zip(x.shape, multiples):
+        rem = (-dim) % m
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def matmul_bias_act(
+    x,
+    w,
+    b,
+    *,
+    activation: str = "none",
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+    interpret: bool = True,
+):
+    """act(x @ w + b) with a Pallas tiled kernel.
+
+    x: [M, K], w: [K, N], b: [N] (broadcast over rows). Arbitrary M/K/N —
+    inputs are zero-padded up to the tile grid and the result is sliced
+    back (zero padding is exact for matmul; the epilogue runs on padded
+    tiles but padded rows/cols are discarded).
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    # Shrink blocks for small operands so tiny layers don't pay for padding.
+    bm, bn, bk = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
+
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    bp = _pad_to(b, (bn,))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _ceil_mult(dim: int, lane: int = 8) -> int:
+    """Smallest lane-aligned block covering `dim` (≥8 keeps TPU lane layout)."""
+    return max(lane, ((dim + lane - 1) // lane) * lane)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, dtype_bytes: int = 4,
+               double_buffered: bool = True) -> int:
+    """Static VMEM footprint estimate for a tile configuration.
+
+    x tile + w tile (double-buffered input streams) + resident accumulator
+    + bias tile. Used by tools/vmem.py for the §Perf roofline estimate.
+    """
+    streams = (bm * bk + bk * bn + bn) * dtype_bytes
+    if double_buffered:
+        streams *= 2
+    acc = bm * bn * 4  # f32 accumulator
+    return streams + acc
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int = BM, bn: int = BN,
+                    bk: int = BK) -> float:
+    """Fraction of MXU tile work that is useful (non-padding) FLOPs."""
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    return (m * n * k) / float(gm * bm * gn * bn * gk * bk)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package has an exact (up to float tolerance) reference
+here; python/tests/test_kernels.py sweeps shapes/dtypes/activations and
+asserts allclose between kernel and oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+def matmul_bias_act(x, w, b, *, activation: str = "none"):
+    """Reference for kernels.matmul.matmul_bias_act."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y = y + b.astype(jnp.float32)
+    return _ACTIVATIONS[activation](y).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, *, eps: float = 1e-5):
+    """Reference for kernels.layernorm.layernorm."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)

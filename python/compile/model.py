@@ -1,0 +1,53 @@
+"""Layer-2 entry point: the registry of models AOT-exported to artifacts/.
+
+Each entry names a model module (see models/), a config scale, and the
+static batch sizes baked into the exported HLO. The Rust coordinator pads
+partial minibatches up to these sizes (meta.json records them).
+
+The per-model train batch here is the *per-replica* (per-Spark-task)
+minibatch; BigDL's global batch = per-replica batch × #partitions.
+"""
+
+from dataclasses import dataclass
+from typing import Any
+
+from .models import ncf
+
+
+@dataclass(frozen=True)
+class Entry:
+    module: Any
+    scale: str
+    train_batch: int
+    predict_batch: int
+
+
+# Registry; aot.py exports every entry (or a --only subset).
+ENTRIES = {
+    "ncf": Entry(ncf, "small", 128, 512),
+}
+
+
+def register(name: str, entry: Entry) -> None:
+    ENTRIES[name] = entry
+
+
+def _late_registrations() -> None:
+    """Models added after the initial NCF bring-up; kept in one place so a
+    broken model import fails loudly at export time, not import time."""
+    from .models import inception_lite, transformer, convlstm, textclf, detector
+
+    register("inception_lite", Entry(inception_lite, "small", 32, 64))
+    register("transformer", Entry(transformer, "small", 8, 8))
+    register("transformer_e2e", Entry(transformer, "e2e", 8, 8))
+    register("convlstm", Entry(convlstm, "small", 4, 4))
+    register("textclf", Entry(textclf, "small", 32, 128))
+    register("ssd_lite", Entry(detector.SSD_LITE, "small", 0, 16))
+    register("deepbit_lite", Entry(detector.DEEPBIT_LITE, "small", 0, 32))
+
+
+try:
+    _late_registrations()
+except ImportError:
+    # During incremental bring-up only NCF exists; aot --only ncf still works.
+    pass

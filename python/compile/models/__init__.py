@@ -1,0 +1,1 @@
+"""Layer-2 model zoo (build-time; each model exports fwd_bwd + predict)."""

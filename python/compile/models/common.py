@@ -1,0 +1,164 @@
+"""Shared L2 building blocks: Pallas-backed dense layer, LayerNorm, inits.
+
+`dense` is the bridge between L2 (jax models) and L1 (Pallas kernels):
+forward is the fused matmul+bias+activation kernel, and — because
+`pallas_call` is not generically differentiable — backward is a custom VJP
+whose three GEMMs (dx, dw, and the activation-gradient producer) also run
+through the Pallas kernel, so the *entire* training hot path lowers to the
+same tiled kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul as mm
+from ..kernels.layernorm import layernorm as _ln_kernel
+
+# Activation derivatives expressible from the *output* y = act(z) — lets the
+# VJP avoid stashing the pre-activation.
+_ACT_GRAD_FROM_Y = {
+    "none": lambda y: jnp.ones_like(y),
+    "relu": lambda y: (y > 0).astype(y.dtype),
+    "sigmoid": lambda y: y * (1.0 - y),
+    "tanh": lambda y: 1.0 - jnp.square(y),
+}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="none"):
+    """act(x @ w + b) via the L1 Pallas kernel, differentiable.
+
+    x: [M, K], w: [K, N], b: [N]. activation ∈ {none, relu, sigmoid, tanh}.
+    """
+    return mm.matmul_bias_act(x, w, b, activation=activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = mm.matmul_bias_act(x, w, b, activation=activation)
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, y = res
+    dz = dy * _ACT_GRAD_FROM_Y[activation](y)
+    zeros_k = jnp.zeros((w.shape[0],), dtype=x.dtype)
+    zeros_n = jnp.zeros((w.shape[1],), dtype=x.dtype)
+    # dx = dz @ w.T ; dw = x.T @ dz — both through the Pallas kernel.
+    dx = mm.matmul_bias_act(dz, w.T, zeros_k, activation="none")
+    dw = mm.matmul_bias_act(x.T, dz, zeros_n, activation="none")
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@jax.custom_vjp
+def layer_norm(x, gamma, beta):
+    """LayerNorm over the last axis via the fused L1 kernel. x: [M, D]."""
+    return _ln_kernel(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    return _ln_kernel(x, gamma, beta), (x, gamma)
+
+
+def _ln_bwd(res, dy):
+    x, gamma = res
+    eps = 1e-5
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mean) * inv
+    dyf = dy.astype(jnp.float32)
+    dgamma = jnp.sum(dyf * xhat, axis=0)
+    dbeta = jnp.sum(dyf, axis=0)
+    dxhat = dyf * gamma
+    d = x.shape[-1]
+    dx = (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    ) * inv
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype), dbeta.astype(gamma.dtype)
+
+
+layer_norm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (mirroring BigDL's Torch-style defaults).
+
+
+def glorot(rng, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, dtype, -lim, lim)
+
+
+def normal(rng, shape, scale=0.01, dtype=jnp.float32):
+    return scale * jax.random.normal(rng, shape, dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def mlp_params(rng, dims, prefix="fc"):
+    """Dense stack params: dims = [in, h1, ..., out]."""
+    params = {}
+    keys = jax.random.split(rng, len(dims) - 1)
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"{prefix}{i}_w"] = glorot(keys[i], (d_in, d_out))
+        params[f"{prefix}{i}_b"] = zeros((d_out,))
+    return params
+
+
+def mlp_apply(params, x, n_layers, activation="relu", final_activation="none",
+              prefix="fc"):
+    for i in range(n_layers):
+        act = activation if i < n_layers - 1 else final_activation
+        x = dense(x, params[f"{prefix}{i}_w"], params[f"{prefix}{i}_b"], act)
+    return x
+
+
+def conv2d(x, w, b, *, stride=1, padding="SAME", activation="none"):
+    """2-D convolution as im2col + the Pallas matmul kernel.
+
+    x: [B, C, H, W], w: [C*kh*kw, C_out], b: [C_out]. Patch extraction is an
+    XLA op (differentiable); the GEMM — the FLOPs hot spot — runs through
+    the L1 kernel in both forward and backward (dense's custom VJP).
+    """
+    bsz, c, h, _w = x.shape
+    k2, c_out = w.shape
+    k = int(round((k2 // c) ** 0.5))
+    assert c * k * k == k2, f"kernel shape mismatch: {k2} vs C={c},k={k}"
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k, k), (stride, stride), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [B, C*k*k, H', W']
+    hp, wp = patches.shape[2], patches.shape[3]
+    cols = patches.transpose(0, 2, 3, 1).reshape(bsz * hp * wp, k2)
+    out = dense(cols, w, b, activation)
+    return out.reshape(bsz, hp, wp, c_out).transpose(0, 3, 1, 2)
+
+
+def conv_params(rng, c_in, c_out, k, prefix, params):
+    params[f"{prefix}_w"] = glorot(rng, (c_in * k * k, c_out))
+    params[f"{prefix}_b"] = zeros((c_out,))
+
+
+def bce_with_logits(logits, labels):
+    """Numerically-stable binary cross entropy (BigDL's BCECriterion)."""
+    z = logits
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def softmax_xent(logits, labels):
+    """Mean cross entropy with integer labels (ClassNLL + LogSoftMax)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

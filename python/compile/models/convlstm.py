@@ -1,0 +1,79 @@
+"""ConvLSTM Seq2Seq — the §5.2 precipitation-nowcasting model (Cray):
+a stacked-free (single-layer, testbed-scaled) ConvLSTM encoder over t_in
+radar frames, a ConvLSTM decoder rolling out t_out future frames, and a
+1x1 conv readout. Gate convolutions are im2col + the Pallas GEMM.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def config(scale="small"):
+    if scale == "small":
+        return dict(size=16, t_in=4, t_out=4, hidden=8, k=3)
+    raise ValueError(scale)
+
+
+def init_params(rng, cfg):
+    h, k = cfg["hidden"], cfg["k"]
+    params = {}
+    keys = jax.random.split(rng, 3)
+    # Encoder gates: input (1ch) + hidden → 4h channels.
+    common.conv_params(keys[0], 1 + h, 4 * h, k, "enc", params)
+    # Decoder gates: hidden-only input (autoregressive on state).
+    common.conv_params(keys[1], h, 4 * h, k, "dec", params)
+    common.conv_params(keys[2], h, 1, 1, "out", params)
+    return params
+
+
+def _cell(params, prefix, x, h, c):
+    """One ConvLSTM step. x may be None (decoder)."""
+    inp = h if x is None else jnp.concatenate([x, h], axis=1)
+    gates = common.conv2d(inp, params[f"{prefix}_w"], params[f"{prefix}_b"])
+    i, f, g, o = jnp.split(gates, 4, axis=1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def _rollout(params, frames, cfg):
+    bsz = frames.shape[0]
+    s, hid = cfg["size"], cfg["hidden"]
+    h = jnp.zeros((bsz, hid, s, s))
+    c = jnp.zeros((bsz, hid, s, s))
+    for t in range(cfg["t_in"]):
+        x = frames[:, t][:, None]  # [B,1,H,W]
+        h, c = _cell(params, "enc", x, h, c)
+    outs = []
+    for _ in range(cfg["t_out"]):
+        h, c = _cell(params, "dec", None, h, c)
+        outs.append(common.conv2d(h, params["out_w"], params["out_b"])[:, 0])
+    return jnp.stack(outs, axis=1)  # [B,t_out,H,W]
+
+
+def loss_fn(params, batch, cfg):
+    frames, target = batch
+    pred = _rollout(params, frames, cfg)
+    return jnp.mean(jnp.square(pred - target))
+
+
+def predict_fn(params, inputs, cfg):
+    (frames,) = inputs
+    return (_rollout(params, frames, cfg),)
+
+
+def batch_spec(cfg, b):
+    s = cfg["size"]
+    return [
+        jax.ShapeDtypeStruct((b, cfg["t_in"], s, s), jnp.float32),
+        jax.ShapeDtypeStruct((b, cfg["t_out"], s, s), jnp.float32),
+    ]
+
+
+def predict_spec(cfg, b):
+    s = cfg["size"]
+    return [jax.ShapeDtypeStruct((b, cfg["t_in"], s, s), jnp.float32)]

@@ -1,0 +1,116 @@
+"""SSD-lite + DeepBit-lite — the §5.1 JD.com pipeline models (inference
+only, "pre-trained in Caffe" in the paper; here initialized deterministic
+and exported predict-only).
+
+SSD-lite: single-scale anchor grid over a small conv backbone → per-anchor
+(score, cx, cy, w, h). DeepBit-lite: conv backbone → 32-bit binary
+descriptor (sigmoid output; the Rust pipeline binarizes at 0.5).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+class _PredictOnly:
+    """Duck-typed model module with predict-only exports."""
+
+    def __init__(self, name, cfg_fn, init_fn, predict, spec):
+        self.__name__ = name
+        self._cfg = cfg_fn
+        self._init = init_fn
+        self._predict = predict
+        self._spec = spec
+
+    def config(self, scale):
+        return self._cfg(scale)
+
+    def init_params(self, rng, cfg):
+        return self._init(rng, cfg)
+
+    def predict_fn(self, params, inputs, cfg):
+        return self._predict(params, inputs, cfg)
+
+    def predict_spec(self, cfg, b):
+        return self._spec(cfg, b)
+
+    # Predict-only: no training entry.
+    def batch_spec(self, cfg, b):  # pragma: no cover
+        raise NotImplementedError
+
+    def loss_fn(self, params, batch, cfg):  # pragma: no cover
+        raise NotImplementedError
+
+
+# ---- SSD-lite --------------------------------------------------------------
+
+def _ssd_config(scale):
+    # 32x32 input, 4x4 anchor grid (stride 8), 1 anchor per cell.
+    return dict(channels=3, size=32, feat=16, grid=4)
+
+
+def _ssd_init(rng, cfg):
+    params = {}
+    k = jax.random.split(rng, 3)
+    common.conv_params(k[0], cfg["channels"], cfg["feat"], 3, "c1", params)
+    common.conv_params(k[1], cfg["feat"], cfg["feat"], 3, "c2", params)
+    # Head: per-cell 5 outputs (score + 4 box offsets).
+    common.conv_params(k[2], cfg["feat"], 5, 1, "head", params)
+    return params
+
+
+def _ssd_predict(params, inputs, cfg):
+    (images,) = inputs
+    x = common.conv2d(images, params["c1_w"], params["c1_b"], activation="relu")
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 4, 4), (1, 1, 4, 4), "VALID")
+    x = common.conv2d(x, params["c2_w"], params["c2_b"], activation="relu")
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    out = common.conv2d(x, params["head_w"], params["head_b"])  # [B,5,g,g]
+    b = out.shape[0]
+    g = cfg["grid"]
+    out = out.reshape(b, 5, g * g).transpose(0, 2, 1)  # [B, anchors, 5]
+    scores = jax.nn.sigmoid(out[..., 0])
+    boxes = jax.nn.sigmoid(out[..., 1:])  # normalized cx,cy,w,h
+    return (scores, boxes)
+
+
+def _ssd_spec(cfg, b):
+    c, s = cfg["channels"], cfg["size"]
+    return [jax.ShapeDtypeStruct((b, c, s, s), jnp.float32)]
+
+
+SSD_LITE = _PredictOnly("ssd_lite", _ssd_config, _ssd_init, _ssd_predict, _ssd_spec)
+
+
+# ---- DeepBit-lite ----------------------------------------------------------
+
+def _db_config(scale):
+    return dict(channels=3, size=16, feat=16, bits=32)
+
+
+def _db_init(rng, cfg):
+    params = {}
+    k = jax.random.split(rng, 3)
+    common.conv_params(k[0], cfg["channels"], cfg["feat"], 3, "c1", params)
+    common.conv_params(k[1], cfg["feat"], cfg["feat"], 3, "c2", params)
+    params["fc_w"] = common.glorot(k[2], (cfg["feat"], cfg["bits"]))
+    params["fc_b"] = common.zeros((cfg["bits"],))
+    return params
+
+
+def _db_predict(params, inputs, cfg):
+    (images,) = inputs
+    x = common.conv2d(images, params["c1_w"], params["c1_b"], activation="relu")
+    x = common.conv2d(x, params["c2_w"], params["c2_b"], activation="relu")
+    x = jnp.mean(x, axis=(2, 3))  # [B, feat]
+    bits = common.dense(x, params["fc_w"], params["fc_b"], "sigmoid")
+    return (bits,)
+
+
+def _db_spec(cfg, b):
+    c, s = cfg["channels"], cfg["size"]
+    return [jax.ShapeDtypeStruct((b, c, s, s), jnp.float32)]
+
+
+DEEPBIT_LITE = _PredictOnly("deepbit_lite", _db_config, _db_init, _db_predict, _db_spec)

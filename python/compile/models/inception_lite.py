@@ -1,0 +1,93 @@
+"""Inception-lite — the Fig 6/7/8 scaling workload, scaled to the testbed.
+
+The paper trains Inception-v1 on ImageNet; the scaling figures depend on
+the ratio (per-minibatch compute time) : (parameter bytes), which NetSim
+parameterizes to the paper's values. For *real-mode* runs we use this
+small inception-style CNN on 16x16 synthetic images: a stem conv + two
+inception blocks (1x1 / 3x3 / 5x5-as-double-3x3 / pool-proj branches) +
+global average pooling. All convs are im2col + the Pallas GEMM.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def config(scale="small"):
+    if scale == "small":
+        return dict(classes=10, channels=3, size=16, stem=16,
+                    b1x1=16, b3x3=24, b5x5=8, bpool=8)
+    raise ValueError(scale)
+
+
+def _block_params(rng, prefix, c_in, cfg, params):
+    k = jax.random.split(rng, 5)
+    common.conv_params(k[0], c_in, cfg["b1x1"], 1, f"{prefix}_1x1", params)
+    common.conv_params(k[1], c_in, cfg["b3x3"], 3, f"{prefix}_3x3", params)
+    # 5x5 as two stacked 3x3 (as Inception-v3 rethought it — cheaper on MXU).
+    common.conv_params(k[2], c_in, cfg["b5x5"], 3, f"{prefix}_5a", params)
+    common.conv_params(k[3], cfg["b5x5"], cfg["b5x5"], 3, f"{prefix}_5b", params)
+    common.conv_params(k[4], c_in, cfg["bpool"], 1, f"{prefix}_pool", params)
+    return cfg["b1x1"] + cfg["b3x3"] + cfg["b5x5"] + cfg["bpool"]
+
+
+def init_params(rng, cfg):
+    params = {}
+    k = jax.random.split(rng, 4)
+    common.conv_params(k[0], cfg["channels"], cfg["stem"], 3, "stem", params)
+    c1 = _block_params(k[1], "inc1", cfg["stem"], cfg, params)
+    c2 = _block_params(k[2], "inc2", c1, cfg, params)
+    params["head_w"] = common.glorot(k[3], (c2, cfg["classes"]))
+    params["head_b"] = common.zeros((cfg["classes"],))
+    return params
+
+
+def _block(params, prefix, x):
+    b1 = common.conv2d(x, params[f"{prefix}_1x1_w"], params[f"{prefix}_1x1_b"],
+                       activation="relu")
+    b3 = common.conv2d(x, params[f"{prefix}_3x3_w"], params[f"{prefix}_3x3_b"],
+                       activation="relu")
+    b5 = common.conv2d(x, params[f"{prefix}_5a_w"], params[f"{prefix}_5a_b"],
+                       activation="relu")
+    b5 = common.conv2d(b5, params[f"{prefix}_5b_w"], params[f"{prefix}_5b_b"],
+                       activation="relu")
+    bp = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 3, 3), (1, 1, 1, 1), "SAME"
+    )
+    bp = common.conv2d(bp, params[f"{prefix}_pool_w"], params[f"{prefix}_pool_b"],
+                       activation="relu")
+    return jnp.concatenate([b1, b3, b5, bp], axis=1)
+
+
+def _logits(params, images):
+    x = common.conv2d(images, params["stem_w"], params["stem_b"], activation="relu")
+    x = _block(params, "inc1", x)
+    # Spatial downsample between blocks (stride-2 max pool).
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    x = _block(params, "inc2", x)
+    x = jnp.mean(x, axis=(2, 3))  # global average pool
+    return common.dense(x, params["head_w"], params["head_b"], "none")
+
+
+def loss_fn(params, batch, cfg):
+    images, labels = batch
+    return common.softmax_xent(_logits(params, images), labels)
+
+
+def predict_fn(params, inputs, cfg):
+    (images,) = inputs
+    return (jax.nn.softmax(_logits(params, images), axis=-1),)
+
+
+def batch_spec(cfg, b):
+    c, s = cfg["channels"], cfg["size"]
+    return [
+        jax.ShapeDtypeStruct((b, c, s, s), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    ]
+
+
+def predict_spec(cfg, b):
+    c, s = cfg["channels"], cfg["size"]
+    return [jax.ShapeDtypeStruct((b, c, s, s), jnp.float32)]

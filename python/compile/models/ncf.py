@@ -1,0 +1,77 @@
+"""Neural Collaborative Filtering (He et al., WWW'17) — the Fig-5 workload.
+
+NeuMF architecture: a GMF tower (elementwise product of user/item
+embeddings) concatenated with an MLP tower (dense stack over concatenated
+embeddings, via the Pallas `dense` layer), projected to a single logit.
+Trained with BCE on implicit feedback, exactly as the MLPerf reference the
+paper benchmarks against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def config(scale="small"):
+    if scale == "small":
+        return dict(n_users=2048, n_items=1024, gmf_dim=16,
+                    mlp_emb=32, mlp_hidden=(64, 32, 16))
+    if scale == "medium":  # closer to ml-20m shape, scaled 10x down
+        return dict(n_users=13800, n_items=2700, gmf_dim=32,
+                    mlp_emb=64, mlp_hidden=(128, 64, 32))
+    raise ValueError(scale)
+
+
+def init_params(rng, cfg):
+    k = jax.random.split(rng, 5)
+    p = {
+        "user_gmf": common.normal(k[0], (cfg["n_users"], cfg["gmf_dim"]), scale=0.05),
+        "item_gmf": common.normal(k[1], (cfg["n_items"], cfg["gmf_dim"]), scale=0.05),
+        "user_mlp": common.normal(k[2], (cfg["n_users"], cfg["mlp_emb"]), scale=0.05),
+        "item_mlp": common.normal(k[3], (cfg["n_items"], cfg["mlp_emb"]), scale=0.05),
+    }
+    dims = [2 * cfg["mlp_emb"], *cfg["mlp_hidden"]]
+    p.update(common.mlp_params(k[4], dims, prefix="fc"))
+    out_in = cfg["gmf_dim"] + cfg["mlp_hidden"][-1]
+    p["out_w"] = common.glorot(jax.random.fold_in(rng, 99), (out_in, 1))
+    p["out_b"] = common.zeros((1,))
+    return p
+
+
+def _logits(params, users, items, cfg):
+    gmf = params["user_gmf"][users] * params["item_gmf"][items]
+    mlp_in = jnp.concatenate(
+        [params["user_mlp"][users], params["item_mlp"][items]], axis=-1
+    )
+    n_layers = len(cfg["mlp_hidden"])
+    mlp = common.mlp_apply(params, mlp_in, n_layers, activation="relu",
+                           final_activation="relu")
+    feat = jnp.concatenate([gmf, mlp], axis=-1)
+    out = common.dense(feat, params["out_w"], params["out_b"], "none")
+    return out[:, 0]
+
+
+def loss_fn(params, batch, cfg):
+    users, items, labels = batch
+    return common.bce_with_logits(_logits(params, users, items, cfg), labels)
+
+
+def predict_fn(params, inputs, cfg):
+    users, items = inputs
+    return (jax.nn.sigmoid(_logits(params, users, items, cfg)),)
+
+
+def batch_spec(cfg, b):
+    return [
+        jax.ShapeDtypeStruct((b,), jnp.int32),   # user ids
+        jax.ShapeDtypeStruct((b,), jnp.int32),   # item ids
+        jax.ShapeDtypeStruct((b,), jnp.float32), # implicit labels {0,1}
+    ]
+
+
+def predict_spec(cfg, b):
+    return [
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    ]

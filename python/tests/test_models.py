@@ -1,0 +1,152 @@
+"""L2 model checks: loss finiteness + descent under SGD, gradient vs
+numerical difference on tiny configs, predict output contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from compile.models import convlstm, detector, inception_lite, ncf, textclf, transformer
+
+MODELS = {
+    "ncf": ncf,
+    "inception_lite": inception_lite,
+    "transformer": transformer,
+    "convlstm": convlstm,
+    "textclf": textclf,
+}
+
+
+def tiny_batch(mod, cfg, b, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = []
+    for spec in mod.batch_spec(cfg, b):
+        if spec.dtype == jnp.int32:
+            hi = min(v for k, v in cfg.items()
+                     if k in ("vocab", "n_users", "n_items", "classes") ) if any(
+                k in cfg for k in ("vocab", "n_users", "n_items", "classes")) else 10
+            batch.append(jnp.asarray(rng.integers(0, max(hi, 2), spec.shape), jnp.int32))
+        else:
+            batch.append(jnp.asarray(rng.standard_normal(spec.shape), jnp.float32))
+    return tuple(batch)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_loss_finite_and_grads_nonzero(name):
+    mod = MODELS[name]
+    cfg = mod.config("small")
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    batch = tiny_batch(mod, cfg, 4)
+    loss, grads = jax.value_and_grad(lambda p: mod.loss_fn(p, batch, cfg))(params)
+    assert jnp.isfinite(loss), f"{name} loss {loss}"
+    flat, _ = ravel_pytree(grads)
+    assert jnp.all(jnp.isfinite(flat))
+    nonzero = int(jnp.sum(flat != 0))
+    # Embedding-table grads are legitimately sparse (only batch entities
+    # receive gradient), so the bar is absolute, not proportional.
+    assert nonzero > 500, f"{name}: only {nonzero}/{flat.size} grads nonzero"
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_sgd_descends(name):
+    mod = MODELS[name]
+    cfg = mod.config("small")
+    params = mod.init_params(jax.random.PRNGKey(1), cfg)
+    batch = tiny_batch(mod, cfg, 4, seed=1)
+    flat, unravel = ravel_pytree(params)
+
+    def loss_of(fp):
+        return mod.loss_fn(unravel(fp), batch, cfg)
+
+    l0 = float(loss_of(flat))
+    g = jax.grad(loss_of)(flat)
+    # Line-search a safe step: fixed-batch loss must drop.
+    for lr in [1e-1, 1e-2, 1e-3]:
+        l1 = float(loss_of(flat - lr * g))
+        if l1 < l0:
+            break
+    assert l1 < l0, f"{name}: no descent direction found ({l0} -> {l1})"
+
+
+def test_ncf_grad_matches_numerical():
+    cfg = dict(n_users=12, n_items=8, gmf_dim=3, mlp_emb=4, mlp_hidden=(6, 4))
+    params = ncf.init_params(jax.random.PRNGKey(2), cfg)
+    users = jnp.array([0, 3, 5], jnp.int32)
+    items = jnp.array([1, 2, 7], jnp.int32)
+    labels = jnp.array([1.0, 0.0, 1.0])
+    flat, unravel = ravel_pytree(params)
+
+    def loss_of(fp):
+        return ncf.loss_fn(unravel(fp), (users, items, labels), cfg)
+
+    g = jax.grad(loss_of)(flat)
+    rng = np.random.default_rng(3)
+    eps = 1e-3
+    for idx in rng.choice(flat.size, 12, replace=False):
+        e = jnp.zeros_like(flat).at[idx].set(eps)
+        num = (loss_of(flat + e) - loss_of(flat - e)) / (2 * eps)
+        assert abs(float(num) - float(g[idx])) < 5e-3, (
+            f"param {idx}: numerical {num} vs autodiff {g[idx]}"
+        )
+
+
+def test_transformer_beats_uniform_on_fixed_batch():
+    cfg = transformer.config("small")
+    params = transformer.init_params(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg["vocab"], (4, cfg["seq"])), jnp.int32)
+    batch = (toks, toks)  # predict-own-input: overfittable
+    flat, unravel = ravel_pytree(params)
+
+    def loss_of(fp):
+        return transformer.loss_fn(unravel(fp), batch, cfg)
+
+    uniform = float(np.log(cfg["vocab"]))
+    l0 = float(loss_of(flat))
+    assert abs(l0 - uniform) < 1.0, f"init loss {l0} should be near ln V {uniform}"
+    g = jax.grad(loss_of)
+    w = flat
+    for _ in range(10):
+        w = w - 0.5 * g(w)
+    assert float(loss_of(w)) < l0 - 0.3, "transformer failed to overfit a fixed batch"
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_predict_contract(name):
+    mod = MODELS[name]
+    cfg = mod.config("small")
+    params = mod.init_params(jax.random.PRNGKey(6), cfg)
+    b = 3
+    rng = np.random.default_rng(7)
+    inputs = []
+    for spec in mod.predict_spec(cfg, b):
+        if spec.dtype == jnp.int32:
+            inputs.append(jnp.asarray(rng.integers(0, 5, spec.shape), jnp.int32))
+        else:
+            inputs.append(jnp.asarray(rng.standard_normal(spec.shape), jnp.float32))
+    outs = mod.predict_fn(params, tuple(inputs), cfg)
+    assert isinstance(outs, tuple)
+    for o in outs:
+        assert o.shape[0] == b, f"{name}: output not batch-major: {o.shape}"
+        assert bool(jnp.all(jnp.isfinite(o)))
+
+
+def test_ssd_lite_outputs_scores_and_boxes():
+    cfg = detector.SSD_LITE.config("small")
+    params = detector.SSD_LITE.init_params(jax.random.PRNGKey(8), cfg)
+    imgs = jnp.zeros((2, 3, 32, 32))
+    scores, boxes = detector.SSD_LITE.predict_fn(params, (imgs,), cfg)
+    assert scores.shape == (2, 16)
+    assert boxes.shape == (2, 16, 4)
+    assert bool(jnp.all((scores >= 0) & (scores <= 1)))
+    assert bool(jnp.all((boxes >= 0) & (boxes <= 1)))
+
+
+def test_deepbit_lite_descriptor_range():
+    cfg = detector.DEEPBIT_LITE.config("small")
+    params = detector.DEEPBIT_LITE.init_params(jax.random.PRNGKey(9), cfg)
+    imgs = jnp.ones((2, 3, 16, 16))
+    (bits,) = detector.DEEPBIT_LITE.predict_fn(params, (imgs,), cfg)
+    assert bits.shape == (2, 32)
+    assert bool(jnp.all((bits >= 0) & (bits <= 1)))

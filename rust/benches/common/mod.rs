@@ -1,0 +1,41 @@
+//! Shared bench harness helpers (criterion is unavailable offline; these
+//! benches are `harness = false` binaries that print the paper's
+//! tables/series in a fixed format captured into bench_output.txt).
+
+use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
+
+/// Standard bench banner.
+pub fn banner(fig: &str, claim: &str) {
+    println!("\n================================================================");
+    println!("{fig}");
+    println!("paper claim: {claim}");
+    println!("================================================================");
+}
+
+/// Load the runtime or exit 0 with a SKIP notice (benches must not fail
+/// the suite when artifacts haven't been built).
+pub fn runtime_or_skip() -> Option<RuntimeHandle> {
+    let dir = default_artifacts_dir();
+    if !dir.join("ncf.meta.json").exists() {
+        println!("SKIP: artifacts missing at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(RuntimeHandle::load(&dir).expect("loading artifacts"))
+}
+
+/// Measure the Sparklet driver's per-task dispatch cost (used to calibrate
+/// the Fig 8 model with a *measured* number).
+pub fn measure_dispatch_cost(nodes: usize, tasks: usize, reps: usize) -> f64 {
+    use std::sync::Arc;
+    let ctx = bigdl::sparklet::SparkletContext::local(nodes);
+    let preferred: Vec<Option<usize>> = (0..tasks).map(|p| Some(p % nodes)).collect();
+    // Warm-up.
+    ctx.run_job(&preferred, Arc::new(|_tc| Ok(()))).unwrap();
+    let before = ctx.scheduler().stats.snapshot();
+    for _ in 0..reps {
+        ctx.run_job(&preferred, Arc::new(|_tc| Ok(()))).unwrap();
+    }
+    let after = ctx.scheduler().stats.snapshot();
+    let launched = (after.tasks_launched - before.tasks_launched) as f64;
+    (after.dispatch_ns - before.dispatch_ns) as f64 / launched / 1e9
+}

@@ -1,0 +1,103 @@
+//! Fig 10 — the JD.com image feature-extraction pipeline: GPU cluster
+//! ("connector approach") vs Xeon cluster (unified BigDL pipeline).
+//!
+//! Paper: ~3.83x higher throughput on 24 Broadwell servers (1200 logical
+//! cores) than on 20 K40 GPUs, *because* the connector approach ties the
+//! read/pre-process parallelism to the number of GPU cards — "reading
+//! data from HBase takes about half of the time" at parallelism 20.
+//!
+//! Two parts:
+//!  (a) a stage model with the paper's cluster sizes (read rate per task,
+//!      GPU vs CPU inference rates from the paper's own ratio) — the
+//!      figure's two bars;
+//!  (b) a REAL measurement of the same mechanism on this testbed: the
+//!      same SSD→crop→DeepBit pipeline with the source-read stage at
+//!      parallelism 1 ("connector", parallelism tied to the accelerator
+//!      count) vs full cluster parallelism (unified BigDL).
+
+mod common;
+
+use std::sync::Arc;
+
+use bigdl::bigdl::{inference, Module};
+use bigdl::data::imagenet_lite::{gen_image, ImagenetLiteConfig};
+use bigdl::sparklet::SparkletContext;
+
+/// Pipeline of sequential stages; each stage has a per-task rate and a
+/// task parallelism. Records/sec of the pipeline = total / sum of stage
+/// times (stages run back-to-back over the same dataset, as in Fig 9).
+fn pipeline_throughput(total: f64, stages: &[(f64, usize)]) -> f64 {
+    let time: f64 = stages
+        .iter()
+        .map(|(rate_per_task, parallelism)| total / (rate_per_task * *parallelism as f64))
+        .sum();
+    total / time
+}
+
+fn main() {
+    common::banner(
+        "Figure 10: JD pipeline throughput — GPU connector vs Xeon BigDL",
+        "Xeon/BigDL ≈ 3.83x over 20xK40 Caffe connector pipeline",
+    );
+
+    // -- (a) stage model at the paper's scale --------------------------------
+    // Rates chosen to the paper's own structure: per-GPU SSD inference is
+    // ~5.4x a 50-core Xeon worker's, but the connector read stage is stuck
+    // at parallelism 20 while BigDL reads with 1200 partitions, and reading
+    // takes "about half the time" of the GPU solution.
+    let n = 1e6;
+    // Calibrated to the paper's structure: at parallelism 20, reading takes
+    // "about half of the time" of the GPU solution → read and GPU-infer
+    // per-task rates match; per-core CPU inference is ~30x slower than a
+    // K40 but there are 60x more lanes (1200 vs 20).
+    let read_per_task = 110.0; // img/s per reader task (HBase-bound)
+    let gpu_infer = 110.0; //   img/s per K40 (SSD+DeepBit combined)
+    let cpu_infer = 3.6; //     img/s per logical core
+    let gpu = pipeline_throughput(n, &[(read_per_task, 20), (gpu_infer, 20)]);
+    let xeon = pipeline_throughput(n, &[(read_per_task, 1200), (cpu_infer, 1200)]);
+    println!("[model @ paper scale]");
+    println!("  GPU cluster (20 K40, connector):   {gpu:>8.0} img/s");
+    println!("  Xeon cluster (1200 cores, BigDL):  {xeon:>8.0} img/s");
+    println!("  ratio: {:.2}x (paper: 3.83x)", xeon / gpu);
+    let read_frac = (n / (read_per_task * 20.0)) / (n / gpu);
+    println!("  connector read-stage share: {:.0}% (paper: ~half)", read_frac * 100.0);
+
+    // -- (b) real mechanism measurement ---------------------------------------
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let nodes = 4;
+    let n_images = 240;
+    let ssd = Module::load(&rt, "ssd_lite").unwrap();
+    ssd.warmup().unwrap();
+    let img_cfg = ImagenetLiteConfig { size: 32, ..Default::default() };
+
+    let mut run = |read_parallelism: usize| -> f64 {
+        let ctx = SparkletContext::local(nodes);
+        // Source read + preprocess stage at the given parallelism
+        // (connector: tied to accelerator count; BigDL: full cluster).
+        let raw = ctx.generate(read_parallelism, n_images / read_parallelism, 99, move |_p, rng| {
+            let mut s = gen_image(&img_cfg, rng);
+            // "preprocess": mean-subtract (coarse-grained map work).
+            let img = s.features[0].as_f32_mut().unwrap();
+            let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+            img.iter_mut().for_each(|v| *v -= mean);
+            // simulate the HBase read latency per record
+            std::thread::sleep(std::time::Duration::from_millis(8));
+            s
+        });
+        let t0 = std::time::Instant::now();
+        let pics = raw.collect().unwrap();
+        // Inference stage always at full cluster parallelism.
+        let rdd = ctx.parallelize(pics, nodes);
+        let w = Arc::new(ssd.initial_params().unwrap());
+        let _scores = inference::predict(&ssd, w, &rdd).unwrap();
+        n_images as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let unified = run(nodes);
+    let connector = run(1);
+    println!("\n[real mechanism @ testbed scale] ({n_images} images, {nodes} nodes)");
+    println!("  read parallelism 1 (connector-style): {connector:>7.1} img/s");
+    println!("  read parallelism {nodes} (unified BigDL):   {unified:>7.1} img/s");
+    println!("  ratio: {:.2}x — same shape: freeing the read stage's parallelism wins", unified / connector);
+    rt.shutdown();
+}

@@ -1,0 +1,149 @@
+//! Fig 5 + §4.2 — NCF training performance.
+//!
+//! Paper: the BigDL NCF implementation (single 56-core Xeon) trains to the
+//! MLPerf accuracy target 1.6x faster than the reference PyTorch
+//! implementation (single P100 GPU).
+//!
+//! What is measurable here (one CPU core, no GPU):
+//!  (a) framework overhead: BigDL-on-Sparklet distributed training
+//!      throughput vs a bare single-process loop over the SAME AOT
+//!      executable — distribution must cost little (the paper's implicit
+//!      claim that the Spark machinery is not the bottleneck);
+//!  (b) time-to-quality: iterations + wall time to reach a held-out
+//!      accuracy target (the §4.2 convergence experiment, scaled);
+//!  (c) the paper's 1.6x headline restated against its published numbers
+//!      (we cannot own a P100; recorded as paper-reported).
+
+mod common;
+
+use std::sync::Arc;
+
+use bigdl::bigdl::sample::{assemble_train_inputs, draw_batch_indices};
+use bigdl::bigdl::{inference, metrics, Adam, DistributedOptimizer, Module, TrainConfig};
+use bigdl::data::movielens::{movielens_rdd, MovielensConfig};
+use bigdl::sparklet::SparkletContext;
+use bigdl::tensor::Tensor;
+use bigdl::util::prng::Rng;
+
+fn main() {
+    common::banner(
+        "Figure 5: NCF training performance (BigDL vs reference impl)",
+        "BigDL 1.6x faster than the MLPerf PyTorch reference (§4.2)",
+    );
+    let Some(rt) = common::runtime_or_skip() else { return };
+    let module = Module::load(&rt, "ncf").unwrap();
+    let entry = module.train_entry().unwrap().clone();
+    let batch = entry.batch_size;
+    let iters = 20;
+
+    // -- (a) bare reference loop (no distribution, same executable) ---------
+    module.warmup().unwrap();
+    let mut rng = Rng::new(5);
+    let cfg = MovielensConfig::default();
+    let samples: Vec<_> = (0..1200)
+        .map(|_| bigdl::data::movielens::gen_sample(&cfg, &mut rng))
+        .collect();
+    let mut w = module.initial_params().unwrap();
+    // Untimed first execution (TFRT first-touch costs), mirroring the
+    // distributed report which skips iteration 0.
+    {
+        let idx = draw_batch_indices(&mut rng, samples.len(), batch);
+        let inputs = assemble_train_inputs(
+            &entry,
+            Tensor::from_f32(vec![w.len()], w.clone()),
+            &samples,
+            &idx,
+        )
+        .unwrap();
+        module.fwd_bwd(inputs).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let idx = draw_batch_indices(&mut rng, samples.len(), batch);
+        let inputs = assemble_train_inputs(
+            &entry,
+            Tensor::from_f32(vec![w.len()], w.clone()),
+            &samples,
+            &idx,
+        )
+        .unwrap();
+        let (_loss, g) = module.fwd_bwd(inputs).unwrap();
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= 0.01 * gi;
+        }
+    }
+    let bare_s = t0.elapsed().as_secs_f64();
+    let bare_rps = (iters * batch) as f64 / bare_s;
+
+    // -- distributed run (global batch = nodes × per-replica) ----------------
+    for nodes in [1, 2, 4] {
+        let ctx = SparkletContext::local(nodes);
+        let data = movielens_rdd(&ctx, cfg, nodes, 1200 / nodes, 5);
+        let mut opt = DistributedOptimizer::new(
+            &ctx,
+            module.clone(),
+            data,
+            Arc::new(bigdl::bigdl::Sgd::new(0.01)),
+            TrainConfig { iterations: iters, log_every: 0, ..Default::default() },
+        )
+        .unwrap();
+        let report = opt.optimize().unwrap();
+        let per_replica_rps = report.records_per_sec / nodes as f64;
+        println!(
+            "bigdl nodes={nodes}: {:>8.0} rec/s total ({:>7.0} rec/s/replica = {:.1}% of bare loop; sync {:.1}%)",
+            report.records_per_sec,
+            per_replica_rps,
+            per_replica_rps / bare_rps * 100.0,
+            report.sync_overhead_frac * 100.0
+        );
+    }
+    println!("bare loop (no framework):  {bare_rps:>8.0} rec/s");
+    println!("(single physical core: replicas time-share; per-replica ≈ bare/nodes is ideal)");
+
+    // -- (b) time-to-quality (§4.2, scaled) ----------------------------------
+    println!("\n[convergence] time to 75% held-out accuracy (dense entity space):");
+    let dense = MovielensConfig { n_users: 256, n_items: 128, ..Default::default() };
+    let ctx = SparkletContext::local(4);
+    let data = movielens_rdd(&ctx, dense, 4, 500, 41);
+    let mut opt = DistributedOptimizer::new(
+        &ctx,
+        module.clone(),
+        data,
+        Arc::new(Adam::new(0.01)),
+        TrainConfig { iterations: 1, log_every: 0, ..Default::default() },
+    )
+    .unwrap();
+    let eval = movielens_rdd(&ctx, dense, 4, 250, 4242);
+    let labels: Vec<f32> = eval
+        .collect()
+        .unwrap()
+        .iter()
+        .map(|s| s.label.as_f32().unwrap()[0])
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut reached = None;
+    for iter in 1..=120 {
+        opt.step().unwrap();
+        if iter % 10 == 0 {
+            let wts = Arc::new(opt.weights().unwrap());
+            let rows = inference::predict(&module, wts, &eval).unwrap();
+            let flat: Vec<f32> = rows.iter().map(|r| r[0]).collect();
+            let acc = metrics::binary_accuracy(&flat, &labels);
+            println!("  iter {iter:>3}: held-out acc {acc:.3}  ({:.1}s)", t0.elapsed().as_secs_f64());
+            if acc >= 0.75 {
+                reached = Some((iter, t0.elapsed().as_secs_f64()));
+                break;
+            }
+        }
+    }
+    match reached {
+        Some((it, secs)) => println!("target reached at iter {it} in {secs:.1}s"),
+        None => println!("target NOT reached in 120 iters (see EXPERIMENTS.md)"),
+    }
+
+    // -- (c) paper-reported headline -----------------------------------------
+    println!("\n[paper-reported, not measurable here] MLPerf 0.5 NCF time-to-target:");
+    println!("  PyTorch ref, 1x P100:        baseline 1.0x");
+    println!("  BigDL 0.7.0, 2x Xeon 8180:   1.6x faster (29.8 min)  [43]");
+    rt.shutdown();
+}

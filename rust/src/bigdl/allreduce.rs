@@ -1,0 +1,197 @@
+//! AllReduce baselines + traffic models (paper §3.3's analysis and the E7
+//! ablation): BigDL's shuffle+broadcast scheme vs Ring AllReduce vs a
+//! centralized parameter server.
+//!
+//! Two layers:
+//! * executable references (`ring_allreduce`, `central_ps_reduce`) that
+//!   really compute the reduction while counting per-node traffic — used
+//!   by tests (all three must produce identical sums) and the ablation
+//!   bench;
+//! * closed-form per-node traffic models (`traffic`) matching the paper's
+//!   2K / 2K(N-1)/N accounting — used by NetSim.
+
+/// Per-node traffic for one synchronization round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Traffic {
+    /// Bytes sent by a (worst-case) node.
+    pub out_bytes: f64,
+    /// Bytes received by a (worst-case) node.
+    pub in_bytes: f64,
+    /// Serial communication steps (latency multiplier).
+    pub steps: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// BigDL Algorithm 2: slice → shuffle → aggregate → task-side broadcast.
+    ShuffleBroadcast,
+    /// Baidu-style Ring AllReduce: 2(N-1) steps of K/N-sized transfers.
+    Ring,
+    /// Centralized PS: every worker sends K to the server, receives K back.
+    CentralPs,
+}
+
+/// Closed-form worst-case per-node traffic for reducing `k_bytes` of
+/// parameters across `n` nodes (paper §3.3).
+pub fn traffic(algo: Algo, n: usize, k_bytes: f64) -> Traffic {
+    assert!(n > 0);
+    let nf = n as f64;
+    match algo {
+        // Each node ships (N-1)/N of its gradient out and receives the
+        // (N-1) foreign slices of its shard in (phase 1), then sends its
+        // updated K/N shard to N-1 peers and fetches the other shards
+        // (phase 2): 2K(N-1)/N in and out; 2 bulk steps.
+        Algo::ShuffleBroadcast => Traffic {
+            out_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
+            in_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
+            steps: 2,
+        },
+        // Classic ring: 2(N-1) steps, K/N bytes per step each way.
+        Algo::Ring => Traffic {
+            out_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
+            in_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
+            steps: 2 * (n.saturating_sub(1)),
+        },
+        // The server is the hot node: receives N·K, sends N·K.
+        Algo::CentralPs => Traffic {
+            out_bytes: nf * k_bytes,
+            in_bytes: nf * k_bytes,
+            steps: 2,
+        },
+    }
+}
+
+/// Executable Ring AllReduce over `n` per-node gradient vectors. Returns
+/// the reduced (summed) vector plus measured per-node (out, in) byte
+/// counts. Faithful scatter-reduce + all-gather schedule.
+pub fn ring_allreduce(grads: &[Vec<f32>]) -> (Vec<f32>, Vec<(u64, u64)>) {
+    let n = grads.len();
+    assert!(n > 0);
+    let k = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == k));
+    let ranges = crate::tensor::partition_ranges(k, n);
+    let mut bufs: Vec<Vec<f32>> = grads.to_vec();
+    let mut traffic = vec![(0u64, 0u64); n];
+
+    // Scatter-reduce: step s, node i sends chunk (i - s) to node i+1.
+    for s in 0..n.saturating_sub(1) {
+        let snapshot: Vec<Vec<f32>> = bufs.clone(); // send from pre-step state
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let chunk = (i + n - s) % n;
+            let r = ranges[chunk].clone();
+            let bytes = (r.len() * 4) as u64;
+            traffic[i].0 += bytes;
+            traffic[dst].1 += bytes;
+            let (src_slice, dst_buf) = (&snapshot[i][r.clone()], &mut bufs[dst]);
+            for (d, s_val) in dst_buf[r].iter_mut().zip(src_slice) {
+                *d += *s_val;
+            }
+        }
+    }
+    // All-gather: node i owns fully-reduced chunk (i+1) after the loop.
+    for s in 0..n.saturating_sub(1) {
+        let snapshot: Vec<Vec<f32>> = bufs.clone();
+        for i in 0..n {
+            let dst = (i + 1) % n;
+            let chunk = (i + 1 + n - s) % n;
+            let r = ranges[chunk].clone();
+            let bytes = (r.len() * 4) as u64;
+            traffic[i].0 += bytes;
+            traffic[dst].1 += bytes;
+            bufs[dst][r.clone()].copy_from_slice(&snapshot[i][r]);
+        }
+    }
+    (bufs[0].clone(), traffic)
+}
+
+/// Executable centralized PS reduce (server = node 0). Returns the summed
+/// vector plus per-node (out, in) byte counts.
+pub fn central_ps_reduce(grads: &[Vec<f32>]) -> (Vec<f32>, Vec<(u64, u64)>) {
+    let n = grads.len();
+    let k = grads[0].len();
+    let mut sum = vec![0.0f32; k];
+    let mut traffic = vec![(0u64, 0u64); n];
+    for (i, g) in grads.iter().enumerate() {
+        crate::tensor::add_assign(&mut sum, g);
+        if i != 0 {
+            traffic[i].0 += (k * 4) as u64; // worker → server
+            traffic[0].1 += (k * 4) as u64;
+        }
+    }
+    for (i, t) in traffic.iter_mut().enumerate() {
+        if i != 0 {
+            t.1 += (k * 4) as u64; // server → worker
+        }
+    }
+    traffic[0].0 += ((n - 1) * k * 4) as u64;
+    (sum, traffic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_grads(n: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..k).map(|_| rng.gen_f32() - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ring_equals_naive_sum() {
+        for (n, k) in [(2, 10), (3, 17), (5, 100), (8, 64)] {
+            let grads = random_grads(n, k, (n * k) as u64);
+            let mut expect = vec![0.0f32; k];
+            for g in &grads {
+                crate::tensor::add_assign(&mut expect, g);
+            }
+            let (got, _) = ring_allreduce(&grads);
+            for (a, b) in got.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "n={n} k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_traffic_matches_model() {
+        let n = 4;
+        let k = 400; // divisible by n → exact chunks
+        let grads = random_grads(n, k, 9);
+        let (_, measured) = ring_allreduce(&grads);
+        let expect = super::traffic(Algo::Ring, n, (k * 4) as f64);
+        for &(out, inn) in &measured {
+            assert_eq!(out as f64, expect.out_bytes, "out bytes");
+            assert_eq!(inn as f64, expect.in_bytes, "in bytes");
+        }
+    }
+
+    #[test]
+    fn ps_server_is_bottleneck() {
+        let grads = random_grads(5, 50, 3);
+        let (sum, traffic) = central_ps_reduce(&grads);
+        let mut expect = vec![0.0f32; 50];
+        for g in &grads {
+            crate::tensor::add_assign(&mut expect, g);
+        }
+        assert_eq!(sum, expect);
+        let server = traffic[0];
+        let worker = traffic[1];
+        assert!(server.1 > worker.1 * 3, "server in-traffic dominates");
+    }
+
+    #[test]
+    fn shuffle_broadcast_traffic_is_2k() {
+        // The paper's headline: ~2K per node, independent of N.
+        let k = 1e6;
+        let t16 = traffic(Algo::ShuffleBroadcast, 16, k);
+        let t256 = traffic(Algo::ShuffleBroadcast, 256, k);
+        assert!(t16.out_bytes < 2.0 * k && t16.out_bytes > 1.8 * k);
+        assert!(t256.out_bytes < 2.0 * k && t256.out_bytes > 1.99 * k);
+        // Ring pays the same bandwidth but Θ(N) latency steps.
+        assert_eq!(traffic(Algo::Ring, 64, k).steps, 126);
+        assert_eq!(t256.steps, 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Checkpointing: persist weights + optimizer state + step so training
+//! resumes exactly (BigDL's `setCheckpoint`). Format: one little-endian
+//! f32 blob per shard/state buffer + a small JSON manifest.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Value;
+use crate::util::{read_f32_file, write_f32_file};
+
+/// A saved training snapshot.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: usize,
+    pub weights: Vec<f32>,
+    /// Optimizer state buffers, whole-vector layout (concatenated shards).
+    pub opt_state: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let name = format!("{}-step{}", self.model, self.step);
+        let cp_dir = dir.join(&name);
+        std::fs::create_dir_all(&cp_dir)?;
+        write_f32_file(&cp_dir.join("weights.bin"), &self.weights)?;
+        for (i, buf) in self.opt_state.iter().enumerate() {
+            write_f32_file(&cp_dir.join(format!("opt{i}.bin")), buf)?;
+        }
+        let mut meta = BTreeMap::new();
+        meta.insert("model".to_string(), Value::Str(self.model.clone()));
+        meta.insert("step".to_string(), Value::Num(self.step as f64));
+        meta.insert("param_count".to_string(), Value::Num(self.weights.len() as f64));
+        meta.insert("opt_bufs".to_string(), Value::Num(self.opt_state.len() as f64));
+        std::fs::write(cp_dir.join("meta.json"), Value::Obj(meta).to_string())?;
+        Ok(cp_dir)
+    }
+
+    pub fn load(cp_dir: &Path) -> Result<Checkpoint> {
+        let meta_text = std::fs::read_to_string(cp_dir.join("meta.json"))
+            .with_context(|| format!("reading {}", cp_dir.display()))?;
+        let meta = Value::parse(&meta_text)?;
+        let param_count = meta.req("param_count")?.as_usize()?;
+        let weights = read_f32_file(&cp_dir.join("weights.bin"))?;
+        ensure!(weights.len() == param_count, "weights length mismatch");
+        let opt_bufs = meta.req("opt_bufs")?.as_usize()?;
+        let opt_state = (0..opt_bufs)
+            .map(|i| read_f32_file(&cp_dir.join(format!("opt{i}.bin"))))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint {
+            model: meta.req("model")?.as_str()?.to_string(),
+            step: meta.req("step")?.as_usize()?,
+            weights,
+            opt_state,
+        })
+    }
+
+    /// Latest checkpoint for `model` under `dir` (by step).
+    pub fn latest(dir: &Path, model: &str) -> Result<Option<Checkpoint>> {
+        let prefix = format!("{model}-step");
+        let mut best: Option<(usize, PathBuf)> = None;
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().to_string();
+                if let Some(step_s) = name.strip_prefix(&prefix) {
+                    if let Ok(step) = step_s.parse::<usize>() {
+                        if best.as_ref().is_none_or(|(b, _)| step > *b) {
+                            best = Some((step, entry.path()));
+                        }
+                    }
+                }
+            }
+        }
+        best.map(|(_, p)| Checkpoint::load(&p)).transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bigdl_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmp();
+        let cp = Checkpoint {
+            model: "ncf".into(),
+            step: 42,
+            weights: vec![1.0, -2.0, 3.5],
+            opt_state: vec![vec![0.1, 0.2, 0.3], vec![9.0, 8.0, 7.0]],
+        };
+        let path = cp.save(&dir).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.model, "ncf");
+        assert_eq!(back.step, 42);
+        assert_eq!(back.weights, cp.weights);
+        assert_eq!(back.opt_state, cp.opt_state);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_picks_highest_step() {
+        let dir = tmp().join("latest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [10, 30, 20] {
+            Checkpoint { model: "m".into(), step, weights: vec![step as f32], opt_state: vec![] }
+                .save(&dir)
+                .unwrap();
+        }
+        let latest = Checkpoint::latest(&dir, "m").unwrap().unwrap();
+        assert_eq!(latest.step, 30);
+        assert!(Checkpoint::latest(&dir, "other").unwrap().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,166 @@
+//! Per-iteration training metrics (the timing breakdown behind Figs 6-8)
+//! and evaluation helpers (accuracy, hit-rate).
+
+use crate::sparklet::{SchedSnapshot, TrafficSnapshot};
+
+/// Timing/traffic breakdown of one training iteration (two jobs).
+#[derive(Debug, Clone)]
+pub struct IterMetrics {
+    pub iteration: usize,
+    /// Mean loss across replicas.
+    pub loss: f32,
+    /// Wall time of the whole iteration.
+    pub total_s: f64,
+    /// Wall time of the "model forward-backward" job.
+    pub fwdbwd_s: f64,
+    /// Max per-task model compute (fwd+bwd execute) time.
+    pub compute_s: f64,
+    /// Max per-task weight-fetch (broadcast read) time.
+    pub fetch_s: f64,
+    /// Wall time of the "parameter synchronization" job.
+    pub sync_s: f64,
+    /// Driver dispatch time spent this iteration (ns).
+    pub dispatch_ns: u64,
+    /// Block-store traffic this iteration.
+    pub traffic: TrafficSnapshot,
+    pub sched: SchedSnapshot,
+}
+
+impl IterMetrics {
+    /// Parameter-synchronization overhead as a fraction of model compute
+    /// (the y-axis of paper Fig 6).
+    pub fn sync_overhead_frac(&self) -> f64 {
+        if self.compute_s <= 0.0 {
+            return 0.0;
+        }
+        (self.sync_s + self.fetch_s) / self.compute_s
+    }
+}
+
+/// Whole-run summary.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub iterations: usize,
+    pub final_loss: f32,
+    pub mean_iter_s: f64,
+    pub mean_compute_s: f64,
+    pub mean_sync_s: f64,
+    pub records_per_sec: f64,
+    pub sync_overhead_frac: f64,
+    pub losses: Vec<f32>,
+}
+
+impl TrainReport {
+    pub fn from_history(history: &[IterMetrics], global_batch: usize) -> TrainReport {
+        assert!(!history.is_empty());
+        let n = history.len() as f64;
+        // Skip iteration 0 for steady-state timing (it pays compilation).
+        let steady: Vec<&IterMetrics> =
+            if history.len() > 1 { history[1..].iter().collect() } else { history.iter().collect() };
+        let sn = steady.len() as f64;
+        let mean_iter_s = steady.iter().map(|m| m.total_s).sum::<f64>() / sn;
+        let mean_compute_s = steady.iter().map(|m| m.compute_s).sum::<f64>() / sn;
+        let mean_sync_s = steady.iter().map(|m| m.sync_s).sum::<f64>() / sn;
+        let _ = n;
+        TrainReport {
+            iterations: history.len(),
+            final_loss: history.last().unwrap().loss,
+            mean_iter_s,
+            mean_compute_s,
+            mean_sync_s,
+            records_per_sec: global_batch as f64 / mean_iter_s,
+            sync_overhead_frac: steady
+                .iter()
+                .map(|m| m.sync_overhead_frac())
+                .sum::<f64>()
+                / sn,
+            losses: history.iter().map(|m| m.loss).collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for TrainReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "iters={} final_loss={:.4} iter={:.1}ms compute={:.1}ms sync={:.1}ms \
+             throughput={:.1} rec/s sync_overhead={:.1}%",
+            self.iterations,
+            self.final_loss,
+            self.mean_iter_s * 1e3,
+            self.mean_compute_s * 1e3,
+            self.mean_sync_s * 1e3,
+            self.records_per_sec,
+            self.sync_overhead_frac * 100.0
+        )
+    }
+}
+
+/// Binary-classification accuracy from probability scores.
+pub fn binary_accuracy(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let hits = scores
+        .iter()
+        .zip(labels)
+        .filter(|(s, l)| (**s >= 0.5) == (**l >= 0.5))
+        .count();
+    hits as f64 / scores.len().max(1) as f64
+}
+
+/// Top-1 accuracy from per-class score rows.
+pub fn top1_accuracy(rows: &[Vec<f32>], labels: &[i32]) -> f64 {
+    assert_eq!(rows.len(), labels.len());
+    let hits = rows
+        .iter()
+        .zip(labels)
+        .filter(|(row, &l)| {
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i as i32)
+                .unwrap_or(-1);
+            argmax == l
+        })
+        .count();
+    hits as f64 / rows.len().max(1) as f64
+}
+
+/// Hit-rate@k for recommendation: fraction of users whose positive item
+/// scores in the top-k among its negatives (NCF's eval metric).
+pub fn hit_rate_at_k(pos_score: &[f32], neg_scores: &[Vec<f32>], k: usize) -> f64 {
+    assert_eq!(pos_score.len(), neg_scores.len());
+    let hits = pos_score
+        .iter()
+        .zip(neg_scores)
+        .filter(|(p, negs)| negs.iter().filter(|n| *n > p).count() < k)
+        .count();
+    hits as f64 / pos_score.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_accuracy_counts() {
+        let acc = binary_accuracy(&[0.9, 0.2, 0.6, 0.4], &[1.0, 0.0, 0.0, 1.0]);
+        assert!((acc - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top1_accuracy_argmax() {
+        let rows = vec![vec![0.1, 0.9], vec![0.8, 0.2]];
+        assert_eq!(top1_accuracy(&rows, &[1, 0]), 1.0);
+        assert_eq!(top1_accuracy(&rows, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn hit_rate_ranks() {
+        // pos=0.9 beats all 3 negs → hit at k=1.
+        let hr = hit_rate_at_k(&[0.9, 0.1], &[vec![0.5, 0.2, 0.1], vec![0.5, 0.6, 0.7]], 1);
+        assert!((hr - 0.5).abs() < 1e-9);
+        // k=10 always hits with 3 negatives.
+        assert_eq!(hit_rate_at_k(&[0.0], &[vec![0.5, 0.6, 0.7]], 10), 1.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! The paper's system: BigDL-style synchronous data-parallel training and
+//! inference on top of the [`crate::sparklet`] functional engine.
+//!
+//! * [`sample`] — `Sample` records + minibatch assembly against the AOT
+//!   artifact contract;
+//! * [`module`] — model handle over the PJRT runtime;
+//! * [`optimizer`] — Algorithm 1 (two short-lived jobs per iteration);
+//! * [`param_mgr`] — Algorithm 2 (AllReduce from shuffle + task-side
+//!   broadcast over in-memory block storage);
+//! * [`optim`] — shard-wise optimization methods (SGD/Adagrad/Adam/LARS);
+//! * [`inference`] — distributed `predict` over a Sample RDD;
+//! * [`allreduce`] — Ring/PS baselines + the §3.3 traffic models;
+//! * [`metrics`] — per-iteration breakdowns and evaluation metrics.
+
+pub mod allreduce;
+pub mod checkpoint;
+pub mod inference;
+pub mod metrics;
+pub mod module;
+pub mod optim;
+pub mod optimizer;
+pub mod param_mgr;
+pub mod sample;
+pub mod schedule;
+pub mod trigger;
+
+pub use metrics::{IterMetrics, TrainReport};
+pub use module::Module;
+pub use optim::{Adagrad, Adam, Lars, OptimMethod, Sgd};
+pub use optimizer::{DistributedOptimizer, TrainConfig};
+pub use checkpoint::Checkpoint;
+pub use param_mgr::{GradPolicy, ParameterManager};
+pub use schedule::LrSchedule;
+pub use trigger::{TrainState, Trigger};
+pub use sample::Sample;

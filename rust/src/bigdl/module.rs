@@ -1,0 +1,98 @@
+//! `Module` — a neural-network model handle: the AOT artifact (HLO
+//! executables + metadata) plus helpers to run `fwd_bwd` / `predict` with
+//! host tensors. The analogue of BigDL's `Module` API, except the graph
+//! was defined in JAX (L2) + Pallas (L1) and frozen at build time.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::{ArtifactMeta, EntryMeta, RuntimeHandle};
+use crate::tensor::Tensor;
+
+/// Handle to one AOT-compiled model.
+#[derive(Clone)]
+pub struct Module {
+    pub name: String,
+    rt: RuntimeHandle,
+    meta: Arc<ArtifactMeta>,
+}
+
+impl Module {
+    pub fn load(rt: &RuntimeHandle, name: &str) -> Result<Module> {
+        let meta = Arc::new(rt.meta(name)?.clone());
+        Ok(Module { name: name.to_string(), rt: rt.clone(), meta })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn runtime(&self) -> &RuntimeHandle {
+        &self.rt
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+
+    pub fn train_entry(&self) -> Result<&EntryMeta> {
+        self.meta.entry("fwd_bwd")
+    }
+
+    pub fn predict_entry(&self) -> Result<&EntryMeta> {
+        self.meta.entry("predict")
+    }
+
+    /// Per-replica train batch size baked into the artifact.
+    pub fn train_batch(&self) -> Result<usize> {
+        Ok(self.train_entry()?.batch_size)
+    }
+
+    /// Initial parameters (as exported by aot.py).
+    pub fn initial_params(&self) -> Result<Vec<f32>> {
+        self.rt.initial_params(&self.name)
+    }
+
+    /// Pre-compile both entry points (off the training path).
+    pub fn warmup(&self) -> Result<()> {
+        for entry in self.meta.entries.keys() {
+            self.rt.warmup(&self.name, entry)?;
+        }
+        Ok(())
+    }
+
+    /// Run one forward-backward: returns (loss, flat gradient).
+    pub fn fwd_bwd(&self, inputs: Vec<Tensor>) -> Result<(f32, Vec<f32>)> {
+        let out = self
+            .rt
+            .execute(&self.name, "fwd_bwd", inputs)
+            .with_context(|| format!("{} fwd_bwd", self.name))?;
+        ensure!(out.len() == 2, "fwd_bwd must return (loss, grads)");
+        let loss = out[0].item_f32()?;
+        let grads = out.into_iter().nth(1).unwrap().into_f32()?;
+        ensure!(
+            grads.len() == self.meta.param_count,
+            "gradient length {} != param_count {}",
+            grads.len(),
+            self.meta.param_count
+        );
+        Ok((loss, grads))
+    }
+
+    /// Run prediction; returns all model outputs.
+    pub fn predict(&self, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.rt
+            .execute(&self.name, "predict", inputs)
+            .with_context(|| format!("{} predict", self.name))
+    }
+}
+
+impl std::fmt::Debug for Module {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Module")
+            .field("name", &self.name)
+            .field("params", &self.meta.param_count)
+            .finish()
+    }
+}

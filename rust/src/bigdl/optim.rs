@@ -1,0 +1,269 @@
+//! Optimization methods applied shard-wise by the parameter-synchronization
+//! tasks (Algorithm 2 line 4: "updates the n-th partition of the weights
+//! per specified optimization method").
+//!
+//! Matches BigDL's OptimMethod surface: SGD (+momentum, weight decay,
+//! nesterov), Adagrad, Adam, and LARS (layer-wise scaling is approximated
+//! shard-wise — see note on [`Lars`]).
+//!
+//! Every method is a pure shard transformer: `(weights, mean_grad, state)`
+//! → in-place update. State buffers live alongside the weight shard in the
+//! block store, so the sync task that owns shard *n* always updates them
+//! locally.
+
+/// A shard-wise optimizer. Implementations must be deterministic.
+pub trait OptimMethod: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Number of per-shard f32 state buffers (same length as the shard).
+    fn state_bufs(&self) -> usize;
+    /// Apply one update. `step` is 1-based; `lr_mult` is the schedule's
+    /// multiplier on the base learning rate; `grad` is the *mean* gradient
+    /// across replicas; `state` holds `state_bufs()` buffers.
+    fn update(&self, step: usize, lr_mult: f32, weights: &mut [f32], grad: &[f32], state: &mut [Vec<f32>]);
+}
+
+/// SGD with optional momentum, weight decay and Nesterov.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub nesterov: bool,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd { lr, momentum: 0.0, weight_decay: 0.0, nesterov: false }
+    }
+}
+
+impl OptimMethod for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn state_bufs(&self) -> usize {
+        usize::from(self.momentum != 0.0)
+    }
+
+    fn update(&self, _step: usize, lr_mult: f32, weights: &mut [f32], grad: &[f32], state: &mut [Vec<f32>]) {
+        let lr = self.lr * lr_mult;
+        if self.momentum == 0.0 {
+            for (w, &g) in weights.iter_mut().zip(grad) {
+                let g = g + self.weight_decay * *w;
+                *w -= lr * g;
+            }
+        } else {
+            let vel = &mut state[0];
+            for i in 0..weights.len() {
+                let g = grad[i] + self.weight_decay * weights[i];
+                vel[i] = self.momentum * vel[i] + g;
+                let d = if self.nesterov { g + self.momentum * vel[i] } else { vel[i] };
+                weights[i] -= lr * d;
+            }
+        }
+    }
+}
+
+/// Adagrad (the optimizer in the paper's Fig 1 pipeline).
+#[derive(Debug, Clone)]
+pub struct Adagrad {
+    pub lr: f32,
+    pub eps: f32,
+}
+
+impl Adagrad {
+    pub fn new(lr: f32) -> Adagrad {
+        Adagrad { lr, eps: 1e-10 }
+    }
+}
+
+impl OptimMethod for Adagrad {
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn state_bufs(&self) -> usize {
+        1
+    }
+
+    fn update(&self, _step: usize, lr_mult: f32, weights: &mut [f32], grad: &[f32], state: &mut [Vec<f32>]) {
+        let lr = self.lr * lr_mult;
+        let acc = &mut state[0];
+        for i in 0..weights.len() {
+            acc[i] += grad[i] * grad[i];
+            weights[i] -= lr * grad[i] / (acc[i].sqrt() + self.eps);
+        }
+    }
+}
+
+/// Adam (used by the NCF MLPerf reference).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl OptimMethod for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn state_bufs(&self) -> usize {
+        2
+    }
+
+    fn update(&self, step: usize, lr_mult: f32, weights: &mut [f32], grad: &[f32], state: &mut [Vec<f32>]) {
+        let lr = self.lr * lr_mult;
+        let t = step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let (m, v) = state.split_at_mut(1);
+        let (m, v) = (&mut m[0], &mut v[0]);
+        for i in 0..weights.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            weights[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// LARS — layer-wise adaptive rate scaling, the standard large-batch
+/// technique for scaling synchronous SGD to many nodes (the regime of
+/// Fig 7). NOTE: true LARS scales per *layer*; shards don't align with
+/// layer boundaries, so this implementation scales per shard — an
+/// approximation that is exact when `n_shards` divides the layer
+/// boundaries and close otherwise (documented in DESIGN.md).
+#[derive(Debug, Clone)]
+pub struct Lars {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub trust: f32,
+}
+
+impl Lars {
+    pub fn new(lr: f32) -> Lars {
+        Lars { lr, momentum: 0.9, weight_decay: 5e-4, trust: 0.001 }
+    }
+}
+
+impl OptimMethod for Lars {
+    fn name(&self) -> &'static str {
+        "lars"
+    }
+
+    fn state_bufs(&self) -> usize {
+        1
+    }
+
+    fn update(&self, _step: usize, lr_mult: f32, weights: &mut [f32], grad: &[f32], state: &mut [Vec<f32>]) {
+        let lr = self.lr * lr_mult;
+        let wnorm = weights.iter().map(|w| w * w).sum::<f32>().sqrt();
+        let gnorm = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+        let local_lr = if wnorm > 0.0 && gnorm > 0.0 {
+            self.trust * wnorm / (gnorm + self.weight_decay * wnorm)
+        } else {
+            1.0
+        };
+        let vel = &mut state[0];
+        for i in 0..weights.len() {
+            let g = grad[i] + self.weight_decay * weights[i];
+            vel[i] = self.momentum * vel[i] + lr * local_lr * g;
+            weights[i] -= vel[i];
+        }
+    }
+}
+
+/// Construct an optimizer by name (CLI / config surface).
+pub fn by_name(name: &str, lr: f32) -> anyhow::Result<std::sync::Arc<dyn OptimMethod>> {
+    Ok(match name {
+        "sgd" => std::sync::Arc::new(Sgd::new(lr)),
+        "sgdm" => std::sync::Arc::new(Sgd { momentum: 0.9, ..Sgd::new(lr) }),
+        "adagrad" => std::sync::Arc::new(Adagrad::new(lr)),
+        "adam" => std::sync::Arc::new(Adam::new(lr)),
+        "lars" => std::sync::Arc::new(Lars::new(lr)),
+        other => anyhow::bail!("unknown optim method {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(opt: &dyn OptimMethod, steps: usize) -> Vec<f32> {
+        // Minimize f(w) = 0.5 * w^2 (grad = w) from w=1.
+        let mut w = vec![1.0f32, -2.0];
+        let mut state: Vec<Vec<f32>> = (0..opt.state_bufs()).map(|_| vec![0.0; 2]).collect();
+        for step in 1..=steps {
+            let g: Vec<f32> = w.clone();
+            opt.update(step, 1.0, &mut w, &g, &mut state);
+        }
+        w
+    }
+
+    #[test]
+    fn all_methods_descend_quadratic() {
+        for opt in [
+            Box::new(Sgd::new(0.1)) as Box<dyn OptimMethod>,
+            Box::new(Sgd { momentum: 0.9, ..Sgd::new(0.05) }),
+            Box::new(Adagrad::new(0.5)),
+            Box::new(Adam::new(0.1)),
+        ] {
+            let w = run(opt.as_ref(), 50);
+            assert!(
+                w.iter().all(|x| x.abs() < 0.5),
+                "{} failed to descend: {w:?}",
+                opt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_matches_closed_form() {
+        let opt = Sgd::new(0.1);
+        let mut w = vec![1.0f32];
+        let mut state = vec![];
+        for _ in 0..10 {
+            let g = w.clone();
+            opt.update(1, 1.0, &mut w, &g, &mut state);
+        }
+        let expect = 0.9f32.powi(10);
+        assert!((w[0] - expect).abs() < 1e-6, "{} vs {expect}", w[0]);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let opt = Sgd { weight_decay: 0.1, ..Sgd::new(0.5) };
+        let mut w = vec![1.0f32];
+        let mut state = vec![];
+        for _ in 0..100 {
+            opt.update(1, 1.0, &mut w, &[0.0], &mut state); // zero gradient
+        }
+        assert!(w[0] < 0.01, "decay should shrink weights: {}", w[0]);
+    }
+
+    #[test]
+    fn lars_update_is_finite_and_descends() {
+        let w = run(&Lars::new(1.0), 100);
+        assert!(w.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["sgd", "sgdm", "adagrad", "adam", "lars"] {
+            assert_eq!(by_name(n, 0.1).unwrap().name().starts_with(&n[..3]), true);
+        }
+        assert!(by_name("rmsprop", 0.1).is_err());
+    }
+}

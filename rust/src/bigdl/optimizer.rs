@@ -1,0 +1,299 @@
+//! `DistributedOptimizer` — Algorithm 1: the logically-centralized driver
+//! loop. Every iteration runs exactly two short-lived Sparklet jobs:
+//!
+//! 1. **model forward-backward** — one task per Sample-RDD partition; each
+//!    task reads the latest weights (task-side broadcast shards), draws a
+//!    random local minibatch, runs the AOT `fwd_bwd` executable, slices
+//!    its local gradient N ways and publishes the slices (shuffle write);
+//! 2. **parameter synchronization** — [`ParameterManager::sync_round`]
+//!    (Algorithm 2).
+//!
+//! Tasks are stateless and individually re-runnable: a retried task
+//! re-reads the same broadcast round, re-draws the same minibatch (the
+//! task RNG is seeded by job+partition) and regenerates identical slices.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{IterMetrics, TrainReport};
+use super::module::Module;
+use super::optim::OptimMethod;
+use super::param_mgr::ParameterManager;
+use super::sample::{assemble_train_inputs, draw_batch_indices, Sample};
+use super::trigger::{TrainState, Trigger};
+use crate::sparklet::{Rdd, Shuffle, SparkletContext};
+use crate::tensor::Tensor;
+
+/// Training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Iteration budget (becomes a `Trigger::MaxIteration` end condition
+    /// unless `end_trigger` overrides it).
+    pub iterations: usize,
+    /// Weight shards N; defaults to the number of data partitions.
+    pub n_shards: Option<usize>,
+    pub log_every: usize,
+    /// Drizzle group size (>1 pre-plans placements for whole groups).
+    pub group_size: usize,
+    /// Custom end condition (e.g. `MaxEpoch(5).or(MinLoss(0.1))`).
+    pub end_trigger: Option<Trigger>,
+    /// Checkpoint cadence + directory (BigDL `setCheckpoint`).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    pub checkpoint_trigger: Trigger,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            iterations: 10,
+            n_shards: None,
+            log_every: 5,
+            group_size: 1,
+            end_trigger: None,
+            checkpoint_dir: None,
+            checkpoint_trigger: Trigger::Never,
+        }
+    }
+}
+
+/// Validation hook: given the current full weights, produce a named score
+/// (runs on the driver between iterations, e.g. distributed evaluate).
+pub type ValidationFn = Box<dyn FnMut(&[f32]) -> Result<f64>>;
+
+/// The driver-side distributed trainer.
+pub struct DistributedOptimizer {
+    ctx: SparkletContext,
+    module: Module,
+    dataset: Rdd<Sample>,
+    pm: ParameterManager,
+    cfg: TrainConfig,
+    pub history: Vec<IterMetrics>,
+    /// (trigger, hook, scores) — run when the trigger fires.
+    validation: Option<(Trigger, ValidationFn, Vec<(usize, f64)>)>,
+    dataset_len: usize,
+}
+
+impl DistributedOptimizer {
+    pub fn new(
+        ctx: &SparkletContext,
+        module: Module,
+        dataset: Rdd<Sample>,
+        optim: Arc<dyn OptimMethod>,
+        cfg: TrainConfig,
+    ) -> Result<DistributedOptimizer> {
+        // Cache + materialize the Sample RDD across the cluster (§3.2:
+        // "both the model and Sample RDDs are cached in memory, and
+        // co-partitioned and co-located").
+        let dataset = dataset.cache();
+        dataset.materialize_all()?;
+        let counts = dataset.run_partition_job(|_tc, d| Ok(d.len()))?;
+        ensure!(
+            counts.iter().all(|&c| c > 0),
+            "every partition needs data; got {counts:?}"
+        );
+        let initial = module.initial_params()?;
+        let n_shards = cfg.n_shards.unwrap_or(dataset.num_partitions());
+        let pm = ParameterManager::init(ctx, &initial, n_shards, optim)?;
+        // Compile executables off the training path.
+        module.warmup()?;
+        Ok(DistributedOptimizer {
+            ctx: ctx.clone(),
+            module,
+            dataset,
+            pm,
+            cfg,
+            history: Vec::new(),
+            validation: None,
+            dataset_len: counts.iter().sum(),
+        })
+    }
+
+    /// Install a validation hook run whenever `trigger` fires.
+    pub fn set_validation(&mut self, trigger: Trigger, hook: ValidationFn) {
+        self.validation = Some((trigger, hook, Vec::new()));
+    }
+
+    pub fn validation_scores(&self) -> &[(usize, f64)] {
+        self.validation.as_ref().map(|(_, _, s)| s.as_slice()).unwrap_or(&[])
+    }
+
+    /// Completed epochs: one epoch = one global-batch pass over the data.
+    pub fn epoch(&self) -> usize {
+        let per_iter = self.global_batch();
+        if self.dataset_len == 0 || per_iter == 0 {
+            0
+        } else {
+            self.history.len() * per_iter / self.dataset_len
+        }
+    }
+
+    /// Resume from the latest checkpoint in `dir` (weights + optimizer
+    /// state + step), if one exists. Returns the resumed step.
+    pub fn resume_from(&mut self, dir: &std::path::Path) -> Result<Option<usize>> {
+        match Checkpoint::latest(dir, &self.module.name)? {
+            Some(cp) => {
+                self.pm.import(&cp.weights, &cp.opt_state, cp.step)?;
+                log::info!("resumed {} from checkpoint step {}", self.module.name, cp.step);
+                Ok(Some(cp.step))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn checkpoint(&self) -> Result<()> {
+        if let Some(dir) = &self.cfg.checkpoint_dir {
+            let cp = Checkpoint {
+                model: self.module.name.clone(),
+                step: self.pm.optimizer_step(),
+                weights: self.pm.current_weights()?,
+                opt_state: self.pm.export_state()?,
+            };
+            let path = cp.save(dir)?;
+            log::info!("checkpoint written to {}", path.display());
+        }
+        Ok(())
+    }
+
+    pub fn parameter_manager(&self) -> &ParameterManager {
+        &self.pm
+    }
+
+    pub fn module(&self) -> &Module {
+        &self.module
+    }
+
+    /// Global batch = per-replica batch × partitions (paper §2 of Fig 3).
+    pub fn global_batch(&self) -> usize {
+        self.module.train_entry().map(|e| e.batch_size).unwrap_or(0)
+            * self.dataset.num_partitions()
+    }
+
+    /// Run one training iteration (two jobs); returns its metrics.
+    pub fn step(&mut self) -> Result<IterMetrics> {
+        let iter_idx = self.history.len();
+        let m = self.dataset.num_partitions();
+        let n = self.pm.n_shards;
+        let bm = self.ctx.blocks();
+        let traffic0 = bm.stats.snapshot();
+        let sched0 = self.ctx.scheduler().stats.snapshot();
+        let t_iter = Instant::now();
+
+        // ---- job 1: model forward-backward --------------------------------
+        let bcast = self.pm.weights_broadcast();
+        let shuffle = Shuffle::new(self.ctx.next_shuffle_id(), m, n);
+        let module = self.module.clone();
+        let ranges: Arc<Vec<std::ops::Range<usize>>> = Arc::new(self.pm.ranges().to_vec());
+        let entry = self.module.train_entry()?.clone();
+        let batch = entry.batch_size;
+
+        let t_job1 = Instant::now();
+        let task_results = self.dataset.run_partition_job(move |tc, samples| {
+            let bm = tc.blocks();
+            // (line 4) read the latest weights.
+            let t0 = Instant::now();
+            let weights = bcast.fetch_all_concat(&bm, tc.node)?;
+            let fetch_s = t0.elapsed().as_secs_f64();
+            // (line 5) random local minibatch.
+            let mut rng = tc.rng();
+            let idx = draw_batch_indices(&mut rng, samples.len(), batch);
+            let inputs = assemble_train_inputs(
+                &entry,
+                Tensor::from_f32(vec![weights.len()], weights),
+                samples,
+                &idx,
+            )?;
+            // (line 6) local gradients on the model replica.
+            let t1 = Instant::now();
+            let (loss, grads) = module.fwd_bwd(inputs)?;
+            let compute_s = t1.elapsed().as_secs_f64();
+            // Slice N ways and publish (input to Algorithm 2) as views:
+            // one shared allocation, zero per-shard copies (§Perf P2).
+            let grads = Arc::new(grads);
+            for (slot, r) in ranges.iter().enumerate() {
+                shuffle.write_view(&bm, tc.node, tc.partition, slot, &grads, r.clone());
+            }
+            Ok((loss, fetch_s, compute_s))
+        })?;
+        let fwdbwd_s = t_job1.elapsed().as_secs_f64();
+
+        let loss = task_results.iter().map(|r| r.0).sum::<f32>() / m as f32;
+        let fetch_s = task_results.iter().map(|r| r.1).fold(0.0, f64::max);
+        let compute_s = task_results.iter().map(|r| r.2).fold(0.0, f64::max);
+
+        // ---- job 2: parameter synchronization ------------------------------
+        let t_sync = Instant::now();
+        self.pm.sync_round(&shuffle, m)?;
+        let sync_s = t_sync.elapsed().as_secs_f64();
+
+        let sched1 = self.ctx.scheduler().stats.snapshot();
+        let metrics = IterMetrics {
+            iteration: iter_idx,
+            loss,
+            total_s: t_iter.elapsed().as_secs_f64(),
+            fwdbwd_s,
+            compute_s,
+            fetch_s,
+            sync_s,
+            dispatch_ns: sched1.dispatch_ns - sched0.dispatch_ns,
+            traffic: bm.stats.snapshot().delta(traffic0),
+            sched: sched1,
+        };
+        if self.cfg.log_every > 0 && iter_idx % self.cfg.log_every == 0 {
+            log::info!(
+                "iter {iter_idx}: loss={loss:.4} compute={:.1}ms sync={:.1}ms ({:.1}%)",
+                compute_s * 1e3,
+                sync_s * 1e3,
+                metrics.sync_overhead_frac() * 100.0
+            );
+        }
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Algorithm 1's outer loop: run until the end trigger fires
+    /// (default `MaxIteration(cfg.iterations)`), firing validation and
+    /// checkpoint triggers along the way.
+    pub fn optimize(&mut self) -> Result<TrainReport> {
+        let end = self
+            .cfg
+            .end_trigger
+            .clone()
+            .unwrap_or(Trigger::MaxIteration(self.cfg.iterations));
+        loop {
+            let metrics = self.step()?;
+            let epoch = self.epoch();
+            let state = TrainState {
+                iteration: self.history.len(),
+                epoch,
+                last: Some(&metrics),
+            };
+            if let Some((trigger, hook, scores)) = &mut self.validation {
+                if trigger.fired(&state) {
+                    let weights = self.pm.current_weights()?;
+                    let score = hook(&weights)?;
+                    log::info!("validation @ iter {}: {score:.4}", state.iteration);
+                    scores.push((state.iteration, score));
+                }
+            }
+            if self.cfg.checkpoint_trigger.fired(&state) {
+                self.checkpoint()?;
+            }
+            if end.fired(&state) {
+                break;
+            }
+            // Safety valve against triggers that can never fire.
+            if self.history.len() >= self.cfg.iterations.max(1) * 1000 {
+                anyhow::bail!("end trigger never fired after {} iterations", self.history.len());
+            }
+        }
+        Ok(TrainReport::from_history(&self.history, self.global_batch()))
+    }
+
+    /// Latest full weight vector (driver-side).
+    pub fn weights(&self) -> Result<Vec<f32>> {
+        self.pm.current_weights()
+    }
+}

@@ -1,0 +1,420 @@
+//! `ParameterManager` — Algorithm 2: the AllReduce-like parameter
+//! synchronization built purely from Spark primitives (shuffle, task-side
+//! broadcast, in-memory block storage).
+//!
+//! Weight shard `n` and its optimizer state live in the block store on the
+//! node that runs sync task `n` (task `n` of every "parameter
+//! synchronization" job manages partition `n`, like a parameter server).
+//! Updates are copy-on-write: each round publishes *new* shard blocks
+//! under the next broadcast round id — nothing is mutated in place, which
+//! is exactly the functional-compute-model constraint the paper works
+//! within.
+//!
+//! Extensions beyond the paper's Algorithm 2 (all standard BigDL
+//! features): learning-rate schedules, constant gradient clamping
+//! (shard-local, exact) and global-L2-norm clipping (two-phase: an extra
+//! aggregate+norm job before the update job, since the global norm needs
+//! all shards).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::optim::OptimMethod;
+use super::schedule::LrSchedule;
+use crate::sparklet::{BlockData, BlockId, Broadcast, Shuffle, SparkletContext};
+use crate::tensor::partition_ranges;
+
+/// Gradient post-processing applied by the sync tasks.
+#[derive(Debug, Clone, Default)]
+pub struct GradPolicy {
+    /// Clamp every gradient component to ±c (BigDL ConstantGradientClipping).
+    pub clip_const: Option<f32>,
+    /// Scale the whole gradient so its global L2 norm ≤ max
+    /// (BigDL GradientClippingByL2Norm). Costs one extra short job/round.
+    pub clip_l2: Option<f32>,
+}
+
+/// Manages the N weight shards + optimizer state across rounds.
+pub struct ParameterManager {
+    ctx: SparkletContext,
+    pub n_shards: usize,
+    pub param_count: usize,
+    ranges: Vec<std::ops::Range<usize>>,
+    optim: Arc<dyn OptimMethod>,
+    /// Broadcast round currently holding the latest weights.
+    round: AtomicU64,
+    /// 1-based optimizer step.
+    step: AtomicUsize,
+    /// Unique id namespacing this manager's state blocks (two managers on
+    /// one context must not collide).
+    instance: u64,
+    pub grad_policy: RwLock<GradPolicy>,
+    pub lr_schedule: RwLock<LrSchedule>,
+}
+
+impl ParameterManager {
+    /// Seed the store with the initial weights, sharded N ways
+    /// (shard `n` published from node `n % nodes`, its future owner).
+    pub fn init(
+        ctx: &SparkletContext,
+        initial: &[f32],
+        n_shards: usize,
+        optim: Arc<dyn OptimMethod>,
+    ) -> Result<ParameterManager> {
+        ensure!(n_shards > 0, "need at least one shard");
+        let ranges = partition_ranges(initial.len(), n_shards);
+        let instance = ctx.next_broadcast_id();
+        let round0 = ctx.next_broadcast_id();
+        let bm = ctx.blocks();
+        let bcast = Broadcast::new(round0, n_shards);
+        let nodes = ctx.nodes();
+        for (n, r) in ranges.iter().enumerate() {
+            let owner = n % nodes;
+            bcast.publish(&bm, owner, n, Arc::new(initial[r.clone()].to_vec()));
+            for b in 0..optim.state_bufs() {
+                bm.put(
+                    owner,
+                    Self::state_key(instance, n, b),
+                    BlockData::F32(Arc::new(vec![0.0; r.len()])),
+                );
+            }
+        }
+        Ok(ParameterManager {
+            ctx: ctx.clone(),
+            n_shards,
+            param_count: initial.len(),
+            ranges,
+            optim,
+            round: AtomicU64::new(round0),
+            step: AtomicUsize::new(0),
+            instance,
+            grad_policy: RwLock::new(GradPolicy::default()),
+            lr_schedule: RwLock::new(LrSchedule::Constant),
+        })
+    }
+
+    fn state_key(instance: u64, shard: usize, buf: usize) -> BlockId {
+        BlockId::Named(format!("optstate/{instance}/{shard}/{buf}"))
+    }
+
+    pub fn ranges(&self) -> &[std::ops::Range<usize>] {
+        &self.ranges
+    }
+
+    pub fn set_grad_policy(&self, p: GradPolicy) {
+        *self.grad_policy.write().unwrap() = p;
+    }
+
+    pub fn set_lr_schedule(&self, s: LrSchedule) {
+        *self.lr_schedule.write().unwrap() = s;
+    }
+
+    /// The broadcast round holding the latest weights (read by the next
+    /// "model forward-backward" job: Algorithm 1 line 4).
+    pub fn weights_broadcast(&self) -> Broadcast {
+        Broadcast::new(self.round.load(Ordering::SeqCst), self.n_shards)
+    }
+
+    /// Assemble the full latest weight vector (driver-side convenience for
+    /// validation / checkpointing).
+    pub fn current_weights(&self) -> Result<Vec<f32>> {
+        self.weights_broadcast()
+            .fetch_all_concat(&self.ctx.blocks(), 0)
+    }
+
+    /// Concatenated optimizer-state buffers (for checkpointing).
+    pub fn export_state(&self) -> Result<Vec<Vec<f32>>> {
+        let bm = self.ctx.blocks();
+        (0..self.optim.state_bufs())
+            .map(|b| {
+                let mut out = Vec::with_capacity(self.param_count);
+                for n in 0..self.n_shards {
+                    let shard = bm
+                        .get(0, &Self::state_key(self.instance, n, b))
+                        .ok_or_else(|| anyhow!("missing optimizer state {n}/{b}"))?
+                        .as_f32()?;
+                    out.extend_from_slice(&shard);
+                }
+                Ok(out)
+            })
+            .collect()
+    }
+
+    /// Restore weights + optimizer state + step (checkpoint resume).
+    pub fn import(&self, weights: &[f32], state: &[Vec<f32>], step: usize) -> Result<()> {
+        ensure!(weights.len() == self.param_count, "weight length mismatch");
+        ensure!(state.len() == self.optim.state_bufs(), "state buffer count mismatch");
+        let bm = self.ctx.blocks();
+        let old = self.weights_broadcast();
+        let new_round = self.ctx.next_broadcast_id();
+        let bcast = Broadcast::new(new_round, self.n_shards);
+        let nodes = self.ctx.nodes();
+        for (n, r) in self.ranges.iter().enumerate() {
+            let owner = n % nodes;
+            bcast.publish(&bm, owner, n, Arc::new(weights[r.clone()].to_vec()));
+            for (b, buf) in state.iter().enumerate() {
+                bm.put(owner, Self::state_key(self.instance, n, b), BlockData::F32(Arc::new(buf[r.clone()].to_vec())));
+            }
+        }
+        self.round.store(new_round, Ordering::SeqCst);
+        self.step.store(step, Ordering::SeqCst);
+        old.cleanup(&bm);
+        Ok(())
+    }
+
+    pub fn optimizer_step(&self) -> usize {
+        self.step.load(Ordering::SeqCst)
+    }
+
+    /// Run the "parameter synchronization" job (Algorithm 2) for gradient
+    /// slices written into `shuffle` by `n_replicas` map-side tasks.
+    ///
+    /// Each task `n`: shuffle-read the n-th slice of every local gradient,
+    /// sum them, divide by the replica count, apply the optimizer to shard
+    /// `n`, publish the updated shard (task-side broadcast). Returns the
+    /// new broadcast round.
+    pub fn sync_round(&self, shuffle: &Shuffle, n_replicas: usize) -> Result<Broadcast> {
+        ensure!(shuffle.reduces == self.n_shards, "shuffle/shard mismatch");
+        ensure!(shuffle.maps == n_replicas, "shuffle writers != replicas");
+        let policy = self.grad_policy.read().unwrap().clone();
+        let old_round = self.round.load(Ordering::SeqCst);
+        let new_round = self.ctx.next_broadcast_id();
+        let step = self.step.fetch_add(1, Ordering::SeqCst) + 1;
+        let lr_mult = self.lr_schedule.read().unwrap().multiplier(step) as f32;
+
+        let old_bcast = Broadcast::new(old_round, self.n_shards);
+        let new_bcast = Broadcast::new(new_round, self.n_shards);
+        let sh = *shuffle;
+        let optim = Arc::clone(&self.optim);
+        let scale = 1.0f32 / n_replicas as f32;
+        let state_bufs = self.optim.state_bufs();
+        let instance = self.instance;
+        let preferred = self.ctx.default_preferred(self.n_shards);
+
+        // Optional phase A (global-L2 clipping): aggregate + clamp + norm.
+        // The aggregated slice is parked in the block store so phase B does
+        // not re-read the raw shuffle slices.
+        let agg_key = |shard: usize| BlockId::Named(format!("agg/{new_round}/{shard}"));
+        let clip_scale: f32 = if let Some(max_norm) = policy.clip_l2 {
+            let clip_const = policy.clip_const;
+            let sqnorms = self.ctx.run_job(
+                &preferred,
+                Arc::new(move |tc| {
+                    let bm = tc.blocks();
+                    let n = tc.partition;
+                    let mut grad = sh.read_and_sum(&bm, tc.node, n)?;
+                    crate::tensor::scale(&mut grad, scale);
+                    if let Some(c) = clip_const {
+                        grad.iter_mut().for_each(|g| *g = g.clamp(-c, c));
+                    }
+                    let sq: f64 = grad.iter().map(|g| (*g as f64) * (*g as f64)).sum();
+                    bm.put(
+                        tc.node,
+                        BlockId::Named(format!("agg/{new_round}/{n}")),
+                        BlockData::F32(Arc::new(grad)),
+                    );
+                    Ok(sq)
+                }),
+            )?;
+            let norm = sqnorms.iter().sum::<f64>().sqrt() as f32;
+            if norm > max_norm {
+                max_norm / norm
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+
+        let two_phase = policy.clip_l2.is_some();
+        let clip_const = policy.clip_const;
+        self.ctx.run_job(
+            &preferred,
+            Arc::new(move |tc| {
+                let bm = tc.blocks();
+                let n = tc.partition;
+                // (2)-(3): aggregate the n-th slice of all local gradients.
+                let mut grad = if two_phase {
+                    bm.get(tc.node, &BlockId::Named(format!("agg/{new_round}/{n}")))
+                        .ok_or_else(|| anyhow!("aggregated slice {n} missing"))?
+                        .as_f32()?
+                        .as_ref()
+                        .clone()
+                } else {
+                    let mut g = sh.read_and_sum(&bm, tc.node, n)?;
+                    crate::tensor::scale(&mut g, scale);
+                    if let Some(c) = clip_const {
+                        g.iter_mut().for_each(|x| *x = x.clamp(-c, c));
+                    }
+                    g
+                };
+                if clip_scale != 1.0 {
+                    crate::tensor::scale(&mut grad, clip_scale);
+                }
+                // (4): update the n-th weight partition (copy-on-write).
+                let mut weights = old_bcast.fetch(&bm, tc.node, n)?.as_ref().clone();
+                let mut state: Vec<Vec<f32>> = (0..state_bufs)
+                    .map(|b| {
+                        bm.get(tc.node, &Self::state_key(instance, n, b))
+                            .ok_or_else(|| anyhow!("optimizer state {n}/{b} missing"))?
+                            .as_f32()
+                            .map(|a| a.as_ref().clone())
+                    })
+                    .collect::<Result<_>>()?;
+                optim.update(step, lr_mult, &mut weights, &grad, &mut state);
+                for (b, s) in state.into_iter().enumerate() {
+                    bm.put(tc.node, Self::state_key(instance, n, b), BlockData::F32(Arc::new(s)));
+                }
+                // (5): task-side broadcast of the updated shard.
+                new_bcast.publish(&bm, tc.node, n, Arc::new(weights));
+                Ok(())
+            }),
+        )?;
+
+        self.round.store(new_round, Ordering::SeqCst);
+        // Retire consumed blocks (shuffle slices, staged aggregates,
+        // previous weights).
+        let bm = self.ctx.blocks();
+        shuffle.cleanup(&bm);
+        if two_phase {
+            for n in 0..self.n_shards {
+                bm.remove(&agg_key(n));
+            }
+        }
+        old_bcast.cleanup(&bm);
+        Ok(new_bcast)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigdl::optim::Sgd;
+
+    fn write_grads(
+        ctx: &SparkletContext,
+        pm: &ParameterManager,
+        grads: &[Vec<f32>],
+    ) -> Shuffle {
+        let sh = Shuffle::new(ctx.next_shuffle_id(), grads.len(), pm.n_shards);
+        let bm = ctx.blocks();
+        for (m, g) in grads.iter().enumerate() {
+            for (n, r) in pm.ranges().iter().enumerate() {
+                sh.write(&bm, m % ctx.nodes(), m, n, Arc::new(g[r.clone()].to_vec()));
+            }
+        }
+        sh
+    }
+
+    /// Distributed Alg-2 sync must equal the serial reference update.
+    #[test]
+    fn sync_round_equals_serial_sgd() {
+        let ctx = SparkletContext::local(3);
+        let init: Vec<f32> = (0..100).map(|i| i as f32 * 0.01).collect();
+        let pm =
+            ParameterManager::init(&ctx, &init, 3, Arc::new(Sgd::new(0.5))).unwrap();
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 100], vec![3.0f32; 100]]);
+        pm.sync_round(&sh, 2).unwrap();
+        let got = pm.current_weights().unwrap();
+        // mean grad = 2.0; w' = w - 0.5*2.0 = w - 1.0
+        for (a, b) in got.iter().zip(init.iter().map(|w| w - 1.0)) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert_eq!(pm.optimizer_step(), 1);
+    }
+
+    #[test]
+    fn rounds_retire_old_blocks() {
+        let ctx = SparkletContext::local(2);
+        let pm = ParameterManager::init(&ctx, &vec![0.0f32; 10], 2, Arc::new(Sgd::new(0.1))).unwrap();
+        let first = pm.weights_broadcast();
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 10]]);
+        pm.sync_round(&sh, 1).unwrap();
+        let bm = ctx.blocks();
+        assert!(first.fetch(&bm, 0, 0).is_err());
+        assert_eq!(pm.current_weights().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn const_clipping_clamps_components() {
+        let ctx = SparkletContext::local(2);
+        let pm = ParameterManager::init(&ctx, &vec![0.0f32; 8], 2, Arc::new(Sgd::new(1.0))).unwrap();
+        pm.set_grad_policy(GradPolicy { clip_const: Some(0.5), ..Default::default() });
+        let sh = write_grads(&ctx, &pm, &[vec![10.0f32; 8]]);
+        pm.sync_round(&sh, 1).unwrap();
+        let w = pm.current_weights().unwrap();
+        assert!(w.iter().all(|&x| (x + 0.5).abs() < 1e-6), "clamped update: {w:?}");
+    }
+
+    #[test]
+    fn l2_clipping_scales_to_max_norm() {
+        let ctx = SparkletContext::local(2);
+        let k = 16;
+        let pm = ParameterManager::init(&ctx, &vec![0.0f32; k], 4, Arc::new(Sgd::new(1.0))).unwrap();
+        pm.set_grad_policy(GradPolicy { clip_l2: Some(1.0), ..Default::default() });
+        // grad = all 1.0 → norm 4.0 → scaled by 1/4.
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; k]]);
+        pm.sync_round(&sh, 1).unwrap();
+        let w = pm.current_weights().unwrap();
+        let norm: f32 = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "post-update norm {norm}");
+        // Below the threshold: untouched.
+        let pm2 = ParameterManager::init(&ctx, &vec![0.0f32; k], 4, Arc::new(Sgd::new(1.0))).unwrap();
+        pm2.set_grad_policy(GradPolicy { clip_l2: Some(100.0), ..Default::default() });
+        let sh2 = write_grads(&ctx, &pm2, &[vec![1.0f32; k]]);
+        pm2.sync_round(&sh2, 1).unwrap();
+        let w2 = pm2.current_weights().unwrap();
+        assert!(w2.iter().all(|&x| (x + 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn lr_schedule_scales_updates() {
+        let ctx = SparkletContext::local(1);
+        let pm = ParameterManager::init(&ctx, &vec![0.0f32; 4], 1, Arc::new(Sgd::new(1.0))).unwrap();
+        pm.set_lr_schedule(LrSchedule::Step { step_size: 1, gamma: 0.5 });
+        for _ in 0..2 {
+            let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 4]]);
+            pm.sync_round(&sh, 1).unwrap();
+        }
+        // step 1: mult 0.5 → -0.5; step 2: mult 0.25 → -0.25; total -0.75.
+        let w = pm.current_weights().unwrap();
+        assert!(w.iter().all(|&x| (x + 0.75).abs() < 1e-6), "{w:?}");
+    }
+
+    #[test]
+    fn checkpoint_export_import_roundtrip() {
+        let ctx = SparkletContext::local(2);
+        let init: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let pm = ParameterManager::init(
+            &ctx,
+            &init,
+            3,
+            Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.1) }),
+        )
+        .unwrap();
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 20]]);
+        pm.sync_round(&sh, 1).unwrap();
+        let w = pm.current_weights().unwrap();
+        let state = pm.export_state().unwrap();
+        assert_eq!(state.len(), 1);
+        assert_eq!(state[0].len(), 20);
+
+        // Import into a fresh manager; next update must match continuing.
+        let pm2 = ParameterManager::init(
+            &ctx,
+            &vec![0.0; 20],
+            3,
+            Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.1) }),
+        )
+        .unwrap();
+        pm2.import(&w, &state, pm.optimizer_step()).unwrap();
+        assert_eq!(pm2.current_weights().unwrap(), w);
+        let sh_a = write_grads(&ctx, &pm, &[vec![0.5f32; 20]]);
+        pm.sync_round(&sh_a, 1).unwrap();
+        let sh_b = write_grads(&ctx, &pm2, &[vec![0.5f32; 20]]);
+        pm2.sync_round(&sh_b, 1).unwrap();
+        assert_eq!(pm.current_weights().unwrap(), pm2.current_weights().unwrap());
+    }
+}

@@ -1,0 +1,186 @@
+//! `Sample` — one training record (paper Fig 1: RDD[Sample]); feature
+//! tensors + a label tensor, batched into the static shapes the AOT
+//! artifacts expect.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::EntryMeta;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// One record of the distributed dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Per-sample feature tensors, in the order the model's `batch_spec`
+    /// declares them (e.g. NCF: user id, item id).
+    pub features: Vec<Tensor>,
+    /// Per-sample label tensor (last input of `fwd_bwd`).
+    pub label: Tensor,
+}
+
+impl Sample {
+    pub fn new(features: Vec<Tensor>, label: Tensor) -> Sample {
+        Sample { features, label }
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.features.iter().map(Tensor::size_bytes).sum::<usize>() + self.label.size_bytes()
+    }
+}
+
+/// Draw `batch` sample indices from a partition: BigDL's "get a random
+/// batch of data from local Sample partition" (Algorithm 1 line 5).
+/// Sampling is with replacement when the partition is smaller than the
+/// batch (keeps static shapes valid on tiny partitions).
+pub fn draw_batch_indices(rng: &mut Rng, partition_len: usize, batch: usize) -> Vec<usize> {
+    assert!(partition_len > 0, "empty partition");
+    if partition_len >= batch {
+        rng.sample_indices(partition_len, batch)
+    } else {
+        (0..batch).map(|_| rng.gen_usize(partition_len)).collect()
+    }
+}
+
+/// Stack `samples[idx]` into the `fwd_bwd` input layout:
+/// `[flat_params, feature_0[B,…], …, label[B,…]]`.
+pub fn assemble_train_inputs(
+    entry: &EntryMeta,
+    params: Tensor,
+    samples: &[Sample],
+    idx: &[usize],
+) -> Result<Vec<Tensor>> {
+    let n_features = entry.inputs.len().saturating_sub(2);
+    ensure!(
+        entry.inputs.len() >= 2,
+        "fwd_bwd entry must have at least (params, label) inputs"
+    );
+    let mut inputs = Vec::with_capacity(entry.inputs.len());
+    inputs.push(params);
+    for f in 0..n_features {
+        let col: Vec<Tensor> = idx
+            .iter()
+            .map(|&i| {
+                ensure!(
+                    samples[i].features.len() == n_features,
+                    "sample has {} features, model expects {n_features}",
+                    samples[i].features.len()
+                );
+                Ok(samples[i].features[f].clone())
+            })
+            .collect::<Result<_>>()?;
+        inputs.push(Tensor::stack(&col)?);
+    }
+    let labels: Vec<Tensor> = idx.iter().map(|&i| samples[i].label.clone()).collect();
+    inputs.push(Tensor::stack(&labels)?);
+    // Shape-check against the artifact contract.
+    for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        ensure!(
+            t.shape == spec.shape && t.dtype() == spec.dtype,
+            "assembled input {i}: {:?} != spec {:?}",
+            t.shape,
+            spec.shape
+        );
+    }
+    Ok(inputs)
+}
+
+/// Stack features for `predict`: `[flat_params, feature_0[B,…], …]`,
+/// padding the final partial batch by repeating the last sample. Returns
+/// the inputs and the number of real (non-padding) rows.
+pub fn assemble_predict_inputs(
+    entry: &EntryMeta,
+    params: Tensor,
+    samples: &[Sample],
+    start: usize,
+) -> Result<(Vec<Tensor>, usize)> {
+    let n_features = entry.inputs.len() - 1;
+    let batch = entry.batch_size;
+    let real = (samples.len() - start).min(batch);
+    ensure!(real > 0, "no samples to predict");
+    let mut inputs = Vec::with_capacity(entry.inputs.len());
+    inputs.push(params);
+    for f in 0..n_features {
+        let col: Vec<Tensor> = (0..batch)
+            .map(|row| {
+                let i = start + row.min(real - 1); // pad with last
+                samples[i].features[f].clone()
+            })
+            .collect();
+        inputs.push(Tensor::stack(&col)?);
+    }
+    Ok((inputs, real))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorSpec;
+    use crate::tensor::DType;
+
+    fn entry_2feat(batch: usize) -> EntryMeta {
+        EntryMeta {
+            file: "x.hlo.txt".into(),
+            batch_size: batch,
+            inputs: vec![
+                TensorSpec { shape: vec![10], dtype: DType::F32 },
+                TensorSpec { shape: vec![batch], dtype: DType::I32 },
+                TensorSpec { shape: vec![batch], dtype: DType::I32 },
+                TensorSpec { shape: vec![batch], dtype: DType::F32 },
+            ],
+            outputs: vec![],
+        }
+    }
+
+    fn sample(u: i32, v: i32, y: f32) -> Sample {
+        Sample::new(
+            vec![Tensor::from_i32(vec![], vec![u]), Tensor::from_i32(vec![], vec![v])],
+            Tensor::from_f32(vec![], vec![y]),
+        )
+    }
+
+    #[test]
+    fn assemble_train_matches_spec() {
+        let e = entry_2feat(3);
+        let samples = vec![sample(1, 10, 0.0), sample(2, 20, 1.0), sample(3, 30, 0.0)];
+        let params = Tensor::from_f32(vec![10], vec![0.0; 10]);
+        let inputs = assemble_train_inputs(&e, params, &samples, &[2, 0, 1]).unwrap();
+        assert_eq!(inputs.len(), 4);
+        assert_eq!(inputs[1].as_i32().unwrap(), &[3, 1, 2]);
+        assert_eq!(inputs[2].as_i32().unwrap(), &[30, 10, 20]);
+        assert_eq!(inputs[3].as_f32().unwrap(), &[0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn draw_indices_with_and_without_replacement() {
+        let mut rng = Rng::new(3);
+        let idx = draw_batch_indices(&mut rng, 100, 10);
+        let mut d = idx.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), 10, "distinct when partition is large");
+        let idx2 = draw_batch_indices(&mut rng, 3, 10);
+        assert_eq!(idx2.len(), 10);
+        assert!(idx2.iter().all(|&i| i < 3));
+    }
+
+    #[test]
+    fn predict_pads_partial_batch() {
+        let e = EntryMeta {
+            file: "x".into(),
+            batch_size: 4,
+            inputs: vec![
+                TensorSpec { shape: vec![10], dtype: DType::F32 },
+                TensorSpec { shape: vec![4], dtype: DType::I32 },
+            ],
+            outputs: vec![],
+        };
+        let samples = vec![
+            Sample::new(vec![Tensor::from_i32(vec![], vec![7])], Tensor::from_f32(vec![], vec![0.0])),
+            Sample::new(vec![Tensor::from_i32(vec![], vec![8])], Tensor::from_f32(vec![], vec![0.0])),
+        ];
+        let params = Tensor::from_f32(vec![10], vec![0.0; 10]);
+        let (inputs, real) = assemble_predict_inputs(&e, params, &samples, 0).unwrap();
+        assert_eq!(real, 2);
+        assert_eq!(inputs[1].as_i32().unwrap(), &[7, 8, 8, 8], "padded with last sample");
+    }
+}

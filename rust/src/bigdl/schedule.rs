@@ -1,0 +1,129 @@
+//! Learning-rate schedules (BigDL's `SGD.LearningRateSchedule`): the
+//! standard large-batch training recipes — constant, step decay,
+//! polynomial decay, and linear warmup (the warmup+poly combination is
+//! what the paper-era ImageNet-scale BigDL runs used).
+
+/// A learning-rate schedule: maps a 1-based step to a multiplier applied
+/// to the optimizer's base learning rate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// lr × gamma^(floor(step / step_size))
+    Step { step_size: usize, gamma: f64 },
+    /// lr × (1 - step/max_steps)^power (BigDL `Poly`)
+    Poly { power: f64, max_steps: usize },
+    /// Linear ramp 0 → 1 over `warmup` steps, then inner schedule.
+    Warmup { warmup: usize, after: Box<LrSchedule> },
+}
+
+impl LrSchedule {
+    pub fn multiplier(&self, step: usize) -> f64 {
+        let step = step.max(1);
+        match self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Step { step_size, gamma } => {
+                gamma.powi((step / step_size.max(&1)) as i32)
+            }
+            LrSchedule::Poly { power, max_steps } => {
+                if step >= *max_steps {
+                    0.0
+                } else {
+                    (1.0 - step as f64 / *max_steps as f64).powf(*power)
+                }
+            }
+            LrSchedule::Warmup { warmup, after } => {
+                if step <= *warmup {
+                    step as f64 / *warmup as f64
+                } else {
+                    after.multiplier(step - warmup)
+                }
+            }
+        }
+    }
+
+    /// Parse `constant`, `step:1000:0.5`, `poly:2:10000`,
+    /// `warmup:500:poly:2:10000` (CLI/config surface).
+    pub fn parse(s: &str) -> anyhow::Result<LrSchedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        Ok(match parts[0] {
+            "constant" => LrSchedule::Constant,
+            "step" => LrSchedule::Step {
+                step_size: parts.get(1).unwrap_or(&"1000").parse()?,
+                gamma: parts.get(2).unwrap_or(&"0.1").parse()?,
+            },
+            "poly" => LrSchedule::Poly {
+                power: parts.get(1).unwrap_or(&"2").parse()?,
+                max_steps: parts.get(2).unwrap_or(&"10000").parse()?,
+            },
+            "warmup" => LrSchedule::Warmup {
+                warmup: parts.get(1).unwrap_or(&"100").parse()?,
+                after: Box::new(LrSchedule::parse(&parts[2..].join(":"))?),
+            },
+            other => anyhow::bail!("unknown lr schedule {other:?}"),
+        })
+    }
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule::Constant
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(LrSchedule::Constant.multiplier(1), 1.0);
+        assert_eq!(LrSchedule::Constant.multiplier(99999), 1.0);
+    }
+
+    #[test]
+    fn step_decays_in_plateaus() {
+        let s = LrSchedule::Step { step_size: 10, gamma: 0.5 };
+        assert_eq!(s.multiplier(5), 1.0);
+        assert_eq!(s.multiplier(10), 0.5);
+        assert_eq!(s.multiplier(19), 0.5);
+        assert_eq!(s.multiplier(20), 0.25);
+    }
+
+    #[test]
+    fn poly_reaches_zero() {
+        let s = LrSchedule::Poly { power: 2.0, max_steps: 100 };
+        assert!((s.multiplier(1) - 0.9801).abs() < 1e-9);
+        assert!(s.multiplier(50) > 0.2);
+        assert_eq!(s.multiplier(100), 0.0);
+        assert_eq!(s.multiplier(500), 0.0);
+    }
+
+    #[test]
+    fn warmup_ramps_then_delegates() {
+        let s = LrSchedule::Warmup {
+            warmup: 10,
+            after: Box::new(LrSchedule::Step { step_size: 10, gamma: 0.5 }),
+        };
+        assert!((s.multiplier(5) - 0.5).abs() < 1e-9);
+        assert_eq!(s.multiplier(10), 1.0);
+        assert_eq!(s.multiplier(15), 1.0); // inner step 5 of step-schedule
+        assert_eq!(s.multiplier(21), 0.5); // inner step 11
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(LrSchedule::parse("constant").unwrap(), LrSchedule::Constant);
+        assert_eq!(
+            LrSchedule::parse("step:100:0.3").unwrap(),
+            LrSchedule::Step { step_size: 100, gamma: 0.3 }
+        );
+        assert_eq!(
+            LrSchedule::parse("warmup:50:poly:2:1000").unwrap(),
+            LrSchedule::Warmup {
+                warmup: 50,
+                after: Box::new(LrSchedule::Poly { power: 2.0, max_steps: 1000 })
+            }
+        );
+        assert!(LrSchedule::parse("cosine").is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Triggers (BigDL's `Trigger`): composable predicates over training
+//! state that drive end-of-training, validation and checkpoint cadence.
+
+use super::metrics::IterMetrics;
+
+/// Snapshot of training progress a trigger can inspect.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainState<'a> {
+    /// Completed iterations (1-based at evaluation time).
+    pub iteration: usize,
+    /// Completed epochs (global-batch passes over the dataset).
+    pub epoch: usize,
+    pub last: Option<&'a IterMetrics>,
+}
+
+/// A composable training trigger.
+#[derive(Debug, Clone)]
+pub enum Trigger {
+    Never,
+    MaxIteration(usize),
+    MaxEpoch(usize),
+    EveryIteration(usize),
+    EveryEpoch(usize),
+    /// Fires once the smoothed loss drops below the threshold.
+    MinLoss(f32),
+    Or(Box<Trigger>, Box<Trigger>),
+    And(Box<Trigger>, Box<Trigger>),
+}
+
+impl Trigger {
+    pub fn fired(&self, s: &TrainState<'_>) -> bool {
+        match self {
+            Trigger::Never => false,
+            Trigger::MaxIteration(n) => s.iteration >= *n,
+            Trigger::MaxEpoch(n) => s.epoch >= *n,
+            Trigger::EveryIteration(n) => *n > 0 && s.iteration % n == 0,
+            Trigger::EveryEpoch(n) => {
+                *n > 0 && s.epoch > 0 && s.epoch % n == 0
+            }
+            Trigger::MinLoss(t) => s.last.map(|m| m.loss <= *t).unwrap_or(false),
+            Trigger::Or(a, b) => a.fired(s) || b.fired(s),
+            Trigger::And(a, b) => a.fired(s) && b.fired(s),
+        }
+    }
+
+    pub fn or(self, other: Trigger) -> Trigger {
+        Trigger::Or(Box::new(self), Box::new(other))
+    }
+
+    pub fn and(self, other: Trigger) -> Trigger {
+        Trigger::And(Box::new(self), Box::new(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(iteration: usize, epoch: usize) -> TrainState<'static> {
+        TrainState { iteration, epoch, last: None }
+    }
+
+    #[test]
+    fn max_iteration_and_epoch() {
+        assert!(!Trigger::MaxIteration(10).fired(&state(9, 0)));
+        assert!(Trigger::MaxIteration(10).fired(&state(10, 0)));
+        assert!(Trigger::MaxEpoch(2).fired(&state(5, 2)));
+    }
+
+    #[test]
+    fn every_n() {
+        let t = Trigger::EveryIteration(5);
+        assert!(t.fired(&state(5, 0)));
+        assert!(!t.fired(&state(6, 0)));
+        assert!(t.fired(&state(10, 0)));
+    }
+
+    #[test]
+    fn min_loss_uses_metrics() {
+        let mut m = IterMetrics {
+            iteration: 0,
+            loss: 0.5,
+            total_s: 0.0,
+            fwdbwd_s: 0.0,
+            compute_s: 0.0,
+            fetch_s: 0.0,
+            sync_s: 0.0,
+            dispatch_ns: 0,
+            traffic: Default::default(),
+            sched: Default::default(),
+        };
+        let t = Trigger::MinLoss(0.4);
+        assert!(!t.fired(&TrainState { iteration: 1, epoch: 0, last: Some(&m) }));
+        m.loss = 0.39;
+        assert!(t.fired(&TrainState { iteration: 1, epoch: 0, last: Some(&m) }));
+    }
+
+    #[test]
+    fn combinators() {
+        let t = Trigger::MaxIteration(100).or(Trigger::MinLoss(0.1));
+        assert!(t.fired(&state(100, 0)));
+        let t2 = Trigger::MaxIteration(10).and(Trigger::MaxEpoch(1));
+        assert!(!t2.fired(&state(10, 0)));
+        assert!(t2.fired(&state(10, 1)));
+    }
+}

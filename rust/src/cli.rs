@@ -1,0 +1,152 @@
+//! Hand-rolled CLI argument handling (no clap offline).
+
+use anyhow::{bail, Result};
+
+use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
+use bigdl::util::fmt_bytes;
+
+/// Parsed `--key value` / `--flag` options after the subcommand.
+pub struct Opts {
+    pairs: Vec<(String, String)>,
+}
+
+impl Opts {
+    pub fn parse(args: &[String]) -> Result<Opts> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    pairs.push((key.to_string(), args[i + 1].clone()));
+                    i += 2;
+                } else {
+                    pairs.push((key.to_string(), "true".to_string()));
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(Opts { pairs })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false")
+    }
+}
+
+const HELP: &str = "\
+bigdl — BigDL-on-Sparklet (SoCC'19 reproduction)
+
+USAGE: bigdl <COMMAND> [--key value ...]
+
+COMMANDS:
+  info                       list artifacts, entry points and param counts
+  train   --model ncf        distributed data-parallel training (Alg 1+2)
+          [--nodes 4] [--iterations 50] [--lr 0.01] [--optim sgd|adagrad|adam]
+          [--partitions N] [--seed 42]
+  predict --model ncf        distributed inference over synthetic samples
+          [--nodes 4] [--records 8192]
+  help                       this message
+
+ENV: BIGDL_ARTIFACTS (default ./artifacts), BIGDL_LOG (info)";
+
+pub fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let opts = Opts::parse(args.get(1..).unwrap_or(&[]))?;
+    match cmd {
+        "info" => info(&opts),
+        "train" => crate::cli_train::train(&opts),
+        "predict" => crate::cli_train::predict(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `bigdl help`"),
+    }
+}
+
+fn info(_opts: &Opts) -> Result<()> {
+    let dir = default_artifacts_dir();
+    let rt = RuntimeHandle::load(&dir)?;
+    println!("artifacts dir: {}", dir.display());
+    for name in rt.model_names() {
+        let meta = rt.meta(&name)?;
+        println!(
+            "  {name}: {} params ({})",
+            meta.param_count,
+            fmt_bytes(meta.param_count as u64 * 4)
+        );
+        for (entry, em) in &meta.entries {
+            let ins: Vec<String> = em
+                .inputs
+                .iter()
+                .map(|s| format!("{:?}{}", s.shape, s.dtype))
+                .collect();
+            println!(
+                "    {entry}: batch={} file={} inputs=[{}]",
+                em.batch_size,
+                em.file,
+                ins.join(", ")
+            );
+        }
+    }
+    rt.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn opts_parse_pairs_and_flags() {
+        let o = Opts::parse(&s(&["--model", "ncf", "--verbose", "--nodes", "8"])).unwrap();
+        assert_eq!(o.get("model"), Some("ncf"));
+        assert!(o.get_flag("verbose"));
+        assert_eq!(o.get_usize("nodes", 1).unwrap(), 8);
+        assert_eq!(o.get_usize("iterations", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn opts_reject_positional() {
+        assert!(Opts::parse(&s(&["stray"])).is_err());
+    }
+
+    #[test]
+    fn opts_last_wins() {
+        let o = Opts::parse(&s(&["--n", "1", "--n", "2"])).unwrap();
+        assert_eq!(o.get("n"), Some("2"));
+    }
+}

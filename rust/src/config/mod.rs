@@ -1,0 +1,200 @@
+//! Config system: a TOML-subset parser (sections, key = value with
+//! strings/ints/floats/bools/arrays, `#` comments) plus the typed configs
+//! the launcher consumes. No external TOML crate offline — the subset
+//! covers everything the repo's config files use.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CfgValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<CfgValue>),
+}
+
+impl CfgValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            CfgValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            CfgValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(usize::try_from(self.as_i64()?)?)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            CfgValue::Float(f) => Ok(*f),
+            CfgValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            CfgValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// `section.key` → value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, CfgValue>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim()).with_context(|| format!("line {}", lineno + 1))?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CfgValue> {
+        self.values.get(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.values.get(key).map_or(Ok(default), CfgValue::as_usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.values.get(key).map_or(Ok(default), CfgValue::as_f64)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str> {
+        self.values.get(key).map_or(Ok(default), |v| v.as_str())
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        self.values.get(key).map_or(Ok(default), CfgValue::as_bool)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<CfgValue> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(CfgValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(CfgValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(CfgValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(CfgValue::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(CfgValue::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(CfgValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(CfgValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+# launcher config
+name = "ncf"         # model
+[cluster]
+nodes = 8
+slots = 1
+[train]
+lr = 0.01
+iterations = 100
+drizzle = true
+shards = [2, 4, 8]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_str("name", "?").unwrap(), "ncf");
+        assert_eq!(cfg.get_usize("cluster.nodes", 0).unwrap(), 8);
+        assert!((cfg.get_f64("train.lr", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        assert!(cfg.get_bool("train.drizzle", false).unwrap());
+        match cfg.get("train.shards").unwrap() {
+            CfgValue::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_usize("x", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+}

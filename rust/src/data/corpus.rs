@@ -1,0 +1,121 @@
+//! Synthetic token corpus for the E2E transformer-LM driver: a seeded
+//! order-1 Markov chain over the vocabulary (V contexts × `branch`
+//! successors), so a language model has real, compactly-learnable
+//! structure (loss drops well below uniform ln V within a few hundred
+//! steps) while the data remains fully synthetic and
+//! lineage-deterministic.
+
+use crate::bigdl::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Markov sharpness: each (a,b) context strongly prefers `branch`
+    /// successors out of the whole vocab.
+    pub branch: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { vocab: 256, seq_len: 64, branch: 4 }
+    }
+}
+
+fn successor(b: usize, choice: usize, vocab: usize) -> usize {
+    let mut h = (b as u64)
+        .wrapping_mul(0xBF58476D1CE4E5B9)
+        .wrapping_add((choice as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+    h ^= h >> 31;
+    h = h.wrapping_mul(0x94D049BB133111EB);
+    (h >> 17) as usize % vocab
+}
+
+/// Generate one (tokens, next-tokens) LM sample of length `seq_len`.
+pub fn gen_sequence(cfg: &CorpusConfig, rng: &mut Rng) -> Sample {
+    let mut toks = Vec::with_capacity(cfg.seq_len + 1);
+    toks.push(rng.gen_usize(cfg.vocab));
+    toks.push(rng.gen_usize(cfg.vocab));
+    while toks.len() < cfg.seq_len + 1 {
+        let b = toks[toks.len() - 1];
+        let next = if rng.gen_bool(0.9) {
+            // Follow the chain: one of `branch` plausible successors.
+            successor(b, rng.gen_usize(cfg.branch), cfg.vocab)
+        } else {
+            rng.gen_usize(cfg.vocab) // 10% noise
+        };
+        toks.push(next);
+    }
+    let input: Vec<i32> = toks[..cfg.seq_len].iter().map(|&t| t as i32).collect();
+    let target: Vec<i32> = toks[1..=cfg.seq_len].iter().map(|&t| t as i32).collect();
+    Sample::new(
+        vec![Tensor::from_i32(vec![cfg.seq_len], input)],
+        Tensor::from_i32(vec![cfg.seq_len], target),
+    )
+}
+
+pub fn corpus_rdd(
+    ctx: &SparkletContext,
+    cfg: CorpusConfig,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    ctx.generate(parts, per_part, seed, move |_p, rng| gen_sequence(&cfg, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_shapes_and_shift() {
+        let cfg = CorpusConfig::default();
+        let mut rng = Rng::new(5);
+        let s = gen_sequence(&cfg, &mut rng);
+        let x = s.features[0].as_i32().unwrap();
+        let y = s.label.as_i32().unwrap();
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 64);
+        assert_eq!(&x[1..], &y[..63], "target is the 1-shifted input");
+        assert!(x.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn chain_is_predictable() {
+        // Given a context (a, b), the successor distribution concentrates
+        // on `branch` tokens — an LM can beat the uniform baseline.
+        let cfg = CorpusConfig { branch: 2, ..Default::default() };
+        let mut rng = Rng::new(6);
+        // Count successors of one *fixed* context across many sequences.
+        let mut succ_counts = std::collections::HashMap::<i32, Vec<usize>>::new();
+        for _ in 0..400 {
+            let s = gen_sequence(&cfg, &mut rng);
+            let x = s.features[0].as_i32().unwrap();
+            for w in x.windows(2) {
+                succ_counts.entry(w[0]).or_default().push(w[1] as usize);
+            }
+        }
+        // For contexts seen often, the top-2 successors should carry most
+        // of the mass (90% chain-follow, branch=2).
+        let (_ctx, succs) = succ_counts
+            .iter()
+            .max_by_key(|(_, v)| v.len())
+            .expect("some context repeats");
+        let mut freq = std::collections::HashMap::<usize, usize>::new();
+        for &t in succs {
+            *freq.entry(t).or_default() += 1;
+        }
+        let mut counts: Vec<usize> = freq.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top2: usize = counts.iter().take(2).sum();
+        assert!(
+            top2 * 10 >= succs.len() * 7,
+            "top-2 successors carry {top2}/{} — chain not predictable",
+            succs.len()
+        );
+    }
+}

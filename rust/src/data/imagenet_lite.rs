@@ -1,0 +1,108 @@
+//! ImageNet-lite: synthetic image classification data for the CNN scaling
+//! workloads (Figs 6-8 use Inception-v1 on ImageNet; we use Inception-lite
+//! on class-conditional synthetic images — DESIGN.md §4).
+//!
+//! Each class is a distinct spatial pattern (oriented gaussian blob +
+//! class-specific frequency grating) plus pixel noise: hard enough that
+//! accuracy is not trivially 100%, easy enough that a small CNN learns it
+//! within a few hundred steps.
+
+use crate::bigdl::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ImagenetLiteConfig {
+    pub classes: usize,
+    pub channels: usize,
+    pub size: usize,
+    pub noise: f32,
+}
+
+impl Default for ImagenetLiteConfig {
+    fn default() -> Self {
+        ImagenetLiteConfig { classes: 10, channels: 3, size: 16, noise: 0.3 }
+    }
+}
+
+/// Render one labelled image (CHW layout).
+pub fn gen_image(cfg: &ImagenetLiteConfig, rng: &mut Rng) -> Sample {
+    let class = rng.gen_usize(cfg.classes);
+    let s = cfg.size;
+    let mut img = vec![0.0f32; cfg.channels * s * s];
+    // Class-specific blob center + grating frequency.
+    let cx = (class % 4) as f32 / 4.0 * s as f32 + s as f32 / 8.0;
+    let cy = (class / 4) as f32 / 4.0 * s as f32 + s as f32 / 8.0;
+    let freq = 0.5 + class as f32 * 0.35;
+    let jx = (rng.gen_f32() - 0.5) * 2.0; // positional jitter
+    let jy = (rng.gen_f32() - 0.5) * 2.0;
+    for c in 0..cfg.channels {
+        let phase = c as f32 * 0.7;
+        for y in 0..s {
+            for x in 0..s {
+                let dx = x as f32 - cx - jx;
+                let dy = y as f32 - cy - jy;
+                let blob = (-(dx * dx + dy * dy) / (2.0 * 6.0)).exp();
+                let grating = ((x as f32 * freq + phase).sin() + (y as f32 * freq).cos()) * 0.25;
+                let noise = (rng.gen_f32() - 0.5) * cfg.noise;
+                img[c * s * s + y * s + x] = blob + grating + noise;
+            }
+        }
+    }
+    Sample::new(
+        vec![Tensor::from_f32(vec![cfg.channels, s, s], img)],
+        Tensor::from_i32(vec![], vec![class as i32]),
+    )
+}
+
+pub fn imagenet_lite_rdd(
+    ctx: &SparkletContext,
+    cfg: ImagenetLiteConfig,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    ctx.generate(parts, per_part, seed, move |_p, rng| gen_image(&cfg, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_shape_and_label_range() {
+        let cfg = ImagenetLiteConfig::default();
+        let mut rng = Rng::new(3);
+        let s = gen_image(&cfg, &mut rng);
+        assert_eq!(s.features[0].shape, vec![3, 16, 16]);
+        let label = s.label.as_i32().unwrap()[0];
+        assert!((0..10).contains(&label));
+        assert!(s.features[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of two classes should differ far more than two draws
+        // of the same class (signal >> noise).
+        let cfg = ImagenetLiteConfig { noise: 0.1, ..Default::default() };
+        let mut rng = Rng::new(4);
+        let mut mean = |class: usize| -> Vec<f32> {
+            let mut acc = vec![0.0f32; 3 * 16 * 16];
+            let mut count = 0;
+            while count < 20 {
+                let s = gen_image(&cfg, &mut rng);
+                if s.label.as_i32().unwrap()[0] as usize == class {
+                    crate::tensor::add_assign(&mut acc, s.features[0].as_f32().unwrap());
+                    count += 1;
+                }
+            }
+            crate::tensor::scale(&mut acc, 1.0 / 20.0);
+            acc
+        };
+        let m0 = mean(0);
+        let m7 = mean(7);
+        let dist: f32 = m0.iter().zip(&m7).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(dist > 1.0, "class means too close: {dist}");
+    }
+}

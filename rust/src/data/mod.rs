@@ -1,0 +1,18 @@
+//! Synthetic dataset generators (DESIGN.md §4 substitutions): each mirrors
+//! the *structure* of the dataset the paper's evaluation used, scaled to
+//! this testbed, and is deterministic in `(seed, partition)` so lineage
+//! recovery regenerates identical data.
+
+pub mod corpus;
+pub mod imagenet_lite;
+pub mod movielens;
+pub mod radar;
+pub mod speech;
+pub mod textcat;
+
+pub use corpus::corpus_rdd;
+pub use imagenet_lite::imagenet_lite_rdd;
+pub use movielens::movielens_rdd;
+pub use radar::radar_rdd;
+pub use speech::speech_rdd;
+pub use textcat::textcat_rdd;

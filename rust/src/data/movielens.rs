@@ -1,0 +1,111 @@
+//! Synthetic MovieLens-like implicit-feedback data (the ml-20m stand-in
+//! for the Fig 5 NCF workload): power-law item popularity, per-user
+//! preference clusters, 1:1 positive/negative sampling like the MLPerf
+//! NCF reference.
+//!
+//! Learnability: users and items are assigned latent archetypes; a pair is
+//! positive iff the user's archetype matches the item's cluster — so NCF's
+//! embeddings can genuinely reduce BCE loss (we assert this in tests).
+
+use crate::bigdl::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Generator parameters (sized to the NCF artifact's config).
+#[derive(Debug, Clone, Copy)]
+pub struct MovielensConfig {
+    pub n_users: usize,
+    pub n_items: usize,
+    /// Latent archetypes that make the signal learnable.
+    pub n_clusters: usize,
+    /// Label noise: probability a label is flipped.
+    pub noise: f64,
+}
+
+impl Default for MovielensConfig {
+    fn default() -> Self {
+        MovielensConfig { n_users: 2048, n_items: 1024, n_clusters: 8, noise: 0.05 }
+    }
+}
+
+fn archetype(entity: usize, n_clusters: usize, salt: u64) -> usize {
+    // Deterministic hash → cluster.
+    let mut h = (entity as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ salt;
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+    (h >> 33) as usize % n_clusters
+}
+
+/// One interaction record.
+pub fn gen_sample(cfg: &MovielensConfig, rng: &mut Rng) -> Sample {
+    let user = rng.gen_usize(cfg.n_users);
+    // Half positives (matching cluster, zipf-popular item), half negatives.
+    let positive = rng.gen_bool(0.5);
+    let ucluster = archetype(user, cfg.n_clusters, 0xA11CE);
+    let item = loop {
+        let cand = rng.gen_zipf(cfg.n_items, 1.05);
+        let icluster = archetype(cand, cfg.n_clusters, 0xB0B);
+        if (icluster == ucluster) == positive {
+            break cand;
+        }
+    };
+    let mut label = positive as u32 as f32;
+    if rng.gen_bool(cfg.noise) {
+        label = 1.0 - label;
+    }
+    Sample::new(
+        vec![
+            Tensor::from_i32(vec![], vec![user as i32]),
+            Tensor::from_i32(vec![], vec![item as i32]),
+        ],
+        Tensor::from_f32(vec![], vec![label]),
+    )
+}
+
+/// Distributed RDD of interactions.
+pub fn movielens_rdd(
+    ctx: &SparkletContext,
+    cfg: MovielensConfig,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    ctx.generate(parts, per_part, seed, move |_p, rng| gen_sample(&cfg, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_follow_cluster_structure() {
+        let cfg = MovielensConfig { noise: 0.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = gen_sample(&cfg, &mut rng);
+            let u = s.features[0].as_i32().unwrap()[0] as usize;
+            let i = s.features[1].as_i32().unwrap()[0] as usize;
+            let label = s.label.as_f32().unwrap()[0];
+            let expect = (archetype(u, cfg.n_clusters, 0xA11CE)
+                == archetype(i, cfg.n_clusters, 0xB0B)) as u32 as f32;
+            assert_eq!(label, expect);
+        }
+    }
+
+    #[test]
+    fn ids_in_range_and_balanced() {
+        let cfg = MovielensConfig::default();
+        let mut rng = Rng::new(2);
+        let mut pos = 0;
+        for _ in 0..1000 {
+            let s = gen_sample(&cfg, &mut rng);
+            let u = s.features[0].as_i32().unwrap()[0];
+            let i = s.features[1].as_i32().unwrap()[0];
+            assert!((0..cfg.n_users as i32).contains(&u));
+            assert!((0..cfg.n_items as i32).contains(&i));
+            pos += (s.label.as_f32().unwrap()[0] >= 0.5) as usize;
+        }
+        assert!((350..650).contains(&pos), "labels should be ~balanced: {pos}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Synthetic radar-scan sequences for the precipitation-nowcasting app
+//! (§5.2, Cray): advecting + diffusing gaussian rain cells. The input is
+//! `t_in` frames, the label the next `t_out` frames — exactly the Seq2Seq
+//! shape of the paper's pipeline, with real spatiotemporal structure
+//! (motion) for the ConvLSTM to learn.
+
+use crate::bigdl::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RadarConfig {
+    pub size: usize,
+    pub t_in: usize,
+    pub t_out: usize,
+    pub n_cells: usize,
+}
+
+impl Default for RadarConfig {
+    fn default() -> Self {
+        RadarConfig { size: 16, t_in: 4, t_out: 4, n_cells: 3 }
+    }
+}
+
+fn render(size: usize, cells: &[(f32, f32, f32, f32)]) -> Vec<f32> {
+    let mut frame = vec![0.0f32; size * size];
+    for &(cx, cy, sigma, amp) in cells {
+        for y in 0..size {
+            for x in 0..size {
+                let dx = x as f32 - cx;
+                let dy = y as f32 - cy;
+                frame[y * size + x] += amp * (-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp();
+            }
+        }
+    }
+    frame
+}
+
+/// One storm sequence: input frames [t_in,H,W], target frames [t_out,H,W].
+pub fn gen_sequence(cfg: &RadarConfig, rng: &mut Rng) -> Sample {
+    let s = cfg.size as f32;
+    // Cells: position, velocity, spread, intensity; spread grows (diffusion).
+    let mut cells: Vec<(f32, f32, f32, f32, f32, f32)> = (0..cfg.n_cells)
+        .map(|_| {
+            (
+                rng.gen_f32() * s,
+                rng.gen_f32() * s,
+                (rng.gen_f32() - 0.5) * 2.0, // vx
+                (rng.gen_f32() - 0.5) * 2.0, // vy
+                1.5 + rng.gen_f32() * 1.5,   // sigma
+                0.5 + rng.gen_f32(),         // amp
+            )
+        })
+        .collect();
+    let mut frames = Vec::with_capacity(cfg.t_in + cfg.t_out);
+    for _ in 0..cfg.t_in + cfg.t_out {
+        let snapshot: Vec<(f32, f32, f32, f32)> =
+            cells.iter().map(|c| (c.0, c.1, c.4, c.5)).collect();
+        frames.push(render(cfg.size, &snapshot));
+        for c in cells.iter_mut() {
+            c.0 = (c.0 + c.2).rem_euclid(s); // advect with wraparound
+            c.1 = (c.1 + c.3).rem_euclid(s);
+            c.4 *= 1.03; // diffuse
+            c.5 *= 0.98; // decay
+        }
+    }
+    let hw = cfg.size * cfg.size;
+    let input: Vec<f32> = frames[..cfg.t_in].concat();
+    let target: Vec<f32> = frames[cfg.t_in..].concat();
+    debug_assert_eq!(input.len(), cfg.t_in * hw);
+    Sample::new(
+        vec![Tensor::from_f32(vec![cfg.t_in, cfg.size, cfg.size], input)],
+        Tensor::from_f32(vec![cfg.t_out, cfg.size, cfg.size], target),
+    )
+}
+
+pub fn radar_rdd(
+    ctx: &SparkletContext,
+    cfg: RadarConfig,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    ctx.generate(parts, per_part, seed, move |_p, rng| gen_sequence(&cfg, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_motion() {
+        let cfg = RadarConfig::default();
+        let mut rng = Rng::new(7);
+        let s = gen_sequence(&cfg, &mut rng);
+        assert_eq!(s.features[0].shape, vec![4, 16, 16]);
+        assert_eq!(s.label.shape, vec![4, 16, 16]);
+        // Consecutive frames correlate but are not identical (advection).
+        let x = s.features[0].as_f32().unwrap();
+        let (f0, f1) = (&x[..256], &x[256..512]);
+        let diff: f32 = f0.iter().zip(f1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.1, "frames should move");
+        let energy: f32 = f0.iter().sum();
+        assert!(energy > 0.5, "cells should be visible");
+    }
+}

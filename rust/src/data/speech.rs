@@ -1,0 +1,72 @@
+//! Synthetic "speech-recognition result" feature vectors for the §5.3
+//! GigaSpaces call-center app: each intent class is a gaussian cluster in
+//! feature space (stand-in for text embeddings of the recognized speech),
+//! streamed through KafkaSim → micro-batch inference.
+
+use crate::bigdl::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpeechConfig {
+    pub classes: usize,
+    pub dim: usize,
+    pub noise: f32,
+}
+
+impl Default for SpeechConfig {
+    fn default() -> Self {
+        SpeechConfig { classes: 8, dim: 32, noise: 0.5 }
+    }
+}
+
+fn class_center(class: usize, d: usize, dim: usize) -> f32 {
+    let mut h = (class as u64 + 1)
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((d as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+    h ^= h >> 30;
+    h = h.wrapping_mul(0x94D049BB133111EB);
+    let _ = dim;
+    ((h >> 40) as f32 / (1u64 << 24) as f32) * 4.0 - 2.0
+}
+
+/// One utterance embedding with its intent label.
+pub fn gen_utterance(cfg: &SpeechConfig, rng: &mut Rng) -> Sample {
+    let class = rng.gen_usize(cfg.classes);
+    let feat: Vec<f32> = (0..cfg.dim)
+        .map(|d| class_center(class, d, cfg.dim) + rng.gen_normal() as f32 * cfg.noise)
+        .collect();
+    Sample::new(
+        vec![Tensor::from_f32(vec![cfg.dim], feat)],
+        Tensor::from_i32(vec![], vec![class as i32]),
+    )
+}
+
+pub fn speech_rdd(
+    ctx: &SparkletContext,
+    cfg: SpeechConfig,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    ctx.generate(parts, per_part, seed, move |_p, rng| gen_utterance(&cfg, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_are_separated() {
+        let cfg = SpeechConfig { noise: 0.2, ..Default::default() };
+        let c0: Vec<f32> = (0..cfg.dim).map(|d| class_center(0, d, cfg.dim)).collect();
+        let c1: Vec<f32> = (0..cfg.dim).map(|d| class_center(1, d, cfg.dim)).collect();
+        let dist: f32 = c0.iter().zip(&c1).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(dist > 4.0, "centers too close: {dist}");
+        let mut rng = Rng::new(8);
+        let s = gen_utterance(&cfg, &mut rng);
+        assert_eq!(s.features[0].shape, vec![32]);
+        assert!((0..8).contains(&s.label.as_i32().unwrap()[0]));
+    }
+}

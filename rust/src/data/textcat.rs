@@ -1,0 +1,73 @@
+//! Synthetic labelled text for the Fig-1 quickstart classifier: each class
+//! draws tokens from its own zipf-weighted vocabulary slice (plus common
+//! stop-words), like topic-coded documents.
+
+use crate::bigdl::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TextcatConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    pub classes: usize,
+    /// Fraction of tokens drawn from the shared stop-word pool.
+    pub stopword_frac: f64,
+}
+
+impl Default for TextcatConfig {
+    fn default() -> Self {
+        TextcatConfig { vocab: 1000, seq: 16, classes: 5, stopword_frac: 0.3 }
+    }
+}
+
+pub fn gen_document(cfg: &TextcatConfig, rng: &mut Rng) -> Sample {
+    let class = rng.gen_usize(cfg.classes);
+    let stop_pool = cfg.vocab / 10; // tokens [0, vocab/10) are stop-words
+    let slice = (cfg.vocab - stop_pool) / cfg.classes;
+    let base = stop_pool + class * slice;
+    let toks: Vec<i32> = (0..cfg.seq)
+        .map(|_| {
+            if rng.gen_bool(cfg.stopword_frac) {
+                rng.gen_zipf(stop_pool, 1.1) as i32
+            } else {
+                (base + rng.gen_zipf(slice, 1.05)) as i32
+            }
+        })
+        .collect();
+    Sample::new(
+        vec![Tensor::from_i32(vec![cfg.seq], toks)],
+        Tensor::from_i32(vec![], vec![class as i32]),
+    )
+}
+
+pub fn textcat_rdd(
+    ctx: &SparkletContext,
+    cfg: TextcatConfig,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    ctx.generate(parts, per_part, seed, move |_p, rng| gen_document(&cfg, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_tokens_live_in_class_slice() {
+        let cfg = TextcatConfig { stopword_frac: 0.0, ..Default::default() };
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let s = gen_document(&cfg, &mut rng);
+            let class = s.label.as_i32().unwrap()[0] as usize;
+            let slice = (cfg.vocab - 100) / cfg.classes;
+            let base = (100 + class * slice) as i32;
+            for &t in s.features[0].as_i32().unwrap() {
+                assert!(t >= base && t < base + slice as i32, "token {t} outside class {class}");
+            }
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! # bigdl-rs — BigDL-on-Sparklet
+//!
+//! A reproduction of *"BigDL: A Distributed Deep Learning Framework for Big
+//! Data"* (Dai et al., SoCC'19) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: synchronous
+//!   data-parallel training implemented directly on a functional,
+//!   coarse-grained big-data engine. The engine itself ([`sparklet`], a
+//!   Spark-like substrate with immutable RDDs, lineage, a driver-side task
+//!   scheduler, shuffle, broadcast and an in-memory block store) is built
+//!   from scratch here, and [`bigdl`] implements Algorithm 1 (two
+//!   short-lived jobs per iteration) and Algorithm 2 (AllReduce from
+//!   shuffle + task-side broadcast) on top of it.
+//! * **Layer 2** — JAX models (`python/compile/models/`), AOT-lowered to
+//!   HLO text and executed from Rust via PJRT ([`runtime`]).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) fused into
+//!   the model HLO at build time.
+//!
+//! Python never runs on the training path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bigdl;
+pub mod config;
+pub mod data;
+pub mod netsim;
+pub mod runtime;
+pub mod sparklet;
+pub mod streaming;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,20 @@
+//! `bigdl` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline crate set):
+//!   info                         list loaded artifacts + entry points
+//!   train --model <name> ...     distributed training (Algorithm 1)
+//!   predict --model <name> ...   distributed inference on synthetic data
+//!   help
+
+use anyhow::Result;
+
+use bigdl::util::logging;
+
+mod cli;
+mod cli_train;
+
+fn main() -> Result<()> {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    cli::run(&args)
+}

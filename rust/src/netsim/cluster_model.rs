@@ -1,0 +1,292 @@
+//! Analytic + stochastic iteration model for synchronous data-parallel
+//! training on an N-node cluster (the paper's Algorithm 1 loop).
+
+use crate::bigdl::allreduce::{traffic, Algo};
+use crate::util::prng::Rng;
+
+/// Network parameters (defaults = the paper's testbed: 10GbE).
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Per-node NIC bandwidth, bytes/s, full duplex (10GbE ≈ 1.17e9 B/s
+    /// after framing overhead).
+    pub nic_bytes_per_sec: f64,
+    /// Per-transfer latency (TCP setup + first byte), seconds.
+    pub latency_s: f64,
+    /// Software overhead per block put/get (serialization bookkeeping).
+    pub per_block_overhead_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            nic_bytes_per_sec: 1.17e9,
+            latency_s: 150e-6,
+            per_block_overhead_s: 50e-6,
+        }
+    }
+}
+
+/// Per-task model-compute distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeModel {
+    /// Mean forward+backward seconds per task (one multi-threaded task per
+    /// node, as BigDL runs it).
+    pub mean_s: f64,
+    /// Lognormal sigma of straggler jitter (0 = deterministic).
+    pub jitter_sigma: f64,
+}
+
+impl ComputeModel {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        if self.jitter_sigma <= 0.0 {
+            return self.mean_s;
+        }
+        // Lognormal with median = mean_s (mild right tail → stragglers).
+        self.mean_s * (self.jitter_sigma * rng.gen_normal()).exp()
+    }
+}
+
+/// Which synchronization algorithm to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncAlgo {
+    ShuffleBroadcast,
+    Ring,
+    CentralPs,
+}
+
+impl SyncAlgo {
+    fn algo(self) -> Algo {
+        match self {
+            SyncAlgo::ShuffleBroadcast => Algo::ShuffleBroadcast,
+            SyncAlgo::Ring => Algo::Ring,
+            SyncAlgo::CentralPs => Algo::CentralPs,
+        }
+    }
+}
+
+/// Driver scheduling mode (Fig 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Every iteration pays `dispatch_s` per task, serialized at the driver.
+    PerIteration,
+    /// Drizzle: placements planned once per `group` iterations; the
+    /// per-iteration residual is one batched launch per node.
+    Drizzle { group: usize },
+}
+
+/// Full simulation config for one cluster size.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub nodes: usize,
+    /// Spark tasks per iteration (paper Fig 8 sweeps this; BigDL default
+    /// is one per node).
+    pub tasks_per_iter: usize,
+    /// Model parameter bytes (K in the paper's analysis).
+    pub param_bytes: f64,
+    pub net: NetConfig,
+    pub compute: ComputeModel,
+    /// Driver cost to place + enqueue one task (measured from Sparklet).
+    pub dispatch_per_task_s: f64,
+    pub sched: SchedMode,
+    pub sync: SyncAlgo,
+    pub seed: u64,
+}
+
+/// Timing breakdown of one simulated iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterBreakdown {
+    pub sched_s: f64,
+    pub compute_s: f64,
+    pub sync_s: f64,
+}
+
+impl IterBreakdown {
+    pub fn total(&self) -> f64 {
+        self.sched_s + self.compute_s + self.sync_s
+    }
+}
+
+/// Time for every node to simultaneously move `bytes` out and in through
+/// its NIC (the all-to-all phases of Algorithm 2: the network is
+/// edge-limited, so completion ≈ worst NIC serialization + latency).
+fn phase_time(net: &NetConfig, bytes_per_node: f64, peers: usize) -> f64 {
+    bytes_per_node / net.nic_bytes_per_sec
+        + net.latency_s
+        + net.per_block_overhead_s * peers as f64
+}
+
+/// Synchronization time for one round of `cfg.sync` on `n` nodes.
+pub fn sync_time(cfg: &SimConfig) -> f64 {
+    let n = cfg.nodes;
+    let t = traffic(cfg.sync.algo(), n, cfg.param_bytes);
+    let per_node = t.out_bytes.max(t.in_bytes);
+    match cfg.sync {
+        // Two bulk phases (gradient shuffle; weight re-broadcast), each
+        // moving half the per-node volume across N-1 peer blocks.
+        SyncAlgo::ShuffleBroadcast => {
+            2.0 * phase_time(&cfg.net, per_node / 2.0, n.saturating_sub(1))
+        }
+        // 2(N-1) latency-bound steps of K/N bytes.
+        SyncAlgo::Ring => {
+            let steps = t.steps.max(1) as f64;
+            let chunk = cfg.param_bytes / n as f64;
+            steps * (chunk / cfg.net.nic_bytes_per_sec + cfg.net.latency_s + cfg.net.per_block_overhead_s)
+        }
+        // Server NIC serializes N·K in then N·K out.
+        SyncAlgo::CentralPs => {
+            2.0 * phase_time(&cfg.net, per_node, n.saturating_sub(1))
+        }
+    }
+}
+
+/// Driver scheduling time for one iteration. The paper's Fig 8: overhead
+/// grows linearly in tasks/iteration; Drizzle amortizes the planning
+/// across the group, leaving a small residual per iteration.
+pub fn sched_time(cfg: &SimConfig) -> f64 {
+    let per_iter = cfg.tasks_per_iter as f64 * cfg.dispatch_per_task_s;
+    match cfg.sched {
+        SchedMode::PerIteration => per_iter,
+        SchedMode::Drizzle { group } => {
+            let g = group.max(1) as f64;
+            // Planning amortized; residual = one batched wakeup per node.
+            per_iter / g + cfg.nodes as f64 * cfg.dispatch_per_task_s * 0.1
+        }
+    }
+}
+
+/// Simulate one training iteration (Algorithm 1's two jobs).
+pub fn simulate_iteration(cfg: &SimConfig, rng: &mut Rng) -> IterBreakdown {
+    // Synchronous: the fwd/bwd barrier waits for the slowest task. With
+    // `tasks_per_iter` tasks over `nodes` executors, waves serialize.
+    let waves = cfg.tasks_per_iter.div_ceil(cfg.nodes);
+    let mut compute = 0.0;
+    for _ in 0..waves.max(1) {
+        let slowest = (0..cfg.nodes)
+            .map(|_| cfg.compute.sample(rng))
+            .fold(0.0, f64::max);
+        compute += slowest;
+    }
+    IterBreakdown {
+        sched_s: sched_time(cfg),
+        compute_s: compute,
+        sync_s: sync_time(cfg),
+    }
+}
+
+/// Simulate `iters` iterations; returns (mean breakdown, records/sec given
+/// `global_batch` records per iteration).
+pub fn simulate_training(cfg: &SimConfig, iters: usize, global_batch: usize) -> (IterBreakdown, f64) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut acc = IterBreakdown::default();
+    for _ in 0..iters {
+        let b = simulate_iteration(cfg, &mut rng);
+        acc.sched_s += b.sched_s;
+        acc.compute_s += b.compute_s;
+        acc.sync_s += b.sync_s;
+    }
+    let n = iters as f64;
+    let mean = IterBreakdown {
+        sched_s: acc.sched_s / n,
+        compute_s: acc.compute_s / n,
+        sync_s: acc.sync_s / n,
+    };
+    let throughput = global_batch as f64 / mean.total();
+    (mean, throughput)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(nodes: usize) -> SimConfig {
+        SimConfig {
+            nodes,
+            tasks_per_iter: nodes,
+            // Inception-v1: ~7M params → 28MB of f32 (paper's workload).
+            param_bytes: 28e6,
+            net: NetConfig::default(),
+            compute: ComputeModel { mean_s: 2.0, jitter_sigma: 0.05 },
+            dispatch_per_task_s: 2e-3,
+            sched: SchedMode::PerIteration,
+            sync: SyncAlgo::ShuffleBroadcast,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn sync_overhead_small_at_32_nodes() {
+        // Paper Fig 6: < 7% at 32 nodes for Inception-v1 on 10GbE.
+        let cfg = base(32);
+        let frac = sync_time(&cfg) / cfg.compute.mean_s;
+        assert!(frac < 0.07, "sync fraction {frac}");
+        assert!(frac > 0.005, "sync should not be free: {frac}");
+    }
+
+    #[test]
+    fn shuffle_broadcast_sync_is_nearly_flat_in_n() {
+        let t16 = sync_time(&base(16));
+        let t256 = sync_time(&base(256));
+        assert!(t256 < t16 * 3.0, "2K-per-node property: {t16} vs {t256}");
+    }
+
+    #[test]
+    fn central_ps_degrades_linearly() {
+        let mut c = base(64);
+        c.sync = SyncAlgo::CentralPs;
+        let ps = sync_time(&c);
+        c.sync = SyncAlgo::ShuffleBroadcast;
+        let sb = sync_time(&c);
+        assert!(ps > sb * 10.0, "PS server should bottleneck: {ps} vs {sb}");
+    }
+
+    #[test]
+    fn ring_pays_latency_at_scale() {
+        let mut c = base(256);
+        c.sync = SyncAlgo::Ring;
+        let ring = sync_time(&c);
+        c.sync = SyncAlgo::ShuffleBroadcast;
+        let sb = sync_time(&c);
+        assert!(ring > sb, "510 latency steps must show: {ring} vs {sb}");
+    }
+
+    #[test]
+    fn throughput_scales_then_bends() {
+        // Fig 7's qualitative shape: near-linear to ~96 nodes, sub-linear
+        // after (stragglers + sched overhead + latency constants).
+        let thr = |n: usize| {
+            let mut c = base(n);
+            c.compute = ComputeModel { mean_s: 2.0, jitter_sigma: 0.12 };
+            let (_b, t) = simulate_training(&c, 40, n * 32);
+            t
+        };
+        let t16 = thr(16);
+        let t96 = thr(96);
+        let t256 = thr(256);
+        let s96 = t96 / t16; // ideal 6.0
+        let s256 = t256 / t16; // ideal 16.0
+        assert!(s96 > 4.5 && s96 <= 6.05, "96-node speedup {s96}");
+        assert!(s256 > 8.0 && s256 < 15.0, "256-node speedup {s256} should be sub-linear");
+    }
+
+    #[test]
+    fn drizzle_cuts_sched_overhead() {
+        let mut c = base(64);
+        c.tasks_per_iter = 512;
+        let per_iter = sched_time(&c);
+        c.sched = SchedMode::Drizzle { group: 50 };
+        let drizzle = sched_time(&c);
+        assert!(drizzle < per_iter / 5.0, "{drizzle} vs {per_iter}");
+    }
+
+    #[test]
+    fn sched_overhead_grows_with_tasks() {
+        // Fig 8: >10% at ~500 tasks for ~2s compute.
+        let mut c = base(64);
+        c.tasks_per_iter = 500;
+        let frac = sched_time(&c) / 2.0;
+        assert!(frac > 0.10, "sched fraction {frac}");
+        c.tasks_per_iter = 100;
+        let frac100 = sched_time(&c) / 2.0;
+        assert!(frac100 < 0.15, "sched fraction at 100 tasks {frac100}");
+    }
+}

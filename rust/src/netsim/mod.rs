@@ -1,0 +1,23 @@
+//! NetSim — the virtual-time cluster model behind the paper's large-N
+//! figures (6, 7, 8). The physical testbed here is one machine; the
+//! paper's scaling experiments ran on 16-256 Xeon nodes over 10GbE. NetSim
+//! keeps the *cost model* of that cluster:
+//!
+//! * per-node NIC bandwidth shared by concurrent flows, plus per-transfer
+//!   latency and per-block software overhead;
+//! * a compute-time distribution per forward-backward task (mean +
+//!   lognormal straggler jitter) — synchronous training waits for the
+//!   slowest replica;
+//! * driver dispatch cost per task (measured from the real Sparklet
+//!   scheduler), amortizable over Drizzle groups.
+//!
+//! Every knob is either measured from the real system (dispatch cost,
+//! NCF/CNN compute time) or taken from the paper's stated testbed
+//! (10GbE, Inception-v1 parameter size); EXPERIMENTS.md records which.
+
+pub mod cluster_model;
+
+pub use cluster_model::{
+    simulate_iteration, simulate_training, ComputeModel, IterBreakdown, NetConfig, SchedMode,
+    SimConfig, SyncAlgo,
+};

@@ -1,0 +1,167 @@
+//! Artifact metadata: the `<model>.meta.json` contract written by
+//! `python/compile/aot.py` (input/output specs, batch sizes, param layout).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Value;
+
+/// Shape + dtype of one input/output of an AOT entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn parse(v: &Value) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported entry point (`fwd_bwd` or `predict`).
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Static batch size baked into the HLO (per-replica minibatch).
+    pub batch_size: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One leaf of the flattened parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamLeaf {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed `<model>.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub param_layout: Vec<ParamLeaf>,
+    pub entries: BTreeMap<String, EntryMeta>,
+    /// Directory the artifact files live in.
+    pub dir: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn parse_file(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let mut entries = BTreeMap::new();
+        for (k, e) in v.req("entries")?.as_obj()? {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                k.clone(),
+                EntryMeta {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    batch_size: e.req("batch_size")?.as_usize()?,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let param_layout = v
+            .req("param_layout")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(ParamLeaf {
+                    name: l.req("name")?.as_str()?.to_string(),
+                    offset: l.req("offset")?.as_usize()?,
+                    size: l.req("size")?.as_usize()?,
+                    shape: l.req("shape")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: v.req("name")?.as_str()?.to_string(),
+            param_count: v.req("param_count")?.as_usize()?,
+            param_layout,
+            entries,
+            dir: path.parent().unwrap_or(Path::new(".")).to_path_buf(),
+        })
+    }
+
+    /// Path to the initial flat parameter vector.
+    pub fn params_bin(&self) -> PathBuf {
+        self.dir.join(format!("{}.params.bin", self.name))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("model {} has no entry {name:?}", self.name))
+    }
+
+    /// Validate that the layout tiles [0, param_count) exactly.
+    pub fn validate(&self) -> Result<()> {
+        let mut expected = 0;
+        for leaf in &self.param_layout {
+            anyhow::ensure!(
+                leaf.offset == expected,
+                "param layout gap at {} (offset {} != {})",
+                leaf.name,
+                leaf.offset,
+                expected
+            );
+            anyhow::ensure!(
+                leaf.shape.iter().product::<usize>().max(1) == leaf.size,
+                "leaf {} size mismatch",
+                leaf.name
+            );
+            expected += leaf.size;
+        }
+        anyhow::ensure!(
+            expected == self.param_count,
+            "layout covers {} of {} params",
+            expected,
+            self.param_count
+        );
+        Ok(())
+    }
+}
+
+/// Scan a directory for `*.meta.json` artifacts.
+pub fn scan_dir(dir: &Path) -> Result<BTreeMap<String, ArtifactMeta>> {
+    let mut out = BTreeMap::new();
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("artifacts dir {} missing — run `make artifacts`", dir.display()))?;
+    for entry in rd {
+        let path = entry?.path();
+        if path.file_name().and_then(|f| f.to_str()).is_some_and(|f| f.ends_with(".meta.json")) {
+            let meta = ArtifactMeta::parse_file(&path)?;
+            meta.validate()?;
+            out.insert(meta.name.clone(), meta);
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + metadata) and
+//! execute them from the coordinator hot path.
+//!
+//! * [`meta`] — the `meta.json` artifact contract.
+//! * [`service`] — the single-threaded PJRT device service + cloneable
+//!   [`RuntimeHandle`] the rest of the system uses.
+
+pub mod meta;
+pub mod service;
+
+pub use meta::{ArtifactMeta, EntryMeta, ParamLeaf, TensorSpec};
+pub use service::{default_artifacts_dir, ExecStat, RuntimeHandle};

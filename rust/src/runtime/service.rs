@@ -1,0 +1,322 @@
+//! PJRT execution service.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so a single
+//! dedicated thread owns the client and all compiled executables; the rest
+//! of the system talks to it through a cloneable [`RuntimeHandle`] over an
+//! mpsc channel. This mirrors BigDL's "one multi-threaded compute task per
+//! server" design: model compute is funneled through one device service
+//! while the coordinator stays fully multi-threaded.
+//!
+//! Executables are compiled lazily on first use and cached (one compiled
+//! executable per model entry point, as per the AOT contract).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::meta::{ArtifactMeta, EntryMeta};
+use crate::tensor::{DType, Storage, Tensor};
+
+/// Request → service thread.
+enum Msg {
+    Exec {
+        /// `"<model>/<entry>"`, e.g. `"ncf/fwd_bwd"`.
+        key: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Pre-compile an entry without executing (startup warm-up).
+    Warmup { key: String, reply: mpsc::Sender<Result<f64>> },
+    Stats { reply: mpsc::Sender<Vec<ExecStat>> },
+    Shutdown,
+}
+
+/// Per-entry execution statistics (feeds the §Perf analysis + Fig 6).
+#[derive(Debug, Clone)]
+pub struct ExecStat {
+    pub key: String,
+    pub executions: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// Cloneable handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Msg>,
+    metas: Arc<BTreeMap<String, ArtifactMeta>>,
+    dir: PathBuf,
+}
+
+impl RuntimeHandle {
+    /// Scan `dir` for artifacts and start the service thread.
+    pub fn load(dir: &Path) -> Result<RuntimeHandle> {
+        let metas = Arc::new(super::meta::scan_dir(dir)?);
+        ensure!(!metas.is_empty(), "no artifacts in {}", dir.display());
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let thread_metas = Arc::clone(&metas);
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_loop(rx, thread_metas))
+            .context("spawning pjrt service thread")?;
+        Ok(RuntimeHandle { tx, metas, dir: dir.to_path_buf() })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn meta(&self, model: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?}; have {:?}", self.model_names()))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.metas.keys().cloned().collect()
+    }
+
+    /// Load the initial flat parameter vector for a model.
+    pub fn initial_params(&self, model: &str) -> Result<Vec<f32>> {
+        let meta = self.meta(model)?;
+        let params = crate::util::read_f32_file(&meta.params_bin())?;
+        ensure!(
+            params.len() == meta.param_count,
+            "{model}: params.bin has {} values, meta says {}",
+            params.len(),
+            meta.param_count
+        );
+        Ok(params)
+    }
+
+    /// Synchronously execute `model/entry` with host tensors.
+    pub fn execute(&self, model: &str, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        // Validate against specs on the caller side for good error messages.
+        let em = self.meta(model)?.entry(entry)?;
+        validate_inputs(model, entry, em, &inputs)?;
+        let (reply, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Exec { key: format!("{model}/{entry}"), inputs, reply })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    /// Pre-compile an entry; returns compile seconds.
+    pub fn warmup(&self, model: &str, entry: &str) -> Result<f64> {
+        let _ = self.meta(model)?.entry(entry)?;
+        let (reply, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Warmup { key: format!("{model}/{entry}"), reply })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<Vec<ExecStat>> {
+        let (reply, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats { reply })
+            .map_err(|_| anyhow!("pjrt service thread is gone"))?;
+        Ok(rrx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+fn validate_inputs(model: &str, entry: &str, em: &EntryMeta, inputs: &[Tensor]) -> Result<()> {
+    ensure!(
+        inputs.len() == em.inputs.len(),
+        "{model}/{entry}: got {} inputs, expected {}",
+        inputs.len(),
+        em.inputs.len()
+    );
+    for (i, (t, spec)) in inputs.iter().zip(&em.inputs).enumerate() {
+        ensure!(
+            t.shape == spec.shape && t.dtype() == spec.dtype,
+            "{model}/{entry} input {i}: got {:?}/{:?}, expected {:?}/{:?}",
+            t.shape,
+            t.dtype(),
+            spec.shape,
+            spec.dtype
+        );
+    }
+    Ok(())
+}
+
+struct CachedExe {
+    exe: xla::PjRtLoadedExecutable,
+    stat: ExecStat,
+}
+
+fn service_loop(rx: mpsc::Receiver<Msg>, metas: Arc<BTreeMap<String, ArtifactMeta>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            log::error!("PJRT CPU client failed: {e}");
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Exec { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client failed to start")));
+                    }
+                    Msg::Warmup { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client failed to start")));
+                    }
+                    Msg::Stats { reply } => {
+                        let _ = reply.send(Vec::new());
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    log::debug!("pjrt service up: platform={}", client.platform_name());
+    let mut cache: HashMap<String, CachedExe> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Exec { key, inputs, reply } => {
+                let result = exec_one(&client, &metas, &mut cache, &key, inputs);
+                let _ = reply.send(result);
+            }
+            Msg::Warmup { key, reply } => {
+                let r = ensure_compiled(&client, &metas, &mut cache, &key)
+                    .map(|c| c.stat.compile_secs);
+                let _ = reply.send(r);
+            }
+            Msg::Stats { reply } => {
+                let mut stats: Vec<ExecStat> =
+                    cache.values().map(|c| c.stat.clone()).collect();
+                stats.sort_by(|a, b| a.key.cmp(&b.key));
+                let _ = reply.send(stats);
+            }
+            Msg::Shutdown => break,
+        }
+    }
+    log::debug!("pjrt service down");
+}
+
+fn ensure_compiled<'a>(
+    client: &xla::PjRtClient,
+    metas: &BTreeMap<String, ArtifactMeta>,
+    cache: &'a mut HashMap<String, CachedExe>,
+    key: &str,
+) -> Result<&'a mut CachedExe> {
+    if !cache.contains_key(key) {
+        let (model, entry) = key
+            .split_once('/')
+            .ok_or_else(|| anyhow!("bad exec key {key:?}"))?;
+        let meta = metas.get(model).ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        let em = meta.entry(entry)?;
+        let path = meta.dir.join(&em.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {key}: {e}"))?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+        log::info!("compiled {key} in {:.2}s", compile_secs);
+        cache.insert(
+            key.to_string(),
+            CachedExe {
+                exe,
+                stat: ExecStat {
+                    key: key.to_string(),
+                    executions: 0,
+                    total_secs: 0.0,
+                    compile_secs,
+                },
+            },
+        );
+    }
+    Ok(cache.get_mut(key).unwrap())
+}
+
+fn exec_one(
+    client: &xla::PjRtClient,
+    metas: &BTreeMap<String, ArtifactMeta>,
+    cache: &mut HashMap<String, CachedExe>,
+    key: &str,
+    inputs: Vec<Tensor>,
+) -> Result<Vec<Tensor>> {
+    let cached = ensure_compiled(client, metas, cache, key)?;
+    let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+    let t0 = Instant::now();
+    let result = cached
+        .exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow!("executing {key}: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching {key} result: {e}"))?;
+    cached.stat.executions += 1;
+    cached.stat.total_secs += t0.elapsed().as_secs_f64();
+    // aot.py lowers with return_tuple=True → always a tuple, possibly 1-ary.
+    let parts = lit
+        .to_tuple()
+        .map_err(|e| anyhow!("decomposing {key} result tuple: {e}"))?;
+    parts.into_iter().map(|l| from_literal(&l)).collect()
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Storage::F32(v) => xla::Literal::vec1(v),
+        Storage::F32Shared(v) => xla::Literal::vec1(v),
+        Storage::I32(v) => xla::Literal::vec1(v),
+    };
+    if t.shape.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+    }
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("result shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?;
+            Ok(Tensor { shape: dims, data: Storage::F32(v) })
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?;
+            Ok(Tensor { shape: dims, data: Storage::I32(v) })
+        }
+        other => bail!("unsupported result element type {other:?}"),
+    }
+}
+
+/// Resolve the artifacts dir: `$BIGDL_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("BIGDL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl std::fmt::Debug for RuntimeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RuntimeHandle")
+            .field("models", &self.model_names())
+            .finish()
+    }
+}
+
+/// Make DType usable in error messages above.
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::I32 => write!(f, "i32"),
+        }
+    }
+}

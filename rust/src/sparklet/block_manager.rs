@@ -1,0 +1,283 @@
+//! Distributed in-memory block storage — the substrate under shuffle,
+//! task-side broadcast and RDD caching (paper §3.3: "the relevant tasks
+//! simply store the local gradients and updated weights in the in-memory
+//! storage, which can then be read remotely ... with extremely low
+//! latency").
+//!
+//! One store per simulated node; remote reads cross node stores and are
+//! metered (bytes + transfer count) so benches can account network traffic
+//! exactly as the paper's 2K-per-node analysis does.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+/// Identifies a block in the cluster-wide store.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum BlockId {
+    /// Gradient slice: shuffle `shuffle`, produced by map task `map`,
+    /// destined for reduce task `reduce` (Algorithm 2 step 2).
+    Shuffle { shuffle: u64, map: usize, reduce: usize },
+    /// Task-side broadcast block `part` of broadcast round `id`
+    /// (Algorithm 2 step 5: updated weight shards).
+    Broadcast { id: u64, part: usize },
+    /// Cached RDD partition.
+    RddCache { rdd: u64, part: usize },
+    /// Free-form (tests, apps).
+    Named(String),
+}
+
+/// Stored value: a flat f32 vector (gradients / weights — the hot path,
+/// kept unserialized), a zero-copy *view* into a shared vector (gradient
+/// slices: one allocation per task instead of one per shard — §Perf P2),
+/// or an opaque object (cached RDD partitions).
+#[derive(Clone)]
+pub enum BlockData {
+    F32(Arc<Vec<f32>>),
+    F32View { buf: Arc<Vec<f32>>, start: usize, len: usize },
+    Object { obj: Arc<dyn Any + Send + Sync>, approx_bytes: usize },
+}
+
+impl BlockData {
+    pub fn bytes(&self) -> usize {
+        match self {
+            BlockData::F32(v) => v.len() * 4,
+            BlockData::F32View { len, .. } => len * 4,
+            BlockData::Object { approx_bytes, .. } => *approx_bytes,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<Arc<Vec<f32>>> {
+        match self {
+            BlockData::F32(v) => Ok(Arc::clone(v)),
+            // Materializes; hot paths should use as_f32_slice instead.
+            BlockData::F32View { buf, start, len } => {
+                Ok(Arc::new(buf[*start..*start + *len].to_vec()))
+            }
+            _ => Err(anyhow!("block is not f32")),
+        }
+    }
+
+    /// Borrowed view of the float payload (no copy for views).
+    pub fn as_f32_slice(&self) -> Result<&[f32]> {
+        match self {
+            BlockData::F32(v) => Ok(v),
+            BlockData::F32View { buf, start, len } => Ok(&buf[*start..*start + *len]),
+            _ => Err(anyhow!("block is not f32")),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TrafficStats {
+    /// Bytes read from a store on a different node than the reader.
+    pub remote_bytes: AtomicU64,
+    pub remote_reads: AtomicU64,
+    pub local_bytes: AtomicU64,
+    pub local_reads: AtomicU64,
+    pub puts: AtomicU64,
+    pub put_bytes: AtomicU64,
+}
+
+impl TrafficStats {
+    pub fn snapshot(&self) -> TrafficSnapshot {
+        TrafficSnapshot {
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+            remote_reads: self.remote_reads.load(Ordering::Relaxed),
+            local_bytes: self.local_bytes.load(Ordering::Relaxed),
+            local_reads: self.local_reads.load(Ordering::Relaxed),
+            puts: self.puts.load(Ordering::Relaxed),
+            put_bytes: self.put_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TrafficSnapshot {
+    pub remote_bytes: u64,
+    pub remote_reads: u64,
+    pub local_bytes: u64,
+    pub local_reads: u64,
+    pub puts: u64,
+    pub put_bytes: u64,
+}
+
+impl TrafficSnapshot {
+    pub fn delta(self, earlier: TrafficSnapshot) -> TrafficSnapshot {
+        TrafficSnapshot {
+            remote_bytes: self.remote_bytes - earlier.remote_bytes,
+            remote_reads: self.remote_reads - earlier.remote_reads,
+            local_bytes: self.local_bytes - earlier.local_bytes,
+            local_reads: self.local_reads - earlier.local_reads,
+            puts: self.puts - earlier.puts,
+            put_bytes: self.put_bytes - earlier.put_bytes,
+        }
+    }
+}
+
+struct NodeStore {
+    blocks: Mutex<HashMap<BlockId, BlockData>>,
+    alive: AtomicBool,
+}
+
+/// Cluster-wide in-memory storage: one [`NodeStore`] per node.
+pub struct BlockManager {
+    stores: Vec<NodeStore>,
+    pub stats: TrafficStats,
+}
+
+impl BlockManager {
+    pub fn new(nodes: usize) -> Arc<BlockManager> {
+        Arc::new(BlockManager {
+            stores: (0..nodes)
+                .map(|_| NodeStore {
+                    blocks: Mutex::new(HashMap::new()),
+                    alive: AtomicBool::new(true),
+                })
+                .collect(),
+            stats: TrafficStats::default(),
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// Store a block on `node`'s store.
+    pub fn put(&self, node: usize, id: BlockId, data: BlockData) {
+        debug_assert!(node < self.stores.len());
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats.put_bytes.fetch_add(data.bytes() as u64, Ordering::Relaxed);
+        self.stores[node].blocks.lock().unwrap().insert(id, data);
+    }
+
+    /// Read a block as seen from `reader_node`: local store first, then the
+    /// other nodes (a metered "remote fetch").
+    pub fn get(&self, reader_node: usize, id: &BlockId) -> Option<BlockData> {
+        if let Some(d) = self.get_on(reader_node, id) {
+            self.stats.local_reads.fetch_add(1, Ordering::Relaxed);
+            self.stats.local_bytes.fetch_add(d.bytes() as u64, Ordering::Relaxed);
+            return Some(d);
+        }
+        for n in 0..self.stores.len() {
+            if n == reader_node {
+                continue;
+            }
+            if let Some(d) = self.get_on(n, id) {
+                self.stats.remote_reads.fetch_add(1, Ordering::Relaxed);
+                self.stats.remote_bytes.fetch_add(d.bytes() as u64, Ordering::Relaxed);
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    /// Read from one specific node's store (no metering, no fallback).
+    pub fn get_on(&self, node: usize, id: &BlockId) -> Option<BlockData> {
+        let store = &self.stores[node];
+        if !store.alive.load(Ordering::Relaxed) {
+            return None;
+        }
+        store.blocks.lock().unwrap().get(id).cloned()
+    }
+
+    pub fn remove(&self, id: &BlockId) {
+        for s in &self.stores {
+            s.blocks.lock().unwrap().remove(id);
+        }
+    }
+
+    /// Drop blocks matching a predicate on every node (e.g. a finished
+    /// shuffle round's slices).
+    pub fn remove_matching(&self, pred: impl Fn(&BlockId) -> bool) {
+        for s in &self.stores {
+            s.blocks.lock().unwrap().retain(|id, _| !pred(id));
+        }
+    }
+
+    /// Simulate node failure: mark dead and drop all of its blocks
+    /// (cached partitions are lost → lineage recompute; shuffle outputs
+    /// are lost → map task re-run).
+    pub fn kill_node(&self, node: usize) {
+        self.stores[node].alive.store(false, Ordering::Relaxed);
+        self.stores[node].blocks.lock().unwrap().clear();
+    }
+
+    pub fn revive_node(&self, node: usize) {
+        self.stores[node].alive.store(true, Ordering::Relaxed);
+    }
+
+    pub fn node_alive(&self, node: usize) -> bool {
+        self.stores[node].alive.load(Ordering::Relaxed)
+    }
+
+    /// Total blocks and bytes currently resident (for memory accounting).
+    pub fn usage(&self) -> (usize, usize) {
+        let mut blocks = 0;
+        let mut bytes = 0;
+        for s in &self.stores {
+            let m = s.blocks.lock().unwrap();
+            blocks += m.len();
+            bytes += m.values().map(|b| b.bytes()).sum::<usize>();
+        }
+        (blocks, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_local_and_remote_metering() {
+        let bm = BlockManager::new(3);
+        bm.put(0, BlockId::Named("x".into()), BlockData::F32(Arc::new(vec![1.0; 10])));
+        // Local read from node 0.
+        assert!(bm.get(0, &BlockId::Named("x".into())).is_some());
+        // Remote read from node 2.
+        let d = bm.get(2, &BlockId::Named("x".into())).unwrap();
+        assert_eq!(d.as_f32().unwrap().len(), 10);
+        let s = bm.stats.snapshot();
+        assert_eq!(s.local_reads, 1);
+        assert_eq!(s.remote_reads, 1);
+        assert_eq!(s.remote_bytes, 40);
+    }
+
+    #[test]
+    fn kill_node_drops_blocks() {
+        let bm = BlockManager::new(2);
+        bm.put(1, BlockId::Named("y".into()), BlockData::F32(Arc::new(vec![0.0; 4])));
+        bm.kill_node(1);
+        assert!(bm.get(0, &BlockId::Named("y".into())).is_none());
+        bm.revive_node(1);
+        assert!(bm.get(0, &BlockId::Named("y".into())).is_none(), "blocks stay lost");
+    }
+
+    #[test]
+    fn object_blocks_roundtrip() {
+        let bm = BlockManager::new(1);
+        let v: Arc<dyn Any + Send + Sync> = Arc::new(vec![String::from("a"), String::from("b")]);
+        bm.put(0, BlockId::RddCache { rdd: 1, part: 0 }, BlockData::Object { obj: v, approx_bytes: 2 });
+        let got = bm.get(0, &BlockId::RddCache { rdd: 1, part: 0 }).unwrap();
+        match got {
+            BlockData::Object { obj, .. } => {
+                let strs = obj.downcast_ref::<Vec<String>>().unwrap();
+                assert_eq!(strs.len(), 2);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn remove_matching_scopes_deletion() {
+        let bm = BlockManager::new(1);
+        bm.put(0, BlockId::Shuffle { shuffle: 1, map: 0, reduce: 0 }, BlockData::F32(Arc::new(vec![0.0])));
+        bm.put(0, BlockId::Shuffle { shuffle: 2, map: 0, reduce: 0 }, BlockData::F32(Arc::new(vec![0.0])));
+        bm.remove_matching(|id| matches!(id, BlockId::Shuffle { shuffle: 1, .. }));
+        assert!(bm.get(0, &BlockId::Shuffle { shuffle: 1, map: 0, reduce: 0 }).is_none());
+        assert!(bm.get(0, &BlockId::Shuffle { shuffle: 2, map: 0, reduce: 0 }).is_some());
+    }
+}

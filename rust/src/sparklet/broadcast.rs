@@ -1,0 +1,100 @@
+//! Task-side broadcast (paper §3.3, Algorithm 2 line 5): after updating its
+//! weight shard, sync task `n` publishes the shard; every forward-backward
+//! task of the *next* iteration reads all N shards to reassemble the
+//! latest weights.
+//!
+//! Built directly on the in-memory block store, like Spark's
+//! TorrentBroadcast-over-BlockManager (remote fetches are metered).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::block_manager::{BlockData, BlockId, BlockManager};
+
+/// One broadcast round of `parts` f32 shards.
+#[derive(Debug, Clone, Copy)]
+pub struct Broadcast {
+    pub id: u64,
+    pub parts: usize,
+}
+
+impl Broadcast {
+    pub fn new(id: u64, parts: usize) -> Broadcast {
+        Broadcast { id, parts }
+    }
+
+    /// Publish shard `part` from `node` (task-side broadcast).
+    pub fn publish(&self, bm: &BlockManager, node: usize, part: usize, data: Arc<Vec<f32>>) {
+        debug_assert!(part < self.parts);
+        bm.put(node, BlockId::Broadcast { id: self.id, part }, BlockData::F32(data));
+    }
+
+    /// Fetch shard `part` as seen from `reader_node`.
+    pub fn fetch(&self, bm: &BlockManager, reader_node: usize, part: usize) -> Result<Arc<Vec<f32>>> {
+        bm.get(reader_node, &BlockId::Broadcast { id: self.id, part })
+            .ok_or_else(|| anyhow!("broadcast {} part {part} not published", self.id))?
+            .as_f32()
+    }
+
+    /// Reassemble the full vector from all shards, concatenated in shard
+    /// order (Algorithm 1 line 4: "read the latest weights").
+    pub fn fetch_all_concat(&self, bm: &BlockManager, reader_node: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for part in 0..self.parts {
+            let shard = self.fetch(bm, reader_node, part)?;
+            out.extend_from_slice(&shard);
+        }
+        Ok(out)
+    }
+
+    /// Reassemble into a preallocated buffer (hot-path variant: the
+    /// forward-backward task reuses its weights buffer across iterations).
+    pub fn fetch_all_into(&self, bm: &BlockManager, reader_node: usize, out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        for part in 0..self.parts {
+            let shard = self.fetch(bm, reader_node, part)?;
+            out.extend_from_slice(&shard);
+        }
+        Ok(())
+    }
+
+    pub fn cleanup(&self, bm: &BlockManager) {
+        let id = self.id;
+        bm.remove_matching(|b| matches!(b, BlockId::Broadcast { id: i, .. } if *i == id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_fetch_concat_in_order() {
+        let bm = BlockManager::new(3);
+        let bc = Broadcast::new(5, 3);
+        bc.publish(&bm, 2, 2, Arc::new(vec![5.0, 6.0]));
+        bc.publish(&bm, 0, 0, Arc::new(vec![1.0, 2.0]));
+        bc.publish(&bm, 1, 1, Arc::new(vec![3.0, 4.0]));
+        let all = bc.fetch_all_concat(&bm, 0).unwrap();
+        assert_eq!(all, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn missing_part_errors() {
+        let bm = BlockManager::new(1);
+        let bc = Broadcast::new(1, 2);
+        bc.publish(&bm, 0, 0, Arc::new(vec![1.0]));
+        assert!(bc.fetch_all_concat(&bm, 0).is_err());
+    }
+
+    #[test]
+    fn fetch_into_reuses_buffer() {
+        let bm = BlockManager::new(1);
+        let bc = Broadcast::new(2, 1);
+        bc.publish(&bm, 0, 0, Arc::new(vec![9.0; 8]));
+        let mut buf = Vec::with_capacity(8);
+        bc.fetch_all_into(&bm, 0, &mut buf).unwrap();
+        assert_eq!(buf, vec![9.0; 8]);
+    }
+}

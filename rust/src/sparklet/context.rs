@@ -1,0 +1,180 @@
+//! `SparkletContext` — the driver handle (paper Fig 2): owns the cluster,
+//! block manager and scheduler; creates RDDs; submits jobs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use super::block_manager::BlockManager;
+use super::cluster::{Cluster, ClusterSpec};
+use super::fault::FailurePolicy;
+use super::rdd::Rdd;
+use super::scheduler::{Assignment, SchedulePolicy, Scheduler};
+use crate::util::prng::Rng;
+
+pub(crate) struct CtxInner {
+    pub cluster: Arc<Cluster>,
+    pub blocks: Arc<BlockManager>,
+    pub scheduler: Scheduler,
+    pub rdd_ids: AtomicU64,
+    pub job_ids: AtomicU64,
+    pub shuffle_ids: AtomicU64,
+    pub broadcast_ids: AtomicU64,
+    pub failure: RwLock<FailurePolicy>,
+    pub default_policy: RwLock<SchedulePolicy>,
+}
+
+/// Cloneable driver context.
+#[derive(Clone)]
+pub struct SparkletContext(pub(crate) Arc<CtxInner>);
+
+impl SparkletContext {
+    pub fn new(spec: ClusterSpec) -> SparkletContext {
+        SparkletContext(Arc::new(CtxInner {
+            cluster: Cluster::start(spec),
+            blocks: BlockManager::new(spec.nodes),
+            scheduler: Scheduler::new(),
+            rdd_ids: AtomicU64::new(0),
+            job_ids: AtomicU64::new(0),
+            shuffle_ids: AtomicU64::new(0),
+            broadcast_ids: AtomicU64::new(0),
+            failure: RwLock::new(FailurePolicy::default()),
+            default_policy: RwLock::new(SchedulePolicy::default()),
+        }))
+    }
+
+    /// Convenience: local cluster with `nodes` single-slot nodes.
+    pub fn local(nodes: usize) -> SparkletContext {
+        SparkletContext::new(ClusterSpec { nodes, slots_per_node: 1 })
+    }
+
+    pub fn cluster(&self) -> Arc<Cluster> {
+        Arc::clone(&self.0.cluster)
+    }
+
+    pub fn blocks(&self) -> Arc<BlockManager> {
+        Arc::clone(&self.0.blocks)
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.0.scheduler
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.0.cluster.nodes()
+    }
+
+    pub fn set_failure_policy(&self, p: FailurePolicy) {
+        *self.0.failure.write().unwrap() = p;
+    }
+
+    pub fn failure_policy(&self) -> FailurePolicy {
+        self.0.failure.read().unwrap().clone()
+    }
+
+    pub fn set_schedule_policy(&self, p: SchedulePolicy) {
+        *self.0.default_policy.write().unwrap() = p;
+    }
+
+    pub fn schedule_policy(&self) -> SchedulePolicy {
+        self.0.default_policy.read().unwrap().clone()
+    }
+
+    pub(crate) fn next_rdd_id(&self) -> u64 {
+        self.0.rdd_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn next_shuffle_id(&self) -> u64 {
+        self.0.shuffle_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn next_broadcast_id(&self) -> u64 {
+        self.0.broadcast_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Distribute a Vec into `parts` partitions (round-robin slices).
+    pub fn parallelize<T: Clone + Send + Sync + 'static>(
+        &self,
+        data: Vec<T>,
+        parts: usize,
+    ) -> Rdd<T> {
+        assert!(parts > 0);
+        let data = Arc::new(data);
+        let ranges = crate::tensor::partition_ranges(data.len(), parts);
+        Rdd::from_compute(self, parts, move |p, _tc| {
+            Ok(data[ranges[p].clone()].to_vec())
+        })
+    }
+
+    /// RDD whose partitions are generated on demand (lineage = generator).
+    /// The generator must be deterministic in `(partition, seed)` — that is
+    /// exactly what makes lineage-based recovery exact.
+    pub fn generate<T, F>(&self, parts: usize, per_part: usize, seed: u64, gen: F) -> Rdd<T>
+    where
+        T: Clone + Send + Sync + 'static,
+        F: Fn(usize, &mut Rng) -> T + Send + Sync + 'static,
+    {
+        Rdd::from_compute(self, parts, move |p, _tc| {
+            let mut rng = Rng::new(seed).fork(p as u64);
+            Ok((0..per_part).map(|_| gen(p, &mut rng)).collect())
+        })
+    }
+
+    /// Run a job with one task per `preferred` entry; the core primitive
+    /// all RDD actions and the BigDL optimizer jobs build on.
+    pub fn run_job<R: Send + 'static>(
+        &self,
+        preferred: &[Option<usize>],
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<R>> {
+        let job_id = self.0.job_ids.fetch_add(1, Ordering::Relaxed);
+        let policy = self.schedule_policy();
+        self.0
+            .scheduler
+            .run_job(self, job_id, preferred, &policy, None, task_fn)
+    }
+
+    /// Like [`run_job`] but with a Drizzle pre-assignment.
+    pub fn run_job_preassigned<R: Send + 'static>(
+        &self,
+        preferred: &[Option<usize>],
+        assignment: &Assignment,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<R>> {
+        let job_id = self.0.job_ids.fetch_add(1, Ordering::Relaxed);
+        let policy = self.schedule_policy();
+        self.0
+            .scheduler
+            .run_job(self, job_id, preferred, &policy, Some(assignment), task_fn)
+    }
+
+    /// Default placement: partition `p` prefers node `p % nodes` — which is
+    /// what co-partitions and co-locates every RDD of the same width
+    /// (paper §3.2: model RDD zip Sample RDD at no extra cost).
+    pub fn default_preferred(&self, parts: usize) -> Vec<Option<usize>> {
+        (0..parts).map(|p| Some(p % self.nodes())).collect()
+    }
+}
+
+/// Per-task runtime context handed to every task closure.
+pub struct TaskContext {
+    pub ctx: SparkletContext,
+    pub job: u64,
+    pub partition: usize,
+    pub attempt: usize,
+    pub node: usize,
+}
+
+impl TaskContext {
+    pub fn blocks(&self) -> Arc<BlockManager> {
+        self.ctx.blocks()
+    }
+
+    /// Task-local RNG. Seeded by (job, partition) but NOT attempt: a retried
+    /// task regenerates byte-identical results — the lineage-determinism
+    /// invariant that makes fine-grained recovery exact.
+    pub fn rng(&self) -> Rng {
+        Rng::new(0xB16D1 ^ self.job.wrapping_mul(0x9E3779B97F4A7C15)).fork(self.partition as u64)
+    }
+}

@@ -1,0 +1,70 @@
+//! Failure injection + retry policy.
+//!
+//! The paper's §3.4 argument: stateless short-lived tasks make failures
+//! cheap — re-run just the failed task (which regenerates its gradient
+//! slice / weight-shard block in the in-memory store) instead of
+//! restarting the whole gang from a snapshot. These knobs let tests and
+//! ablation benches inject task- and node-level failures deterministically.
+
+/// Deterministic injected-failure policy (hash-based, seeded).
+#[derive(Debug, Clone)]
+pub struct FailurePolicy {
+    /// Probability any given task *attempt* fails with an injected error.
+    pub task_fail_prob: f64,
+    /// Max attempts per task before the job aborts (Spark default: 4).
+    pub max_attempts: usize,
+    /// For gang-scheduled jobs: max whole-job restarts.
+    pub max_job_restarts: usize,
+    pub seed: u64,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        FailurePolicy { task_fail_prob: 0.0, max_attempts: 4, max_job_restarts: 8, seed: 0 }
+    }
+}
+
+impl FailurePolicy {
+    /// Should (job, partition, attempt) fail? Deterministic in the seed so
+    /// failure tests are reproducible.
+    pub fn should_fail(&self, job: u64, partition: usize, attempt: usize) -> bool {
+        if self.task_fail_prob <= 0.0 {
+            return false;
+        }
+        // First attempts only roll the dice; retries of an injected failure
+        // roll again (so with p<1 they eventually succeed).
+        let mut h = self.seed ^ 0x9E3779B97F4A7C15;
+        for v in [job, partition as u64, attempt as u64] {
+            h ^= v.wrapping_mul(0xBF58476D1CE4E5B9);
+            h = h.rotate_left(27).wrapping_mul(0x94D049BB133111EB);
+        }
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.task_fail_prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_prob_never_fails() {
+        let p = FailurePolicy::default();
+        assert!(!(0..1000).any(|i| p.should_fail(1, i, 0)));
+    }
+
+    #[test]
+    fn deterministic_and_attempt_sensitive() {
+        let p = FailurePolicy { task_fail_prob: 0.5, seed: 42, ..Default::default() };
+        let a: Vec<bool> = (0..100).map(|i| p.should_fail(7, i, 0)).collect();
+        let b: Vec<bool> = (0..100).map(|i| p.should_fail(7, i, 0)).collect();
+        assert_eq!(a, b);
+        let fails = a.iter().filter(|x| **x).count();
+        assert!((20..80).contains(&fails), "p=0.5 should fail ~half: {fails}");
+        // A failed attempt can succeed on retry.
+        let stuck = (0..100)
+            .filter(|&i| (0..4).all(|att| p.should_fail(7, i, att)))
+            .count();
+        assert!(stuck < 10, "retries should usually clear injected failures");
+    }
+}

@@ -1,0 +1,35 @@
+//! **Sparklet** — the Spark-like functional compute substrate the paper's
+//! training runs on, built from scratch (see DESIGN.md §4 substitutions).
+//!
+//! Faithful to the execution model the paper relies on:
+//! * immutable, partitioned [`rdd::Rdd`]s with lineage (copy-on-write,
+//!   coarse-grained transformations);
+//! * a single driver ([`context::SparkletContext`]) that launches jobs of
+//!   short-lived, stateless, individually-retryable tasks on worker
+//!   [`cluster::Cluster`] nodes;
+//! * cluster-wide in-memory [`block_manager::BlockManager`] storage
+//!   carrying [`shuffle::Shuffle`] slices, [`broadcast::Broadcast`] shards
+//!   and cached RDD partitions;
+//! * locality/delay scheduling, gang (barrier) mode and Drizzle-style
+//!   group pre-assignment in [`scheduler::Scheduler`];
+//! * deterministic failure injection ([`fault::FailurePolicy`]) with
+//!   fine-grained task-level recovery.
+
+pub mod block_manager;
+pub mod broadcast;
+pub mod cluster;
+pub mod context;
+pub mod fault;
+pub mod pair_rdd;
+pub mod rdd;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use block_manager::{BlockData, BlockId, BlockManager, TrafficSnapshot};
+pub use broadcast::Broadcast;
+pub use cluster::{Cluster, ClusterSpec};
+pub use context::{SparkletContext, TaskContext};
+pub use fault::FailurePolicy;
+pub use rdd::Rdd;
+pub use scheduler::{Assignment, SchedSnapshot, SchedulePolicy, Scheduler};
+pub use shuffle::Shuffle;

@@ -1,0 +1,256 @@
+//! Keyed (pair-RDD) operations — the Spark API surface real data
+//! pipelines use between ingestion and training: `reduce_by_key`,
+//! `group_by_key`, `count_by_key`, `join`.
+//!
+//! Implementation note: partition `r` of a shuffled child RDD recomputes
+//! its input from the parent's lineage, selecting the keys that hash to
+//! `r` (a wide dependency). This is the lineage-pure formulation —
+//! recovery semantics are identical to Spark's (lost shuffle output ⇒
+//! re-run the map side), at the cost of re-reading cached parents per
+//! reduce partition; for the coarse-grained pipelines in this repo that
+//! trade-off is the simple, correct one. Parents should be `.cache()`d
+//! before wide operations.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use anyhow::Result;
+
+use super::rdd::Rdd;
+
+fn bucket<K: Hash>(key: &K, parts: usize) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % parts as u64) as usize
+}
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Clone + Send + Sync + Eq + Hash + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    /// Merge all values of each key with `f`, into `parts` partitions.
+    pub fn reduce_by_key<F>(&self, parts: usize, f: F) -> Rdd<(K, V)>
+    where
+        F: Fn(&V, &V) -> V + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        let nparents = self.num_partitions();
+        Rdd::from_compute(self.context(), parts, move |r, tc| {
+            let mut acc: HashMap<K, V> = HashMap::new();
+            for m in 0..nparents {
+                for (k, v) in parent.materialize(m, tc)?.iter() {
+                    if bucket(k, parts) != r {
+                        continue;
+                    }
+                    match acc.get_mut(k) {
+                        Some(cur) => *cur = f(cur, v),
+                        None => {
+                            acc.insert(k.clone(), v.clone());
+                        }
+                    }
+                }
+            }
+            Ok(acc.into_iter().collect())
+        })
+    }
+
+    /// Collect all values per key.
+    pub fn group_by_key(&self, parts: usize) -> Rdd<(K, Vec<V>)> {
+        let parent = self.clone();
+        let nparents = self.num_partitions();
+        Rdd::from_compute(self.context(), parts, move |r, tc| {
+            let mut acc: HashMap<K, Vec<V>> = HashMap::new();
+            for m in 0..nparents {
+                for (k, v) in parent.materialize(m, tc)?.iter() {
+                    if bucket(k, parts) == r {
+                        acc.entry(k.clone()).or_default().push(v.clone());
+                    }
+                }
+            }
+            Ok(acc.into_iter().collect())
+        })
+    }
+
+    /// Per-key record counts, gathered at the driver.
+    pub fn count_by_key(&self) -> Result<HashMap<K, usize>> {
+        let counted = self
+            .map(|(k, _v)| (k.clone(), 1usize))
+            .reduce_by_key(self.num_partitions(), |a, b| a + b);
+        Ok(counted.collect()?.into_iter().collect())
+    }
+
+    /// Inner join on key (both sides fully shuffled into `parts`).
+    pub fn join<W>(&self, other: &Rdd<(K, W)>, parts: usize) -> Rdd<(K, (V, W))>
+    where
+        W: Clone + Send + Sync + 'static,
+    {
+        let left = self.clone();
+        let right = other.clone();
+        let nleft = self.num_partitions();
+        let nright = other.num_partitions();
+        Rdd::from_compute(self.context(), parts, move |r, tc| {
+            let mut lmap: HashMap<K, Vec<V>> = HashMap::new();
+            for m in 0..nleft {
+                for (k, v) in left.materialize(m, tc)?.iter() {
+                    if bucket(k, parts) == r {
+                        lmap.entry(k.clone()).or_default().push(v.clone());
+                    }
+                }
+            }
+            let mut out = Vec::new();
+            for m in 0..nright {
+                for (k, w) in right.materialize(m, tc)?.iter() {
+                    if bucket(k, parts) == r {
+                        if let Some(vs) = lmap.get(k) {
+                            for v in vs {
+                                out.push((k.clone(), (v.clone(), w.clone())));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    /// Driver-side map of all pairs (small results).
+    pub fn collect_as_map(&self) -> Result<HashMap<K, V>> {
+        Ok(self.collect()?.into_iter().collect())
+    }
+}
+
+impl<T: Clone + Send + Sync + 'static> Rdd<T> {
+    /// Key every record with `f` (Spark `keyBy`).
+    pub fn key_by<K, F>(&self, f: F) -> Rdd<(K, T)>
+    where
+        K: Clone + Send + Sync + Eq + Hash + 'static,
+        F: Fn(&T) -> K + Send + Sync + 'static,
+    {
+        self.map(move |t| (f(t), t.clone()))
+    }
+
+    /// Bernoulli sample of each partition (deterministic in the RDD seed
+    /// derivation: partition index + caller seed).
+    pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T> {
+        let parent = self.clone();
+        Rdd::from_compute(self.context(), self.num_partitions(), move |p, tc| {
+            let data = parent.materialize(p, tc)?;
+            let mut rng = crate::util::prng::Rng::new(seed).fork(p as u64);
+            Ok(data
+                .iter()
+                .filter(|_| rng.gen_bool(fraction))
+                .cloned()
+                .collect())
+        })
+    }
+
+    /// Reduce the partition count by concatenating adjacent partitions
+    /// (Spark `coalesce`, narrow version).
+    pub fn coalesce(&self, parts: usize) -> Rdd<T> {
+        assert!(parts > 0 && parts <= self.num_partitions());
+        let parent = self.clone();
+        let groups = crate::tensor::partition_ranges(self.num_partitions(), parts);
+        Rdd::from_compute(self.context(), parts, move |p, tc| {
+            let mut out = Vec::new();
+            for m in groups[p].clone() {
+                out.extend(parent.materialize(m, tc)?.iter().cloned());
+            }
+            Ok(out)
+        })
+    }
+
+    /// Remove duplicates (requires Eq + Hash), into `parts` partitions.
+    pub fn distinct(&self, parts: usize) -> Rdd<T>
+    where
+        T: Eq + Hash,
+    {
+        self.map(|t| (t.clone(), ()))
+            .reduce_by_key(parts, |_a, _b| ())
+            .map(|(t, ())| t.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::SparkletContext;
+
+    #[test]
+    fn reduce_by_key_matches_hashmap() {
+        let ctx = SparkletContext::local(3);
+        let pairs: Vec<(String, i64)> = (0..200)
+            .map(|i| (format!("k{}", i % 17), i))
+            .collect();
+        let mut expect: HashMap<String, i64> = HashMap::new();
+        for (k, v) in &pairs {
+            *expect.entry(k.clone()).or_default() += v;
+        }
+        let rdd = ctx.parallelize(pairs, 6).cache();
+        let got = rdd.reduce_by_key(4, |a, b| a + b).collect_as_map().unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn group_by_key_collects_all_values() {
+        let ctx = SparkletContext::local(2);
+        let rdd = ctx.parallelize(vec![(1, "a"), (2, "b"), (1, "c"), (2, "d"), (1, "e")], 3);
+        let grouped = rdd.group_by_key(2);
+        let m: HashMap<i32, Vec<&str>> = grouped.collect().unwrap().into_iter().collect();
+        let mut ones = m[&1].clone();
+        ones.sort();
+        assert_eq!(ones, vec!["a", "c", "e"]);
+        assert_eq!(m[&2].len(), 2);
+    }
+
+    #[test]
+    fn count_by_key_and_key_by() {
+        let ctx = SparkletContext::local(2);
+        let rdd = ctx.parallelize((0..90i64).collect(), 5).key_by(|x| x % 3);
+        let counts = rdd.count_by_key().unwrap();
+        assert_eq!(counts[&0], 30);
+        assert_eq!(counts[&1], 30);
+        assert_eq!(counts[&2], 30);
+    }
+
+    #[test]
+    fn join_inner_semantics() {
+        let ctx = SparkletContext::local(2);
+        let users = ctx.parallelize(vec![(1, "alice"), (2, "bob"), (3, "carol")], 2);
+        let scores = ctx.parallelize(vec![(1, 10), (1, 11), (3, 30), (4, 40)], 2);
+        let mut joined = users.join(&scores, 3).collect().unwrap();
+        joined.sort_by_key(|(k, (_u, s))| (*k, *s));
+        assert_eq!(
+            joined,
+            vec![(1, ("alice", 10)), (1, ("alice", 11)), (3, ("carol", 30))]
+        );
+    }
+
+    #[test]
+    fn sample_fraction_and_determinism() {
+        let ctx = SparkletContext::local(2);
+        let rdd = ctx.parallelize((0..2000i64).collect(), 4);
+        let s1 = rdd.sample(0.25, 42).collect().unwrap();
+        let s2 = rdd.sample(0.25, 42).collect().unwrap();
+        assert_eq!(s1, s2, "same seed → same sample");
+        assert!((300..700).contains(&s1.len()), "≈25% of 2000: {}", s1.len());
+    }
+
+    #[test]
+    fn coalesce_preserves_order_and_data() {
+        let ctx = SparkletContext::local(2);
+        let rdd = ctx.parallelize((0..40i64).collect(), 8);
+        let c = rdd.coalesce(3);
+        assert_eq!(c.num_partitions(), 3);
+        assert_eq!(c.collect().unwrap(), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn distinct_dedups() {
+        let ctx = SparkletContext::local(2);
+        let rdd = ctx.parallelize(vec![1, 2, 2, 3, 3, 3, 4], 3);
+        let mut d = rdd.distinct(2).collect().unwrap();
+        d.sort();
+        assert_eq!(d, vec![1, 2, 3, 4]);
+    }
+}

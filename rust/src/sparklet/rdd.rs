@@ -1,0 +1,231 @@
+//! RDD — an immutable, partitioned collection with lineage (paper §3.1).
+//!
+//! Partitions are computed by a pure closure (the lineage); `cache()`
+//! materializes partitions into the node-local block store, and a lost
+//! cached partition (node death) is transparently recomputed from lineage.
+//! Transformations are coarse-grained and copy-on-write: `map`/`filter`/
+//! `zip` derive a *new* RDD; nothing is mutated in place.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::block_manager::{BlockData, BlockId};
+use super::context::{SparkletContext, TaskContext};
+
+type ComputeFn<T> = dyn Fn(usize, &TaskContext) -> Result<Vec<T>> + Send + Sync;
+
+/// An immutable distributed collection.
+pub struct Rdd<T> {
+    ctx: SparkletContext,
+    id: u64,
+    nparts: usize,
+    compute: Arc<ComputeFn<T>>,
+    cached: bool,
+    preferred: Arc<Vec<Option<usize>>>,
+}
+
+impl<T> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd {
+            ctx: self.ctx.clone(),
+            id: self.id,
+            nparts: self.nparts,
+            compute: Arc::clone(&self.compute),
+            cached: self.cached,
+            preferred: Arc::clone(&self.preferred),
+        }
+    }
+}
+
+impl<T: Clone + Send + Sync + 'static> Rdd<T> {
+    pub(crate) fn from_compute<F>(ctx: &SparkletContext, nparts: usize, f: F) -> Rdd<T>
+    where
+        F: Fn(usize, &TaskContext) -> Result<Vec<T>> + Send + Sync + 'static,
+    {
+        Rdd {
+            ctx: ctx.clone(),
+            id: ctx.next_rdd_id(),
+            nparts,
+            compute: Arc::new(f),
+            cached: false,
+            preferred: Arc::new(ctx.default_preferred(nparts)),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.nparts
+    }
+
+    pub fn context(&self) -> &SparkletContext {
+        &self.ctx
+    }
+
+    pub fn preferred_nodes(&self) -> &[Option<usize>] {
+        &self.preferred
+    }
+
+    /// Mark for in-memory caching (materialized lazily, per node, via the
+    /// block manager — lost on node death, recomputed from lineage).
+    pub fn cache(mut self) -> Rdd<T> {
+        self.cached = true;
+        self
+    }
+
+    /// Materialize partition `p` as seen by the running task.
+    pub fn materialize(&self, p: usize, tc: &TaskContext) -> Result<Arc<Vec<T>>> {
+        ensure!(p < self.nparts, "partition {p} out of range ({})", self.nparts);
+        if self.cached {
+            let key = BlockId::RddCache { rdd: self.id, part: p };
+            if let Some(BlockData::Object { obj, .. }) = tc.blocks().get(tc.node, &key) {
+                if let Ok(v) = Arc::downcast::<Vec<T>>(obj) {
+                    return Ok(v);
+                }
+            }
+            let v = Arc::new((self.compute)(p, tc)?);
+            let approx = v.len() * std::mem::size_of::<T>();
+            let obj: Arc<dyn Any + Send + Sync> = Arc::clone(&v) as _;
+            tc.blocks().put(tc.node, key, BlockData::Object { obj, approx_bytes: approx });
+            Ok(v)
+        } else {
+            Ok(Arc::new((self.compute)(p, tc)?))
+        }
+    }
+
+    // ---- transformations (lazy, lineage-carrying) ----------------------
+
+    pub fn map<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Clone + Send + Sync + 'static,
+        F: Fn(&T) -> U + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
+            Ok(parent.materialize(p, tc)?.iter().map(&f).collect())
+        })
+    }
+
+    pub fn filter<F>(&self, f: F) -> Rdd<T>
+    where
+        F: Fn(&T) -> bool + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
+            Ok(parent.materialize(p, tc)?.iter().filter(|x| f(x)).cloned().collect())
+        })
+    }
+
+    pub fn map_partitions<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Clone + Send + Sync + 'static,
+        F: Fn(&[T]) -> Vec<U> + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
+            Ok(f(&parent.materialize(p, tc)?))
+        })
+    }
+
+    /// Zip with a co-partitioned RDD (paper §3.2: model RDD ⋈ Sample RDD;
+    /// both sides share the same partition→node mapping, so the zip is a
+    /// purely node-local operation with no data movement).
+    pub fn zip<U: Clone + Send + Sync + 'static>(&self, other: &Rdd<U>) -> Rdd<(T, U)> {
+        assert_eq!(
+            self.nparts, other.nparts,
+            "zip requires co-partitioned RDDs ({} vs {})",
+            self.nparts, other.nparts
+        );
+        let left = self.clone();
+        let right = other.clone();
+        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
+            let a = left.materialize(p, tc)?;
+            let b = right.materialize(p, tc)?;
+            ensure!(
+                a.len() == b.len(),
+                "zip partition {p}: length mismatch {} vs {}",
+                a.len(),
+                b.len()
+            );
+            Ok(a.iter().cloned().zip(b.iter().cloned()).collect())
+        })
+    }
+
+    /// Concatenate with another RDD of the same type (partitions appended).
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
+        let left = self.clone();
+        let right = other.clone();
+        let split = self.nparts;
+        Rdd::from_compute(&self.ctx, self.nparts + other.nparts, move |p, tc| {
+            if p < split {
+                left.materialize(p, tc).map(|a| a.to_vec())
+            } else {
+                right.materialize(p - split, tc).map(|a| a.to_vec())
+            }
+        })
+    }
+
+    // ---- actions (eager: submit a job) ----------------------------------
+
+    /// Run `f` over every partition's data; results in partition order.
+    /// The primitive behind both RDD actions and BigDL's two per-iteration
+    /// jobs.
+    pub fn run_partition_job<R, F>(&self, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        let rdd = self.clone();
+        let task = move |tc: &TaskContext| {
+            let data = rdd.materialize(tc.partition, tc)?;
+            f(tc, &data)
+        };
+        self.ctx.run_job(&self.preferred, Arc::new(task))
+    }
+
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let parts = self.run_partition_job(|_tc, data| Ok(data.to_vec()))?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    pub fn count(&self) -> Result<usize> {
+        Ok(self
+            .run_partition_job(|_tc, data| Ok(data.len()))?
+            .into_iter()
+            .sum())
+    }
+
+    pub fn first(&self) -> Result<T> {
+        self.take(1)?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty RDD"))
+    }
+
+    pub fn take(&self, n: usize) -> Result<Vec<T>> {
+        // Small-data convenience (drives examples/tests).
+        let mut out = self.collect()?;
+        out.truncate(n);
+        Ok(out)
+    }
+
+    pub fn reduce<F>(&self, f: F) -> Result<Option<T>>
+    where
+        F: Fn(&T, &T) -> T + Send + Sync + Clone + 'static,
+    {
+        let g = f.clone();
+        let partials = self.run_partition_job(move |_tc, data| {
+            Ok(data.iter().cloned().reduce(|a, b| g(&a, &b)))
+        })?;
+        Ok(partials.into_iter().flatten().reduce(|a, b| f(&a, &b)))
+    }
+
+    /// Force materialization of every (cached) partition.
+    pub fn materialize_all(&self) -> Result<()> {
+        self.run_partition_job(|_tc, _data| Ok(())).map(|_| ())
+    }
+}

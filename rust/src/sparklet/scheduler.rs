@@ -1,0 +1,258 @@
+//! Driver-side task scheduler.
+//!
+//! Implements the paper's logically-centralized control (§3.4): the driver
+//! launches every task of a job, tracks completions, and re-runs failed
+//! tasks individually (stateless tasks make this safe). Supports:
+//!
+//! * **locality / delay scheduling** — prefer the partition's node, wait
+//!   briefly for a slot before falling back (Zaharia et al., EuroSys'10);
+//! * **gang (barrier) mode** — the "connector approach" baseline: any task
+//!   failure restarts the entire job (coarse-grained recovery);
+//! * **Drizzle-style group pre-assignment** — compute task placements for
+//!   a whole group of iterations in one driver pass (§4.4 / Fig 8).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::cluster::Cluster;
+use super::context::{SparkletContext, TaskContext};
+
+/// How a job's tasks are scheduled.
+#[derive(Debug, Clone)]
+pub struct SchedulePolicy {
+    /// Gang/barrier mode: all-or-nothing, whole-job restart on failure.
+    pub gang: bool,
+    /// How long to wait for a slot on the preferred node before falling
+    /// back to the least-loaded node (delay scheduling).
+    pub locality_wait: Duration,
+}
+
+impl Default for SchedulePolicy {
+    fn default() -> Self {
+        SchedulePolicy { gang: false, locality_wait: Duration::from_millis(0) }
+    }
+}
+
+/// Cumulative scheduler counters (Fig 8 feeds on `dispatch_ns / tasks`).
+#[derive(Debug, Default)]
+pub struct SchedStats {
+    pub jobs: AtomicU64,
+    pub tasks_launched: AtomicU64,
+    pub task_retries: AtomicU64,
+    pub gang_restarts: AtomicU64,
+    /// Driver time spent placing + enqueueing tasks.
+    pub dispatch_ns: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedSnapshot {
+    pub jobs: u64,
+    pub tasks_launched: u64,
+    pub task_retries: u64,
+    pub gang_restarts: u64,
+    pub dispatch_ns: u64,
+}
+
+impl SchedStats {
+    pub fn snapshot(&self) -> SchedSnapshot {
+        SchedSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            tasks_launched: self.tasks_launched.load(Ordering::Relaxed),
+            task_retries: self.task_retries.load(Ordering::Relaxed),
+            gang_restarts: self.gang_restarts.load(Ordering::Relaxed),
+            dispatch_ns: self.dispatch_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A precomputed placement for one job's tasks (Drizzle group scheduling:
+/// the driver plans a whole group of iterations in one pass, then each
+/// iteration's dispatch is a bare enqueue).
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub nodes: Vec<usize>,
+}
+
+pub struct Scheduler {
+    pub stats: SchedStats,
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler { stats: SchedStats::default() }
+    }
+
+    /// Place one task: preferred node if alive (waiting up to
+    /// `locality_wait` for a free slot), else least-loaded alive node.
+    fn place(
+        &self,
+        cluster: &Cluster,
+        preferred: Option<usize>,
+        policy: &SchedulePolicy,
+        avoid: Option<usize>,
+    ) -> Result<usize> {
+        if let Some(p) = preferred {
+            if cluster.node_alive(p) && Some(p) != avoid {
+                let slots = cluster.spec().slots_per_node;
+                if cluster.inflight(p) < slots {
+                    return Ok(p);
+                }
+                // Delay scheduling: briefly wait for locality.
+                let deadline = Instant::now() + policy.locality_wait;
+                while Instant::now() < deadline {
+                    if cluster.inflight(p) < slots {
+                        return Ok(p);
+                    }
+                    std::thread::yield_now();
+                }
+                // Data is in cluster-wide memory; run non-local.
+                return Ok(p); // queue behind the busy slot: still preferred
+            }
+        }
+        cluster
+            .least_loaded_alive(avoid)
+            .or_else(|| cluster.least_loaded_alive(None))
+            .ok_or_else(|| anyhow!("no alive nodes"))
+    }
+
+    /// Plan placements for a job without dispatching (Drizzle).
+    pub fn plan(
+        &self,
+        cluster: &Cluster,
+        preferred: &[Option<usize>],
+        policy: &SchedulePolicy,
+    ) -> Result<Assignment> {
+        let nodes = preferred
+            .iter()
+            .map(|p| self.place(cluster, *p, policy, None))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Assignment { nodes })
+    }
+
+    /// Run a job: one task per entry of `preferred`; returns results in
+    /// partition order. `task_fn` must be stateless & re-runnable (retries
+    /// and gang restarts re-invoke it with a bumped attempt counter).
+    pub fn run_job<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        job_id: u64,
+        preferred: &[Option<usize>],
+        policy: &SchedulePolicy,
+        preassigned: Option<&Assignment>,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<R>> {
+        let cluster = ctx.cluster();
+        let n = preferred.len();
+        self.stats.jobs.fetch_add(1, Ordering::Relaxed);
+        let failure = ctx.failure_policy();
+
+        // generation guards against stale results after a gang restart.
+        let (tx, rx) = mpsc::channel::<(usize, usize, usize, Result<R>)>();
+        let mut generation = 0usize;
+        let mut attempts = vec![0usize; n];
+
+        let dispatch_one = |part: usize,
+                            gen: usize,
+                            attempt: usize,
+                            avoid: Option<usize>|
+         -> Result<()> {
+            let t0 = Instant::now();
+            let node = if let (Some(a), None) = (preassigned, avoid) {
+                a.nodes[part]
+            } else {
+                self.place(&cluster, preferred[part], policy, avoid)?
+            };
+            let tx = tx.clone();
+            let ctx2 = ctx.clone();
+            let f = Arc::clone(&task_fn);
+            let fail = failure.clone();
+            cluster.submit(
+                node,
+                Box::new(move |node_id| {
+                    let tc = TaskContext {
+                        ctx: ctx2,
+                        job: job_id,
+                        partition: part,
+                        attempt,
+                        node: node_id,
+                    };
+                    let result = if !tc.ctx.cluster().node_alive(node_id) {
+                        Err(anyhow!("node {node_id} died"))
+                    } else if fail.should_fail(job_id, part, attempt) {
+                        Err(anyhow!("injected task failure (job {job_id} part {part} attempt {attempt})"))
+                    } else {
+                        f(&tc)
+                    };
+                    let _ = tx.send((part, gen, attempt, result));
+                }),
+            )?;
+            self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .dispatch_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            Ok(())
+        };
+
+        // Initial dispatch wave.
+        for part in 0..n {
+            dispatch_one(part, generation, attempts[part], None)?;
+        }
+
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        let mut gang_restarts = 0usize;
+
+        while done < n {
+            let (part, gen, _attempt, result) = rx
+                .recv()
+                .map_err(|_| anyhow!("executor channels closed mid-job"))?;
+            if gen != generation {
+                continue; // stale result from before a gang restart
+            }
+            match result {
+                Ok(r) => {
+                    if results[part].is_none() {
+                        results[part] = Some(r);
+                        done += 1;
+                    }
+                }
+                Err(e) if policy.gang => {
+                    gang_restarts += 1;
+                    self.stats.gang_restarts.fetch_add(1, Ordering::Relaxed);
+                    if gang_restarts > failure.max_job_restarts {
+                        bail!("gang job {job_id} exceeded {} restarts: {e}", failure.max_job_restarts);
+                    }
+                    log::debug!("gang job {job_id}: task {part} failed ({e}); restarting ALL tasks");
+                    generation += 1;
+                    results.iter_mut().for_each(|r| *r = None);
+                    done = 0;
+                    for p in 0..n {
+                        attempts[p] += 1;
+                        dispatch_one(p, generation, attempts[p], None)?;
+                    }
+                }
+                Err(e) => {
+                    attempts[part] += 1;
+                    self.stats.task_retries.fetch_add(1, Ordering::Relaxed);
+                    if attempts[part] >= failure.max_attempts {
+                        bail!("task {part} of job {job_id} failed {} times: {e}", attempts[part]);
+                    }
+                    log::debug!("job {job_id}: retrying task {part} (attempt {}): {e}", attempts[part]);
+                    // Avoid the node that just failed it if it died.
+                    let avoid = preferred[part].filter(|&p| !cluster.node_alive(p));
+                    dispatch_one(part, generation, attempts[part], avoid)?;
+                }
+            }
+        }
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,148 @@
+//! Shuffle over the in-memory block store (paper §3.3: gradient slices are
+//! written by map-side tasks and fetched by the parameter-synchronization
+//! tasks — "shuffle the n-th partition of all gradients to this task").
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::block_manager::{BlockData, BlockId, BlockManager};
+
+/// One shuffle round: `maps` writers × `reduces` readers of f32 slices.
+#[derive(Debug, Clone, Copy)]
+pub struct Shuffle {
+    pub id: u64,
+    pub maps: usize,
+    pub reduces: usize,
+}
+
+impl Shuffle {
+    pub fn new(id: u64, maps: usize, reduces: usize) -> Shuffle {
+        Shuffle { id, maps, reduces }
+    }
+
+    /// Map task `map` (running on `node`) publishes its slice for reducer
+    /// `reduce`.
+    pub fn write(
+        &self,
+        bm: &BlockManager,
+        node: usize,
+        map: usize,
+        reduce: usize,
+        data: Arc<Vec<f32>>,
+    ) {
+        debug_assert!(map < self.maps && reduce < self.reduces);
+        bm.put(
+            node,
+            BlockId::Shuffle { shuffle: self.id, map, reduce },
+            BlockData::F32(data),
+        );
+    }
+
+    /// Zero-copy variant: publish `buf[range]` as the slice for `reduce`
+    /// without materializing it (the map task slices one gradient vector
+    /// N ways — views avoid N copies of the full gradient; §Perf P2).
+    pub fn write_view(
+        &self,
+        bm: &BlockManager,
+        node: usize,
+        map: usize,
+        reduce: usize,
+        buf: &Arc<Vec<f32>>,
+        range: std::ops::Range<usize>,
+    ) {
+        debug_assert!(map < self.maps && reduce < self.reduces);
+        bm.put(
+            node,
+            BlockId::Shuffle { shuffle: self.id, map, reduce },
+            BlockData::F32View { buf: Arc::clone(buf), start: range.start, len: range.len() },
+        );
+    }
+
+    /// Reduce task `reduce` (on `reader_node`) fetches the slice written by
+    /// `map`. Remote fetches are metered by the block manager.
+    pub fn read(
+        &self,
+        bm: &BlockManager,
+        reader_node: usize,
+        map: usize,
+        reduce: usize,
+    ) -> Result<Arc<Vec<f32>>> {
+        bm.get(reader_node, &BlockId::Shuffle { shuffle: self.id, map, reduce })
+            .ok_or_else(|| {
+                anyhow!(
+                    "shuffle {} slice (map {map} → reduce {reduce}) missing",
+                    self.id
+                )
+            })?
+            .as_f32()
+    }
+
+    /// Fetch and sum all map slices for reducer `reduce` — the aggregation
+    /// step of Algorithm 2 (line 3). Summation order is fixed (map 0..M) so
+    /// results are bit-deterministic regardless of arrival order.
+    pub fn read_and_sum(
+        &self,
+        bm: &BlockManager,
+        reader_node: usize,
+        reduce: usize,
+    ) -> Result<Vec<f32>> {
+        let get = |map: usize| {
+            bm.get(reader_node, &BlockId::Shuffle { shuffle: self.id, map, reduce })
+                .ok_or_else(|| {
+                    anyhow!("shuffle {} slice (map {map} → reduce {reduce}) missing", self.id)
+                })
+        };
+        let first = get(0)?;
+        let mut acc: Vec<f32> = first.as_f32_slice()?.to_vec();
+        for map in 1..self.maps {
+            let block = get(map)?;
+            let slice = block.as_f32_slice()?;
+            anyhow::ensure!(
+                slice.len() == acc.len(),
+                "shuffle {} reduce {reduce}: slice length mismatch {} vs {}",
+                self.id,
+                slice.len(),
+                acc.len()
+            );
+            crate::tensor::add_assign(&mut acc, slice);
+        }
+        Ok(acc)
+    }
+
+    /// Drop this round's blocks everywhere.
+    pub fn cleanup(&self, bm: &BlockManager) {
+        let id = self.id;
+        bm.remove_matching(|b| matches!(b, BlockId::Shuffle { shuffle, .. } if *shuffle == id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_roundtrip_and_sum() {
+        let bm = BlockManager::new(2);
+        let sh = Shuffle::new(7, 3, 2);
+        for map in 0..3 {
+            for reduce in 0..2 {
+                let v = vec![(map * 10 + reduce) as f32; 4];
+                sh.write(&bm, map % 2, map, reduce, Arc::new(v));
+            }
+        }
+        // reduce 1 sums maps {0,1,2}: 1 + 11 + 21 = 33 per element.
+        let sum = sh.read_and_sum(&bm, 0, 1).unwrap();
+        assert_eq!(sum, vec![33.0; 4]);
+        sh.cleanup(&bm);
+        assert!(sh.read(&bm, 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn missing_slice_is_an_error() {
+        let bm = BlockManager::new(1);
+        let sh = Shuffle::new(1, 2, 1);
+        sh.write(&bm, 0, 0, 0, Arc::new(vec![1.0]));
+        assert!(sh.read_and_sum(&bm, 0, 0).is_err(), "map 1 never wrote");
+    }
+}

@@ -1,0 +1,132 @@
+//! KafkaSim — a bounded in-memory topic with a producer thread, standing
+//! in for the Kafka broker of the §5.3 pipeline (DESIGN.md §4). Consumers
+//! poll up to `max` records, FIFO, non-blocking.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A single-topic broker.
+pub struct KafkaSim<T> {
+    queue: Mutex<VecDeque<T>>,
+    capacity: usize,
+    not_full: Condvar,
+    closed: AtomicBool,
+    pub produced: AtomicU64,
+    pub consumed: AtomicU64,
+    pub dropped: AtomicU64,
+}
+
+impl<T: Send + 'static> KafkaSim<T> {
+    pub fn new(capacity: usize) -> Arc<KafkaSim<T>> {
+        Arc::new(KafkaSim {
+            queue: Mutex::new(VecDeque::with_capacity(capacity)),
+            capacity,
+            not_full: Condvar::new(),
+            closed: AtomicBool::new(false),
+            produced: AtomicU64::new(0),
+            consumed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Blocking produce (backpressure: waits while the topic is full).
+    pub fn produce(&self, record: T) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        while q.len() >= self.capacity {
+            if self.closed.load(Ordering::Relaxed) {
+                return false;
+            }
+            let (guard, timeout) = self
+                .not_full
+                .wait_timeout(q, std::time::Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+            if timeout.timed_out() && self.closed.load(Ordering::Relaxed) {
+                return false;
+            }
+        }
+        q.push_back(record);
+        self.produced.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Non-blocking produce: drops the record when full (at-most-once).
+    pub fn try_produce(&self, record: T) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        q.push_back(record);
+        self.produced.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Poll up to `max` records.
+    pub fn poll(&self, max: usize) -> Vec<T> {
+        let mut q = self.queue.lock().unwrap();
+        let take = max.min(q.len());
+        let out: Vec<T> = q.drain(..take).collect();
+        drop(q);
+        if take > 0 {
+            self.consumed.fetch_add(take as u64, Ordering::Relaxed);
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_poll() {
+        let k = KafkaSim::new(10);
+        for i in 0..5 {
+            assert!(k.produce(i));
+        }
+        assert_eq!(k.poll(3), vec![0, 1, 2]);
+        assert_eq!(k.poll(10), vec![3, 4]);
+        assert!(k.poll(1).is_empty());
+    }
+
+    #[test]
+    fn try_produce_drops_when_full() {
+        let k = KafkaSim::new(2);
+        assert!(k.try_produce(1));
+        assert!(k.try_produce(2));
+        assert!(!k.try_produce(3));
+        assert_eq!(k.dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn backpressure_unblocks_on_consume() {
+        let k = KafkaSim::new(1);
+        assert!(k.produce(0));
+        let k2 = Arc::clone(&k);
+        let h = std::thread::spawn(move || k2.produce(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(k.poll(1), vec![0]);
+        assert!(h.join().unwrap());
+        assert_eq!(k.poll(1), vec![1]);
+    }
+}

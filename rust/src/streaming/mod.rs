@@ -1,0 +1,10 @@
+//! Micro-batch streaming (the §5.3 GigaSpaces workflow): a KafkaSim
+//! source feeds a `StreamingContext` that turns each interval's records
+//! into an RDD and runs a user job on it — the Spark Streaming
+//! discretized-stream model on Sparklet.
+
+pub mod kafka_sim;
+pub mod streaming_context;
+
+pub use kafka_sim::KafkaSim;
+pub use streaming_context::{BatchStats, StreamingContext};

@@ -1,0 +1,265 @@
+//! Host-side tensors: the data interchange type between the coordinator
+//! (samples, weight shards, gradients) and the PJRT runtime (literals).
+//!
+//! Deliberately minimal — f32/i32 dense arrays with shape — because all
+//! heavy math happens inside the AOT-compiled HLO; the coordinator only
+//! slices, concatenates and accumulates flat vectors (Algorithm 2).
+
+use anyhow::{bail, ensure, Result};
+
+/// Element type of a [`Tensor`]. Matches the dtypes the AOT exporter emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Dense storage. `F32Shared` lets hot paths (weights broadcast to every
+/// batch/task) reference one allocation without cloning; cloning a shared
+/// tensor is an Arc bump.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    F32Shared(std::sync::Arc<Vec<f32>>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    pub fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::F32Shared(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Storage::F32(_) | Storage::F32Shared(_) => DType::F32,
+            Storage::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Storage,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Storage::F32(data) }
+    }
+
+    /// Zero-copy wrap of a shared f32 buffer (weights hot path).
+    pub fn from_f32_shared(shape: Vec<usize>, data: std::sync::Arc<Vec<f32>>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Storage::F32Shared(data) }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Storage::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Storage::F32(vec![v]) }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor { shape, data: Storage::F32(vec![0.0; n]) },
+            DType::I32 => Tensor { shape, data: Storage::I32(vec![0; n]) },
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Storage::F32(v) => Ok(v),
+            Storage::F32Shared(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Storage::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Storage::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            Storage::F32(v) => Ok(v),
+            Storage::F32Shared(v) => {
+                Ok(std::sync::Arc::try_unwrap(v).unwrap_or_else(|a| a.as_ref().clone()))
+            }
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn item_f32(&self) -> Result<f32> {
+        ensure!(self.numel() == 1, "item() on tensor with {} elements", self.numel());
+        Ok(self.as_f32()?[0])
+    }
+
+    /// Stack a batch of rank-R tensors into one rank-(R+1) tensor.
+    pub fn stack(items: &[Tensor]) -> Result<Tensor> {
+        ensure!(!items.is_empty(), "stack of zero tensors");
+        let shape0 = &items[0].shape;
+        let dtype = items[0].dtype();
+        for t in items {
+            ensure!(&t.shape == shape0 && t.dtype() == dtype, "stack shape/dtype mismatch");
+        }
+        let mut shape = vec![items.len()];
+        shape.extend_from_slice(shape0);
+        match dtype {
+            DType::F32 => {
+                let mut out = Vec::with_capacity(items.len() * items[0].numel());
+                for t in items {
+                    out.extend_from_slice(t.as_f32()?);
+                }
+                Ok(Tensor::from_f32(shape, out))
+            }
+            DType::I32 => {
+                let mut out = Vec::with_capacity(items.len() * items[0].numel());
+                for t in items {
+                    out.extend_from_slice(t.as_i32()?);
+                }
+                Ok(Tensor::from_i32(shape, out))
+            }
+        }
+    }
+}
+
+/// `acc += x`, elementwise, over f32 slices (gradient aggregation hot path).
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += *b;
+    }
+}
+
+/// `acc *= s`, elementwise.
+#[inline]
+pub fn scale(acc: &mut [f32], s: f32) {
+    for a in acc.iter_mut() {
+        *a *= s;
+    }
+}
+
+/// Evenly split `len` into `n` contiguous ranges (first `len % n` ranges get
+/// one extra element) — the gradient/weight partitioning of Algorithm 2.
+pub fn partition_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_f32() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::from_f32(vec![2], vec![3.0, 4.0]);
+        let s = Tensor::stack(&[a, b]).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn stack_rejects_mismatch() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::from_f32(vec![3], vec![3.0, 4.0, 5.0]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn partition_ranges_cover_exactly() {
+        for (len, n) in [(10, 3), (7, 7), (5, 8), (0, 2), (154257, 16)] {
+            let rs = partition_ranges(len, n);
+            assert_eq!(rs.len(), n);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for r in &rs {
+                assert_eq!(r.start, prev_end);
+                prev_end = r.end;
+                covered += r.len();
+            }
+            assert_eq!(covered, len);
+            assert_eq!(prev_end, len);
+            // Balance: sizes differ by at most 1.
+            let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn add_assign_scale() {
+        let mut acc = vec![1.0f32, 2.0];
+        add_assign(&mut acc, &[0.5, 0.5]);
+        scale(&mut acc, 2.0);
+        assert_eq!(acc, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Tiny `log` backend: stderr with elapsed-time stamps, level from
+//! `BIGDL_LOG` (error|warn|info|debug|trace; default info).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct Logger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, m: &log::Metadata) -> bool {
+        m.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        eprintln!(
+            "[{:>8.3}s {:5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("BIGDL_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now(), level });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}

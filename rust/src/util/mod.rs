@@ -1,0 +1,72 @@
+//! Small self-contained utilities (the offline vendored crate set has no
+//! serde_json / rand / clap, so JSON, PRNG and CLI parsing live in-repo).
+
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod timing;
+
+/// Read a little-endian f32 binary file (the `<model>.params.bin` format
+/// written by `python/compile/aot.py`).
+pub fn read_f32_file(path: &std::path::Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file.
+pub fn write_f32_file(path: &std::path::Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Human-friendly byte count.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("bigdl_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data = vec![1.0f32, -2.5, 3.25, f32::MIN_POSITIVE];
+        write_f32_file(&p, &data).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(17), "17B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+}

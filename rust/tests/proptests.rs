@@ -1,0 +1,258 @@
+//! Property-based tests (in-repo mini-framework — proptest is not in the
+//! offline vendor set): each property runs against many seeded random
+//! cases; failures print the seed for exact reproduction.
+
+use std::sync::Arc;
+
+use bigdl::bigdl::allreduce::{central_ps_reduce, ring_allreduce};
+use bigdl::bigdl::optim::{Adagrad, Adam, OptimMethod, Sgd};
+use bigdl::bigdl::ParameterManager;
+use bigdl::sparklet::{Broadcast, FailurePolicy, Shuffle, SparkletContext};
+use bigdl::tensor::partition_ranges;
+use bigdl::util::json::Value;
+use bigdl::util::prng::Rng;
+
+/// Run `prop` over `cases` seeded random cases.
+fn forall(name: &str, cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xFACADE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_partition_ranges_cover_and_balance() {
+    forall("partition_ranges", 200, |rng| {
+        let len = rng.gen_usize(1_000_000);
+        let n = 1 + rng.gen_usize(64);
+        let rs = partition_ranges(len, n);
+        assert_eq!(rs.len(), n);
+        let mut end = 0;
+        for r in &rs {
+            assert_eq!(r.start, end, "gap/overlap");
+            end = r.end;
+        }
+        assert_eq!(end, len, "must tile [0, len)");
+        let min = rs.iter().map(|r| r.len()).min().unwrap();
+        let max = rs.iter().map(|r| r.len()).max().unwrap();
+        assert!(max - min <= 1, "balance violated: {min}..{max}");
+    });
+}
+
+#[test]
+fn prop_ring_and_ps_equal_naive_sum() {
+    forall("allreduce_equivalence", 40, |rng| {
+        let n = 2 + rng.gen_usize(9);
+        let k = 1 + rng.gen_usize(300);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..k).map(|_| rng.gen_f32() * 2.0 - 1.0).collect())
+            .collect();
+        let mut naive = vec![0.0f32; k];
+        for g in &grads {
+            bigdl::tensor::add_assign(&mut naive, g);
+        }
+        let (ring, _) = ring_allreduce(&grads);
+        let (ps, _) = central_ps_reduce(&grads);
+        for i in 0..k {
+            assert!((ring[i] - naive[i]).abs() < 1e-3, "ring[{i}]");
+            assert_eq!(ps[i], naive[i], "ps[{i}]");
+        }
+    });
+}
+
+/// The core equivalence: a ParameterManager sync round over any sharding
+/// must equal the serial optimizer update on the whole vector.
+#[test]
+fn prop_alg2_sync_equals_serial_update() {
+    forall("alg2_vs_serial", 15, |rng| {
+        let nodes = 1 + rng.gen_usize(4);
+        let n_shards = 1 + rng.gen_usize(6);
+        let replicas = 1 + rng.gen_usize(4);
+        let k = 10 + rng.gen_usize(200);
+        let optim: Arc<dyn OptimMethod> = match rng.gen_usize(4) {
+            0 => Arc::new(Sgd::new(0.1)),
+            1 => Arc::new(Sgd { momentum: 0.9, weight_decay: 0.01, ..Sgd::new(0.05) }),
+            2 => Arc::new(Adagrad::new(0.2)),
+            _ => Arc::new(Adam::new(0.05)),
+        };
+        let init: Vec<f32> = (0..k).map(|_| rng.gen_f32() - 0.5).collect();
+        let grads: Vec<Vec<f32>> = (0..replicas)
+            .map(|_| (0..k).map(|_| rng.gen_f32() - 0.5).collect())
+            .collect();
+        let steps = 1 + rng.gen_usize(3);
+
+        // Distributed: PM + shuffle rounds.
+        let ctx = SparkletContext::local(nodes);
+        let pm = ParameterManager::init(&ctx, &init, n_shards, Arc::clone(&optim)).unwrap();
+        for _ in 0..steps {
+            let sh = Shuffle::new(ctx.next_shuffle_id(), replicas, n_shards);
+            let bm = ctx.blocks();
+            for (m, g) in grads.iter().enumerate() {
+                for (s, r) in pm.ranges().iter().enumerate() {
+                    sh.write(&bm, m % nodes, m, s, Arc::new(g[r.clone()].to_vec()));
+                }
+            }
+            pm.sync_round(&sh, replicas).unwrap();
+        }
+        let distributed = pm.current_weights().unwrap();
+
+        // Serial reference.
+        let mut w = init.clone();
+        let mut state: Vec<Vec<f32>> = (0..optim.state_bufs()).map(|_| vec![0.0; k]).collect();
+        let mut mean = vec![0.0f32; k];
+        for g in &grads {
+            bigdl::tensor::add_assign(&mut mean, g);
+        }
+        bigdl::tensor::scale(&mut mean, 1.0 / replicas as f32);
+        for step in 1..=steps {
+            optim.update(step, 1.0, &mut w, &mean, &mut state);
+        }
+
+        for i in 0..k {
+            assert!(
+                (distributed[i] - w[i]).abs() < 1e-5,
+                "{} shards={n_shards} idx {i}: {} vs {}",
+                optim.name(),
+                distributed[i],
+                w[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_rdd_transforms_match_vec_semantics() {
+    forall("rdd_vs_vec", 25, |rng| {
+        let nodes = 1 + rng.gen_usize(4);
+        let parts = 1 + rng.gen_usize(8);
+        let n = rng.gen_usize(500);
+        let data: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64 % 1000).collect();
+        let ctx = SparkletContext::local(nodes);
+        let rdd = ctx.parallelize(data.clone(), parts);
+        let got = rdd.map(|x| x * 3).filter(|x| x % 2 == 0).collect().unwrap();
+        let want: Vec<i64> = data.iter().map(|x| x * 3).filter(|x| x % 2 == 0).collect();
+        assert_eq!(got, want);
+        assert_eq!(rdd.count().unwrap(), n);
+        let got_sum = rdd.reduce(|a, b| a + b).unwrap().unwrap_or(0);
+        assert_eq!(got_sum, data.iter().sum::<i64>(), "sum");
+    });
+}
+
+#[test]
+fn prop_scheduler_runs_each_partition_exactly_once() {
+    forall("scheduler_exactly_once", 20, |rng| {
+        let nodes = 1 + rng.gen_usize(5);
+        let tasks = 1 + rng.gen_usize(24);
+        let fail_prob = [0.0, 0.1, 0.3][rng.gen_usize(3)];
+        let ctx = SparkletContext::local(nodes);
+        ctx.set_failure_policy(FailurePolicy {
+            task_fail_prob: fail_prob,
+            max_attempts: 25,
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let preferred: Vec<Option<usize>> = (0..tasks)
+            .map(|p| if p % 3 == 0 { None } else { Some(p % nodes) })
+            .collect();
+        let out = ctx
+            .run_job(&preferred, Arc::new(move |tc| Ok((tc.partition, tc.node))))
+            .unwrap();
+        // Results ordered by partition, exactly one per partition, on an
+        // alive node.
+        assert_eq!(out.len(), tasks);
+        for (i, (part, node)) in out.iter().enumerate() {
+            assert_eq!(*part, i);
+            assert!(*node < nodes);
+        }
+    });
+}
+
+#[test]
+fn prop_broadcast_reassembles_any_split() {
+    forall("broadcast_concat", 30, |rng| {
+        let nodes = 1 + rng.gen_usize(4);
+        let parts = 1 + rng.gen_usize(8);
+        let k = rng.gen_usize(500);
+        let data: Vec<f32> = (0..k).map(|_| rng.gen_f32()).collect();
+        let ctx = SparkletContext::local(nodes);
+        let bm = ctx.blocks();
+        let bc = Broadcast::new(ctx.next_broadcast_id(), parts);
+        for (i, r) in partition_ranges(k, parts).iter().enumerate() {
+            bc.publish(&bm, i % nodes, i, Arc::new(data[r.clone()].to_vec()));
+        }
+        let got = bc.fetch_all_concat(&bm, rng.gen_usize(nodes)).unwrap();
+        assert_eq!(got, data);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 2 { rng.gen_usize(4) } else { rng.gen_usize(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.gen_bool(0.5)),
+            2 => Value::Num((rng.next_u64() % 100_000) as f64 / 8.0),
+            3 => {
+                let n = rng.gen_usize(8);
+                Value::Str((0..n).map(|_| {
+                    // Printable ASCII + escapes + some unicode.
+                    ['a', 'Z', '"', '\\', '\n', 'é', '表', ' '][rng.gen_usize(8)]
+                }).collect())
+            }
+            4 => Value::Arr((0..rng.gen_usize(5)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.gen_usize(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json_roundtrip", 120, |rng| {
+        let v = gen_value(rng, 0);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap_or_else(|e| panic!("reparse {text:?}: {e}"));
+        assert_eq!(v, back, "roundtrip of {text}");
+    });
+}
+
+#[test]
+fn prop_draw_batch_indices_in_bounds() {
+    forall("draw_batch", 100, |rng| {
+        let plen = 1 + rng.gen_usize(1000);
+        let batch = 1 + rng.gen_usize(256);
+        let idx = bigdl::bigdl::sample::draw_batch_indices(rng, plen, batch);
+        assert_eq!(idx.len(), batch);
+        assert!(idx.iter().all(|&i| i < plen));
+        if plen >= batch {
+            let mut d = idx.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), batch, "sampling without replacement when possible");
+        }
+    });
+}
+
+#[test]
+fn prop_kafka_conservation() {
+    forall("kafka_conservation", 25, |rng| {
+        use std::sync::atomic::Ordering;
+        let cap = 1 + rng.gen_usize(64);
+        let k = bigdl::streaming::KafkaSim::new(cap);
+        let mut consumed = 0u64;
+        let total = rng.gen_usize(300);
+        for i in 0..total {
+            k.try_produce(i as u64);
+            if rng.gen_bool(0.4) {
+                consumed += k.poll(rng.gen_usize(8) + 1).len() as u64;
+            }
+        }
+        consumed += k.poll(usize::MAX >> 1).len() as u64;
+        let produced = k.produced.load(Ordering::Relaxed);
+        let dropped = k.dropped.load(Ordering::Relaxed);
+        assert_eq!(produced + dropped, total as u64, "accounting");
+        assert_eq!(consumed, produced, "everything produced is eventually consumed");
+    });
+}

@@ -1,0 +1,119 @@
+//! Integration: AOT artifacts (python) → PJRT runtime (rust).
+//!
+//! Requires `make artifacts` to have run; the tests announce a skip (rather
+//! than fail) if artifacts are absent so `cargo test` works pre-build.
+
+use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
+use bigdl::tensor::Tensor;
+
+fn runtime() -> Option<RuntimeHandle> {
+    let dir = default_artifacts_dir();
+    if !dir.join("ncf.meta.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(RuntimeHandle::load(&dir).expect("loading artifacts"))
+}
+
+fn ncf_batch(rt: &RuntimeHandle) -> (Vec<Tensor>, usize) {
+    let meta = rt.meta("ncf").unwrap();
+    let em = meta.entry("fwd_bwd").unwrap();
+    let b = em.batch_size;
+    let params = rt.initial_params("ncf").unwrap();
+    let users: Vec<i32> = (0..b as i32).collect();
+    let items: Vec<i32> = (0..b as i32).map(|i| i % 64).collect();
+    let labels: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+    (
+        vec![
+            Tensor::from_f32(vec![params.len()], params),
+            Tensor::from_i32(vec![b], users),
+            Tensor::from_i32(vec![b], items),
+            Tensor::from_f32(vec![b], labels),
+        ],
+        meta.param_count,
+    )
+}
+
+#[test]
+fn ncf_fwd_bwd_executes() {
+    let Some(rt) = runtime() else { return };
+    let (inputs, param_count) = ncf_batch(&rt);
+    let out = rt.execute("ncf", "fwd_bwd", inputs).expect("execute fwd_bwd");
+    assert_eq!(out.len(), 2, "fwd_bwd returns (loss, grads)");
+    let loss = out[0].item_f32().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // Untrained BCE on balanced labels ≈ ln 2.
+    assert!((loss - 0.693).abs() < 0.2, "initial BCE loss should be ~ln2, got {loss}");
+    let grads = out[1].as_f32().unwrap();
+    assert_eq!(grads.len(), param_count);
+    let nonzero = grads.iter().filter(|g| **g != 0.0).count();
+    assert!(nonzero > 100, "gradients suspiciously sparse: {nonzero} nonzero");
+    assert!(grads.iter().all(|g| g.is_finite()));
+    rt.shutdown();
+}
+
+#[test]
+fn ncf_fwd_bwd_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let (inputs, _) = ncf_batch(&rt);
+    let a = rt.execute("ncf", "fwd_bwd", inputs.clone()).unwrap();
+    let b = rt.execute("ncf", "fwd_bwd", inputs).unwrap();
+    assert_eq!(a[0].item_f32().unwrap(), b[0].item_f32().unwrap());
+    assert_eq!(a[1].as_f32().unwrap(), b[1].as_f32().unwrap());
+    rt.shutdown();
+}
+
+#[test]
+fn ncf_predict_outputs_probabilities() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.meta("ncf").unwrap();
+    let em = meta.entry("predict").unwrap();
+    let b = em.batch_size;
+    let params = rt.initial_params("ncf").unwrap();
+    let users: Vec<i32> = (0..b as i32).map(|i| i % 512).collect();
+    let items: Vec<i32> = (0..b as i32).map(|i| i % 256).collect();
+    let out = rt
+        .execute(
+            "ncf",
+            "predict",
+            vec![
+                Tensor::from_f32(vec![params.len()], params),
+                Tensor::from_i32(vec![b], users),
+                Tensor::from_i32(vec![b], items),
+            ],
+        )
+        .expect("execute predict");
+    assert_eq!(out.len(), 1);
+    let scores = out[0].as_f32().unwrap();
+    assert_eq!(scores.len(), b);
+    assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)), "scores outside [0,1]");
+    rt.shutdown();
+}
+
+#[test]
+fn execute_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt
+        .execute("ncf", "fwd_bwd", vec![Tensor::from_f32(vec![3], vec![0.0; 3])])
+        .unwrap_err();
+    assert!(err.to_string().contains("inputs"), "unexpected error: {err}");
+    assert!(rt.execute("nope", "fwd_bwd", vec![]).is_err());
+    rt.shutdown();
+}
+
+#[test]
+fn handle_is_cloneable_across_threads() {
+    let Some(rt) = runtime() else { return };
+    let (inputs, _) = ncf_batch(&rt);
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let rt2 = rt.clone();
+        let inp = inputs.clone();
+        handles.push(std::thread::spawn(move || {
+            rt2.execute("ncf", "fwd_bwd", inp).unwrap()[0].item_f32().unwrap()
+        }));
+    }
+    let losses: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(losses.windows(2).all(|w| w[0] == w[1]));
+    rt.shutdown();
+}

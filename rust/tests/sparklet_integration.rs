@@ -1,0 +1,192 @@
+//! Integration tests over the Sparklet substrate: RDD semantics, shuffle/
+//! broadcast through the block store, failure injection and recovery.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bigdl::sparklet::{
+    ClusterSpec, FailurePolicy, SchedulePolicy, SparkletContext,
+};
+
+#[test]
+fn parallelize_map_filter_collect() {
+    let ctx = SparkletContext::local(4);
+    let rdd = ctx.parallelize((0..100).collect::<Vec<i64>>(), 8);
+    assert_eq!(rdd.num_partitions(), 8);
+    let out = rdd.map(|x| x * 2).filter(|x| x % 3 == 0).collect().unwrap();
+    let expect: Vec<i64> = (0..100).map(|x| x * 2).filter(|x| x % 3 == 0).collect();
+    assert_eq!(out, expect);
+    assert_eq!(rdd.count().unwrap(), 100);
+}
+
+#[test]
+fn reduce_and_take() {
+    let ctx = SparkletContext::local(3);
+    let rdd = ctx.parallelize((1..=10).collect::<Vec<i64>>(), 3);
+    assert_eq!(rdd.reduce(|a, b| a + b).unwrap(), Some(55));
+    assert_eq!(rdd.take(3).unwrap(), vec![1, 2, 3]);
+    assert_eq!(rdd.first().unwrap(), 1);
+}
+
+#[test]
+fn zip_is_copartitioned_and_local() {
+    let ctx = SparkletContext::local(4);
+    let a = ctx.parallelize((0..64).collect::<Vec<i64>>(), 4);
+    let b = a.map(|x| x * x);
+    let zipped = a.zip(&b);
+    let pairs = zipped.collect().unwrap();
+    assert_eq!(pairs.len(), 64);
+    assert!(pairs.iter().all(|(x, y)| y == &(x * x)));
+    // Co-located: zip tasks ran without any remote block reads.
+    let stats = ctx.blocks().stats.snapshot();
+    assert_eq!(stats.remote_reads, 0, "zip must not move data");
+}
+
+#[test]
+fn union_concatenates_partitions() {
+    let ctx = SparkletContext::local(2);
+    let a = ctx.parallelize(vec![1, 2], 1);
+    let b = ctx.parallelize(vec![3, 4, 5], 2);
+    let u = a.union(&b);
+    assert_eq!(u.num_partitions(), 3);
+    assert_eq!(u.collect().unwrap(), vec![1, 2, 3, 4, 5]);
+}
+
+#[test]
+fn cached_rdd_computes_once_per_partition() {
+    let ctx = SparkletContext::local(2);
+    static COMPUTES: AtomicUsize = AtomicUsize::new(0);
+    let rdd = ctx
+        .generate(4, 10, 7, |p, rng| {
+            COMPUTES.fetch_add(1, Ordering::Relaxed);
+            (p as u64 * 1000 + rng.gen_range(10)) as i64
+        })
+        .cache();
+    let c1 = rdd.collect().unwrap();
+    let after_first = COMPUTES.load(Ordering::Relaxed);
+    assert_eq!(after_first, 40, "4 partitions x 10 items");
+    let c2 = rdd.collect().unwrap();
+    assert_eq!(COMPUTES.load(Ordering::Relaxed), 40, "second pass served from cache");
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn generator_rdd_is_deterministic() {
+    let ctx = SparkletContext::local(2);
+    let a = ctx.generate(3, 5, 99, |_p, rng| rng.next_u64());
+    let c1 = a.collect().unwrap();
+    let c2 = a.collect().unwrap();
+    assert_eq!(c1, c2, "same seed + partition → identical data (lineage determinism)");
+}
+
+#[test]
+fn injected_task_failures_are_retried_transparently() {
+    let ctx = SparkletContext::local(4);
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.2,
+        max_attempts: 10, // keep abort probability negligible (0.2^10)
+        seed: 1234,
+        ..Default::default()
+    });
+    let rdd = ctx.parallelize((0..1000).collect::<Vec<i64>>(), 16);
+    // Run several jobs; with p=0.3 and 16 tasks, many injected failures.
+    for _ in 0..5 {
+        assert_eq!(rdd.count().unwrap(), 1000);
+    }
+    let sched = ctx.scheduler().stats.snapshot();
+    assert!(sched.task_retries > 0, "expected injected failures to trigger retries");
+    assert!(sched.tasks_launched >= 80 + sched.task_retries);
+}
+
+#[test]
+fn node_death_reroutes_and_recomputes_cache() {
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 4, slots_per_node: 1 });
+    let rdd = ctx.parallelize((0..80).collect::<Vec<i64>>(), 8).cache();
+    assert_eq!(rdd.count().unwrap(), 80);
+
+    // Kill node 2: its cached partitions are lost; blocks dropped.
+    ctx.cluster().kill_node(2);
+    ctx.blocks().kill_node(2);
+    let sum: i64 = rdd.reduce(|a, b| a + b).unwrap().unwrap();
+    assert_eq!(sum, (0..80).sum::<i64>(), "lineage recompute must be exact");
+
+    // Revive: node can take work again (fresh cache).
+    ctx.cluster().revive_node(2);
+    ctx.blocks().revive_node(2);
+    assert_eq!(rdd.count().unwrap(), 80);
+}
+
+#[test]
+fn gang_mode_restarts_whole_job() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_schedule_policy(SchedulePolicy { gang: true, ..Default::default() });
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.25,
+        seed: 5,
+        max_job_restarts: 50,
+        ..Default::default()
+    });
+    let rdd = ctx.parallelize((0..40).collect::<Vec<i64>>(), 8);
+    assert_eq!(rdd.count().unwrap(), 40);
+    let sched = ctx.scheduler().stats.snapshot();
+    assert!(
+        sched.gang_restarts > 0,
+        "gang mode should have restarted at least once under p=0.25"
+    );
+}
+
+#[test]
+fn job_aborts_when_task_exhausts_attempts() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 1.0, // every attempt fails
+        max_attempts: 3,
+        seed: 1,
+        ..Default::default()
+    });
+    let rdd = ctx.parallelize(vec![1, 2, 3], 1);
+    let err = rdd.count().unwrap_err();
+    assert!(err.to_string().contains("failed 3 times"), "got: {err}");
+}
+
+#[test]
+fn drizzle_preassignment_runs_jobs() {
+    let ctx = SparkletContext::local(4);
+    let preferred = ctx.default_preferred(8);
+    let policy = SchedulePolicy::default();
+    let plan = ctx
+        .scheduler()
+        .plan(&ctx.cluster(), &preferred, &policy)
+        .unwrap();
+    assert_eq!(plan.nodes.len(), 8);
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h = Arc::clone(&hits);
+    let out = ctx
+        .run_job_preassigned(
+            &preferred,
+            &plan,
+            Arc::new(move |tc| {
+                h.fetch_add(1, Ordering::Relaxed);
+                Ok(tc.partition)
+            }),
+        )
+        .unwrap();
+    assert_eq!(out, (0..8).collect::<Vec<_>>());
+    assert_eq!(hits.load(Ordering::Relaxed), 8);
+}
+
+#[test]
+fn task_rng_varies_per_job_but_is_stable_in_shape() {
+    // The lineage-determinism invariant: rng depends on (job, partition),
+    // not on the attempt or the node the task lands on.
+    let ctx = SparkletContext::local(2);
+    let rdd = ctx.parallelize((0..20).collect::<Vec<i64>>(), 4);
+    let draws1 = rdd
+        .run_partition_job(|tc, _| Ok(tc.rng().next_u64()))
+        .unwrap();
+    let draws2 = rdd
+        .run_partition_job(|tc, _| Ok(tc.rng().next_u64()))
+        .unwrap();
+    assert_eq!(draws1.len(), 4);
+    assert_ne!(draws1, draws2, "rng must vary per job (per iteration)");
+}
