@@ -1,6 +1,7 @@
 //! Shared bench harness helpers (criterion is unavailable offline; these
 //! benches are `harness = false` binaries that print the paper's
 //! tables/series in a fixed format captured into bench_output.txt).
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
 
 use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
 
@@ -23,8 +24,9 @@ pub fn runtime_or_skip() -> Option<RuntimeHandle> {
     Some(RuntimeHandle::load(&dir).expect("loading artifacts"))
 }
 
-/// Measure the Sparklet driver's per-task dispatch cost (used to calibrate
-/// the Fig 8 model with a *measured* number).
+/// Measure the Sparklet driver's per-task dispatch cost with PER-ITERATION
+/// scheduling (place + enqueue every task, every job) — used to calibrate
+/// the Fig 8 model with a *measured* number.
 pub fn measure_dispatch_cost(nodes: usize, tasks: usize, reps: usize) -> f64 {
     use std::sync::Arc;
     let ctx = bigdl::sparklet::SparkletContext::local(nodes);
@@ -34,6 +36,29 @@ pub fn measure_dispatch_cost(nodes: usize, tasks: usize, reps: usize) -> f64 {
     let before = ctx.scheduler().stats.snapshot();
     for _ in 0..reps {
         ctx.run_job(&preferred, Arc::new(|_tc| Ok(()))).unwrap();
+    }
+    let after = ctx.scheduler().stats.snapshot();
+    let launched = (after.tasks_launched - before.tasks_launched) as f64;
+    (after.dispatch_ns - before.dispatch_ns) as f64 / launched / 1e9
+}
+
+/// Measure the per-task dispatch cost with Drizzle GROUP PRE-ASSIGNMENT:
+/// placements planned once, every job dispatched as bare batched enqueues
+/// (one channel send per node) through the JobRunner.
+pub fn measure_dispatch_cost_planned(nodes: usize, tasks: usize, reps: usize) -> f64 {
+    use bigdl::sparklet::TaskContext;
+    use std::sync::Arc;
+    let ctx = bigdl::sparklet::SparkletContext::local(nodes);
+    let runner = ctx.runner();
+    let preferred: Vec<Option<usize>> = (0..tasks).map(|p| Some(p % nodes)).collect();
+    let plan = runner.plan_group(&preferred).unwrap();
+    let noop: Arc<dyn Fn(&TaskContext) -> anyhow::Result<()> + Send + Sync> =
+        Arc::new(|_tc| Ok(()));
+    // Warm-up.
+    runner.run_planned(&plan, Arc::clone(&noop)).unwrap();
+    let before = ctx.scheduler().stats.snapshot();
+    for _ in 0..reps {
+        runner.run_planned(&plan, Arc::clone(&noop)).unwrap();
     }
     let after = ctx.scheduler().stats.snapshot();
     let launched = (after.tasks_launched - before.tasks_launched) as f64;

@@ -24,7 +24,7 @@ use super::optim::OptimMethod;
 use super::param_mgr::ParameterManager;
 use super::sample::{assemble_train_inputs, draw_batch_indices, Sample};
 use super::trigger::{TrainState, Trigger};
-use crate::sparklet::{Rdd, Shuffle, SparkletContext};
+use crate::sparklet::{GroupPlan, Rdd, Shuffle, SparkletContext};
 use crate::tensor::Tensor;
 
 /// Training-run configuration.
@@ -74,6 +74,10 @@ pub struct DistributedOptimizer {
     /// (trigger, hook, scores) — run when the trigger fires.
     validation: Option<(Trigger, ValidationFn, Vec<(usize, f64)>)>,
     dataset_len: usize,
+    /// Drizzle group plans (forward-backward width, sync width), replanned
+    /// once per `cfg.group_size` iterations; every job inside a group is
+    /// dispatched as bare batched enqueues.
+    plans: Option<(GroupPlan, GroupPlan)>,
 }
 
 impl DistributedOptimizer {
@@ -108,6 +112,7 @@ impl DistributedOptimizer {
             history: Vec::new(),
             validation: None,
             dataset_len: counts.iter().sum(),
+            plans: None,
         })
     }
 
@@ -181,6 +186,20 @@ impl DistributedOptimizer {
         let sched0 = self.ctx.scheduler().stats.snapshot();
         let t_iter = Instant::now();
 
+        // Drizzle group scheduling (§4.4 / Fig 8): plan placements for the
+        // whole group once; every iteration inside the group dispatches
+        // both jobs as bare batched enqueues.
+        if self.cfg.group_size > 1 {
+            if self.plans.is_none() || iter_idx % self.cfg.group_size == 0 {
+                let runner = self.ctx.runner();
+                let fwd = runner.plan_group(self.dataset.preferred_nodes())?;
+                let sync = runner.plan_group(&self.ctx.default_preferred(n))?;
+                self.plans = Some((fwd, sync));
+            }
+        } else {
+            self.plans = None;
+        }
+
         // ---- job 1: model forward-backward --------------------------------
         let bcast = self.pm.weights_broadcast();
         let shuffle = Shuffle::new(self.ctx.next_shuffle_id(), m, n);
@@ -190,7 +209,7 @@ impl DistributedOptimizer {
         let batch = entry.batch_size;
 
         let t_job1 = Instant::now();
-        let task_results = self.dataset.run_partition_job(move |tc, samples| {
+        let fwd_bwd_task = move |tc: &crate::sparklet::TaskContext, samples: &[Sample]| {
             let bm = tc.blocks();
             // (line 4) read the latest weights.
             let t0 = Instant::now();
@@ -216,7 +235,11 @@ impl DistributedOptimizer {
                 shuffle.write_view(&bm, tc.node, tc.partition, slot, &grads, r.clone());
             }
             Ok((loss, fetch_s, compute_s))
-        })?;
+        };
+        let task_results = match &self.plans {
+            Some((fwd, _)) => self.dataset.run_partition_job_planned(fwd, fwd_bwd_task)?,
+            None => self.dataset.run_partition_job(fwd_bwd_task)?,
+        };
         let fwdbwd_s = t_job1.elapsed().as_secs_f64();
 
         let loss = task_results.iter().map(|r| r.0).sum::<f32>() / m as f32;
@@ -225,7 +248,10 @@ impl DistributedOptimizer {
 
         // ---- job 2: parameter synchronization ------------------------------
         let t_sync = Instant::now();
-        self.pm.sync_round(&shuffle, m)?;
+        match &self.plans {
+            Some((_, sync)) => self.pm.sync_round_planned(&shuffle, m, sync)?,
+            None => self.pm.sync_round(&shuffle, m)?,
+        };
         let sync_s = t_sync.elapsed().as_secs_f64();
 
         let sched1 = self.ctx.scheduler().stats.snapshot();

@@ -23,7 +23,9 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::optim::OptimMethod;
 use super::schedule::LrSchedule;
-use crate::sparklet::{BlockData, BlockId, Broadcast, Shuffle, SparkletContext};
+use crate::sparklet::{
+    BlockData, BlockId, Broadcast, GroupPlan, Shuffle, SparkletContext, TaskContext,
+};
 use crate::tensor::partition_ranges;
 
 /// Gradient post-processing applied by the sync tasks.
@@ -176,6 +178,27 @@ impl ParameterManager {
     /// `n`, publish the updated shard (task-side broadcast). Returns the
     /// new broadcast round.
     pub fn sync_round(&self, shuffle: &Shuffle, n_replicas: usize) -> Result<Broadcast> {
+        self.sync_round_with(shuffle, n_replicas, None)
+    }
+
+    /// Like [`ParameterManager::sync_round`] but dispatched against a
+    /// Drizzle [`GroupPlan`] (placements planned once for a whole group of
+    /// training iterations; each sync job is a bare batched enqueue).
+    pub fn sync_round_planned(
+        &self,
+        shuffle: &Shuffle,
+        n_replicas: usize,
+        plan: &GroupPlan,
+    ) -> Result<Broadcast> {
+        self.sync_round_with(shuffle, n_replicas, Some(plan))
+    }
+
+    fn sync_round_with(
+        &self,
+        shuffle: &Shuffle,
+        n_replicas: usize,
+        plan: Option<&GroupPlan>,
+    ) -> Result<Broadcast> {
         ensure!(shuffle.reduces == self.n_shards, "shuffle/shard mismatch");
         ensure!(shuffle.maps == n_replicas, "shuffle writers != replicas");
         let policy = self.grad_policy.read().unwrap().clone();
@@ -192,6 +215,11 @@ impl ParameterManager {
         let state_bufs = self.optim.state_bufs();
         let instance = self.instance;
         let preferred = self.ctx.default_preferred(self.n_shards);
+        let runner = self.ctx.runner();
+        // Dispatch through the JobRunner: pre-assigned (bare batched
+        // enqueues) when the caller planned a group, placed per-task
+        // otherwise.
+        let plan = plan.filter(|p| p.parts() == self.n_shards);
 
         // Optional phase A (global-L2 clipping): aggregate + clamp + norm.
         // The aggregated slice is parked in the block store so phase B does
@@ -199,8 +227,7 @@ impl ParameterManager {
         let agg_key = |shard: usize| BlockId::Named(format!("agg/{new_round}/{shard}"));
         let clip_scale: f32 = if let Some(max_norm) = policy.clip_l2 {
             let clip_const = policy.clip_const;
-            let sqnorms = self.ctx.run_job(
-                &preferred,
+            let norm_task: Arc<dyn Fn(&TaskContext) -> Result<f64> + Send + Sync> =
                 Arc::new(move |tc| {
                     let bm = tc.blocks();
                     let n = tc.partition;
@@ -216,8 +243,11 @@ impl ParameterManager {
                         BlockData::F32(Arc::new(grad)),
                     );
                     Ok(sq)
-                }),
-            )?;
+                });
+            let sqnorms = match plan {
+                Some(p) => runner.run_planned(p, norm_task)?,
+                None => runner.run(&preferred, norm_task)?,
+            };
             let norm = sqnorms.iter().sum::<f64>().sqrt() as f32;
             if norm > max_norm {
                 max_norm / norm
@@ -230,8 +260,7 @@ impl ParameterManager {
 
         let two_phase = policy.clip_l2.is_some();
         let clip_const = policy.clip_const;
-        self.ctx.run_job(
-            &preferred,
+        let update_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
             Arc::new(move |tc| {
                 let bm = tc.blocks();
                 let n = tc.partition;
@@ -270,8 +299,11 @@ impl ParameterManager {
                 // (5): task-side broadcast of the updated shard.
                 new_bcast.publish(&bm, tc.node, n, Arc::new(weights));
                 Ok(())
-            }),
-        )?;
+            });
+        match plan {
+            Some(p) => runner.run_planned(p, update_task)?,
+            None => runner.run(&preferred, update_task)?,
+        };
 
         self.round.store(new_round, Ordering::SeqCst);
         // Retire consumed blocks (shuffle slices, staged aggregates,

@@ -140,6 +140,9 @@ pub fn train(opts: &Opts) -> Result<()> {
             iterations: s.iterations,
             n_shards: s.shards,
             log_every: 10.min(s.iterations / 5).max(1),
+            // Drizzle group pre-assignment (--group N): plan placements
+            // once per N iterations, dispatch as bare batched enqueues.
+            group_size: opts.get_usize("group", 1)?,
             checkpoint_dir: opts.get("checkpoint-dir").map(Into::into),
             checkpoint_trigger: match opts.get_usize("checkpoint-every", 0)? {
                 0 => bigdl::bigdl::Trigger::Never,

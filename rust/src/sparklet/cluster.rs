@@ -1,14 +1,25 @@
 //! Simulated cluster: one driver (the calling thread) + N worker "nodes",
-//! each an executor with a fixed number of task slots (threads), exactly
-//! the Spark topology of paper Figure 2.
+//! each a **persistent executor pool** with a fixed number of task slots
+//! (threads), exactly the Spark topology of paper Figure 2.
 //!
-//! Nodes consume type-erased task closures from a per-node queue. Killing
-//! a node marks it dead: queued and future tasks on it fail fast and the
-//! scheduler re-runs them elsewhere (paper §3.4 fine-grained recovery).
+//! Executors consume *batches* of type-erased task closures from a per-node
+//! queue — a Drizzle-style group dispatch enqueues one batch per node
+//! instead of one channel send per task. Completions flow back through a
+//! single reusable [`CompletionHub`] shared by every job (no per-job
+//! channel plumbing). Killing a node marks it dead: queued and future tasks
+//! on it fail fast and the scheduler re-runs them elsewhere (paper §3.4
+//! fine-grained recovery).
+//!
+//! The pool also exposes a slot-availability signal
+//! ([`Cluster::wait_for_slot`]) so delay scheduling can block on a condvar
+//! instead of spinning.
 
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -31,11 +42,89 @@ impl Default for ClusterSpec {
 /// A task closure, given the node id it landed on.
 pub(crate) type TaskFn = Box<dyn FnOnce(usize) + Send>;
 
+/// One finished task, delivered through the [`CompletionHub`]. The payload
+/// is the type-erased `Result<R>` of the task function; the scheduler
+/// downcasts it back.
+pub struct Completion {
+    pub job: u64,
+    pub partition: usize,
+    pub generation: usize,
+    pub attempt: usize,
+    pub payload: Box<dyn Any + Send>,
+}
+
+/// One job's completion inbox. Dispatched tasks hold their own `Arc` to
+/// it and push directly — a delivery touches only this job's lock and
+/// wakes only this job's driver. No cluster-wide lock sits on the
+/// completion hot path.
+pub struct JobInbox {
+    queue: Mutex<VecDeque<Completion>>,
+    ready: Condvar,
+}
+
+impl JobInbox {
+    fn new() -> JobInbox {
+        JobInbox { queue: Mutex::new(VecDeque::new()), ready: Condvar::new() }
+    }
+
+    /// Deliver one completion (called from executor threads).
+    pub fn push(&self, c: Completion) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back(c);
+        self.ready.notify_one();
+    }
+
+    /// Block until a completion arrives.
+    pub fn wait(&self) -> Completion {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(c) = q.pop_front() {
+                return c;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+}
+
+/// The cluster-wide registry of live job inboxes — the reusable completion
+/// queue that replaces per-job channel plumbing. `register` allocates the
+/// job's [`JobInbox`]; the scheduler hands each dispatched task an `Arc`
+/// to it, so straggler completions arriving after `unregister` land in
+/// the orphaned inbox and vanish when the last task drops it.
+pub struct CompletionHub {
+    inboxes: Mutex<HashMap<u64, Arc<JobInbox>>>,
+}
+
+impl CompletionHub {
+    fn new() -> CompletionHub {
+        CompletionHub { inboxes: Mutex::new(HashMap::new()) }
+    }
+
+    /// Open an inbox for `job`. Must be called before any of its tasks run.
+    pub fn register(&self, job: u64) -> Arc<JobInbox> {
+        let inbox = Arc::new(JobInbox::new());
+        self.inboxes.lock().unwrap().insert(job, Arc::clone(&inbox));
+        inbox
+    }
+
+    /// Drop the registry's handle on `job`'s inbox.
+    pub fn unregister(&self, job: u64) {
+        self.inboxes.lock().unwrap().remove(&job);
+    }
+
+    /// Look up a live job's inbox (None once unregistered).
+    pub fn get(&self, job: u64) -> Option<Arc<JobInbox>> {
+        self.inboxes.lock().unwrap().get(&job).cloned()
+    }
+}
+
 struct Node {
-    tx: mpsc::Sender<TaskFn>,
+    tx: mpsc::Sender<Vec<TaskFn>>,
     alive: Arc<AtomicBool>,
     /// Tasks queued or running on this node (placement load signal).
     inflight: Arc<AtomicUsize>,
+    /// Notified every time a task finishes (slot-availability signal).
+    slot_signal: Arc<(Mutex<()>, Condvar)>,
 }
 
 /// The running cluster.
@@ -43,6 +132,7 @@ pub struct Cluster {
     spec: ClusterSpec,
     nodes: Vec<Node>,
     threads: Mutex<Vec<JoinHandle<()>>>,
+    completions: Arc<CompletionHub>,
 }
 
 impl Cluster {
@@ -51,25 +141,32 @@ impl Cluster {
         let mut nodes = Vec::with_capacity(spec.nodes);
         let mut threads = Vec::new();
         for node_id in 0..spec.nodes {
-            let (tx, rx) = mpsc::channel::<TaskFn>();
+            let (tx, rx) = mpsc::channel::<Vec<TaskFn>>();
             let rx = Arc::new(Mutex::new(rx));
             let alive = Arc::new(AtomicBool::new(true));
             let inflight = Arc::new(AtomicUsize::new(0));
+            let slot_signal = Arc::new((Mutex::new(()), Condvar::new()));
             for slot in 0..spec.slots_per_node {
                 let rx = Arc::clone(&rx);
                 let inflight = Arc::clone(&inflight);
+                let slot_signal = Arc::clone(&slot_signal);
                 let handle = std::thread::Builder::new()
                     .name(format!("node{node_id}-slot{slot}"))
                     .spawn(move || loop {
-                        // Take one task; exit when the channel closes.
-                        let task = {
+                        // Take one batch; exit when the channel closes.
+                        let batch = {
                             let guard = rx.lock().unwrap();
                             guard.recv()
                         };
-                        match task {
-                            Ok(f) => {
-                                f(node_id);
-                                inflight.fetch_sub(1, Ordering::Relaxed);
+                        match batch {
+                            Ok(tasks) => {
+                                for f in tasks {
+                                    f(node_id);
+                                    inflight.fetch_sub(1, Ordering::Relaxed);
+                                    let (lock, cv) = &*slot_signal;
+                                    let _g = lock.lock().unwrap();
+                                    cv.notify_all();
+                                }
                             }
                             Err(_) => break,
                         }
@@ -77,9 +174,14 @@ impl Cluster {
                     .expect("spawning executor thread");
                 threads.push(handle);
             }
-            nodes.push(Node { tx, alive, inflight });
+            nodes.push(Node { tx, alive, inflight, slot_signal });
         }
-        Arc::new(Cluster { spec, nodes, threads: Mutex::new(threads) })
+        Arc::new(Cluster {
+            spec,
+            nodes,
+            threads: Mutex::new(threads),
+            completions: Arc::new(CompletionHub::new()),
+        })
     }
 
     pub fn spec(&self) -> ClusterSpec {
@@ -88,6 +190,11 @@ impl Cluster {
 
     pub fn nodes(&self) -> usize {
         self.spec.nodes
+    }
+
+    /// The cluster-wide completion queue shared by all jobs.
+    pub fn completions(&self) -> Arc<CompletionHub> {
+        Arc::clone(&self.completions)
     }
 
     pub fn node_alive(&self, node: usize) -> bool {
@@ -103,6 +210,41 @@ impl Cluster {
         self.nodes[node].inflight.load(Ordering::Relaxed)
     }
 
+    /// Block until `node` has a free task slot, up to `timeout`. Returns
+    /// `true` if a slot is (or became) free — the executor pool's
+    /// slot-availability signal that delay scheduling waits on (no
+    /// busy-wait).
+    pub fn wait_for_slot(&self, node: usize, timeout: Duration) -> bool {
+        let slots = self.spec.slots_per_node;
+        if self.inflight(node) < slots {
+            return true;
+        }
+        if timeout.is_zero() {
+            return false;
+        }
+        let deadline = Instant::now() + timeout;
+        let (lock, cv) = &*self.nodes[node].slot_signal;
+        let mut guard = lock.lock().unwrap();
+        while self.inflight(node) >= slots {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+        true
+    }
+
+    /// First alive node with a free slot (delay-scheduling fallback).
+    pub fn idle_alive(&self, exclude: Option<usize>) -> Option<usize> {
+        (0..self.nodes()).find(|&n| {
+            Some(n) != exclude
+                && self.node_alive(n)
+                && self.inflight(n) < self.spec.slots_per_node
+        })
+    }
+
     /// Mark a node dead. Its executor threads keep draining the queue, but
     /// the scheduler treats every result from a dead node as failed and
     /// stops placing work there.
@@ -116,15 +258,36 @@ impl Cluster {
         self.nodes[node].alive.store(true, Ordering::Relaxed);
     }
 
-    /// Submit a closure to a node's queue.
+    /// Submit one closure to a node's queue.
     pub(crate) fn submit(&self, node: usize, f: TaskFn) -> Result<()> {
+        self.submit_batch(node, vec![f])
+    }
+
+    /// Submit a whole batch of closures (Drizzle group dispatch). On a
+    /// single-slot node — the faithful BigDL default (§4.4: one
+    /// multi-threaded task per node) — this is ONE channel send for the
+    /// whole batch. Multi-slot nodes fall back to one send per task so
+    /// free slot threads pull work dynamically (a statically-chunked
+    /// batch would head-of-line block behind a straggler).
+    pub(crate) fn submit_batch(&self, node: usize, batch: Vec<TaskFn>) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
         if !self.node_alive(node) {
             bail!("node {node} is dead");
         }
-        self.nodes[node].inflight.fetch_add(1, Ordering::Relaxed);
-        if self.nodes[node].tx.send(f).is_err() {
-            self.nodes[node].inflight.fetch_sub(1, Ordering::Relaxed);
-            bail!("node {node} executor is gone");
+        let sends: Vec<Vec<TaskFn>> = if self.spec.slots_per_node == 1 {
+            vec![batch]
+        } else {
+            batch.into_iter().map(|f| vec![f]).collect()
+        };
+        for chunk in sends {
+            let k = chunk.len();
+            self.nodes[node].inflight.fetch_add(k, Ordering::Relaxed);
+            if self.nodes[node].tx.send(chunk).is_err() {
+                self.nodes[node].inflight.fetch_sub(k, Ordering::Relaxed);
+                bail!("node {node} executor is gone");
+            }
         }
         Ok(())
     }
@@ -139,10 +302,9 @@ impl Cluster {
 
     /// Shut down all executors (drops senders; threads drain and exit).
     pub fn shutdown(&self) {
-        // Dropping senders requires ownership; instead close by replacing
-        // queues is overkill — threads exit when Cluster drops. Join here.
+        // Senders still alive inside self.nodes; detach threads instead
+        // (they drain and exit when Cluster drops).
         let mut threads = self.threads.lock().unwrap();
-        // Senders still alive inside self.nodes; detach threads instead.
         threads.clear();
     }
 }
@@ -198,6 +360,50 @@ mod tests {
         .unwrap();
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert_eq!(c.least_loaded_alive(None), Some(1));
+        assert_eq!(c.idle_alive(None), Some(1));
+        assert!(!c.wait_for_slot(0, Duration::from_millis(1)));
         gate.store(1, Ordering::Relaxed);
+        assert!(c.wait_for_slot(0, Duration::from_millis(500)), "slot frees after gate opens");
+    }
+
+    #[test]
+    fn batch_submit_runs_all_tasks_in_order() {
+        let c = Cluster::start(ClusterSpec { nodes: 1, slots_per_node: 1 });
+        let (tx, rx) = mpsc::channel();
+        let batch: Vec<TaskFn> = (0..5)
+            .map(|i| {
+                let tx = tx.clone();
+                Box::new(move |_node: usize| tx.send(i).unwrap()) as TaskFn
+            })
+            .collect();
+        c.submit_batch(0, batch).unwrap();
+        let got: Vec<i32> = (0..5).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        // Give the worker a moment to decrement the last inflight count.
+        for _ in 0..100 {
+            if c.inflight(0) == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(c.inflight(0), 0);
+    }
+
+    #[test]
+    fn completion_inboxes_route_by_job() {
+        let hub = CompletionHub::new();
+        let ib1 = hub.register(1);
+        let ib2 = hub.register(2);
+        ib2.push(Completion { job: 2, partition: 7, generation: 0, attempt: 0, payload: Box::new(()) });
+        ib1.push(Completion { job: 1, partition: 3, generation: 0, attempt: 0, payload: Box::new(()) });
+        assert_eq!(ib1.wait().partition, 3);
+        assert_eq!(ib2.wait().partition, 7);
+        hub.unregister(1);
+        assert!(hub.get(1).is_none(), "registry handle dropped");
+        assert!(hub.get(2).is_some());
+        // A straggler pushing into its own Arc after unregister is
+        // harmless: the orphaned inbox absorbs it and drops with the Arc.
+        ib1.push(Completion { job: 1, partition: 9, generation: 1, attempt: 1, payload: Box::new(()) });
+        assert_eq!(ib1.wait().partition, 9);
     }
 }

@@ -1,16 +1,21 @@
 //! `SparkletContext` — the driver handle (paper Fig 2): owns the cluster,
-//! block manager and scheduler; creates RDDs; submits jobs.
+//! block manager, scheduler and the lineage registry behind the
+//! stage-graph engine; creates RDDs; hands out the [`JobRunner`] every
+//! consumer dispatches jobs through.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
 use super::block_manager::BlockManager;
 use super::cluster::{Cluster, ClusterSpec};
 use super::fault::FailurePolicy;
+use super::job_runner::JobRunner;
 use super::rdd::Rdd;
 use super::scheduler::{Assignment, SchedulePolicy, Scheduler};
+use super::stage::RddMeta;
 use crate::util::prng::Rng;
 
 pub(crate) struct CtxInner {
@@ -23,6 +28,9 @@ pub(crate) struct CtxInner {
     pub broadcast_ids: AtomicU64,
     pub failure: RwLock<FailurePolicy>,
     pub default_policy: RwLock<SchedulePolicy>,
+    /// Lineage registry: one [`RddMeta`] per RDD created on this context,
+    /// consumed by the stage planner ([`crate::sparklet::StageDag`]).
+    pub lineage: Mutex<HashMap<u64, RddMeta>>,
 }
 
 /// Cloneable driver context.
@@ -41,6 +49,7 @@ impl SparkletContext {
             broadcast_ids: AtomicU64::new(0),
             failure: RwLock::new(FailurePolicy::default()),
             default_policy: RwLock::new(SchedulePolicy::default()),
+            lineage: Mutex::new(HashMap::new()),
         }))
     }
 
@@ -59,6 +68,11 @@ impl SparkletContext {
 
     pub fn scheduler(&self) -> &Scheduler {
         &self.0.scheduler
+    }
+
+    /// The job-dispatch façade (stage-graph engine entry point).
+    pub fn runner(&self) -> JobRunner {
+        JobRunner::new(self)
     }
 
     pub fn nodes(&self) -> usize {
@@ -85,12 +99,35 @@ impl SparkletContext {
         self.0.rdd_ids.fetch_add(1, Ordering::Relaxed)
     }
 
+    pub(crate) fn next_job_id(&self) -> u64 {
+        self.0.job_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
     pub fn next_shuffle_id(&self) -> u64 {
         self.0.shuffle_ids.fetch_add(1, Ordering::Relaxed)
     }
 
     pub fn next_broadcast_id(&self) -> u64 {
         self.0.broadcast_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one RDD's lineage entry (called by every transformation).
+    /// The entry lives as long as the RDD (or a descendant holding it via
+    /// its compute closure) does — `Rdd` drops it through a guard, so
+    /// long-running loops (streaming micro-batches) don't accumulate
+    /// lineage for dead RDDs.
+    pub(crate) fn register_rdd(&self, meta: RddMeta) {
+        self.0.lineage.lock().unwrap().insert(meta.id, meta);
+    }
+
+    /// Remove a dead RDD's lineage entry (called by the RDD's drop guard).
+    pub(crate) fn unregister_rdd(&self, id: u64) {
+        self.0.lineage.lock().unwrap().remove(&id);
+    }
+
+    /// Copy of the lineage registry for the stage planner.
+    pub(crate) fn lineage_snapshot(&self) -> HashMap<u64, RddMeta> {
+        self.0.lineage.lock().unwrap().clone()
     }
 
     /// Distribute a Vec into `parts` partitions (round-robin slices).
@@ -102,7 +139,7 @@ impl SparkletContext {
         assert!(parts > 0);
         let data = Arc::new(data);
         let ranges = crate::tensor::partition_ranges(data.len(), parts);
-        Rdd::from_compute(self, parts, move |p, _tc| {
+        Rdd::from_source(self, parts, "parallelize", move |p, _tc| {
             Ok(data[ranges[p].clone()].to_vec())
         })
     }
@@ -115,34 +152,31 @@ impl SparkletContext {
         T: Clone + Send + Sync + 'static,
         F: Fn(usize, &mut Rng) -> T + Send + Sync + 'static,
     {
-        Rdd::from_compute(self, parts, move |p, _tc| {
+        Rdd::from_source(self, parts, "generate", move |p, _tc| {
             let mut rng = Rng::new(seed).fork(p as u64);
             Ok((0..per_part).map(|_| gen(p, &mut rng)).collect())
         })
     }
 
     /// Run a job with one task per `preferred` entry; the core primitive
-    /// all RDD actions and the BigDL optimizer jobs build on.
+    /// all RDD actions and the BigDL optimizer jobs build on. (Thin shim
+    /// over [`JobRunner::run`], kept for API stability.)
     pub fn run_job<R: Send + 'static>(
         &self,
         preferred: &[Option<usize>],
         task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
     ) -> Result<Vec<R>> {
-        let job_id = self.0.job_ids.fetch_add(1, Ordering::Relaxed);
-        let policy = self.schedule_policy();
-        self.0
-            .scheduler
-            .run_job(self, job_id, preferred, &policy, None, task_fn)
+        self.runner().run(preferred, task_fn)
     }
 
-    /// Like [`run_job`] but with a Drizzle pre-assignment.
+    /// Like [`SparkletContext::run_job`] but with a Drizzle pre-assignment.
     pub fn run_job_preassigned<R: Send + 'static>(
         &self,
         preferred: &[Option<usize>],
         assignment: &Assignment,
         task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
     ) -> Result<Vec<R>> {
-        let job_id = self.0.job_ids.fetch_add(1, Ordering::Relaxed);
+        let job_id = self.next_job_id();
         let policy = self.schedule_policy();
         self.0
             .scheduler

@@ -1,0 +1,120 @@
+//! `JobRunner` — the single job-dispatch façade of the stage-graph engine.
+//!
+//! Every consumer that used to hand-roll its own dispatch loop — RDD
+//! actions, the pair-RDD shuffle stages, `ParameterManager::sync_round`
+//! (Algorithm 2), the `DistributedOptimizer` iteration loop (Algorithm 1)
+//! and streaming micro-batches — now drives jobs through this one API:
+//!
+//! * [`JobRunner::run`] — place + dispatch one job (per-iteration
+//!   scheduling);
+//! * [`JobRunner::plan_group`] + [`JobRunner::run_planned`] — Drizzle
+//!   group pre-assignment: placements computed ONCE, each job of an
+//!   N-iteration loop (training rounds, streaming micro-batches)
+//!   dispatched as bare batched enqueues;
+//! * [`JobRunner::run_rounds`] — the generalized N-iteration loop: plan
+//!   once per `group` rounds, dispatch every round pre-assigned.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::context::{SparkletContext, TaskContext};
+use super::scheduler::Assignment;
+
+/// Cloneable handle; cheap to create from a context.
+#[derive(Clone)]
+pub struct JobRunner {
+    ctx: SparkletContext,
+}
+
+/// A Drizzle group plan: placements for a fixed task width, computed once
+/// and reused by every job of a loop as bare batched enqueues.
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    pub assignment: Assignment,
+    pub preferred: Vec<Option<usize>>,
+}
+
+impl GroupPlan {
+    /// Task width this plan was computed for.
+    pub fn parts(&self) -> usize {
+        self.preferred.len()
+    }
+}
+
+impl JobRunner {
+    pub(crate) fn new(ctx: &SparkletContext) -> JobRunner {
+        JobRunner { ctx: ctx.clone() }
+    }
+
+    pub fn context(&self) -> &SparkletContext {
+        &self.ctx
+    }
+
+    /// Run one job with per-task placement (one task per `preferred`
+    /// entry); results in partition order.
+    pub fn run<R: Send + 'static>(
+        &self,
+        preferred: &[Option<usize>],
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<R>> {
+        let job_id = self.ctx.next_job_id();
+        let policy = self.ctx.schedule_policy();
+        self.ctx
+            .scheduler()
+            .run_job(&self.ctx, job_id, preferred, &policy, None, task_fn)
+    }
+
+    /// Run one job against a precomputed [`GroupPlan`]: zero placement
+    /// decisions, one batched enqueue per node.
+    pub fn run_planned<R: Send + 'static>(
+        &self,
+        plan: &GroupPlan,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<R>> {
+        let job_id = self.ctx.next_job_id();
+        let policy = self.ctx.schedule_policy();
+        self.ctx.scheduler().run_job(
+            &self.ctx,
+            job_id,
+            &plan.preferred,
+            &policy,
+            Some(&plan.assignment),
+            task_fn,
+        )
+    }
+
+    /// Compute placements for a job width once (the Drizzle planning pass).
+    pub fn plan_group(&self, preferred: &[Option<usize>]) -> Result<GroupPlan> {
+        let policy = self.ctx.schedule_policy();
+        let assignment = self
+            .ctx
+            .scheduler()
+            .plan(&self.ctx.cluster(), preferred, &policy)?;
+        Ok(GroupPlan { assignment, preferred: preferred.to_vec() })
+    }
+
+    /// Drive an N-round loop with group pre-assignment: placements are
+    /// planned once per `group` rounds and every round's job is dispatched
+    /// as bare batched enqueues. `round_fn(round)` supplies each round's
+    /// task function. Returns each round's results in order.
+    pub fn run_rounds<R: Send + 'static>(
+        &self,
+        preferred: &[Option<usize>],
+        rounds: usize,
+        group: usize,
+        mut round_fn: impl FnMut(usize) -> Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<Vec<R>>> {
+        let group = group.max(1);
+        let mut out = Vec::with_capacity(rounds);
+        let mut plan: Option<GroupPlan> = None;
+        for round in 0..rounds {
+            if round % group == 0 || plan.is_none() {
+                plan = Some(self.plan_group(preferred)?);
+            }
+            let p = plan.as_ref().expect("plan set above");
+            out.push(self.run_planned(p, round_fn(round))?);
+        }
+        Ok(out)
+    }
+}

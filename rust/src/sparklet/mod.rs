@@ -4,14 +4,20 @@
 //! Faithful to the execution model the paper relies on:
 //! * immutable, partitioned [`rdd::Rdd`]s with lineage (copy-on-write,
 //!   coarse-grained transformations);
+//! * a **stage-graph engine**: lineage splits into stages at shuffle
+//!   boundaries ([`stage::StageDag`]), chains of narrow transformations
+//!   fuse into one task closure per partition, and every consumer
+//!   dispatches jobs through one [`job_runner::JobRunner`] API;
 //! * a single driver ([`context::SparkletContext`]) that launches jobs of
-//!   short-lived, stateless, individually-retryable tasks on worker
-//!   [`cluster::Cluster`] nodes;
+//!   short-lived, stateless, individually-retryable tasks on persistent
+//!   per-node executor pools ([`cluster::Cluster`]) with a reusable
+//!   [`cluster::CompletionHub`] completion queue;
 //! * cluster-wide in-memory [`block_manager::BlockManager`] storage
 //!   carrying [`shuffle::Shuffle`] slices, [`broadcast::Broadcast`] shards
 //!   and cached RDD partitions;
-//! * locality/delay scheduling, gang (barrier) mode and Drizzle-style
-//!   group pre-assignment in [`scheduler::Scheduler`];
+//! * locality/delay scheduling (condvar slot signal, no busy-wait), gang
+//!   (barrier) mode and Drizzle-style group pre-assignment — planned once,
+//!   dispatched as bare batched enqueues — in [`scheduler::Scheduler`];
 //! * deterministic failure injection ([`fault::FailurePolicy`]) with
 //!   fine-grained task-level recovery.
 
@@ -20,16 +26,20 @@ pub mod broadcast;
 pub mod cluster;
 pub mod context;
 pub mod fault;
+pub mod job_runner;
 pub mod pair_rdd;
 pub mod rdd;
 pub mod scheduler;
 pub mod shuffle;
+pub mod stage;
 
 pub use block_manager::{BlockData, BlockId, BlockManager, TrafficSnapshot};
 pub use broadcast::Broadcast;
-pub use cluster::{Cluster, ClusterSpec};
+pub use cluster::{Cluster, ClusterSpec, Completion, CompletionHub, JobInbox};
 pub use context::{SparkletContext, TaskContext};
 pub use fault::FailurePolicy;
+pub use job_runner::{GroupPlan, JobRunner};
 pub use rdd::Rdd;
 pub use scheduler::{Assignment, SchedSnapshot, SchedulePolicy, Scheduler};
 pub use shuffle::Shuffle;
+pub use stage::{OpKind, RddMeta, Stage, StageDag, WideDep};

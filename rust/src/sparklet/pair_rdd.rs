@@ -2,26 +2,95 @@
 //! pipelines use between ingestion and training: `reduce_by_key`,
 //! `group_by_key`, `count_by_key`, `join`.
 //!
-//! Implementation note: partition `r` of a shuffled child RDD recomputes
-//! its input from the parent's lineage, selecting the keys that hash to
-//! `r` (a wide dependency). This is the lineage-pure formulation —
-//! recovery semantics are identical to Spark's (lost shuffle output ⇒
-//! re-run the map side), at the cost of re-reading cached parents per
-//! reduce partition; for the coarse-grained pipelines in this repo that
-//! trade-off is the simple, correct one. Parents should be `.cache()`d
-//! before wide operations.
+//! Execution: every wide op is TWO stages under the stage-graph engine.
+//! The map-side stage (a [`WideDep`], one task per parent partition) runs
+//! once, bucketing each parent partition by key-hash into per-reducer
+//! Object blocks in the in-memory store — exactly how gradient slices
+//! travel in Algorithm 2. The reduce-side stage (the child RDD's compute)
+//! fetches its buckets from the store. This replaces the old lineage-pure
+//! formulation that re-materialized EVERY parent partition inside EVERY
+//! reduce task (O(maps × reduces) recomputation); lineage still backs
+//! recovery — a bucket lost to node death is recomputed from the parent
+//! on the spot.
 
+use std::any::Any;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::block_manager::{BlockData, BlockId};
+use super::context::TaskContext;
 use super::rdd::Rdd;
+use super::stage::{OpKind, WideDep};
 
-fn bucket<K: Hash>(key: &K, parts: usize) -> usize {
+pub(crate) fn bucket<K: Hash>(key: &K, parts: usize) -> usize {
     let mut h = std::collections::hash_map::DefaultHasher::new();
     key.hash(&mut h);
     (h.finish() % parts as u64) as usize
+}
+
+/// Build the map-side shuffle stage for `parent`: task `m` materializes
+/// parent partition `m` and publishes one bucket block per reducer.
+fn shuffle_dep<K, V>(parent: &Rdd<(K, V)>, parts: usize) -> (u64, Arc<WideDep>)
+where
+    K: Clone + Send + Sync + Eq + Hash + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    let ctx = parent.context();
+    let shuffle = ctx.next_shuffle_id();
+    let maps = parent.num_partitions();
+    let preferred = parent.preferred_nodes().to_vec();
+    let p2 = parent.clone();
+    let task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
+        Arc::new(move |tc: &TaskContext| {
+            let m = tc.partition;
+            let data = p2.materialize(m, tc)?;
+            let mut buckets: Vec<Vec<(K, V)>> = (0..parts).map(|_| Vec::new()).collect();
+            for kv in data.iter() {
+                buckets[bucket(&kv.0, parts)].push(kv.clone());
+            }
+            let bm = tc.blocks();
+            for (r, b) in buckets.into_iter().enumerate() {
+                let approx = b.len() * std::mem::size_of::<(K, V)>();
+                let obj: Arc<dyn Any + Send + Sync> = Arc::new(b);
+                bm.put(
+                    tc.node,
+                    BlockId::Shuffle { shuffle, map: m, reduce: r },
+                    BlockData::Object { obj, approx_bytes: approx },
+                );
+            }
+            Ok(())
+        });
+    (shuffle, WideDep::new(shuffle, maps, preferred, task))
+}
+
+/// Fetch one shuffle bucket, falling back to lineage recompute if the
+/// block was lost (node death dropped the map-side output).
+fn fetch_bucket<K, V>(
+    parent: &Rdd<(K, V)>,
+    shuffle: u64,
+    map: usize,
+    reduce: usize,
+    parts: usize,
+    tc: &TaskContext,
+) -> Result<Arc<Vec<(K, V)>>>
+where
+    K: Clone + Send + Sync + Eq + Hash + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    if let Some(BlockData::Object { obj, .. }) =
+        tc.blocks().get(tc.node, &BlockId::Shuffle { shuffle, map, reduce })
+    {
+        if let Ok(b) = Arc::downcast::<Vec<(K, V)>>(obj) {
+            return Ok(b);
+        }
+    }
+    let data = parent.materialize(map, tc)?;
+    Ok(Arc::new(
+        data.iter().filter(|(k, _)| bucket(k, parts) == reduce).cloned().collect(),
+    ))
 }
 
 impl<K, V> Rdd<(K, V)>
@@ -34,42 +103,63 @@ where
     where
         F: Fn(&V, &V) -> V + Send + Sync + 'static,
     {
+        let (shuffle, dep) = shuffle_dep(self, parts);
+        let mut deps: Vec<Arc<WideDep>> = self.wide_deps.as_ref().clone();
+        deps.push(dep);
         let parent = self.clone();
         let nparents = self.num_partitions();
-        Rdd::from_compute(self.context(), parts, move |r, tc| {
-            let mut acc: HashMap<K, V> = HashMap::new();
-            for m in 0..nparents {
-                for (k, v) in parent.materialize(m, tc)?.iter() {
-                    if bucket(k, parts) != r {
-                        continue;
-                    }
-                    match acc.get_mut(k) {
-                        Some(cur) => *cur = f(cur, v),
-                        None => {
-                            acc.insert(k.clone(), v.clone());
+        Rdd::from_op(
+            self.context(),
+            parts,
+            "reduce_by_key",
+            OpKind::Wide,
+            vec![self.id()],
+            Arc::new(deps),
+            None,
+            move |r, tc| {
+                let mut acc: HashMap<K, V> = HashMap::new();
+                for m in 0..nparents {
+                    let pairs = fetch_bucket(&parent, shuffle, m, r, parts, tc)?;
+                    for (k, v) in pairs.iter() {
+                        match acc.get_mut(k) {
+                            Some(cur) => *cur = f(cur, v),
+                            None => {
+                                acc.insert(k.clone(), v.clone());
+                            }
                         }
                     }
                 }
-            }
-            Ok(acc.into_iter().collect())
-        })
+                Ok(acc.into_iter().collect())
+            },
+        )
     }
 
     /// Collect all values per key.
     pub fn group_by_key(&self, parts: usize) -> Rdd<(K, Vec<V>)> {
+        let (shuffle, dep) = shuffle_dep(self, parts);
+        let mut deps: Vec<Arc<WideDep>> = self.wide_deps.as_ref().clone();
+        deps.push(dep);
         let parent = self.clone();
         let nparents = self.num_partitions();
-        Rdd::from_compute(self.context(), parts, move |r, tc| {
-            let mut acc: HashMap<K, Vec<V>> = HashMap::new();
-            for m in 0..nparents {
-                for (k, v) in parent.materialize(m, tc)?.iter() {
-                    if bucket(k, parts) == r {
+        Rdd::from_op(
+            self.context(),
+            parts,
+            "group_by_key",
+            OpKind::Wide,
+            vec![self.id()],
+            Arc::new(deps),
+            None,
+            move |r, tc| {
+                let mut acc: HashMap<K, Vec<V>> = HashMap::new();
+                for m in 0..nparents {
+                    let pairs = fetch_bucket(&parent, shuffle, m, r, parts, tc)?;
+                    for (k, v) in pairs.iter() {
                         acc.entry(k.clone()).or_default().push(v.clone());
                     }
                 }
-            }
-            Ok(acc.into_iter().collect())
-        })
+                Ok(acc.into_iter().collect())
+            },
+        )
     }
 
     /// Per-key record counts, gathered at the driver.
@@ -85,23 +175,40 @@ where
     where
         W: Clone + Send + Sync + 'static,
     {
+        let (lsh, ldep) = shuffle_dep(self, parts);
+        let (rsh, rdep) = shuffle_dep(other, parts);
+        let mut deps: Vec<Arc<WideDep>> = self
+            .wide_deps
+            .iter()
+            .chain(other.wide_deps.iter())
+            .cloned()
+            .collect();
+        deps.push(ldep);
+        deps.push(rdep);
         let left = self.clone();
         let right = other.clone();
         let nleft = self.num_partitions();
         let nright = other.num_partitions();
-        Rdd::from_compute(self.context(), parts, move |r, tc| {
-            let mut lmap: HashMap<K, Vec<V>> = HashMap::new();
-            for m in 0..nleft {
-                for (k, v) in left.materialize(m, tc)?.iter() {
-                    if bucket(k, parts) == r {
+        Rdd::from_op(
+            self.context(),
+            parts,
+            "join",
+            OpKind::Wide,
+            vec![self.id(), other.id()],
+            Arc::new(deps),
+            None,
+            move |r, tc| {
+                let mut lmap: HashMap<K, Vec<V>> = HashMap::new();
+                for m in 0..nleft {
+                    let pairs = fetch_bucket(&left, lsh, m, r, parts, tc)?;
+                    for (k, v) in pairs.iter() {
                         lmap.entry(k.clone()).or_default().push(v.clone());
                     }
                 }
-            }
-            let mut out = Vec::new();
-            for m in 0..nright {
-                for (k, w) in right.materialize(m, tc)?.iter() {
-                    if bucket(k, parts) == r {
+                let mut out = Vec::new();
+                for m in 0..nright {
+                    let pairs = fetch_bucket(&right, rsh, m, r, parts, tc)?;
+                    for (k, w) in pairs.iter() {
                         if let Some(vs) = lmap.get(k) {
                             for v in vs {
                                 out.push((k.clone(), (v.clone(), w.clone())));
@@ -109,9 +216,9 @@ where
                         }
                     }
                 }
-            }
-            Ok(out)
-        })
+                Ok(out)
+            },
+        )
     }
 
     /// Driver-side map of all pairs (small results).
@@ -134,15 +241,24 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
     /// derivation: partition index + caller seed).
     pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T> {
         let parent = self.clone();
-        Rdd::from_compute(self.context(), self.num_partitions(), move |p, tc| {
-            let data = parent.materialize(p, tc)?;
-            let mut rng = crate::util::prng::Rng::new(seed).fork(p as u64);
-            Ok(data
-                .iter()
-                .filter(|_| rng.gen_bool(fraction))
-                .cloned()
-                .collect())
-        })
+        Rdd::from_op(
+            self.context(),
+            self.num_partitions(),
+            "sample",
+            OpKind::Narrow,
+            vec![self.id()],
+            Arc::clone(&self.wide_deps),
+            self.plan.clone(),
+            move |p, tc| {
+                let data = parent.materialize(p, tc)?;
+                let mut rng = crate::util::prng::Rng::new(seed).fork(p as u64);
+                Ok(data
+                    .iter()
+                    .filter(|_| rng.gen_bool(fraction))
+                    .cloned()
+                    .collect())
+            },
+        )
     }
 
     /// Reduce the partition count by concatenating adjacent partitions
@@ -151,13 +267,22 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         assert!(parts > 0 && parts <= self.num_partitions());
         let parent = self.clone();
         let groups = crate::tensor::partition_ranges(self.num_partitions(), parts);
-        Rdd::from_compute(self.context(), parts, move |p, tc| {
-            let mut out = Vec::new();
-            for m in groups[p].clone() {
-                out.extend(parent.materialize(m, tc)?.iter().cloned());
-            }
-            Ok(out)
-        })
+        Rdd::from_op(
+            self.context(),
+            parts,
+            "coalesce",
+            OpKind::Narrow,
+            vec![self.id()],
+            Arc::clone(&self.wide_deps),
+            None,
+            move |p, tc| {
+                let mut out = Vec::new();
+                for m in groups[p].clone() {
+                    out.extend(parent.materialize(m, tc)?.iter().cloned());
+                }
+                Ok(out)
+            },
+        )
     }
 
     /// Remove duplicates (requires Eq + Hash), into `parts` partitions.
@@ -252,5 +377,25 @@ mod tests {
         let mut d = rdd.distinct(2).collect().unwrap();
         d.sort();
         assert_eq!(d, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn wide_ops_are_two_stages_with_reused_buckets() {
+        let ctx = SparkletContext::local(2);
+        let rdd = ctx.parallelize((0..100i64).collect(), 4).key_by(|x| x % 5);
+        let reduced = rdd.reduce_by_key(3, |a, b| a + b);
+        assert_eq!(reduced.stage_dag().num_stages(), 2, "{}", reduced.explain());
+        let before = ctx.scheduler().stats.snapshot().jobs;
+        let first = reduced.collect().unwrap();
+        let mid = ctx.scheduler().stats.snapshot().jobs;
+        assert_eq!(mid - before, 2, "map stage + reduce stage");
+        let second = reduced.collect().unwrap();
+        let after = ctx.scheduler().stats.snapshot().jobs;
+        assert_eq!(after - mid, 1, "buckets reused: only the reduce stage re-runs");
+        let mut a = first.clone();
+        let mut b = second.clone();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
     }
 }

@@ -1,10 +1,18 @@
-//! RDD — an immutable, partitioned collection with lineage (paper §3.1).
+//! RDD — an immutable, partitioned collection with lineage (paper §3.1),
+//! executed by the stage-graph engine.
 //!
 //! Partitions are computed by a pure closure (the lineage); `cache()`
 //! materializes partitions into the node-local block store, and a lost
 //! cached partition (node death) is transparently recomputed from lineage.
 //! Transformations are coarse-grained and copy-on-write: `map`/`filter`/
 //! `zip` derive a *new* RDD; nothing is mutated in place.
+//!
+//! Execution model: every transformation registers its lineage entry
+//! ([`RddMeta`]) with the context. Narrow transformations FUSE — the chain
+//! `map.map.filter` is one compute closure, so an action on it is ONE job
+//! of fused tasks. Wide transformations carry a [`WideDep`] (the map-side
+//! shuffle stage); actions resolve pending wide deps in topological order
+//! through the [`JobRunner`] before running the final fused stage.
 
 use std::any::Any;
 use std::sync::Arc;
@@ -13,8 +21,25 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::block_manager::{BlockData, BlockId};
 use super::context::{SparkletContext, TaskContext};
+use super::job_runner::{GroupPlan, JobRunner};
+use super::stage::{OpKind, RddMeta, StageDag, WideDep};
 
 type ComputeFn<T> = dyn Fn(usize, &TaskContext) -> Result<Vec<T>> + Send + Sync;
+
+/// Removes the RDD's lineage entry when the last clone drops. Ancestors
+/// stay registered while any descendant lives, because each child's
+/// compute closure owns a clone of its parent `Rdd` (and therefore the
+/// parent's guard).
+pub(crate) struct MetaGuard {
+    ctx: SparkletContext,
+    id: u64,
+}
+
+impl Drop for MetaGuard {
+    fn drop(&mut self) {
+        self.ctx.unregister_rdd(self.id);
+    }
+}
 
 /// An immutable distributed collection.
 pub struct Rdd<T> {
@@ -24,6 +49,14 @@ pub struct Rdd<T> {
     compute: Arc<ComputeFn<T>>,
     cached: bool,
     preferred: Arc<Vec<Option<usize>>>,
+    /// Pending shuffle dependencies in this RDD's lineage, parents first
+    /// (topological order). Resolved by actions before the final stage.
+    pub(crate) wide_deps: Arc<Vec<Arc<WideDep>>>,
+    /// Optional Drizzle group plan: actions on this RDD dispatch
+    /// pre-assigned (streaming micro-batch loops install this).
+    pub(crate) plan: Option<Arc<GroupPlan>>,
+    /// Keeps this RDD's lineage entry alive exactly as long as the RDD.
+    _meta: Arc<MetaGuard>,
 }
 
 impl<T> Clone for Rdd<T> {
@@ -35,23 +68,55 @@ impl<T> Clone for Rdd<T> {
             compute: Arc::clone(&self.compute),
             cached: self.cached,
             preferred: Arc::clone(&self.preferred),
+            wide_deps: Arc::clone(&self.wide_deps),
+            plan: self.plan.clone(),
+            _meta: Arc::clone(&self._meta),
         }
     }
 }
 
 impl<T: Clone + Send + Sync + 'static> Rdd<T> {
-    pub(crate) fn from_compute<F>(ctx: &SparkletContext, nparts: usize, f: F) -> Rdd<T>
+    /// Root constructor: registers the lineage entry for the stage planner.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_op<F>(
+        ctx: &SparkletContext,
+        nparts: usize,
+        op: &'static str,
+        kind: OpKind,
+        parents: Vec<u64>,
+        wide_deps: Arc<Vec<Arc<WideDep>>>,
+        plan: Option<Arc<GroupPlan>>,
+        f: F,
+    ) -> Rdd<T>
     where
         F: Fn(usize, &TaskContext) -> Result<Vec<T>> + Send + Sync + 'static,
     {
+        let id = ctx.next_rdd_id();
+        ctx.register_rdd(RddMeta { id, op, kind, parents });
         Rdd {
             ctx: ctx.clone(),
-            id: ctx.next_rdd_id(),
+            id,
             nparts,
             compute: Arc::new(f),
             cached: false,
             preferred: Arc::new(ctx.default_preferred(nparts)),
+            wide_deps,
+            plan,
+            _meta: Arc::new(MetaGuard { ctx: ctx.clone(), id }),
         }
+    }
+
+    /// Source RDD (no parents): parallelize / generate / stream drains.
+    pub(crate) fn from_source<F>(
+        ctx: &SparkletContext,
+        nparts: usize,
+        op: &'static str,
+        f: F,
+    ) -> Rdd<T>
+    where
+        F: Fn(usize, &TaskContext) -> Result<Vec<T>> + Send + Sync + 'static,
+    {
+        Rdd::from_op(ctx, nparts, op, OpKind::Source, Vec::new(), Arc::new(Vec::new()), None, f)
     }
 
     pub fn id(&self) -> u64 {
@@ -77,6 +142,27 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         self
     }
 
+    /// Install a Drizzle group plan: actions on this RDD (and same-width
+    /// narrow children) dispatch pre-assigned — bare batched enqueues, no
+    /// per-task placement. No-op if the plan width doesn't match.
+    pub fn with_plan(mut self, plan: Arc<GroupPlan>) -> Rdd<T> {
+        if plan.parts() == self.nparts {
+            self.plan = Some(plan);
+        }
+        self
+    }
+
+    /// The stage graph of this RDD's lineage (fused narrow chains, split
+    /// at shuffle boundaries).
+    pub fn stage_dag(&self) -> StageDag {
+        StageDag::build(&self.ctx, self.id)
+    }
+
+    /// Human-readable stage plan.
+    pub fn explain(&self) -> String {
+        self.stage_dag().explain()
+    }
+
     /// Materialize partition `p` as seen by the running task.
     pub fn materialize(&self, p: usize, tc: &TaskContext) -> Result<Arc<Vec<T>>> {
         ensure!(p < self.nparts, "partition {p} out of range ({})", self.nparts);
@@ -97,7 +183,7 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         }
     }
 
-    // ---- transformations (lazy, lineage-carrying) ----------------------
+    // ---- transformations (lazy, lineage-carrying, narrow ops fuse) -----
 
     pub fn map<U, F>(&self, f: F) -> Rdd<U>
     where
@@ -105,9 +191,16 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         F: Fn(&T) -> U + Send + Sync + 'static,
     {
         let parent = self.clone();
-        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
-            Ok(parent.materialize(p, tc)?.iter().map(&f).collect())
-        })
+        Rdd::from_op(
+            &self.ctx,
+            self.nparts,
+            "map",
+            OpKind::Narrow,
+            vec![self.id],
+            Arc::clone(&self.wide_deps),
+            self.plan.clone(),
+            move |p, tc| Ok(parent.materialize(p, tc)?.iter().map(&f).collect()),
+        )
     }
 
     pub fn filter<F>(&self, f: F) -> Rdd<T>
@@ -115,9 +208,16 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         F: Fn(&T) -> bool + Send + Sync + 'static,
     {
         let parent = self.clone();
-        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
-            Ok(parent.materialize(p, tc)?.iter().filter(|x| f(x)).cloned().collect())
-        })
+        Rdd::from_op(
+            &self.ctx,
+            self.nparts,
+            "filter",
+            OpKind::Narrow,
+            vec![self.id],
+            Arc::clone(&self.wide_deps),
+            self.plan.clone(),
+            move |p, tc| Ok(parent.materialize(p, tc)?.iter().filter(|x| f(x)).cloned().collect()),
+        )
     }
 
     pub fn map_partitions<U, F>(&self, f: F) -> Rdd<U>
@@ -126,14 +226,22 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         F: Fn(&[T]) -> Vec<U> + Send + Sync + 'static,
     {
         let parent = self.clone();
-        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
-            Ok(f(&parent.materialize(p, tc)?))
-        })
+        Rdd::from_op(
+            &self.ctx,
+            self.nparts,
+            "map_partitions",
+            OpKind::Narrow,
+            vec![self.id],
+            Arc::clone(&self.wide_deps),
+            self.plan.clone(),
+            move |p, tc| Ok(f(&parent.materialize(p, tc)?)),
+        )
     }
 
     /// Zip with a co-partitioned RDD (paper §3.2: model RDD ⋈ Sample RDD;
     /// both sides share the same partition→node mapping, so the zip is a
-    /// purely node-local operation with no data movement).
+    /// purely node-local operation with no data movement — a narrow op
+    /// that fuses both parents into one stage).
     pub fn zip<U: Clone + Send + Sync + 'static>(&self, other: &Rdd<U>) -> Rdd<(T, U)> {
         assert_eq!(
             self.nparts, other.nparts,
@@ -142,17 +250,29 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         );
         let left = self.clone();
         let right = other.clone();
-        Rdd::from_compute(&self.ctx, self.nparts, move |p, tc| {
-            let a = left.materialize(p, tc)?;
-            let b = right.materialize(p, tc)?;
-            ensure!(
-                a.len() == b.len(),
-                "zip partition {p}: length mismatch {} vs {}",
-                a.len(),
-                b.len()
-            );
-            Ok(a.iter().cloned().zip(b.iter().cloned()).collect())
-        })
+        let deps: Arc<Vec<Arc<WideDep>>> = Arc::new(
+            self.wide_deps.iter().chain(other.wide_deps.iter()).cloned().collect(),
+        );
+        Rdd::from_op(
+            &self.ctx,
+            self.nparts,
+            "zip",
+            OpKind::Narrow,
+            vec![self.id, other.id],
+            deps,
+            self.plan.clone(),
+            move |p, tc| {
+                let a = left.materialize(p, tc)?;
+                let b = right.materialize(p, tc)?;
+                ensure!(
+                    a.len() == b.len(),
+                    "zip partition {p}: length mismatch {} vs {}",
+                    a.len(),
+                    b.len()
+                );
+                Ok(a.iter().cloned().zip(b.iter().cloned()).collect())
+            },
+        )
     }
 
     /// Concatenate with another RDD of the same type (partitions appended).
@@ -160,31 +280,89 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         let left = self.clone();
         let right = other.clone();
         let split = self.nparts;
-        Rdd::from_compute(&self.ctx, self.nparts + other.nparts, move |p, tc| {
-            if p < split {
-                left.materialize(p, tc).map(|a| a.to_vec())
-            } else {
-                right.materialize(p - split, tc).map(|a| a.to_vec())
-            }
-        })
+        let deps: Arc<Vec<Arc<WideDep>>> = Arc::new(
+            self.wide_deps.iter().chain(other.wide_deps.iter()).cloned().collect(),
+        );
+        Rdd::from_op(
+            &self.ctx,
+            self.nparts + other.nparts,
+            "union",
+            OpKind::Narrow,
+            vec![self.id, other.id],
+            deps,
+            None,
+            move |p, tc| {
+                if p < split {
+                    left.materialize(p, tc).map(|a| a.to_vec())
+                } else {
+                    right.materialize(p - split, tc).map(|a| a.to_vec())
+                }
+            },
+        )
     }
 
-    // ---- actions (eager: submit a job) ----------------------------------
+    // ---- actions (eager: resolve wide deps, then one fused-stage job) ---
+
+    /// Run every pending map-side shuffle stage in this RDD's lineage
+    /// (topological order), each as its own job. Idempotent: already-run
+    /// stages are skipped and their buckets reused.
+    pub(crate) fn resolve_wide_deps(&self, runner: &JobRunner) -> Result<()> {
+        for dep in self.wide_deps.iter() {
+            dep.ensure(runner)?;
+        }
+        Ok(())
+    }
+
+    /// Resolve deps, wrap `f` as a partition task, and dispatch: forced
+    /// through `plan` when given, else this RDD's installed plan (width
+    /// permitting), else per-task placement.
+    fn dispatch_partition_job<R, F>(&self, plan: Option<&GroupPlan>, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        let runner = self.ctx.runner();
+        self.resolve_wide_deps(&runner)?;
+        let rdd = self.clone();
+        let task: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync> =
+            Arc::new(move |tc: &TaskContext| {
+                let data = rdd.materialize(tc.partition, tc)?;
+                f(tc, &data)
+            });
+        match (plan, &self.plan) {
+            (Some(p), _) => runner.run_planned(p, task),
+            (None, Some(p)) if p.parts() == self.nparts => runner.run_planned(p, task),
+            _ => runner.run(&self.preferred, task),
+        }
+    }
 
     /// Run `f` over every partition's data; results in partition order.
     /// The primitive behind both RDD actions and BigDL's two per-iteration
-    /// jobs.
+    /// jobs. Dispatches through the [`JobRunner`] (pre-assigned when a
+    /// group plan is installed).
     pub fn run_partition_job<R, F>(&self, f: F) -> Result<Vec<R>>
     where
         R: Send + 'static,
         F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
     {
-        let rdd = self.clone();
-        let task = move |tc: &TaskContext| {
-            let data = rdd.materialize(tc.partition, tc)?;
-            f(tc, &data)
-        };
-        self.ctx.run_job(&self.preferred, Arc::new(task))
+        self.dispatch_partition_job(None, f)
+    }
+
+    /// Like [`Rdd::run_partition_job`] but forced through a precomputed
+    /// [`GroupPlan`] (the Algorithm 1 training loop plans one group of
+    /// iterations and dispatches every forward-backward job this way).
+    pub fn run_partition_job_planned<R, F>(&self, plan: &GroupPlan, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        ensure!(
+            plan.parts() == self.nparts,
+            "group plan width {} != partitions {}",
+            plan.parts(),
+            self.nparts
+        );
+        self.dispatch_partition_job(Some(plan), f)
     }
 
     pub fn collect(&self) -> Result<Vec<T>> {

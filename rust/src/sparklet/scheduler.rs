@@ -4,21 +4,29 @@
 //! launches every task of a job, tracks completions, and re-runs failed
 //! tasks individually (stateless tasks make this safe). Supports:
 //!
-//! * **locality / delay scheduling** — prefer the partition's node, wait
-//!   briefly for a slot before falling back (Zaharia et al., EuroSys'10);
+//! * **locality / delay scheduling** — prefer the partition's node, block
+//!   on the executor pool's slot-availability signal (no busy-wait) before
+//!   falling back to an idle node (Zaharia et al., EuroSys'10); misses are
+//!   counted in [`SchedStats::locality_misses`];
 //! * **gang (barrier) mode** — the "connector approach" baseline: any task
 //!   failure restarts the entire job (coarse-grained recovery);
 //! * **Drizzle-style group pre-assignment** — compute task placements for
-//!   a whole group of iterations in one driver pass (§4.4 / Fig 8).
+//!   a whole group of iterations in one driver pass (§4.4 / Fig 8); a
+//!   pre-assigned job is dispatched as ONE batched enqueue per node.
+//!
+//! Results flow back through the cluster's reusable [`CompletionHub`]
+//! instead of per-job channel plumbing, and task panics are caught and
+//! converted into ordinary task failures (retried like any other).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::cluster::Cluster;
+use super::cluster::{Cluster, Completion, JobInbox, TaskFn};
 use super::context::{SparkletContext, TaskContext};
+use super::fault::FailurePolicy;
 
 /// How a job's tasks are scheduled.
 #[derive(Debug, Clone)]
@@ -26,7 +34,7 @@ pub struct SchedulePolicy {
     /// Gang/barrier mode: all-or-nothing, whole-job restart on failure.
     pub gang: bool,
     /// How long to wait for a slot on the preferred node before falling
-    /// back to the least-loaded node (delay scheduling).
+    /// back to an idle node (delay scheduling).
     pub locality_wait: Duration,
 }
 
@@ -45,6 +53,12 @@ pub struct SchedStats {
     pub gang_restarts: AtomicU64,
     /// Driver time spent placing + enqueueing tasks.
     pub dispatch_ns: AtomicU64,
+    /// Individual placement decisions computed (a pre-assigned dispatch
+    /// performs zero of these — the Drizzle amortization, made visible).
+    pub placements: AtomicU64,
+    /// Delay-scheduling timeouts: the preferred node stayed busy past
+    /// `locality_wait` and the task ran non-local or queued.
+    pub locality_misses: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -54,6 +68,8 @@ pub struct SchedSnapshot {
     pub task_retries: u64,
     pub gang_restarts: u64,
     pub dispatch_ns: u64,
+    pub placements: u64,
+    pub locality_misses: u64,
 }
 
 impl SchedStats {
@@ -64,13 +80,15 @@ impl SchedStats {
             task_retries: self.task_retries.load(Ordering::Relaxed),
             gang_restarts: self.gang_restarts.load(Ordering::Relaxed),
             dispatch_ns: self.dispatch_ns.load(Ordering::Relaxed),
+            placements: self.placements.load(Ordering::Relaxed),
+            locality_misses: self.locality_misses.load(Ordering::Relaxed),
         }
     }
 }
 
 /// A precomputed placement for one job's tasks (Drizzle group scheduling:
 /// the driver plans a whole group of iterations in one pass, then each
-/// iteration's dispatch is a bare enqueue).
+/// iteration's dispatch is a bare batched enqueue).
 #[derive(Debug, Clone)]
 pub struct Assignment {
     pub nodes: Vec<usize>,
@@ -80,13 +98,27 @@ pub struct Scheduler {
     pub stats: SchedStats,
 }
 
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 impl Scheduler {
     pub fn new() -> Scheduler {
         Scheduler { stats: SchedStats::default() }
     }
 
-    /// Place one task: preferred node if alive (waiting up to
-    /// `locality_wait` for a free slot), else least-loaded alive node.
+    /// Place one task: preferred node if alive (blocking on the pool's
+    /// slot signal for up to `locality_wait`); on a genuine delay-
+    /// scheduling timeout, an idle node; else queue behind the preferred
+    /// node (data locality beats waiting idle — blocks are in cluster-wide
+    /// memory either way). Dead/avoided preferred falls back to the
+    /// least-loaded alive node.
     fn place(
         &self,
         cluster: &Cluster,
@@ -94,22 +126,27 @@ impl Scheduler {
         policy: &SchedulePolicy,
         avoid: Option<usize>,
     ) -> Result<usize> {
+        self.stats.placements.fetch_add(1, Ordering::Relaxed);
         if let Some(p) = preferred {
             if cluster.node_alive(p) && Some(p) != avoid {
-                let slots = cluster.spec().slots_per_node;
-                if cluster.inflight(p) < slots {
+                // Delay scheduling: block on the executor pool's
+                // slot-availability signal instead of spinning.
+                if cluster.wait_for_slot(p, policy.locality_wait) {
                     return Ok(p);
                 }
-                // Delay scheduling: briefly wait for locality.
-                let deadline = Instant::now() + policy.locality_wait;
-                while Instant::now() < deadline {
-                    if cluster.inflight(p) < slots {
-                        return Ok(p);
-                    }
-                    std::thread::yield_now();
+                if policy.locality_wait.is_zero() {
+                    // No delay-scheduling budget configured: strict
+                    // locality — queue behind the busy slot. (Also shields
+                    // against the transient inflight>0 window between a
+                    // task's completion push and its slot release.)
+                    return Ok(p);
                 }
-                // Data is in cluster-wide memory; run non-local.
-                return Ok(p); // queue behind the busy slot: still preferred
+                // A positive locality_wait elapsed without a slot freeing.
+                self.stats.locality_misses.fetch_add(1, Ordering::Relaxed);
+                if let Some(idle) = cluster.idle_alive(avoid) {
+                    return Ok(idle); // run non-local on a free slot
+                }
+                return Ok(p); // every node is busy: still preferred
             }
         }
         cluster
@@ -145,73 +182,125 @@ impl Scheduler {
         task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
     ) -> Result<Vec<R>> {
         let cluster = ctx.cluster();
-        let n = preferred.len();
+        let hub = cluster.completions();
         self.stats.jobs.fetch_add(1, Ordering::Relaxed);
         let failure = ctx.failure_policy();
+        let inbox = hub.register(job_id);
+        let out = self.drive_job(
+            ctx, &cluster, &inbox, job_id, preferred, policy, preassigned, task_fn, &failure,
+        );
+        hub.unregister(job_id);
+        out
+    }
 
-        // generation guards against stale results after a gang restart.
-        let (tx, rx) = mpsc::channel::<(usize, usize, usize, Result<R>)>();
-        let mut generation = 0usize;
-        let mut attempts = vec![0usize; n];
+    #[allow(clippy::too_many_arguments)]
+    fn drive_job<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        cluster: &Arc<Cluster>,
+        inbox: &Arc<JobInbox>,
+        job_id: u64,
+        preferred: &[Option<usize>],
+        policy: &SchedulePolicy,
+        preassigned: Option<&Assignment>,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+        failure: &FailurePolicy,
+    ) -> Result<Vec<R>> {
+        let n = preferred.len();
 
-        let dispatch_one = |part: usize,
-                            gen: usize,
-                            attempt: usize,
-                            avoid: Option<usize>|
-         -> Result<()> {
-            let t0 = Instant::now();
-            let node = if let (Some(a), None) = (preassigned, avoid) {
-                a.nodes[part]
-            } else {
-                self.place(&cluster, preferred[part], policy, avoid)?
-            };
-            let tx = tx.clone();
+        // Build one executor closure for (partition, generation, attempt).
+        // Each task carries its own Arc to the job's inbox — completion
+        // delivery never touches shared cluster state. Panics inside the
+        // task function are caught and surfaced as ordinary task failures
+        // (retried / gang-restarted like any other).
+        let make_task = |part: usize, gen: usize, attempt: usize| -> TaskFn {
+            let inbox = Arc::clone(inbox);
             let ctx2 = ctx.clone();
             let f = Arc::clone(&task_fn);
             let fail = failure.clone();
-            cluster.submit(
-                node,
-                Box::new(move |node_id| {
-                    let tc = TaskContext {
-                        ctx: ctx2,
-                        job: job_id,
-                        partition: part,
-                        attempt,
-                        node: node_id,
-                    };
-                    let result = if !tc.ctx.cluster().node_alive(node_id) {
-                        Err(anyhow!("node {node_id} died"))
-                    } else if fail.should_fail(job_id, part, attempt) {
-                        Err(anyhow!("injected task failure (job {job_id} part {part} attempt {attempt})"))
-                    } else {
-                        f(&tc)
-                    };
-                    let _ = tx.send((part, gen, attempt, result));
-                }),
-            )?;
-            self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
+            Box::new(move |node_id: usize| {
+                let tc = TaskContext {
+                    ctx: ctx2,
+                    job: job_id,
+                    partition: part,
+                    attempt,
+                    node: node_id,
+                };
+                let result: Result<R> = if !tc.ctx.cluster().node_alive(node_id) {
+                    Err(anyhow!("node {node_id} died"))
+                } else if fail.should_fail(job_id, part, attempt) {
+                    Err(anyhow!(
+                        "injected task failure (job {job_id} part {part} attempt {attempt})"
+                    ))
+                } else {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&tc))) {
+                        Ok(r) => r,
+                        Err(p) => Err(anyhow!(
+                            "task panicked (job {job_id} part {part}): {}",
+                            panic_message(p.as_ref())
+                        )),
+                    }
+                };
+                inbox.push(Completion {
+                    job: job_id,
+                    partition: part,
+                    generation: gen,
+                    attempt,
+                    payload: Box::new(result),
+                });
+            })
+        };
+
+        // Dispatch a full wave (initial launch or gang restart). With a
+        // pre-assignment this is a bare batched enqueue: zero placement
+        // decisions, one channel send per node.
+        let dispatch_wave = |generation: usize, attempts: &[usize]| -> Result<()> {
+            let t0 = Instant::now();
+            match preassigned {
+                Some(a) if a.nodes.iter().all(|&nd| cluster.node_alive(nd)) => {
+                    let mut batches: Vec<Vec<TaskFn>> =
+                        (0..cluster.nodes()).map(|_| Vec::new()).collect();
+                    for part in 0..n {
+                        batches[a.nodes[part]].push(make_task(part, generation, attempts[part]));
+                    }
+                    for (node, batch) in batches.into_iter().enumerate() {
+                        cluster.submit_batch(node, batch)?;
+                    }
+                }
+                _ => {
+                    // No plan (or the plan references a dead node):
+                    // per-task placement.
+                    for part in 0..n {
+                        let node = self.place(cluster, preferred[part], policy, None)?;
+                        cluster.submit(node, make_task(part, generation, attempts[part]))?;
+                    }
+                }
+            }
+            self.stats.tasks_launched.fetch_add(n as u64, Ordering::Relaxed);
             self.stats
                 .dispatch_ns
                 .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             Ok(())
         };
 
-        // Initial dispatch wave.
-        for part in 0..n {
-            dispatch_one(part, generation, attempts[part], None)?;
-        }
+        let mut generation = 0usize;
+        let mut attempts = vec![0usize; n];
+        dispatch_wave(generation, &attempts)?;
 
         let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let mut done = 0usize;
         let mut gang_restarts = 0usize;
 
         while done < n {
-            let (part, gen, _attempt, result) = rx
-                .recv()
-                .map_err(|_| anyhow!("executor channels closed mid-job"))?;
-            if gen != generation {
+            let c = inbox.wait();
+            if c.generation != generation {
                 continue; // stale result from before a gang restart
             }
+            let part = c.partition;
+            let result = *c
+                .payload
+                .downcast::<Result<R>>()
+                .map_err(|_| anyhow!("completion payload type mismatch (job {job_id})"))?;
             match result {
                 Ok(r) => {
                     if results[part].is_none() {
@@ -223,16 +312,19 @@ impl Scheduler {
                     gang_restarts += 1;
                     self.stats.gang_restarts.fetch_add(1, Ordering::Relaxed);
                     if gang_restarts > failure.max_job_restarts {
-                        bail!("gang job {job_id} exceeded {} restarts: {e}", failure.max_job_restarts);
+                        bail!(
+                            "gang job {job_id} exceeded {} restarts: {e}",
+                            failure.max_job_restarts
+                        );
                     }
                     log::debug!("gang job {job_id}: task {part} failed ({e}); restarting ALL tasks");
                     generation += 1;
                     results.iter_mut().for_each(|r| *r = None);
                     done = 0;
-                    for p in 0..n {
-                        attempts[p] += 1;
-                        dispatch_one(p, generation, attempts[p], None)?;
+                    for a in attempts.iter_mut() {
+                        *a += 1;
                     }
+                    dispatch_wave(generation, &attempts)?;
                 }
                 Err(e) => {
                     attempts[part] += 1;
@@ -240,10 +332,19 @@ impl Scheduler {
                     if attempts[part] >= failure.max_attempts {
                         bail!("task {part} of job {job_id} failed {} times: {e}", attempts[part]);
                     }
-                    log::debug!("job {job_id}: retrying task {part} (attempt {}): {e}", attempts[part]);
+                    log::debug!(
+                        "job {job_id}: retrying task {part} (attempt {}): {e}",
+                        attempts[part]
+                    );
                     // Avoid the node that just failed it if it died.
                     let avoid = preferred[part].filter(|&p| !cluster.node_alive(p));
-                    dispatch_one(part, generation, attempts[part], avoid)?;
+                    let t0 = Instant::now();
+                    let node = self.place(cluster, preferred[part], policy, avoid)?;
+                    cluster.submit(node, make_task(part, generation, attempts[part]))?;
+                    self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
+                    self.stats
+                        .dispatch_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 }
             }
         }

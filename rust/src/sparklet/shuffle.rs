@@ -1,6 +1,14 @@
 //! Shuffle over the in-memory block store (paper §3.3: gradient slices are
 //! written by map-side tasks and fetched by the parameter-synchronization
 //! tasks — "shuffle the n-th partition of all gradients to this task").
+//!
+//! This is the f32 fast path of the engine's shuffle layer: gradient
+//! slices are published as zero-copy [`BlockData::F32View`]s into one
+//! shared allocation ([`Shuffle::write_view`]) and consumed without
+//! materialization ([`Shuffle::read_and_sum`] via `as_f32_slice`) — views
+//! end-to-end on the Algorithm 2 gradient path. Generic keyed shuffles
+//! (pair-RDD wide ops) reuse the same `BlockId::Shuffle` namespace with
+//! Object bucket blocks; see `pair_rdd`.
 
 use std::sync::Arc;
 

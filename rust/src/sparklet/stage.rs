@@ -1,0 +1,193 @@
+//! Stage-graph layer: lineage recorded per RDD, split into **stages** at
+//! shuffle boundaries, with chains of narrow transformations (`map` /
+//! `filter` / `zip` / ...) **fused** into one task closure per partition —
+//! a `map.map.filter.collect` chain is ONE job of fused tasks, never three.
+//!
+//! Two pieces:
+//!
+//! * [`StageDag`] — the planner's view: walk an RDD's recorded lineage
+//!   ([`RddMeta`]), absorb narrow ancestors into the current stage, and
+//!   open a new upstream stage at every wide dependency. Drives
+//!   `Rdd::explain()` and the fusion invariants the engine tests assert.
+//! * [`WideDep`] — the executor's view of a shuffle boundary: the
+//!   type-erased map-side stage of a wide transformation. Actions resolve
+//!   every pending `WideDep` (deepest first) as its own job before the
+//!   final fused stage runs; the reduce side then reads bucket blocks from
+//!   the in-memory store, falling back to lineage recompute if a bucket
+//!   was lost to node death.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::context::{SparkletContext, TaskContext};
+use super::job_runner::JobRunner;
+
+/// How an RDD depends on its parents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// No parents (parallelize / generate / stream drain).
+    Source,
+    /// Narrow: partition `p` depends only on parent partition(s) `p` —
+    /// fusable into the same stage.
+    Narrow,
+    /// Wide: depends on ALL parent partitions (shuffle boundary) — splits
+    /// the stage graph.
+    Wide,
+}
+
+/// Lineage record for one RDD (registered at transformation time).
+#[derive(Debug, Clone)]
+pub struct RddMeta {
+    pub id: u64,
+    pub op: &'static str,
+    pub kind: OpKind,
+    pub parents: Vec<u64>,
+}
+
+/// One fused stage: a maximal chain of narrow ops ending at a stage root
+/// (the action's RDD, or the reduce side of a shuffle).
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub id: usize,
+    /// Fused op names, child-first (`ops[0]` is the stage root's op).
+    pub ops: Vec<&'static str>,
+    /// Upstream stages this stage shuffles from.
+    pub parents: Vec<usize>,
+}
+
+/// The stage graph of one RDD's lineage.
+#[derive(Debug, Clone)]
+pub struct StageDag {
+    pub stages: Vec<Stage>,
+    /// Index of the final (action-side) stage in `stages`.
+    pub root: usize,
+}
+
+impl StageDag {
+    /// Build the stage graph for `root_rdd` from the context's lineage
+    /// registry. Stages are split exactly at wide dependencies; everything
+    /// narrow fuses into its consumer's stage. A narrow diamond — e.g.
+    /// `zip` of two maps over one parent — lists each shared ancestor's
+    /// op once (per-stage visited set), so deeply nested diamonds stay
+    /// linear to walk.
+    pub fn build(ctx: &SparkletContext, root_rdd: u64) -> StageDag {
+        let lineage = ctx.lineage_snapshot();
+        let mut dag = StageDag { stages: Vec::new(), root: 0 };
+        let mut memo: HashMap<u64, usize> = HashMap::new();
+        dag.root = dag.make_stage(&lineage, &mut memo, root_rdd);
+        dag
+    }
+
+    fn make_stage(
+        &mut self,
+        lineage: &HashMap<u64, RddMeta>,
+        memo: &mut HashMap<u64, usize>,
+        id: u64,
+    ) -> usize {
+        if let Some(&s) = memo.get(&id) {
+            return s;
+        }
+        let sid = self.stages.len();
+        self.stages.push(Stage { id: sid, ops: Vec::new(), parents: Vec::new() });
+        memo.insert(id, sid);
+        let mut seen = HashSet::new();
+        self.absorb(lineage, memo, id, sid, &mut seen);
+        sid
+    }
+
+    fn absorb(
+        &mut self,
+        lineage: &HashMap<u64, RddMeta>,
+        memo: &mut HashMap<u64, usize>,
+        id: u64,
+        sid: usize,
+        seen: &mut HashSet<u64>,
+    ) {
+        if !seen.insert(id) {
+            return; // shared narrow ancestor already absorbed into this stage
+        }
+        let Some(meta) = lineage.get(&id) else {
+            self.stages[sid].ops.push("?");
+            return;
+        };
+        self.stages[sid].ops.push(meta.op);
+        match meta.kind {
+            OpKind::Source => {}
+            OpKind::Narrow => {
+                for &p in &meta.parents {
+                    self.absorb(lineage, memo, p, sid, seen);
+                }
+            }
+            OpKind::Wide => {
+                for &p in &meta.parents {
+                    let ps = self.make_stage(lineage, memo, p);
+                    self.stages[sid].parents.push(ps);
+                }
+            }
+        }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Human-readable plan, one line per stage (root stage first).
+    pub fn explain(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stages {
+            out.push_str(&format!("stage {}: [{}]", s.id, s.ops.join(" <- ")));
+            if !s.parents.is_empty() {
+                let ps: Vec<String> = s.parents.iter().map(|p| p.to_string()).collect();
+                out.push_str(&format!(" <= shuffle from stages [{}]", ps.join(", ")));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A pending shuffle dependency: the type-erased map-side stage of a wide
+/// transformation. Carried (transitively, parents first) by every
+/// downstream RDD so any action can materialize the whole stage graph in
+/// topological order before running its own fused stage.
+pub struct WideDep {
+    /// Shuffle round id namespacing the bucket blocks.
+    pub shuffle: u64,
+    /// Map-side task count (parent partition count).
+    pub maps: usize,
+    /// Map-side placement (the parent RDD's preferred nodes).
+    pub preferred: Vec<Option<usize>>,
+    /// The map-side task: materialize parent partition `tc.partition` and
+    /// publish its per-reducer buckets to the block store.
+    pub run_map_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>,
+    /// Guards the once-only map-stage run: concurrent actions on clones of
+    /// the same shuffled RDD serialize here instead of double-dispatching.
+    done: Mutex<bool>,
+}
+
+impl WideDep {
+    pub fn new(
+        shuffle: u64,
+        maps: usize,
+        preferred: Vec<Option<usize>>,
+        run_map_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>,
+    ) -> Arc<WideDep> {
+        Arc::new(WideDep { shuffle, maps, preferred, run_map_task, done: Mutex::new(false) })
+    }
+
+    /// Run the map-side stage as one job, once. A concurrent caller blocks
+    /// until the first run finishes, then reuses its buckets. Subsequent
+    /// actions reuse the published buckets too (the reduce side falls back
+    /// to lineage recompute for any bucket lost to node death).
+    pub fn ensure(&self, runner: &JobRunner) -> Result<()> {
+        let mut done = self.done.lock().unwrap();
+        if *done {
+            return Ok(());
+        }
+        runner.run(&self.preferred, Arc::clone(&self.run_map_task))?;
+        *done = true;
+        Ok(())
+    }
+}

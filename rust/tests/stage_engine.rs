@@ -1,0 +1,306 @@
+//! Stage-graph engine integration tests: narrow-stage fusion, two-stage
+//! shuffles, the JobRunner's Drizzle group pre-assignment, the executor
+//! pool's slot-availability signal, and sync-algorithm agreement under
+//! injected task failures and gang restarts.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bigdl::bigdl::allreduce::{central_ps_reduce, ring_allreduce};
+use bigdl::bigdl::optim::Sgd;
+use bigdl::bigdl::ParameterManager;
+use bigdl::sparklet::{
+    FailurePolicy, SchedulePolicy, Shuffle, SparkletContext, TaskContext,
+};
+use bigdl::util::prng::Rng;
+
+#[test]
+fn fused_narrow_chain_is_one_job_one_stage() {
+    let ctx = SparkletContext::local(4);
+    let rdd = ctx.parallelize((0..100i64).collect::<Vec<_>>(), 8);
+    let chain = rdd.map(|x| x * 2).map(|x| x + 1).filter(|x| x % 3 == 0);
+    assert_eq!(chain.stage_dag().num_stages(), 1, "plan:\n{}", chain.explain());
+    let before = ctx.scheduler().stats.snapshot().jobs;
+    let out = chain.collect().unwrap();
+    let after = ctx.scheduler().stats.snapshot().jobs;
+    assert_eq!(after - before, 1, "map.map.filter must execute as ONE fused job");
+    let want: Vec<i64> = (0..100i64)
+        .map(|x| x * 2)
+        .map(|x| x + 1)
+        .filter(|x| x % 3 == 0)
+        .collect();
+    assert_eq!(out, want);
+    let explain = chain.explain();
+    assert!(
+        explain.contains("filter <- map <- map <- parallelize"),
+        "fused chain should read child-first: {explain}"
+    );
+}
+
+/// Property: a fused narrow-stage plan produces byte-identical results to
+/// unfused execution (each transformation materialized through the driver
+/// as its own job).
+#[test]
+fn prop_fused_equals_unfused_execution() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(0xF05E ^ seed);
+        let nodes = 1 + rng.gen_usize(4);
+        let parts = 1 + rng.gen_usize(8);
+        let n = rng.gen_usize(400);
+        let data: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64 % 1000).collect();
+        let ctx = SparkletContext::local(nodes);
+
+        let s0 = ctx.scheduler().stats.snapshot().jobs;
+        let fused = ctx
+            .parallelize(data.clone(), parts)
+            .map(|x| x.wrapping_mul(3))
+            .filter(|x| x % 2 == 0)
+            .map(|x| x - 7)
+            .collect()
+            .unwrap();
+        let s1 = ctx.scheduler().stats.snapshot().jobs;
+        assert_eq!(s1 - s0, 1, "seed {seed}: fused chain must be one job");
+
+        let u1: Vec<i64> = ctx
+            .parallelize(data.clone(), parts)
+            .map(|x| x.wrapping_mul(3))
+            .collect()
+            .unwrap();
+        let u2: Vec<i64> = ctx
+            .parallelize(u1, parts)
+            .filter(|x| x % 2 == 0)
+            .collect()
+            .unwrap();
+        let u3: Vec<i64> = ctx.parallelize(u2, parts).map(|x| x - 7).collect().unwrap();
+        assert_eq!(fused, u3, "seed {seed}: fused != unfused");
+    }
+}
+
+#[test]
+fn stage_dag_splits_at_shuffles_only() {
+    let ctx = SparkletContext::local(2);
+    let base = ctx.parallelize((0..60i64).collect::<Vec<_>>(), 4);
+    let keyed = base.map(|x| x * 2).key_by(|x| x % 4);
+    let reduced = keyed.reduce_by_key(3, |a, b| a + b).map(|(k, v)| (*k, v * 10));
+    let dag = reduced.stage_dag();
+    assert_eq!(dag.num_stages(), 2, "plan:\n{}", reduced.explain());
+    let root = &dag.stages[dag.root];
+    assert_eq!(root.ops[0], "map", "post-shuffle narrow op fuses into the reduce stage");
+    assert!(root.ops.contains(&"reduce_by_key"));
+    assert_eq!(root.parents.len(), 1, "one upstream (map-side) stage");
+}
+
+#[test]
+fn shuffle_ops_survive_injected_failures() {
+    let ctx = SparkletContext::local(3);
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.2,
+        max_attempts: 25,
+        seed: 77,
+        ..Default::default()
+    });
+    let pairs: Vec<(i64, i64)> = (0..300).map(|i| (i % 13, i)).collect();
+    let mut expect: HashMap<i64, i64> = HashMap::new();
+    for (k, v) in &pairs {
+        *expect.entry(*k).or_default() += v;
+    }
+    let rdd = ctx.parallelize(pairs, 6);
+    let got = rdd.reduce_by_key(4, |a, b| a + b).collect_as_map().unwrap();
+    assert_eq!(got, expect);
+    assert!(
+        ctx.scheduler().stats.snapshot().task_retries > 0,
+        "p=0.2 must have injected at least one retry"
+    );
+}
+
+#[test]
+fn shuffle_ops_survive_gang_restarts() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_schedule_policy(SchedulePolicy { gang: true, ..Default::default() });
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.25,
+        seed: 9,
+        max_attempts: 60,
+        max_job_restarts: 300,
+        ..Default::default()
+    });
+    let pairs: Vec<(i64, i64)> = (0..200).map(|i| (i % 7, 1)).collect();
+    let rdd = ctx.parallelize(pairs, 5);
+    let got = rdd.reduce_by_key(3, |a, b| a + b).collect_as_map().unwrap();
+    let mut expect: HashMap<i64, i64> = HashMap::new();
+    for i in 0..200i64 {
+        *expect.entry(i % 7).or_default() += 1;
+    }
+    assert_eq!(got, expect);
+    assert!(
+        ctx.scheduler().stats.snapshot().gang_restarts > 0,
+        "p=0.25 in gang mode must have restarted at least one job"
+    );
+}
+
+/// Ring AllReduce, the centralized PS and Algorithm 2's shuffle-broadcast
+/// (run through the JobRunner with injected failures AND gang restarts)
+/// must all agree on the reduction.
+#[test]
+fn sync_algorithms_agree_under_failures_and_gang_restarts() {
+    let k = 96;
+    let replicas = 3;
+    let n_shards = 4;
+    let mut rng = Rng::new(0xA11CE);
+    let grads: Vec<Vec<f32>> = (0..replicas)
+        .map(|_| (0..k).map(|_| rng.gen_f32() - 0.5).collect())
+        .collect();
+
+    let (ring, _) = ring_allreduce(&grads);
+    let (ps, _) = central_ps_reduce(&grads);
+    for (a, b) in ring.iter().zip(&ps) {
+        assert!((a - b).abs() < 1e-3, "ring vs ps: {a} vs {b}");
+    }
+
+    let ctx = SparkletContext::local(3);
+    ctx.set_schedule_policy(SchedulePolicy { gang: true, ..Default::default() });
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.2,
+        max_attempts: 60,
+        max_job_restarts: 300,
+        seed: 21,
+        ..Default::default()
+    });
+    let pm = ParameterManager::init(&ctx, &vec![0.0f32; k], n_shards, Arc::new(Sgd::new(1.0)))
+        .unwrap();
+    let sh = Shuffle::new(ctx.next_shuffle_id(), replicas, n_shards);
+    let bm = ctx.blocks();
+    for (m, g) in grads.iter().enumerate() {
+        for (s, r) in pm.ranges().iter().enumerate() {
+            sh.write(&bm, m % 3, m, s, Arc::new(g[r.clone()].to_vec()));
+        }
+    }
+    pm.sync_round(&sh, replicas).unwrap();
+    // SGD lr=1 from zero weights: w = -mean(grad) = -(ring_sum / replicas).
+    let w = pm.current_weights().unwrap();
+    for (wi, si) in w.iter().zip(&ring) {
+        assert!(
+            (wi + si / replicas as f32).abs() < 1e-4,
+            "shuffle-broadcast disagrees with ring: {wi} vs {}",
+            -si / replicas as f32
+        );
+    }
+    let sched = ctx.scheduler().stats.snapshot();
+    assert!(
+        sched.gang_restarts > 0,
+        "p=0.2 in gang mode should have forced at least one restart"
+    );
+}
+
+#[test]
+fn group_preassignment_amortizes_placement() {
+    let ctx = SparkletContext::local(4);
+    let runner = ctx.runner();
+    let preferred = ctx.default_preferred(16);
+    let rounds = 10usize;
+    let noop: Arc<dyn Fn(&TaskContext) -> anyhow::Result<usize> + Send + Sync> =
+        Arc::new(|tc| Ok(tc.partition));
+
+    let s0 = ctx.scheduler().stats.snapshot();
+    let all = runner
+        .run_rounds(&preferred, rounds, rounds, |_r| Arc::clone(&noop))
+        .unwrap();
+    let s1 = ctx.scheduler().stats.snapshot();
+    assert_eq!(all.len(), rounds);
+    for r in &all {
+        assert_eq!(r, &(0..16).collect::<Vec<_>>());
+    }
+    assert_eq!(s1.jobs - s0.jobs, rounds as u64);
+    assert_eq!(
+        s1.placements - s0.placements,
+        16,
+        "group loop must plan placements exactly once"
+    );
+
+    // Per-iteration scheduling pays placement for every task of every job.
+    let s2 = ctx.scheduler().stats.snapshot();
+    for _ in 0..rounds {
+        ctx.run_job(&preferred, Arc::clone(&noop)).unwrap();
+    }
+    let s3 = ctx.scheduler().stats.snapshot();
+    assert_eq!(s3.placements - s2.placements, (16 * rounds) as u64);
+}
+
+#[test]
+fn planned_jobs_retry_failed_tasks_individually() {
+    let ctx = SparkletContext::local(3);
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.3,
+        max_attempts: 30,
+        seed: 5,
+        ..Default::default()
+    });
+    let runner = ctx.runner();
+    let preferred = ctx.default_preferred(9);
+    let plan = runner.plan_group(&preferred).unwrap();
+    let task: Arc<dyn Fn(&TaskContext) -> anyhow::Result<usize> + Send + Sync> =
+        Arc::new(|tc| Ok(tc.partition));
+    for _ in 0..5 {
+        let out = runner.run_planned(&plan, Arc::clone(&task)).unwrap();
+        assert_eq!(out, (0..9).collect::<Vec<_>>());
+    }
+    assert!(ctx.scheduler().stats.snapshot().task_retries > 0);
+}
+
+#[test]
+fn delay_scheduling_uses_slot_signal_and_counts_misses() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_schedule_policy(SchedulePolicy {
+        gang: false,
+        locality_wait: Duration::from_millis(2),
+    });
+    // Occupy node 0's only slot with a gated task (run from a side thread;
+    // run_job is synchronous).
+    let gate = Arc::new(AtomicU32::new(0));
+    let g2 = Arc::clone(&gate);
+    let ctx2 = ctx.clone();
+    let blocker = std::thread::spawn(move || {
+        ctx2.run_job(
+            &[Some(0)],
+            Arc::new(move |_tc| -> anyhow::Result<()> {
+                while g2.load(Ordering::Relaxed) == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(())
+            }),
+        )
+        .unwrap();
+    });
+    while ctx.cluster().inflight(0) == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let before = ctx.scheduler().stats.snapshot().locality_misses;
+    let out = ctx
+        .run_job(&[Some(0)], Arc::new(|tc| Ok(tc.node)))
+        .unwrap();
+    let after = ctx.scheduler().stats.snapshot().locality_misses;
+    assert_eq!(out, vec![1], "task must fall back to the idle node");
+    assert!(after > before, "the delay-scheduling timeout must be counted");
+
+    gate.store(1, Ordering::Relaxed);
+    blocker.join().unwrap();
+}
+
+#[test]
+fn task_panics_surface_as_job_errors() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_failure_policy(FailurePolicy { max_attempts: 2, ..Default::default() });
+    let err = ctx
+        .run_job(
+            &[Some(0)],
+            Arc::new(|_tc| -> anyhow::Result<()> { panic!("boom") }),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("panicked"), "got: {err}");
+    // The executor slot survives the panic: the cluster still runs jobs.
+    let out = ctx.run_job(&[Some(0)], Arc::new(|tc| Ok(tc.node))).unwrap();
+    assert_eq!(out.len(), 1);
+}
