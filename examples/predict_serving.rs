@@ -1,0 +1,85 @@
+//! Sharded predict-serving walkthrough: deploy a model into a
+//! `PredictService` (sharded + replicated weight blocks), serve
+//! micro-batched requests through planned `run_rounds` dispatch, survive a
+//! node death mid-stream, and compare the driver dispatch cost against
+//! ad-hoc per-request jobs. Runs on a closure model — no AOT artifacts
+//! needed.
+//!
+//!   cargo run --release --example predict_serving
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
+use bigdl::sparklet::SparkletContext;
+use bigdl::util::prng::Rng;
+
+fn main() -> Result<()> {
+    bigdl::util::logging::init();
+    let nodes = 4;
+    let (dim, classes) = (16, 4);
+    let ctx = SparkletContext::local(nodes);
+
+    // The "model": a linear scorer (full weights + request batch -> rows).
+    let scorer: BatchScorer<Vec<f32>> = Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+        Ok(items
+            .iter()
+            .map(|x| {
+                (0..classes)
+                    .map(|c| x.iter().zip(&w[c * dim..(c + 1) * dim]).map(|(a, b)| a * b).sum())
+                    .collect()
+            })
+            .collect())
+    });
+
+    // Deploy: weights shard across nodes (one owner per node + a replica).
+    let service = PredictService::new(
+        &ctx,
+        scorer,
+        ServingConfig { max_batch: 64, group_size: 32, ..Default::default() },
+    );
+    let mut rng = Rng::new(42);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    service.deploy(&weights)?;
+
+    // Serve: micro-batched rounds through one group plan; argmax runs
+    // task-side, so only (class, score) rows reach the driver.
+    let requests: Vec<Vec<f32>> = (0..2048)
+        .map(|_| (0..dim).map(|_| rng.gen_f32() - 0.5).collect())
+        .collect();
+    let s0 = ctx.scheduler().stats.snapshot();
+    let planned = service.serve(&requests, Reduction::Argmax)?;
+    let s1 = ctx.scheduler().stats.snapshot();
+    let adhoc = service.serve_adhoc(&requests, Reduction::Argmax)?;
+    let s2 = ctx.scheduler().stats.snapshot();
+    anyhow::ensure!(planned == adhoc, "planned and ad-hoc dispatch must agree");
+    println!(
+        "served {} requests: planned placements {} vs ad-hoc {} (dispatch {:.1}us vs {:.1}us)",
+        requests.len(),
+        s1.placements - s0.placements,
+        s2.placements - s1.placements,
+        (s1.dispatch_ns - s0.dispatch_ns) as f64 / 1e3,
+        (s2.dispatch_ns - s1.dispatch_ns) as f64 / 1e3,
+    );
+
+    // Kill a node mid-stream: replicated shards + mid-group replanning
+    // keep serving exact.
+    ctx.cluster().kill_node(1);
+    ctx.blocks().kill_node(1);
+    let after = service.serve(&requests, Reduction::Argmax)?;
+    anyhow::ensure!(planned == after, "predictions must survive node death");
+    let mut queue_depth = vec![0usize; classes];
+    for p in &after {
+        if let Reduced::Class { class, .. } = p {
+            queue_depth[*class] += 1;
+        }
+    }
+    println!(
+        "after killing node 1: predictions identical; class queue depths {queue_depth:?}; \
+         serving stats {:?}",
+        service.stats.snapshot()
+    );
+    println!("predict_serving OK");
+    Ok(())
+}

@@ -10,7 +10,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use bigdl::bigdl::{inference, Adagrad, DistributedOptimizer, Module, Sample, TrainConfig};
+use bigdl::bigdl::{
+    inference, Adagrad, DistributedOptimizer, Module, PredictService, Reduced, Reduction, Sample,
+    ServingConfig, TrainConfig,
+};
 use bigdl::data::textcat::{gen_document, textcat_rdd, TextcatConfig};
 use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
 use bigdl::sparklet::SparkletContext;
@@ -36,7 +39,12 @@ fn main() -> Result<()> {
         TrainConfig { iterations: 20, log_every: 0, ..Default::default() },
     )?;
     optimizer.optimize()?;
-    let weights = Arc::new(optimizer.weights()?);
+
+    // Hand the trained weights to a PredictService — shard-local
+    // re-publication through the block store, no driver-side concat.
+    let service: PredictService<Sample> =
+        PredictService::new(&ctx, inference::module_scorer(&module)?, ServingConfig::default());
+    optimizer.deploy_to(&service)?;
 
     // Online phase: a producer thread feeds "speech recognition results"
     // (token sequences) into the topic at ~2000 calls/sec.
@@ -55,24 +63,28 @@ fn main() -> Result<()> {
         producer_topic.close();
     });
 
-    // Micro-batch inference + routing.
+    // Micro-batch classification through the service: scoring + argmax run
+    // task-side, so only (class, correct) pairs reach the driver. (When no
+    // label check is needed, `sc.classify_stream(&topic, 40, &service,
+    // Reduction::Argmax, |i, preds| ...)` is the one-liner version.)
     let sc = StreamingContext::new(&ctx, Duration::from_millis(50), 512);
     let mut routed = vec![0usize; 5];
     let mut correct = 0usize;
     let mut total = 0usize;
     let stats = sc.run(&topic, 40, |_i, rdd| {
-        let preds = inference::predict(&module, Arc::clone(&weights), &rdd)?;
-        let samples = rdd.collect()?;
-        for (s, row) in samples.iter().zip(&preds) {
-            let class = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i)
-                .unwrap_or(0);
+        let verdicts = service.score_partitions(&rdd, |rows, samples| {
+            let mut out = Vec::with_capacity(rows.len());
+            for (row, s) in rows.iter().zip(samples) {
+                if let Reduced::Class { class, .. } = Reduction::Argmax.apply(row) {
+                    out.push((class, class as i32 == s.label.as_i32()?[0]));
+                }
+            }
+            Ok(out)
+        })?;
+        for (class, ok) in verdicts.into_iter().flatten() {
             routed[class] += 1; // → specialist queue `class`
             total += 1;
-            if class as i32 == s.label.as_i32()?[0] {
+            if ok {
                 correct += 1;
             }
         }

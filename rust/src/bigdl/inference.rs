@@ -1,6 +1,8 @@
-//! Distributed inference: `model.predict(rdd)` (paper Fig 1 line 18) —
-//! one Sparklet job, each task batching its local partition through the
-//! AOT `predict` executable with tail padding.
+//! Distributed inference: `model.predict(rdd)` (paper Fig 1 line 18),
+//! rebuilt on the [`PredictService`] serving subsystem — weights travel as
+//! sharded broadcast blocks, scoring runs through the stage-graph engine's
+//! dispatch paths, and per-sample results are reduced task-side so only
+//! small rows reach the driver.
 
 use std::sync::Arc;
 
@@ -8,21 +10,24 @@ use anyhow::Result;
 
 use super::module::Module;
 use super::sample::{assemble_predict_inputs, Sample};
+use super::serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
 use crate::sparklet::Rdd;
 use crate::tensor::Tensor;
 
-/// Predict per-sample primary-output rows for every sample in the RDD.
-/// Returns one `Vec<f32>` per sample (partition order preserved).
-pub fn predict(module: &Module, weights: Arc<Vec<f32>>, data: &Rdd<Sample>) -> Result<Vec<Vec<f32>>> {
+/// A [`BatchScorer`] over an AOT module's `predict` entry: batches the
+/// request slice through the executable with tail padding and returns one
+/// primary-output row per sample.
+pub fn module_scorer(module: &Module) -> Result<BatchScorer<Sample>> {
     let entry = module.predict_entry()?.clone();
     let module = module.clone();
-    let parts = data.run_partition_job(move |_tc, samples| {
+    Ok(Arc::new(move |weights: &Arc<Vec<f32>>, samples: &[Sample]| {
+        // Zero-copy: each batch re-wraps the node's shared assembled
+        // weights as a tensor (an Arc bump, not a parameter-vector copy).
+        let shared = Arc::clone(weights);
         let mut out: Vec<Vec<f32>> = Vec::with_capacity(samples.len());
         let mut start = 0;
         while start < samples.len() {
-            // Zero-copy weights (shared storage): the per-batch cost is an
-            // Arc bump instead of a full parameter-vector clone (§Perf P1).
-            let params = Tensor::from_f32_shared(vec![weights.len()], Arc::clone(&weights));
+            let params = Tensor::from_f32_shared(vec![shared.len()], Arc::clone(&shared));
             let (inputs, real) = assemble_predict_inputs(&entry, params, samples, start)?;
             let outputs = module.predict(inputs)?;
             let primary = &outputs[0];
@@ -35,7 +40,33 @@ pub fn predict(module: &Module, weights: Arc<Vec<f32>>, data: &Rdd<Sample>) -> R
             start += real;
         }
         Ok(out)
-    })?;
+    }))
+}
+
+/// A throwaway serving instance for the one-shot convenience entry points
+/// below. Replication is off — the service lives for exactly one scoring
+/// job, so the extra shard copies buy nothing; long-lived callers should
+/// hold their own [`PredictService`] (replicated) and `deploy` once
+/// instead of paying a deployment per call.
+fn one_shot_service(
+    module: &Module,
+    weights: &[f32],
+    data: &Rdd<Sample>,
+) -> Result<PredictService<Sample>> {
+    let svc = PredictService::new(
+        data.context(),
+        module_scorer(module)?,
+        ServingConfig { replicate: false, ..Default::default() },
+    );
+    svc.deploy(weights)?;
+    Ok(svc)
+}
+
+/// Predict per-sample primary-output rows for every sample in the RDD.
+/// Returns one `Vec<f32>` per sample (partition order preserved).
+pub fn predict(module: &Module, weights: Arc<Vec<f32>>, data: &Rdd<Sample>) -> Result<Vec<Vec<f32>>> {
+    let svc = one_shot_service(module, &weights, data)?;
+    let parts = svc.score_partitions(data, |rows, _samples| Ok(rows))?;
     Ok(parts.into_iter().flatten().collect())
 }
 
@@ -43,32 +74,15 @@ pub fn predict(module: &Module, weights: Arc<Vec<f32>>, data: &Rdd<Sample>) -> R
 /// only (correct, total) counts travel to the driver (the way BigDL's
 /// `evaluate` aggregates ValidationResults).
 pub fn evaluate_top1(module: &Module, weights: Arc<Vec<f32>>, data: &Rdd<Sample>) -> Result<f64> {
-    let entry = module.predict_entry()?.clone();
-    let module = module.clone();
-    let counts = data.run_partition_job(move |_tc, samples| {
+    let svc = one_shot_service(module, &weights, data)?;
+    let counts = svc.score_partitions(data, |rows, samples| {
         let mut correct = 0usize;
-        let mut start = 0;
-        while start < samples.len() {
-            let params = Tensor::from_f32_shared(vec![weights.len()], Arc::clone(&weights));
-            let (inputs, real) = assemble_predict_inputs(&entry, params, samples, start)?;
-            let outputs = module.predict(inputs)?;
-            let primary = &outputs[0];
-            let rows = primary.shape.first().copied().unwrap_or(1);
-            let row_len = primary.numel() / rows.max(1);
-            let flat = primary.as_f32()?;
-            for r in 0..real {
-                let row = &flat[r * row_len..(r + 1) * row_len];
-                let argmax = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i as i32)
-                    .unwrap_or(-1);
-                if argmax == samples[start + r].label.as_i32()?[0] {
+        for (row, s) in rows.iter().zip(samples) {
+            if let Reduced::Class { class, .. } = Reduction::Argmax.apply(row) {
+                if class as i32 == s.label.as_i32()?[0] {
                     correct += 1;
                 }
             }
-            start += real;
         }
         Ok((correct, samples.len()))
     })?;
@@ -78,8 +92,9 @@ pub fn evaluate_top1(module: &Module, weights: Arc<Vec<f32>>, data: &Rdd<Sample>
     Ok(correct as f64 / total.max(1) as f64)
 }
 
-/// Predict and reduce each sample's output with `f` (e.g. argmax) without
-/// collecting full rows to the driver.
+/// Predict and reduce each sample's output with `f` (e.g. argmax) — the
+/// reduction runs task-side, so only the reduced values travel to the
+/// driver.
 pub fn predict_map<R, F>(
     module: &Module,
     weights: Arc<Vec<f32>>,
@@ -90,6 +105,9 @@ where
     R: Clone + Send + Sync + 'static,
     F: Fn(&[f32]) -> R + Send + Sync + 'static,
 {
-    let rows = predict(module, weights, data)?;
-    Ok(rows.iter().map(|r| f(r)).collect())
+    let svc = one_shot_service(module, &weights, data)?;
+    let parts = svc.score_partitions(data, move |rows, _samples| {
+        Ok(rows.iter().map(|r| f(r)).collect::<Vec<R>>())
+    })?;
+    Ok(parts.into_iter().flatten().collect())
 }

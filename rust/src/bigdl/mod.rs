@@ -8,7 +8,11 @@
 //! * [`param_mgr`] — Algorithm 2 (AllReduce from shuffle + task-side
 //!   broadcast over in-memory block storage);
 //! * [`optim`] — shard-wise optimization methods (SGD/Adagrad/Adam/LARS);
-//! * [`inference`] — distributed `predict` over a Sample RDD;
+//! * [`serving`] — `PredictService`: sharded weight deployment + planned
+//!   micro-batch serving on `JobRunner::run_rounds` with task-side
+//!   reductions;
+//! * [`inference`] — distributed `predict` over a Sample RDD (built on
+//!   the serving subsystem);
 //! * [`allreduce`] — Ring/PS baselines + the §3.3 traffic models;
 //! * [`metrics`] — per-iteration breakdowns and evaluation metrics.
 
@@ -22,6 +26,7 @@ pub mod optimizer;
 pub mod param_mgr;
 pub mod sample;
 pub mod schedule;
+pub mod serving;
 pub mod trigger;
 
 pub use metrics::{IterMetrics, TrainReport};
@@ -31,5 +36,6 @@ pub use optimizer::{DistributedOptimizer, TrainConfig};
 pub use checkpoint::Checkpoint;
 pub use param_mgr::{GradPolicy, ParameterManager};
 pub use schedule::LrSchedule;
+pub use serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
 pub use trigger::{TrainState, Trigger};
 pub use sample::Sample;

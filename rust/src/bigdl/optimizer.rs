@@ -23,6 +23,7 @@ use super::module::Module;
 use super::optim::OptimMethod;
 use super::param_mgr::ParameterManager;
 use super::sample::{assemble_train_inputs, draw_batch_indices, Sample};
+use super::serving::PredictService;
 use super::trigger::{TrainState, Trigger};
 use crate::sparklet::{GroupPlan, Rdd, Shuffle, SparkletContext};
 use crate::tensor::Tensor;
@@ -321,5 +322,17 @@ impl DistributedOptimizer {
     /// Latest full weight vector (driver-side).
     pub fn weights(&self) -> Result<Vec<f32>> {
         self.pm.current_weights()
+    }
+
+    /// Hand the trained weights to a serving instance WITHOUT a
+    /// driver-side concat: one task per weight shard re-publishes the
+    /// training shard (node-local, zero-copy for co-placed shards) under
+    /// the service's serving round — weights go train → serve entirely
+    /// through the block store.
+    pub fn deploy_to<T: Clone + Send + Sync + 'static>(
+        &self,
+        service: &PredictService<T>,
+    ) -> Result<()> {
+        service.deploy_sharded(&self.pm.weights_broadcast(), self.pm.param_count)
     }
 }

@@ -5,10 +5,16 @@
 //! Weight shard `n` and its optimizer state live in the block store on the
 //! node that runs sync task `n` (task `n` of every "parameter
 //! synchronization" job manages partition `n`, like a parameter server).
-//! Updates are copy-on-write: each round publishes *new* shard blocks
-//! under the next broadcast round id — nothing is mutated in place, which
-//! is exactly the functional-compute-model constraint the paper works
-//! within.
+//! Updates are copy-on-write: each round publishes *new* shard blocks AND
+//! new optimizer-state blocks under the next (globally unique) broadcast
+//! round id — nothing is mutated in place, which is exactly the
+//! functional-compute-model constraint the paper works within. The
+//! step/round counters commit only AFTER the round's jobs succeed; a
+//! failed round rolls back every staged block (new shards, staged
+//! aggregates, the new round's state) and leaves the manager exactly as
+//! it was — and because staged blocks are namespaced by the dead round's
+//! id, a straggler task finishing after the rollback cannot corrupt any
+//! later round.
 //!
 //! Extensions beyond the paper's Algorithm 2 (all standard BigDL
 //! features): learning-rate schedules, constant gradient clamping
@@ -78,7 +84,7 @@ impl ParameterManager {
             for b in 0..optim.state_bufs() {
                 bm.put(
                     owner,
-                    Self::state_key(instance, n, b),
+                    Self::state_key(instance, round0, n, b),
                     BlockData::F32(Arc::new(vec![0.0; r.len()])),
                 );
             }
@@ -97,8 +103,15 @@ impl ParameterManager {
         })
     }
 
-    fn state_key(instance: u64, shard: usize, buf: usize) -> BlockId {
-        BlockId::Named(format!("optstate/{instance}/{shard}/{buf}"))
+    /// Optimizer-state block for `shard`/`buf` as of broadcast `round`.
+    /// State is copy-on-write per round: a sync round stages its state
+    /// under the (globally unique) new round id and only the commit path
+    /// retires the old round's — so a failed round can drop its staged
+    /// state without corrupting the committed round, and a straggler task
+    /// of an abandoned round can only ever write under that dead round's
+    /// id, never under a later retry's.
+    fn state_key(instance: u64, round: u64, shard: usize, buf: usize) -> BlockId {
+        BlockId::Named(format!("optstate/{instance}/{round}/{shard}/{buf}"))
     }
 
     pub fn ranges(&self) -> &[std::ops::Range<usize>] {
@@ -129,12 +142,13 @@ impl ParameterManager {
     /// Concatenated optimizer-state buffers (for checkpointing).
     pub fn export_state(&self) -> Result<Vec<Vec<f32>>> {
         let bm = self.ctx.blocks();
+        let round = self.round.load(Ordering::SeqCst);
         (0..self.optim.state_bufs())
             .map(|b| {
                 let mut out = Vec::with_capacity(self.param_count);
                 for n in 0..self.n_shards {
                     let shard = bm
-                        .get(0, &Self::state_key(self.instance, n, b))
+                        .get(0, &Self::state_key(self.instance, round, n, b))
                         .ok_or_else(|| anyhow!("missing optimizer state {n}/{b}"))?
                         .as_f32()?;
                     out.extend_from_slice(&shard);
@@ -157,12 +171,17 @@ impl ParameterManager {
             let owner = n % nodes;
             bcast.publish(&bm, owner, n, Arc::new(weights[r.clone()].to_vec()));
             for (b, buf) in state.iter().enumerate() {
-                bm.put(owner, Self::state_key(self.instance, n, b), BlockData::F32(Arc::new(buf[r.clone()].to_vec())));
+                bm.put(owner, Self::state_key(self.instance, new_round, n, b), BlockData::F32(Arc::new(buf[r.clone()].to_vec())));
             }
         }
         self.round.store(new_round, Ordering::SeqCst);
         self.step.store(step, Ordering::SeqCst);
         old.cleanup(&bm);
+        for n in 0..self.n_shards {
+            for b in 0..self.optim.state_bufs() {
+                bm.remove(&Self::state_key(self.instance, old.id, n, b));
+            }
+        }
         Ok(())
     }
 
@@ -204,7 +223,10 @@ impl ParameterManager {
         let policy = self.grad_policy.read().unwrap().clone();
         let old_round = self.round.load(Ordering::SeqCst);
         let new_round = self.ctx.next_broadcast_id();
-        let step = self.step.fetch_add(1, Ordering::SeqCst) + 1;
+        // The step this round WILL commit. It is only stored (together
+        // with the round id) after both jobs succeed — a failed round must
+        // leave step, round and weights exactly as they were.
+        let step = self.step.load(Ordering::SeqCst) + 1;
         let lr_mult = self.lr_schedule.read().unwrap().multiplier(step) as f32;
 
         let old_bcast = Broadcast::new(old_round, self.n_shards);
@@ -225,98 +247,137 @@ impl ParameterManager {
         // The aggregated slice is parked in the block store so phase B does
         // not re-read the raw shuffle slices.
         let agg_key = |shard: usize| BlockId::Named(format!("agg/{new_round}/{shard}"));
-        let clip_scale: f32 = if let Some(max_norm) = policy.clip_l2 {
+        let two_phase = policy.clip_l2.is_some();
+
+        // Both jobs run inside this closure so success and failure share
+        // one commit/rollback point below.
+        let run = move || -> Result<()> {
+            let clip_scale: f32 = if let Some(max_norm) = policy.clip_l2 {
+                let clip_const = policy.clip_const;
+                let norm_task: Arc<dyn Fn(&TaskContext) -> Result<f64> + Send + Sync> =
+                    Arc::new(move |tc| {
+                        let bm = tc.blocks();
+                        let n = tc.partition;
+                        let mut grad = sh.read_and_sum(&bm, tc.node, n)?;
+                        crate::tensor::scale(&mut grad, scale);
+                        if let Some(c) = clip_const {
+                            grad.iter_mut().for_each(|g| *g = g.clamp(-c, c));
+                        }
+                        let sq: f64 = grad.iter().map(|g| (*g as f64) * (*g as f64)).sum();
+                        bm.put(
+                            tc.node,
+                            BlockId::Named(format!("agg/{new_round}/{n}")),
+                            BlockData::F32(Arc::new(grad)),
+                        );
+                        Ok(sq)
+                    });
+                let sqnorms = match plan {
+                    Some(p) => runner.run_planned(p, norm_task)?,
+                    None => runner.run(&preferred, norm_task)?,
+                };
+                let norm = sqnorms.iter().sum::<f64>().sqrt() as f32;
+                if norm > max_norm {
+                    max_norm / norm
+                } else {
+                    1.0
+                }
+            } else {
+                1.0
+            };
+
             let clip_const = policy.clip_const;
-            let norm_task: Arc<dyn Fn(&TaskContext) -> Result<f64> + Send + Sync> =
+            let update_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
                 Arc::new(move |tc| {
                     let bm = tc.blocks();
                     let n = tc.partition;
-                    let mut grad = sh.read_and_sum(&bm, tc.node, n)?;
-                    crate::tensor::scale(&mut grad, scale);
-                    if let Some(c) = clip_const {
-                        grad.iter_mut().for_each(|g| *g = g.clamp(-c, c));
+                    // (2)-(3): aggregate the n-th slice of all local gradients.
+                    let mut grad = if two_phase {
+                        bm.get(tc.node, &BlockId::Named(format!("agg/{new_round}/{n}")))
+                            .ok_or_else(|| anyhow!("aggregated slice {n} missing"))?
+                            .as_f32()?
+                            .as_ref()
+                            .clone()
+                    } else {
+                        let mut g = sh.read_and_sum(&bm, tc.node, n)?;
+                        crate::tensor::scale(&mut g, scale);
+                        if let Some(c) = clip_const {
+                            g.iter_mut().for_each(|x| *x = x.clamp(-c, c));
+                        }
+                        g
+                    };
+                    if clip_scale != 1.0 {
+                        crate::tensor::scale(&mut grad, clip_scale);
                     }
-                    let sq: f64 = grad.iter().map(|g| (*g as f64) * (*g as f64)).sum();
-                    bm.put(
-                        tc.node,
-                        BlockId::Named(format!("agg/{new_round}/{n}")),
-                        BlockData::F32(Arc::new(grad)),
-                    );
-                    Ok(sq)
+                    // (4): update the n-th weight partition (copy-on-write;
+                    // state is staged under `new_round` and committed below).
+                    let mut weights = old_bcast.fetch(&bm, tc.node, n)?.as_ref().clone();
+                    let mut state: Vec<Vec<f32>> = (0..state_bufs)
+                        .map(|b| {
+                            bm.get(tc.node, &Self::state_key(instance, old_round, n, b))
+                                .ok_or_else(|| anyhow!("optimizer state {n}/{b} missing"))?
+                                .as_f32()
+                                .map(|a| a.as_ref().clone())
+                        })
+                        .collect::<Result<_>>()?;
+                    optim.update(step, lr_mult, &mut weights, &grad, &mut state);
+                    for (b, s) in state.into_iter().enumerate() {
+                        bm.put(
+                            tc.node,
+                            Self::state_key(instance, new_round, n, b),
+                            BlockData::F32(Arc::new(s)),
+                        );
+                    }
+                    // (5): task-side broadcast of the updated shard.
+                    new_bcast.publish(&bm, tc.node, n, Arc::new(weights));
+                    Ok(())
                 });
-            let sqnorms = match plan {
-                Some(p) => runner.run_planned(p, norm_task)?,
-                None => runner.run(&preferred, norm_task)?,
+            match plan {
+                Some(p) => runner.run_planned(p, update_task)?,
+                None => runner.run(&preferred, update_task)?,
             };
-            let norm = sqnorms.iter().sum::<f64>().sqrt() as f32;
-            if norm > max_norm {
-                max_norm / norm
-            } else {
-                1.0
-            }
-        } else {
-            1.0
+            Ok(())
         };
 
-        let two_phase = policy.clip_l2.is_some();
-        let clip_const = policy.clip_const;
-        let update_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
-            Arc::new(move |tc| {
-                let bm = tc.blocks();
-                let n = tc.partition;
-                // (2)-(3): aggregate the n-th slice of all local gradients.
-                let mut grad = if two_phase {
-                    bm.get(tc.node, &BlockId::Named(format!("agg/{new_round}/{n}")))
-                        .ok_or_else(|| anyhow!("aggregated slice {n} missing"))?
-                        .as_f32()?
-                        .as_ref()
-                        .clone()
-                } else {
-                    let mut g = sh.read_and_sum(&bm, tc.node, n)?;
-                    crate::tensor::scale(&mut g, scale);
-                    if let Some(c) = clip_const {
-                        g.iter_mut().for_each(|x| *x = x.clamp(-c, c));
-                    }
-                    g
-                };
-                if clip_scale != 1.0 {
-                    crate::tensor::scale(&mut grad, clip_scale);
-                }
-                // (4): update the n-th weight partition (copy-on-write).
-                let mut weights = old_bcast.fetch(&bm, tc.node, n)?.as_ref().clone();
-                let mut state: Vec<Vec<f32>> = (0..state_bufs)
-                    .map(|b| {
-                        bm.get(tc.node, &Self::state_key(instance, n, b))
-                            .ok_or_else(|| anyhow!("optimizer state {n}/{b} missing"))?
-                            .as_f32()
-                            .map(|a| a.as_ref().clone())
-                    })
-                    .collect::<Result<_>>()?;
-                optim.update(step, lr_mult, &mut weights, &grad, &mut state);
-                for (b, s) in state.into_iter().enumerate() {
-                    bm.put(tc.node, Self::state_key(instance, n, b), BlockData::F32(Arc::new(s)));
-                }
-                // (5): task-side broadcast of the updated shard.
-                new_bcast.publish(&bm, tc.node, n, Arc::new(weights));
-                Ok(())
-            });
-        match plan {
-            Some(p) => runner.run_planned(p, update_task)?,
-            None => runner.run(&preferred, update_task)?,
-        };
-
-        self.round.store(new_round, Ordering::SeqCst);
-        // Retire consumed blocks (shuffle slices, staged aggregates,
-        // previous weights).
         let bm = self.ctx.blocks();
-        shuffle.cleanup(&bm);
-        if two_phase {
-            for n in 0..self.n_shards {
-                bm.remove(&agg_key(n));
+        match run() {
+            Ok(()) => {
+                // Commit: advance step + round, then retire consumed blocks
+                // (shuffle slices, staged aggregates, previous weights and
+                // the previous round's optimizer state).
+                self.step.store(step, Ordering::SeqCst);
+                self.round.store(new_round, Ordering::SeqCst);
+                shuffle.cleanup(&bm);
+                if two_phase {
+                    for n in 0..self.n_shards {
+                        bm.remove(&agg_key(n));
+                    }
+                }
+                for n in 0..self.n_shards {
+                    for b in 0..state_bufs {
+                        bm.remove(&Self::state_key(instance, old_round, n, b));
+                    }
+                }
+                old_bcast.cleanup(&bm);
+                Ok(new_bcast)
+            }
+            Err(e) => {
+                // Roll back every staged block: aggregates, partially
+                // published new-round shards, the new round's staged
+                // optimizer state — and drop the consumed gradient slices
+                // (the round is dead; a retry needs fresh gradients). A
+                // straggler task of this dead round can only republish
+                // under `new_round`, an id no retry will ever reuse.
+                for n in 0..self.n_shards {
+                    bm.remove(&agg_key(n));
+                    for b in 0..state_bufs {
+                        bm.remove(&Self::state_key(instance, new_round, n, b));
+                    }
+                }
+                new_bcast.cleanup(&bm);
+                shuffle.cleanup(&bm);
+                Err(e)
             }
         }
-        old_bcast.cleanup(&bm);
-        Ok(new_bcast)
     }
 }
 
@@ -367,6 +428,54 @@ mod tests {
         let bm = ctx.blocks();
         assert!(first.fetch(&bm, 0, 0).is_err());
         assert_eq!(pm.current_weights().unwrap().len(), 10);
+    }
+
+    /// Regression (step/round commit): a failed sync round must leave the
+    /// optimizer step, round id and weights untouched, and must not leak
+    /// staged blocks (previously `step` was bumped via `fetch_add` BEFORE
+    /// the jobs ran, and consumed shuffle/agg blocks stayed resident).
+    #[test]
+    fn failed_sync_round_leaves_state_unchanged() {
+        use crate::sparklet::FailurePolicy;
+        let ctx = SparkletContext::local(2);
+        let init: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let pm = ParameterManager::init(
+            &ctx,
+            &init,
+            2,
+            Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.5) }),
+        )
+        .unwrap();
+        // L2 clipping on: exercises the two-phase path with staged agg/ blocks.
+        pm.set_grad_policy(GradPolicy { clip_l2: Some(10.0), ..Default::default() });
+        let baseline = ctx.blocks().usage().0;
+        let w0 = pm.current_weights().unwrap();
+
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 12]]);
+        ctx.set_failure_policy(FailurePolicy {
+            task_fail_prob: 1.0,
+            max_attempts: 2,
+            ..Default::default()
+        });
+        assert!(pm.sync_round(&sh, 1).is_err(), "every attempt fails -> round must error");
+        ctx.set_failure_policy(FailurePolicy::default());
+
+        assert_eq!(pm.optimizer_step(), 0, "failed round must not advance the step");
+        assert_eq!(pm.current_weights().unwrap(), w0, "weights must be untouched");
+        assert_eq!(
+            ctx.blocks().usage().0,
+            baseline,
+            "staged agg/state/shard blocks and consumed slices must be cleaned"
+        );
+
+        // A subsequent round commits normally and matches serial SGD.
+        let sh2 = write_grads(&ctx, &pm, &[vec![1.0f32; 12]]);
+        pm.sync_round(&sh2, 1).unwrap();
+        assert_eq!(pm.optimizer_step(), 1);
+        let got = pm.current_weights().unwrap();
+        for (a, b) in got.iter().zip(init.iter().map(|w| w - 0.5)) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -1,0 +1,564 @@
+//! `PredictService` — sharded model serving on the stage-graph engine
+//! (the piece that makes `model.predict(rdd)` ride the same machinery as
+//! training, instead of ad-hoc one-off jobs).
+//!
+//! * **Weights** live as sharded broadcast blocks in the
+//!   [`BlockManager`](crate::sparklet::BlockManager), placed exactly like
+//!   [`ParameterManager`](super::param_mgr::ParameterManager) shards
+//!   (shard `n` owned by node `n % nodes`), optionally replicated on a
+//!   second node so serving survives single-node death. Deployment is
+//!   copy-on-write: a new round is published and swapped in, and the
+//!   outgoing round survives one more deployment cycle so in-flight
+//!   serves finish against intact blocks. Tasks read weights through a
+//!   per-node assembled cache — one shard-concat per node per deployment,
+//!   zero-copy `Arc` clones after that.
+//! * **Dispatch**: incoming requests are micro-batched and driven through
+//!   [`JobRunner::run_rounds_with`] with a Drizzle [`GroupPlan`] —
+//!   placements planned once per serving group, each round a bare batched
+//!   enqueue (the same amortization the training loop gets). A planned
+//!   node dying mid-group triggers a replan, not a fallback.
+//! * **Results** are reduced task-side ([`Reduction`]: argmax / top-k /
+//!   threshold), so only small [`Reduced`] rows travel to the driver.
+//!
+//! The service is generic over the request type `T` and a [`BatchScorer`]
+//! (full weights + a slice of requests → one output row per request), so
+//! it serves AOT modules (see `inference::module_scorer`) and plain
+//! closure models (tests, benches) through one path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::sparklet::{
+    BlockData, BlockId, BlockManager, Broadcast, JobRunner, Rdd, SparkletContext, TaskContext,
+};
+use crate::tensor::partition_ranges;
+
+/// Batch scoring function: `(full_weights, requests) -> one row per
+/// request`. Weights arrive as the node's cached assembled vector (an
+/// `Arc` clone, not a copy — hold or slice it freely). Must be
+/// deterministic (serving tasks are retried like any other task).
+pub type BatchScorer<T> = Arc<dyn Fn(&Arc<Vec<f32>>, &[T]) -> Result<Vec<Vec<f32>>> + Send + Sync>;
+
+/// Task-side reduction applied to each predicted row before anything
+/// travels to the driver.
+#[derive(Debug, Clone, Copy)]
+pub enum Reduction {
+    /// Highest-scoring class index + its score.
+    Argmax,
+    /// The k highest-scoring (index, score) pairs, best first.
+    TopK(usize),
+    /// Indices of every score ≥ the threshold.
+    Threshold(f32),
+    /// The full row (escape hatch; ships the whole output vector).
+    Full,
+}
+
+/// One request's reduced prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reduced {
+    Class { class: usize, score: f32 },
+    TopK(Vec<(usize, f32)>),
+    Over { hits: Vec<usize> },
+    Row(Vec<f32>),
+}
+
+impl Reduction {
+    pub fn apply(&self, row: &[f32]) -> Reduced {
+        match *self {
+            Reduction::Argmax => {
+                let (class, score) = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, &s)| (i, s))
+                    .unwrap_or((0, f32::NEG_INFINITY));
+                Reduced::Class { class, score }
+            }
+            Reduction::TopK(k) => {
+                let mut scored: Vec<(usize, f32)> = row.iter().copied().enumerate().collect();
+                scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+                scored.truncate(k);
+                Reduced::TopK(scored)
+            }
+            Reduction::Threshold(t) => Reduced::Over {
+                hits: row
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &s)| s >= t)
+                    .map(|(i, _)| i)
+                    .collect(),
+            },
+            Reduction::Full => Reduced::Row(row.to_vec()),
+        }
+    }
+}
+
+/// Serving knobs.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Weight shards; defaults to the node count (one owner per node).
+    pub n_shards: Option<usize>,
+    /// Serving group size: rounds dispatched per placement plan.
+    pub group_size: usize,
+    /// Requests per micro-batch round.
+    pub max_batch: usize,
+    /// Replicate each weight shard on a second node so serving survives
+    /// single-node death (the replica is found by the block manager's
+    /// cluster-wide lookup).
+    pub replicate: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { n_shards: None, group_size: 32, max_batch: 256, replicate: true }
+    }
+}
+
+/// Cumulative serving counters.
+#[derive(Debug, Default)]
+pub struct ServingStats {
+    pub rounds: AtomicU64,
+    pub requests: AtomicU64,
+    /// Placement plans computed (group boundaries + dead-node refreshes).
+    pub replans: AtomicU64,
+    pub deploys: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServingSnapshot {
+    pub rounds: u64,
+    pub requests: u64,
+    pub replans: u64,
+    pub deploys: u64,
+}
+
+impl ServingStats {
+    pub fn snapshot(&self) -> ServingSnapshot {
+        ServingSnapshot {
+            rounds: self.rounds.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            replans: self.replans.load(Ordering::Relaxed),
+            deploys: self.deploys.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One deployed weight round (plus the previous round, kept alive for one
+/// deployment cycle so a serve that captured it before a hot redeploy
+/// finishes against intact blocks).
+struct Deployment {
+    bcast: Broadcast,
+    param_count: usize,
+    prev: Option<Broadcast>,
+}
+
+/// Per-node cache of the assembled (concatenated) weight vector for one
+/// broadcast round: tasks pay ONE shard-concat per node per deployment,
+/// every later round on that node is a zero-copy `Arc` clone. Keys are
+/// namespaced by service instance so one service's sweep never clears
+/// another's cache.
+fn assembled_key(instance: u64, round: u64) -> BlockId {
+    BlockId::Named(format!("serving/{instance}/assembled/{round}"))
+}
+
+fn fetch_assembled(
+    bm: &BlockManager,
+    instance: u64,
+    bcast: Broadcast,
+    node: usize,
+) -> Result<Arc<Vec<f32>>> {
+    let key = assembled_key(instance, bcast.id);
+    if let Some(cached) = bm.get_on(node, &key) {
+        return cached.as_f32();
+    }
+    let assembled = Arc::new(bcast.fetch_all_concat(bm, node)?);
+    bm.put(node, key, BlockData::F32(Arc::clone(&assembled)));
+    Ok(assembled)
+}
+
+/// Retire one round's blocks: weight shards + per-node assembled caches.
+fn retire(bm: &BlockManager, instance: u64, bcast: Broadcast) {
+    bcast.cleanup(bm);
+    bm.remove(&assembled_key(instance, bcast.id));
+}
+
+/// Drop every assembled-cache block of this service except the rounds in
+/// `keep`. A task racing a retire can re-create a dead round's cache
+/// entry after the fact; sweeping on each deployment bounds that leak to
+/// one deployment cycle.
+fn sweep_assembled(bm: &BlockManager, instance: u64, keep: &[u64]) {
+    let prefix = format!("serving/{instance}/assembled/");
+    let keep: Vec<String> = keep.iter().map(|r| format!("{prefix}{r}")).collect();
+    bm.remove_matching(|b| {
+        matches!(b, BlockId::Named(s) if s.starts_with(&prefix) && !keep.iter().any(|k| k == s))
+    });
+}
+
+/// The serving subsystem: sharded weights + planned micro-batch dispatch.
+pub struct PredictService<T> {
+    ctx: SparkletContext,
+    runner: JobRunner,
+    scorer: BatchScorer<T>,
+    cfg: ServingConfig,
+    /// Unique id namespacing this service's cache blocks (two services on
+    /// one context must not collide).
+    instance: u64,
+    deployed: Mutex<Option<Deployment>>,
+    pub stats: ServingStats,
+}
+
+impl<T: Clone + Send + Sync + 'static> PredictService<T> {
+    pub fn new(ctx: &SparkletContext, scorer: BatchScorer<T>, cfg: ServingConfig) -> PredictService<T> {
+        PredictService {
+            ctx: ctx.clone(),
+            runner: ctx.runner(),
+            scorer,
+            cfg,
+            instance: ctx.next_broadcast_id(),
+            deployed: Mutex::new(None),
+            stats: ServingStats::default(),
+        }
+    }
+
+    pub fn context(&self) -> &SparkletContext {
+        &self.ctx
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.deployed.lock().unwrap().as_ref().map(|d| d.param_count).unwrap_or(0)
+    }
+
+    /// The broadcast round serving tasks read weights from.
+    pub fn weights_round(&self) -> Result<Broadcast> {
+        self.deployed
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|d| d.bcast)
+            .ok_or_else(|| anyhow::anyhow!("no weights deployed (call deploy / deploy_sharded first)"))
+    }
+
+    /// Driver-side deployment: shard `weights` N ways, publish shard `n`
+    /// on its owner (plus a replica), swap the round. Owners and replicas
+    /// are chosen among ALIVE nodes only — a redeploy after a node death
+    /// must not park a shard on a dead store.
+    pub fn deploy(&self, weights: &[f32]) -> Result<()> {
+        ensure!(!weights.is_empty(), "empty weight vector");
+        let alive = self.ctx.cluster().alive_nodes();
+        ensure!(!alive.is_empty(), "no alive nodes to deploy onto");
+        let parts = self.cfg.n_shards.unwrap_or(self.ctx.nodes()).max(1).min(weights.len());
+        let bcast = Broadcast::new(self.ctx.next_broadcast_id(), parts);
+        let bm = self.ctx.blocks();
+        for (n, r) in partition_ranges(weights.len(), parts).iter().enumerate() {
+            let shard = Arc::new(weights[r.clone()].to_vec());
+            let owner = alive[n % alive.len()];
+            bcast.publish(&bm, owner, n, Arc::clone(&shard));
+            if self.cfg.replicate && alive.len() > 1 {
+                bcast.publish(&bm, alive[(n + 1) % alive.len()], n, shard);
+            }
+        }
+        self.swap(bcast, weights.len());
+        Ok(())
+    }
+
+    /// Sharded deployment WITHOUT a driver-side concat: one task per
+    /// shard of `src` re-publishes it (a node-local, zero-copy `Arc`
+    /// clone for co-placed shards) under this service's round. This is
+    /// how a trained `ParameterManager`'s weights reach serving — see
+    /// `DistributedOptimizer::deploy_to`.
+    pub fn deploy_sharded(&self, src: &Broadcast, param_count: usize) -> Result<()> {
+        ensure!(src.parts > 0, "source broadcast has no shards");
+        let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
+        let src = *src;
+        let replicate = self.cfg.replicate;
+        let task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
+            Arc::new(move |tc: &TaskContext| {
+                let bm = tc.blocks();
+                let shard = src.fetch(&bm, tc.node, tc.partition)?;
+                dst.publish(&bm, tc.node, tc.partition, Arc::clone(&shard));
+                if replicate {
+                    // Replica on the next ALIVE node after this one (the
+                    // task itself runs on an alive node, so only the
+                    // replica placement needs the liveness check).
+                    let alive = tc.ctx.cluster().alive_nodes();
+                    let next = alive
+                        .iter()
+                        .copied()
+                        .find(|&x| x > tc.node)
+                        .or_else(|| alive.first().copied())
+                        .filter(|&x| x != tc.node);
+                    if let Some(r) = next {
+                        dst.publish(&bm, r, tc.partition, shard);
+                    }
+                }
+                Ok(())
+            });
+        self.runner.run(&self.ctx.default_preferred(src.parts), task)?;
+        self.swap(dst, param_count);
+        Ok(())
+    }
+
+    /// Install a new round. The outgoing round is kept alive as `prev`
+    /// until the NEXT deployment retires it, so a serve that captured the
+    /// old round before a hot redeploy completes against intact blocks
+    /// (only two redeploys inside one in-flight serve can starve it).
+    fn swap(&self, bcast: Broadcast, param_count: usize) {
+        let bm = self.ctx.blocks();
+        let mut guard = self.deployed.lock().unwrap();
+        let prev = match guard.take() {
+            Some(mut d) => {
+                if let Some(p) = d.prev.take() {
+                    retire(&bm, self.instance, p);
+                }
+                Some(d.bcast)
+            }
+            None => None,
+        };
+        let mut keep = vec![bcast.id];
+        keep.extend(prev.map(|p| p.id));
+        *guard = Some(Deployment { bcast, param_count, prev });
+        drop(guard);
+        sweep_assembled(&bm, self.instance, &keep);
+        self.stats.deploys.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Reassembled served weights (driver-side convenience for tests /
+    /// checkpoints).
+    pub fn current_weights(&self) -> Result<Vec<f32>> {
+        self.weights_round()?.fetch_all_concat(&self.ctx.blocks(), 0)
+    }
+
+    /// Serve a request batch: micro-batched into rounds of
+    /// `cfg.max_batch`, dispatched through `JobRunner::run_rounds_with`
+    /// with a serving [`GroupPlan`](crate::sparklet::GroupPlan) — planned
+    /// once per `cfg.group_size` rounds, every round a bare batched
+    /// enqueue. Results come back task-side reduced, in request order.
+    pub fn serve(&self, requests: &[T], red: Reduction) -> Result<Vec<Reduced>> {
+        self.dispatch(requests, red, true)
+    }
+
+    /// The un-amortized baseline: identical micro-batching and scoring,
+    /// but every round is placed per-task (one ad-hoc job per batch, the
+    /// pre-PredictService `predict` behavior). Kept for the serving bench
+    /// and planned-vs-ad-hoc equivalence tests.
+    pub fn serve_adhoc(&self, requests: &[T], red: Reduction) -> Result<Vec<Reduced>> {
+        self.dispatch(requests, red, false)
+    }
+
+    fn dispatch(&self, requests: &[T], red: Reduction, planned: bool) -> Result<Vec<Reduced>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bcast = self.weights_round()?;
+        let width = self.ctx.nodes();
+        let chunk = self.cfg.max_batch.max(1);
+        let batches: Vec<Arc<Vec<T>>> =
+            requests.chunks(chunk).map(|c| Arc::new(c.to_vec())).collect();
+        let preferred = self.ctx.default_preferred(width);
+        let rounds = batches.len();
+        let round_results = if planned {
+            let replans = &self.stats.replans;
+            self.runner.run_rounds_with(
+                &preferred,
+                rounds,
+                self.cfg.group_size,
+                |r| self.round_task(Arc::clone(&batches[r]), width, red, bcast),
+                |info, _| {
+                    if info.replanned {
+                        replans.fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            )?
+        } else {
+            let mut out = Vec::with_capacity(rounds);
+            for b in &batches {
+                out.push(
+                    self.runner
+                        .run(&preferred, self.round_task(Arc::clone(b), width, red, bcast))?,
+                );
+            }
+            out
+        };
+        self.stats.rounds.fetch_add(rounds as u64, Ordering::Relaxed);
+        self.stats.requests.fetch_add(requests.len() as u64, Ordering::Relaxed);
+        // Rounds in order, partitions in order, items in slice order ==
+        // request order.
+        Ok(round_results.into_iter().flatten().flatten().collect())
+    }
+
+    /// One serving round's task: score this partition's slice of the
+    /// micro-batch against the deployed shards and reduce task-side.
+    fn round_task(
+        &self,
+        batch: Arc<Vec<T>>,
+        width: usize,
+        red: Reduction,
+        bcast: Broadcast,
+    ) -> Arc<dyn Fn(&TaskContext) -> Result<Vec<Reduced>> + Send + Sync> {
+        let scorer = Arc::clone(&self.scorer);
+        let instance = self.instance;
+        let ranges = partition_ranges(batch.len(), width);
+        Arc::new(move |tc: &TaskContext| {
+            let items = &batch[ranges[tc.partition].clone()];
+            if items.is_empty() {
+                return Ok(Vec::new());
+            }
+            let weights = fetch_assembled(&tc.blocks(), instance, bcast, tc.node)?;
+            let rows = scorer(&weights, items)?;
+            ensure!(
+                rows.len() == items.len(),
+                "scorer returned {} rows for {} requests",
+                rows.len(),
+                items.len()
+            );
+            Ok(rows.iter().map(|r| red.apply(r)).collect())
+        })
+    }
+
+    /// Score an existing RDD's partitions against the deployed weights,
+    /// reducing per partition with `f` (rows + the partition's items →
+    /// one driver-bound value). The primitive behind `inference::predict`
+    /// / `evaluate_top1` and the streaming classify path; dispatches
+    /// through the RDD's installed group plan when it has one (streaming
+    /// micro-batches do).
+    pub fn score_partitions<R, F>(&self, data: &Rdd<T>, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(Vec<Vec<f32>>, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        let bcast = self.weights_round()?;
+        let scorer = Arc::clone(&self.scorer);
+        let instance = self.instance;
+        data.run_partition_job(move |tc, items| {
+            let rows = if items.is_empty() {
+                Vec::new()
+            } else {
+                let weights = fetch_assembled(&tc.blocks(), instance, bcast, tc.node)?;
+                scorer(&weights, items)?
+            };
+            f(rows, items)
+        })
+    }
+
+    /// Score an RDD with a task-side [`Reduction`]; results in partition
+    /// order.
+    pub fn score_rdd(&self, data: &Rdd<T>, red: Reduction) -> Result<Vec<Reduced>> {
+        let parts = self.score_partitions(data, move |rows, _items| {
+            Ok(rows.iter().map(|r| red.apply(r)).collect::<Vec<Reduced>>())
+        })?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+}
+
+impl<T> Drop for PredictService<T> {
+    /// Retire the served weight blocks (the service owns its broadcast
+    /// rounds the way a `ParameterManager` owns its shards).
+    fn drop(&mut self) {
+        let bm = self.ctx.blocks();
+        if let Some(d) = self.deployed.lock().unwrap().take() {
+            retire(&bm, self.instance, d.bcast);
+            if let Some(p) = d.prev {
+                retire(&bm, self.instance, p);
+            }
+        }
+        sweep_assembled(&bm, self.instance, &[]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `classes` rows of a linear model: row[c] = dot(w[c*dim..], x).
+    fn linear_scorer(dim: usize, classes: usize) -> BatchScorer<Vec<f32>> {
+        Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+            ensure!(w.len() == dim * classes, "weight length {} != {}", w.len(), dim * classes);
+            Ok(items
+                .iter()
+                .map(|x| {
+                    (0..classes)
+                        .map(|c| {
+                            x.iter().zip(&w[c * dim..(c + 1) * dim]).map(|(a, b)| a * b).sum()
+                        })
+                        .collect()
+                })
+                .collect())
+        })
+    }
+
+    #[test]
+    fn reductions_apply_expected_semantics() {
+        let row = [0.1f32, 0.9, -0.5, 0.4];
+        assert_eq!(Reduction::Argmax.apply(&row), Reduced::Class { class: 1, score: 0.9 });
+        assert_eq!(
+            Reduction::TopK(2).apply(&row),
+            Reduced::TopK(vec![(1, 0.9), (3, 0.4)])
+        );
+        assert_eq!(Reduction::Threshold(0.4).apply(&row), Reduced::Over { hits: vec![1, 3] });
+        assert_eq!(Reduction::Full.apply(&row), Reduced::Row(row.to_vec()));
+    }
+
+    #[test]
+    fn deploy_shards_and_reassembles() {
+        let ctx = SparkletContext::local(3);
+        let svc = PredictService::new(&ctx, linear_scorer(4, 2), ServingConfig::default());
+        assert!(svc.current_weights().is_err(), "undeployed service must refuse");
+        let w: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        svc.deploy(&w).unwrap();
+        assert_eq!(svc.current_weights().unwrap(), w);
+        assert_eq!(svc.param_count(), 8);
+        // Redeploy keeps exactly ONE previous round alive (hot-redeploy
+        // grace); a further deploy retires it — usage stays bounded.
+        svc.deploy(&w).unwrap();
+        let two_rounds = ctx.blocks().usage().0;
+        svc.deploy(&w).unwrap();
+        assert_eq!(
+            ctx.blocks().usage().0,
+            two_rounds,
+            "every deploy past the second must retire one old round"
+        );
+    }
+
+    #[test]
+    fn service_drop_retires_weight_blocks() {
+        let ctx = SparkletContext::local(2);
+        let baseline = ctx.blocks().usage().0;
+        let svc = PredictService::new(&ctx, linear_scorer(4, 2), ServingConfig::default());
+        svc.deploy(&[1.0; 8]).unwrap();
+        assert!(ctx.blocks().usage().0 > baseline);
+        drop(svc);
+        assert_eq!(ctx.blocks().usage().0, baseline, "dropped service leaked weight blocks");
+    }
+
+    #[test]
+    fn serve_reduces_task_side_in_request_order() {
+        let ctx = SparkletContext::local(2);
+        let dim = 3;
+        let svc = PredictService::new(
+            &ctx,
+            linear_scorer(dim, 2),
+            ServingConfig { max_batch: 4, ..Default::default() },
+        );
+        // Class 0 scores x[0], class 1 scores x[1].
+        let mut w = vec![0.0f32; dim * 2];
+        w[0] = 1.0;
+        w[dim + 1] = 1.0;
+        svc.deploy(&w).unwrap();
+        let requests: Vec<Vec<f32>> = (0..10)
+            .map(|i| {
+                if i % 2 == 0 {
+                    vec![1.0, 0.0, 0.0]
+                } else {
+                    vec![0.0, 1.0, 0.0]
+                }
+            })
+            .collect();
+        let out = svc.serve(&requests, Reduction::Argmax).unwrap();
+        assert_eq!(out.len(), 10);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r, Reduced::Class { class: i % 2, score: 1.0 }, "request {i}");
+        }
+    }
+}

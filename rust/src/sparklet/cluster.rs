@@ -50,6 +50,10 @@ pub struct Completion {
     pub partition: usize,
     pub generation: usize,
     pub attempt: usize,
+    /// Node that executed this attempt. Retry placement avoids it even
+    /// when it is still alive — a task failing deterministically on one
+    /// node must migrate, not bounce back to the same executor.
+    pub node: usize,
     pub payload: Box<dyn Any + Send>,
 }
 
@@ -394,8 +398,8 @@ mod tests {
         let hub = CompletionHub::new();
         let ib1 = hub.register(1);
         let ib2 = hub.register(2);
-        ib2.push(Completion { job: 2, partition: 7, generation: 0, attempt: 0, payload: Box::new(()) });
-        ib1.push(Completion { job: 1, partition: 3, generation: 0, attempt: 0, payload: Box::new(()) });
+        ib2.push(Completion { job: 2, partition: 7, generation: 0, attempt: 0, node: 0, payload: Box::new(()) });
+        ib1.push(Completion { job: 1, partition: 3, generation: 0, attempt: 0, node: 0, payload: Box::new(()) });
         assert_eq!(ib1.wait().partition, 3);
         assert_eq!(ib2.wait().partition, 7);
         hub.unregister(1);
@@ -403,7 +407,7 @@ mod tests {
         assert!(hub.get(2).is_some());
         // A straggler pushing into its own Arc after unregister is
         // harmless: the orphaned inbox absorbs it and drops with the Arc.
-        ib1.push(Completion { job: 1, partition: 9, generation: 1, attempt: 1, payload: Box::new(()) });
+        ib1.push(Completion { job: 1, partition: 9, generation: 1, attempt: 1, node: 0, payload: Box::new(()) });
         assert_eq!(ib1.wait().partition, 9);
     }
 }

@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::cluster::Cluster;
 use super::context::{SparkletContext, TaskContext};
 use super::scheduler::Assignment;
 
@@ -40,6 +41,24 @@ impl GroupPlan {
     pub fn parts(&self) -> usize {
         self.preferred.len()
     }
+
+    /// Whether every planned node is still alive. A dead node makes the
+    /// plan stale: round loops ([`JobRunner::run_rounds`]) replan
+    /// mid-group instead of paying the per-task placement fallback on
+    /// every remaining round.
+    pub fn live(&self, cluster: &Cluster) -> bool {
+        self.assignment.nodes.iter().all(|&n| cluster.node_alive(n))
+    }
+}
+
+/// Per-round feedback handed to the [`JobRunner::run_rounds_with`]
+/// observer (serving uses it to count replans and surface round health).
+#[derive(Debug, Clone, Copy)]
+pub struct RoundInfo {
+    pub round: usize,
+    /// True when this round re-planned placements — a group boundary, or
+    /// a planned node died mid-group.
+    pub replanned: bool,
 }
 
 impl JobRunner {
@@ -103,17 +122,38 @@ impl JobRunner {
         preferred: &[Option<usize>],
         rounds: usize,
         group: usize,
+        round_fn: impl FnMut(usize) -> Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<Vec<R>>> {
+        self.run_rounds_with(preferred, rounds, group, round_fn, |_, _| {})
+    }
+
+    /// [`JobRunner::run_rounds`] with round-loop hooks: the plan is
+    /// refreshed mid-group as soon as a planned node dies (instead of
+    /// per-task placement fallback on every remaining round), and
+    /// `on_round` observes each finished round — the serving loop counts
+    /// replans and batch results through it.
+    pub fn run_rounds_with<R: Send + 'static>(
+        &self,
+        preferred: &[Option<usize>],
+        rounds: usize,
+        group: usize,
         mut round_fn: impl FnMut(usize) -> Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+        mut on_round: impl FnMut(RoundInfo, &[R]),
     ) -> Result<Vec<Vec<R>>> {
         let group = group.max(1);
+        let cluster = self.ctx.cluster();
         let mut out = Vec::with_capacity(rounds);
         let mut plan: Option<GroupPlan> = None;
         for round in 0..rounds {
-            if round % group == 0 || plan.is_none() {
+            let stale = !plan.as_ref().is_some_and(|p| p.live(&cluster));
+            let replanned = round % group == 0 || stale;
+            if replanned {
                 plan = Some(self.plan_group(preferred)?);
             }
             let p = plan.as_ref().expect("plan set above");
-            out.push(self.run_planned(p, round_fn(round))?);
+            let results = self.run_planned(p, round_fn(round))?;
+            on_round(RoundInfo { round, replanned }, &results);
+            out.push(results);
         }
         Ok(out)
     }

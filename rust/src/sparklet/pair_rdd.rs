@@ -63,7 +63,7 @@ where
             }
             Ok(())
         });
-    (shuffle, WideDep::new(shuffle, maps, preferred, task))
+    (shuffle, WideDep::new(shuffle, maps, preferred, task, ctx.blocks()))
 }
 
 /// Fetch one shuffle bucket, falling back to lineage recompute if the
@@ -377,6 +377,39 @@ mod tests {
         let mut d = rdd.distinct(2).collect().unwrap();
         d.sort();
         assert_eq!(d, vec![1, 2, 3, 4]);
+    }
+
+    /// Regression (shuffle bucket leak): map-side bucket blocks must be
+    /// freed when the shuffled RDD (and with it any lineage-fallback need)
+    /// drops — block-store usage stays flat across a long-running loop.
+    #[test]
+    fn shuffle_buckets_freed_when_rdd_drops() {
+        let ctx = SparkletContext::local(2);
+        let baseline = ctx.blocks().usage().0;
+        for i in 0..8 {
+            let pairs: Vec<(i64, i64)> = (0..120).map(|j| (j % 7, j)).collect();
+            let reduced = ctx.parallelize(pairs, 4).reduce_by_key(3, |a, b| a + b);
+            let got = reduced.collect_as_map().unwrap();
+            assert_eq!(got.len(), 7);
+            assert!(
+                ctx.blocks().usage().0 > baseline,
+                "buckets must exist while the RDD is alive"
+            );
+            drop(reduced);
+            // Executor slots may still be dropping their task-closure Arcs
+            // (which transitively hold the WideDep); give them a moment.
+            for _ in 0..1000 {
+                if ctx.blocks().usage().0 == baseline {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            assert_eq!(
+                ctx.blocks().usage().0,
+                baseline,
+                "iteration {i}: dead shuffle buckets leaked"
+            );
+        }
     }
 
     #[test]

@@ -193,6 +193,12 @@ impl Scheduler {
         out
     }
 
+    /// Drive a job to completion, then quiesce: every attempt this job
+    /// dispatched pushes exactly one completion, and `drive_job` does not
+    /// return — success OR error — until all of them have been popped. A
+    /// failed job therefore has NO task still running when the caller
+    /// rolls back blocks the job's tasks publish (param-manager rounds,
+    /// serving deployments).
     #[allow(clippy::too_many_arguments)]
     fn drive_job<R: Send + 'static>(
         &self,
@@ -205,6 +211,33 @@ impl Scheduler {
         preassigned: Option<&Assignment>,
         task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
         failure: &FailurePolicy,
+    ) -> Result<Vec<R>> {
+        // Dispatched attempts whose completions haven't been popped yet.
+        let mut outstanding = 0usize;
+        let out = self.drive_attempts(
+            ctx, cluster, inbox, job_id, preferred, policy, preassigned, task_fn, failure,
+            &mut outstanding,
+        );
+        while outstanding > 0 {
+            let _ = inbox.wait();
+            outstanding -= 1;
+        }
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn drive_attempts<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        cluster: &Arc<Cluster>,
+        inbox: &Arc<JobInbox>,
+        job_id: u64,
+        preferred: &[Option<usize>],
+        policy: &SchedulePolicy,
+        preassigned: Option<&Assignment>,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+        failure: &FailurePolicy,
+        outstanding: &mut usize,
     ) -> Result<Vec<R>> {
         let n = preferred.len();
 
@@ -246,6 +279,7 @@ impl Scheduler {
                     partition: part,
                     generation: gen,
                     attempt,
+                    node: node_id,
                     payload: Box::new(result),
                 });
             })
@@ -253,39 +287,46 @@ impl Scheduler {
 
         // Dispatch a full wave (initial launch or gang restart). With a
         // pre-assignment this is a bare batched enqueue: zero placement
-        // decisions, one channel send per node.
-        let dispatch_wave = |generation: usize, attempts: &[usize]| -> Result<()> {
-            let t0 = Instant::now();
-            match preassigned {
-                Some(a) if a.nodes.iter().all(|&nd| cluster.node_alive(nd)) => {
-                    let mut batches: Vec<Vec<TaskFn>> =
-                        (0..cluster.nodes()).map(|_| Vec::new()).collect();
-                    for part in 0..n {
-                        batches[a.nodes[part]].push(make_task(part, generation, attempts[part]));
+        // decisions, one channel send per node. `outstanding` counts every
+        // attempt actually enqueued — including those of a wave that then
+        // errors midway — so the quiesce drain above stays exact.
+        let dispatch_wave =
+            |generation: usize, attempts: &[usize], outstanding: &mut usize| -> Result<()> {
+                let t0 = Instant::now();
+                match preassigned {
+                    Some(a) if a.nodes.iter().all(|&nd| cluster.node_alive(nd)) => {
+                        let mut batches: Vec<Vec<TaskFn>> =
+                            (0..cluster.nodes()).map(|_| Vec::new()).collect();
+                        for part in 0..n {
+                            batches[a.nodes[part]]
+                                .push(make_task(part, generation, attempts[part]));
+                        }
+                        for (node, batch) in batches.into_iter().enumerate() {
+                            let k = batch.len();
+                            cluster.submit_batch(node, batch)?;
+                            *outstanding += k;
+                        }
                     }
-                    for (node, batch) in batches.into_iter().enumerate() {
-                        cluster.submit_batch(node, batch)?;
+                    _ => {
+                        // No plan (or the plan references a dead node):
+                        // per-task placement.
+                        for part in 0..n {
+                            let node = self.place(cluster, preferred[part], policy, None)?;
+                            cluster.submit(node, make_task(part, generation, attempts[part]))?;
+                            *outstanding += 1;
+                        }
                     }
                 }
-                _ => {
-                    // No plan (or the plan references a dead node):
-                    // per-task placement.
-                    for part in 0..n {
-                        let node = self.place(cluster, preferred[part], policy, None)?;
-                        cluster.submit(node, make_task(part, generation, attempts[part]))?;
-                    }
-                }
-            }
-            self.stats.tasks_launched.fetch_add(n as u64, Ordering::Relaxed);
-            self.stats
-                .dispatch_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            Ok(())
-        };
+                self.stats.tasks_launched.fetch_add(n as u64, Ordering::Relaxed);
+                self.stats
+                    .dispatch_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                Ok(())
+            };
 
         let mut generation = 0usize;
         let mut attempts = vec![0usize; n];
-        dispatch_wave(generation, &attempts)?;
+        dispatch_wave(generation, &attempts, outstanding)?;
 
         let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let mut done = 0usize;
@@ -293,10 +334,12 @@ impl Scheduler {
 
         while done < n {
             let c = inbox.wait();
+            *outstanding -= 1;
             if c.generation != generation {
                 continue; // stale result from before a gang restart
             }
             let part = c.partition;
+            let failed_on = c.node;
             let result = *c
                 .payload
                 .downcast::<Result<R>>()
@@ -324,7 +367,7 @@ impl Scheduler {
                     for a in attempts.iter_mut() {
                         *a += 1;
                     }
-                    dispatch_wave(generation, &attempts)?;
+                    dispatch_wave(generation, &attempts, outstanding)?;
                 }
                 Err(e) => {
                     attempts[part] += 1;
@@ -336,11 +379,15 @@ impl Scheduler {
                         "job {job_id}: retrying task {part} (attempt {}): {e}",
                         attempts[part]
                     );
-                    // Avoid the node that just failed it if it died.
-                    let avoid = preferred[part].filter(|&p| !cluster.node_alive(p));
+                    // Avoid the node that executed the failed attempt —
+                    // even when it is still alive. (Previously only a DEAD
+                    // preferred node was avoided, so a task failing
+                    // deterministically on an alive node was re-placed onto
+                    // the same node every retry.)
                     let t0 = Instant::now();
-                    let node = self.place(cluster, preferred[part], policy, avoid)?;
+                    let node = self.place(cluster, preferred[part], policy, Some(failed_on))?;
                     cluster.submit(node, make_task(part, generation, attempts[part]))?;
+                    *outstanding += 1;
                     self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
                     self.stats
                         .dispatch_ns

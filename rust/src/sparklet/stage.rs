@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use super::block_manager::{BlockId, BlockManager};
 use super::context::{SparkletContext, TaskContext};
 use super::job_runner::JobRunner;
 
@@ -165,6 +166,8 @@ pub struct WideDep {
     /// Guards the once-only map-stage run: concurrent actions on clones of
     /// the same shuffled RDD serialize here instead of double-dispatching.
     done: Mutex<bool>,
+    /// Block store holding this shuffle's bucket blocks (Drop cleanup).
+    blocks: Arc<BlockManager>,
 }
 
 impl WideDep {
@@ -173,8 +176,9 @@ impl WideDep {
         maps: usize,
         preferred: Vec<Option<usize>>,
         run_map_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>,
+        blocks: Arc<BlockManager>,
     ) -> Arc<WideDep> {
-        Arc::new(WideDep { shuffle, maps, preferred, run_map_task, done: Mutex::new(false) })
+        Arc::new(WideDep { shuffle, maps, preferred, run_map_task, done: Mutex::new(false), blocks })
     }
 
     /// Run the map-side stage as one job, once. A concurrent caller blocks
@@ -189,5 +193,17 @@ impl WideDep {
         runner.run(&self.preferred, Arc::clone(&self.run_map_task))?;
         *done = true;
         Ok(())
+    }
+}
+
+impl Drop for WideDep {
+    /// Shuffle-bucket lifecycle: every RDD that can read these buckets (or
+    /// needs them for lineage fallback) holds an `Arc` to this dep, so the
+    /// last drop means the buckets are unreachable — free them, or
+    /// long-running pipelines accumulate dead shuffle output.
+    fn drop(&mut self) {
+        let id = self.shuffle;
+        self.blocks
+            .remove_matching(|b| matches!(b, BlockId::Shuffle { shuffle, .. } if *shuffle == id));
     }
 }

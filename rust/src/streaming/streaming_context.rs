@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::kafka_sim::KafkaSim;
+use crate::bigdl::serving::{PredictService, Reduced, Reduction};
 use crate::sparklet::{GroupPlan, Rdd, SparkletContext};
 
 /// Per-micro-batch outcome.
@@ -89,6 +90,27 @@ impl StreamingContext {
         }
         Ok(stats)
     }
+
+    /// Streaming classification: every micro-batch scores through a
+    /// [`PredictService`] (sharded weights, task-side [`Reduction`]) and
+    /// only the reduced predictions reach `sink`. Because the batch RDDs
+    /// carry the stream's group plan, each scoring job dispatches as bare
+    /// batched enqueues — the serving analogue of the training loop's
+    /// Drizzle amortization.
+    pub fn classify_stream<T, F>(
+        &self,
+        source: &Arc<KafkaSim<T>>,
+        batches: usize,
+        service: &PredictService<T>,
+        red: Reduction,
+        mut sink: F,
+    ) -> Result<Vec<BatchStats>>
+    where
+        T: Clone + Send + Sync + 'static,
+        F: FnMut(usize, Vec<Reduced>) -> Result<()>,
+    {
+        self.run(source, batches, |i, rdd| sink(i, service.score_rdd(&rdd, red)?))
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +137,54 @@ mod tests {
         let total: usize = stats.iter().map(|s| s.records).sum();
         assert_eq!(total, 250);
         assert!(stats.len() <= 4, "100/batch over 250 records: {}", stats.len());
+    }
+
+    #[test]
+    fn classify_stream_scores_microbatches_through_service() {
+        use crate::bigdl::serving::{BatchScorer, ServingConfig};
+
+        let ctx = SparkletContext::local(2);
+        // Two-class linear model over 2-dim requests: row[c] = w[c*2..] · x.
+        let scorer: BatchScorer<Vec<f32>> = Arc::new(|w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+            Ok(items
+                .iter()
+                .map(|x| {
+                    (0..2)
+                        .map(|c| x.iter().zip(&w[c * 2..(c + 1) * 2]).map(|(a, b)| a * b).sum())
+                        .collect()
+                })
+                .collect())
+        });
+        let svc = crate::bigdl::serving::PredictService::new(
+            &ctx,
+            scorer,
+            ServingConfig::default(),
+        );
+        svc.deploy(&[1.0, 0.0, 0.0, 1.0]).unwrap();
+
+        let k = KafkaSim::new(1000);
+        for i in 0..60 {
+            // Even records point at class 0, odd at class 1.
+            k.produce(if i % 2 == 0 { vec![1.0f32, 0.0] } else { vec![0.0f32, 1.0] });
+        }
+        k.close();
+
+        let sc = StreamingContext::new(&ctx, Duration::from_millis(1), 10);
+        let mut classes: Vec<usize> = Vec::new();
+        sc.classify_stream(&k, 20, &svc, crate::bigdl::serving::Reduction::Argmax, |_i, preds| {
+            for p in preds {
+                match p {
+                    crate::bigdl::serving::Reduced::Class { class, .. } => classes.push(class),
+                    other => panic!("unexpected reduction output: {other:?}"),
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(classes.len(), 60, "every streamed record must be classified");
+        for (i, c) in classes.iter().enumerate() {
+            assert_eq!(*c, i % 2, "record {i} routed to the wrong class");
+        }
     }
 
     #[test]

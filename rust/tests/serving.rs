@@ -1,0 +1,137 @@
+//! PredictService integration tests: planned (run_rounds) vs ad-hoc
+//! dispatch equivalence and amortization, sharded train→serve handoff,
+//! and serving availability under node death (replicated weight shards +
+//! mid-group replanning).
+
+use std::sync::Arc;
+
+use bigdl::bigdl::optim::Sgd;
+use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction, ServingConfig};
+use bigdl::bigdl::ParameterManager;
+use bigdl::sparklet::SparkletContext;
+use bigdl::util::prng::Rng;
+
+/// Linear scorer: `classes` rows of `row[c] = w[c*dim..(c+1)*dim] · x`.
+fn linear_scorer(dim: usize, classes: usize) -> BatchScorer<Vec<f32>> {
+    Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+        anyhow::ensure!(w.len() == dim * classes, "bad weight length {}", w.len());
+        Ok(items
+            .iter()
+            .map(|x| {
+                (0..classes)
+                    .map(|c| x.iter().zip(&w[c * dim..(c + 1) * dim]).map(|(a, b)| a * b).sum())
+                    .collect()
+            })
+            .collect())
+    })
+}
+
+fn random_requests(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.gen_f32() - 0.5).collect())
+        .collect()
+}
+
+/// Planned serving must produce byte-identical predictions to per-request
+/// ad-hoc jobs, while planning placements once per serving group instead
+/// of once per task per round.
+#[test]
+fn planned_serving_matches_adhoc_with_amortized_dispatch() {
+    let nodes = 4;
+    let (dim, classes) = (8, 5);
+    let ctx = SparkletContext::local(nodes);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingConfig { max_batch: 32, group_size: 64, ..Default::default() },
+    );
+    let mut rng = Rng::new(0x5E12F);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let requests = random_requests(&mut rng, 512, dim); // 16 rounds of 32
+
+    let s0 = ctx.scheduler().stats.snapshot();
+    let planned = svc.serve(&requests, Reduction::Argmax).unwrap();
+    let s1 = ctx.scheduler().stats.snapshot();
+    let adhoc = svc.serve_adhoc(&requests, Reduction::Argmax).unwrap();
+    let s2 = ctx.scheduler().stats.snapshot();
+
+    assert_eq!(planned, adhoc, "planned and ad-hoc dispatch must agree exactly");
+    assert_eq!(planned.len(), 512);
+
+    let rounds = 512 / 32;
+    let planned_placements = s1.placements - s0.placements;
+    let adhoc_placements = s2.placements - s1.placements;
+    assert_eq!(
+        planned_placements, nodes as u64,
+        "one serving group -> placements planned exactly once"
+    );
+    assert_eq!(
+        adhoc_placements,
+        (nodes * rounds) as u64,
+        "ad-hoc dispatch pays placement for every task of every round"
+    );
+    assert_eq!(svc.stats.snapshot().requests, 1024);
+}
+
+/// Train→serve handoff: `deploy_sharded` (shard-local re-publication, no
+/// driver-side concat) must serve the exact same weights as a driver-side
+/// `deploy` of the assembled vector.
+#[test]
+fn sharded_handoff_matches_driver_deploy() {
+    let (dim, classes) = (6, 3);
+    let k = dim * classes;
+    let ctx = SparkletContext::local(3);
+    let mut rng = Rng::new(0xDE9107);
+    let weights: Vec<f32> = (0..k).map(|_| rng.gen_f32()).collect();
+
+    // "Trained" state: a ParameterManager holding the weights as shards.
+    let pm = ParameterManager::init(&ctx, &weights, 3, Arc::new(Sgd::new(0.1))).unwrap();
+
+    let via_shards = PredictService::new(&ctx, linear_scorer(dim, classes), ServingConfig::default());
+    via_shards.deploy_sharded(&pm.weights_broadcast(), k).unwrap();
+    let via_driver = PredictService::new(&ctx, linear_scorer(dim, classes), ServingConfig::default());
+    via_driver.deploy(&weights).unwrap();
+
+    assert_eq!(via_shards.current_weights().unwrap(), weights);
+    assert_eq!(via_shards.param_count(), k);
+
+    let requests = random_requests(&mut rng, 64, dim);
+    assert_eq!(
+        via_shards.serve(&requests, Reduction::TopK(2)).unwrap(),
+        via_driver.serve(&requests, Reduction::TopK(2)).unwrap(),
+        "both deployment paths must serve identical predictions"
+    );
+}
+
+/// Serving must survive a node death mid-stream: replicated weight shards
+/// keep every shard reachable, and the round loop replans placements off
+/// the dead node instead of failing or degrading to per-task fallback.
+#[test]
+fn serving_survives_killed_node() {
+    let nodes = 3;
+    let (dim, classes) = (4, 3);
+    let ctx = SparkletContext::local(nodes);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingConfig { max_batch: 16, ..Default::default() },
+    );
+    let mut rng = Rng::new(0xCA7);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let requests = random_requests(&mut rng, 128, dim);
+
+    let before = svc.serve(&requests, Reduction::Argmax).unwrap();
+
+    // Node 1 dies: its executor stops taking work and its blocks (one
+    // weight-shard owner copy among them) are lost.
+    ctx.cluster().kill_node(1);
+    ctx.blocks().kill_node(1);
+
+    let after = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(before, after, "predictions must not change when a node dies");
+
+    // The replicas are what kept the dead node's shard reachable.
+    assert_eq!(svc.current_weights().unwrap(), weights);
+}

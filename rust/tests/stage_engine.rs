@@ -289,6 +289,29 @@ fn delay_scheduling_uses_slot_signal_and_counts_misses() {
     blocker.join().unwrap();
 }
 
+/// Regression (retry placement): a task that fails deterministically on an
+/// ALIVE node must migrate on retry. Before the fix the scheduler only
+/// avoided the preferred node when it was dead, so with `max_attempts: 2`
+/// the single retry landed back on node 0 and the job failed.
+#[test]
+fn retry_avoids_alive_node_that_failed_the_task() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_failure_policy(FailurePolicy { max_attempts: 2, ..Default::default() });
+    let out = ctx
+        .run_job(
+            &[Some(0)],
+            Arc::new(|tc: &TaskContext| {
+                if tc.node == 0 {
+                    anyhow::bail!("deterministic failure on node 0");
+                }
+                Ok(tc.node)
+            }),
+        )
+        .unwrap();
+    assert_eq!(out, vec![1], "retry must migrate off the failing (alive) node");
+    assert_eq!(ctx.scheduler().stats.snapshot().task_retries, 1);
+}
+
 #[test]
 fn task_panics_surface_as_job_errors() {
     let ctx = SparkletContext::local(2);
