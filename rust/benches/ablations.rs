@@ -21,7 +21,7 @@ fn ablation_allreduce() {
         "Ablation E7: per-node sync traffic — Alg 2 vs Ring vs central PS",
         "Alg 2 ≈ 2K per node flat in N; Ring same bytes, Θ(N) steps; PS hot node N·K",
     );
-    let k = 100_000usize; // 400 KB of parameters
+    let k = common::iters(100_000, 20_000); // parameters (400 KB full mode)
     println!(
         "{:>6} {:>22} {:>22} {:>22}",
         "N", "shuffle-bcast out/node", "ring out/node (meas.)", "PS server in (meas.)"
@@ -64,7 +64,7 @@ fn ablation_failure_recovery() {
     );
     let Some(rt) = common::runtime_or_skip() else { return };
     let module = Module::load(&rt, "ncf").unwrap();
-    let iters = 6;
+    let iters = common::iters(6, 3);
     let mut run = |gang: bool, fail_prob: f64| -> (f64, u64, u64, u64) {
         let ctx = SparkletContext::local(4);
         ctx.set_schedule_policy(SchedulePolicy { gang, ..Default::default() });
@@ -108,7 +108,7 @@ fn ablation_drizzle_dispatch() {
     );
     let nodes = 8;
     let tasks = 256;
-    let reps = 30;
+    let reps = common::iters(30, 5);
     let ctx = SparkletContext::local(nodes);
     let preferred: Vec<Option<usize>> = (0..tasks).map(|p| Some(p % nodes)).collect();
     let noop: Arc<dyn Fn(&bigdl::sparklet::TaskContext) -> anyhow::Result<()> + Send + Sync> =

@@ -1,7 +1,20 @@
 //! Shared bench harness helpers (criterion is unavailable offline; these
 //! benches are `harness = false` binaries that print the paper's
 //! tables/series in a fixed format captured into bench_output.txt).
+//!
+//! Two CI hooks:
+//! * **quick mode** ([`quick`] / [`iters`]) — `BENCH_QUICK=1` (or a
+//!   `--quick` argv flag) shrinks iteration counts so the whole suite
+//!   runs in seconds; CI's `bench-smoke` job uses it on every PR;
+//! * **result recording** ([`Recorder`]) — when `BENCH_JSONL` names a
+//!   file, each recorded series is appended as one JSON object per line
+//!   (the repo's `BENCH_*.json` schema is these records wrapped in
+//!   `{"schema":"bigdl-bench/v1","results":[...]}` — CI assembles
+//!   `BENCH_CI.json` with `jq -s` and uploads it as the perf-trajectory
+//!   artifact).
 #![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::io::Write;
 
 use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
 
@@ -11,6 +24,92 @@ pub fn banner(fig: &str, claim: &str) {
     println!("{fig}");
     println!("paper claim: {claim}");
     println!("================================================================");
+}
+
+/// Quick mode: `BENCH_QUICK=1` env (CI bench-smoke) or a `--quick` flag.
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+        || std::env::args().any(|a| a == "--quick")
+}
+
+/// Pick an iteration count: `full` normally, `quick_n` under quick mode.
+pub fn iters(full: usize, quick_n: usize) -> usize {
+    if quick() {
+        quick_n
+    } else {
+        full
+    }
+}
+
+/// Appends bench results as JSON Lines to the file named by `BENCH_JSONL`
+/// (no-op when unset). One record per series:
+/// `{"bench":..,"series":..,"params":{..},"value":..,"unit":..}`.
+pub struct Recorder {
+    bench: &'static str,
+    lines: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+impl Recorder {
+    pub fn new(bench: &'static str) -> Recorder {
+        Recorder { bench, lines: Vec::new() }
+    }
+
+    /// Record one scalar result. `params` are (name, value) pairs
+    /// describing the configuration the value was measured under.
+    pub fn add(&mut self, series: &str, params: &[(&str, f64)], value: f64, unit: &str) {
+        let params_json: Vec<String> = params
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", json_escape(k), fmt_f64(*v)))
+            .collect();
+        self.lines.push(format!(
+            "{{\"bench\":\"{}\",\"series\":\"{}\",\"params\":{{{}}},\"value\":{},\"unit\":\"{}\",\"quick\":{}}}",
+            json_escape(self.bench),
+            json_escape(series),
+            params_json.join(","),
+            fmt_f64(value),
+            json_escape(unit),
+            quick(),
+        ));
+    }
+
+    /// Append every recorded line to `$BENCH_JSONL` (if set). Call once at
+    /// the end of the bench's `main`.
+    pub fn flush(&mut self) {
+        let Ok(path) = std::env::var("BENCH_JSONL") else { return };
+        if path.is_empty() || self.lines.is_empty() {
+            return;
+        }
+        let mut f = match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("BENCH_JSONL: cannot open {path}: {e}");
+                return;
+            }
+        };
+        for l in self.lines.drain(..) {
+            let _ = writeln!(f, "{l}");
+        }
+    }
+}
+
+/// f64 → JSON number (finite; NaN/inf become null).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
 }
 
 /// Load the runtime or exit 0 with a SKIP notice (benches must not fail

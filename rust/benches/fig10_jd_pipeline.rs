@@ -65,7 +65,7 @@ fn main() {
     // -- (b) real mechanism measurement ---------------------------------------
     let Some(rt) = common::runtime_or_skip() else { return };
     let nodes = 4;
-    let n_images = 240;
+    let n_images = common::iters(240, 48);
     let ssd = Module::load(&rt, "ssd_lite").unwrap();
     ssd.warmup().unwrap();
     let img_cfg = ImagenetLiteConfig { size: 32, ..Default::default() };

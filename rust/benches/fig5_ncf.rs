@@ -34,7 +34,7 @@ fn main() {
     let module = Module::load(&rt, "ncf").unwrap();
     let entry = module.train_entry().unwrap().clone();
     let batch = entry.batch_size;
-    let iters = 20;
+    let iters = common::iters(20, 5);
 
     // -- (a) bare reference loop (no distribution, same executable) ---------
     module.warmup().unwrap();
@@ -122,7 +122,8 @@ fn main() {
         .collect();
     let t0 = std::time::Instant::now();
     let mut reached = None;
-    for iter in 1..=120 {
+    let max_iters = common::iters(120, 20);
+    for iter in 1..=max_iters {
         opt.step().unwrap();
         if iter % 10 == 0 {
             let wts = Arc::new(opt.weights().unwrap());
@@ -138,7 +139,7 @@ fn main() {
     }
     match reached {
         Some((it, secs)) => println!("target reached at iter {it} in {secs:.1}s"),
-        None => println!("target NOT reached in 120 iters (see EXPERIMENTS.md)"),
+        None => println!("target NOT reached in {max_iters} iters (see EXPERIMENTS.md)"),
     }
 
     // -- (c) paper-reported headline -----------------------------------------

@@ -18,7 +18,7 @@ fn main() {
         "Figure 7: Inception-v1 training throughput scaling (16→256 nodes)",
         "~5.3x speedup at 96 nodes vs 16; reasonable scaling to 256",
     );
-    let dispatch = common::measure_dispatch_cost(4, 64, 20);
+    let dispatch = common::measure_dispatch_cost(4, 64, common::iters(20, 5));
     println!("calibration: measured Sparklet dispatch cost = {:.1} µs/task\n", dispatch * 1e6);
 
     let per_node_batch = 32usize;

@@ -24,10 +24,12 @@ fn main() {
         ">10% overhead near 500 tasks/iter; Drizzle amortizes it",
     );
 
+    let mut rec = common::Recorder::new("fig8_scheduling");
+
     // ---- measured: real scheduler, per-iteration vs pre-assigned --------
     let nodes = 8;
     let tasks = 128;
-    let reps = 30;
+    let reps = common::iters(30, 5);
     let measured = common::measure_dispatch_cost(nodes, tasks, reps);
     let planned = common::measure_dispatch_cost_planned(nodes, tasks, reps);
     let speedup = measured / planned.max(1e-12);
@@ -46,6 +48,10 @@ fn main() {
     if speedup < 2.0 {
         println!("  WARNING: pre-assignment speedup below the 2x acceptance target");
     }
+    let params = [("nodes", nodes as f64), ("tasks", tasks as f64), ("reps", reps as f64)];
+    rec.add("dispatch_per_task_us", &params, measured * 1e6, "us");
+    rec.add("dispatch_per_task_planned_us", &params, planned * 1e6, "us");
+    rec.add("preassignment_speedup", &params, speedup, "x");
 
     // ---- modeled: Spark-scale RPC cost, paper-shaped curves -------------
     // Spark-scale per-task launch cost, calibrated so the paper's anchor
@@ -87,4 +93,5 @@ fn main() {
     }
     println!("\nshape check: default crosses 10% well before 512 tasks; Drizzle stays flat.");
     println!("(sparklet-raw shows the in-process lower bound without Spark's RPC.)");
+    rec.flush();
 }

@@ -23,11 +23,12 @@ fn main() {
         "group-planned serving amortizes driver dispatch >=2x at identical predictions",
     );
 
+    let mut rec = common::Recorder::new("serving");
     let nodes = 8;
     let (dim, classes) = (32, 10);
-    let n_requests = 4096;
-    let max_batch = 64; // -> 64 rounds per serve call
-    let reps = 5;
+    let n_requests = common::iters(4096, 1024);
+    let max_batch = 64;
+    let reps = common::iters(5, 2);
 
     let ctx = SparkletContext::local(nodes);
     let scorer: BatchScorer<Vec<f32>> = Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
@@ -98,4 +99,14 @@ fn main() {
     if ratio < 2.0 {
         println!("  WARNING: planned-dispatch speedup below the 2x acceptance target");
     }
+    let params = [
+        ("nodes", nodes as f64),
+        ("requests", n_requests as f64),
+        ("max_batch", max_batch as f64),
+        ("reps", reps as f64),
+    ];
+    rec.add("adhoc_dispatch_per_req_ns", &params, adhoc_disp * 1e9, "ns");
+    rec.add("planned_dispatch_per_req_ns", &params, planned_disp * 1e9, "ns");
+    rec.add("planned_dispatch_ratio", &params, ratio, "x");
+    rec.flush();
 }

@@ -1,0 +1,291 @@
+//! Builtin (pure-Rust) model backends — training models that need no AOT
+//! artifact or PJRT plugin, so the full Algorithm 1+2 stack (including the
+//! pipelined sync modes) can run, be tested, and be benchmarked on any
+//! machine. The analogue of BigDL's built-in layers for the reproduction:
+//! the distributed machinery is identical; only the local forward-backward
+//! is swapped.
+//!
+//! Also hosts the simulated-compute knobs the benches use to model
+//! heterogeneous clusters: [`ComputeSim`] (per-partition rotating
+//! stragglers on the forward-backward) and [`SimOptim`] (per-shard sync
+//! cost), which together expose the barrier cost that pipelined training
+//! removes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use super::optim::OptimMethod;
+use super::sample::Sample;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Where a builtin forward-backward is executing (threaded through from
+/// the task context so compute simulators can model per-node skew).
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx {
+    pub node: usize,
+    pub partition: usize,
+}
+
+/// A pure-Rust model: deterministic `fwd_bwd` over host memory. Must be
+/// deterministic in `(weights, samples, idx)` — retried tasks regenerate
+/// byte-identical gradients, the same invariant the AOT path relies on.
+pub trait BuiltinModel: Send + Sync {
+    fn name(&self) -> &str;
+    fn param_count(&self) -> usize;
+    /// Per-replica minibatch size.
+    fn batch_size(&self) -> usize;
+    fn initial_params(&self) -> Vec<f32>;
+    /// One local forward-backward on `samples[idx]`: returns
+    /// `(loss, flat gradient)` with `gradient.len() == param_count()`.
+    fn fwd_bwd(
+        &self,
+        step: &StepCtx,
+        weights: &[f32],
+        samples: &[Sample],
+        idx: &[usize],
+    ) -> Result<(f32, Vec<f32>)>;
+}
+
+/// Simulated compute time for a builtin model's forward-backward: every
+/// call costs `base`; once per `period` calls of a partition (rotating by
+/// `(round + partition) % period`) the call additionally costs `straggle`
+/// — a deterministic rotating straggler, the cluster heterogeneity of
+/// paper §4.4. Timing only; gradients are unaffected.
+#[derive(Debug)]
+pub struct ComputeSim {
+    pub base: Duration,
+    pub straggle: Duration,
+    pub period: usize,
+    /// Per-partition call counter (a retry advances it — retries only
+    /// perturb timing, never results).
+    rounds: Mutex<HashMap<usize, usize>>,
+}
+
+impl ComputeSim {
+    pub fn new(base: Duration, straggle: Duration, period: usize) -> ComputeSim {
+        ComputeSim { base, straggle, period: period.max(1), rounds: Mutex::new(HashMap::new()) }
+    }
+
+    fn sleep(&self, partition: usize) {
+        let round = {
+            let mut m = self.rounds.lock().unwrap();
+            let r = m.entry(partition).or_insert(0);
+            let cur = *r;
+            *r += 1;
+            cur
+        };
+        let mut d = self.base;
+        if (round + partition) % self.period == 0 {
+            d += self.straggle;
+        }
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// Linear regression with MSE loss: params `[w(dim), b]`, one feature
+/// tensor of shape `[dim]` per sample, scalar label. Gradients are exact
+/// and accumulated in fixed sample order, so distributed training is
+/// bit-deterministic given the seed.
+pub struct LinReg {
+    pub dim: usize,
+    pub batch: usize,
+    /// Optional simulated compute cost (benches model real model sizes).
+    pub compute: Option<ComputeSim>,
+}
+
+impl LinReg {
+    pub fn new(dim: usize, batch: usize) -> LinReg {
+        LinReg { dim, batch, compute: None }
+    }
+
+    pub fn with_compute(mut self, sim: ComputeSim) -> LinReg {
+        self.compute = Some(sim);
+        self
+    }
+}
+
+impl BuiltinModel for LinReg {
+    fn name(&self) -> &str {
+        "linreg"
+    }
+
+    fn param_count(&self) -> usize {
+        self.dim + 1
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn initial_params(&self) -> Vec<f32> {
+        vec![0.0; self.dim + 1]
+    }
+
+    fn fwd_bwd(
+        &self,
+        step: &StepCtx,
+        weights: &[f32],
+        samples: &[Sample],
+        idx: &[usize],
+    ) -> Result<(f32, Vec<f32>)> {
+        ensure!(weights.len() == self.dim + 1, "weights len {} != {}", weights.len(), self.dim + 1);
+        if let Some(sim) = &self.compute {
+            sim.sleep(step.partition);
+        }
+        let (w, b) = (&weights[..self.dim], weights[self.dim]);
+        let mut grad = vec![0.0f32; self.dim + 1];
+        let mut loss = 0.0f32;
+        let inv = 1.0 / idx.len() as f32;
+        for &i in idx {
+            let x = samples[i].features[0].as_f32()?;
+            ensure!(x.len() == self.dim, "feature dim {} != {}", x.len(), self.dim);
+            let y = samples[i].label.item_f32()?;
+            let pred = w.iter().zip(x).map(|(wi, xi)| wi * xi).sum::<f32>() + b;
+            let err = pred - y;
+            loss += err * err * inv;
+            let g = 2.0 * err * inv;
+            for (gi, xi) in grad[..self.dim].iter_mut().zip(x) {
+                *gi += g * xi;
+            }
+            grad[self.dim] += g;
+        }
+        Ok((loss, grad))
+    }
+}
+
+/// Deterministic synthetic linear-regression dataset for [`LinReg`]:
+/// `y = w*·x + b* + noise` with a fixed ground-truth drawn from `seed`.
+pub fn linreg_rdd(
+    ctx: &SparkletContext,
+    dim: usize,
+    parts: usize,
+    per_part: usize,
+    seed: u64,
+) -> Rdd<Sample> {
+    let mut truth_rng = Rng::new(seed ^ 0x11AB);
+    let truth: Arc<Vec<f32>> =
+        Arc::new((0..dim + 1).map(|_| truth_rng.gen_f32() * 2.0 - 1.0).collect());
+    ctx.generate(parts, per_part, seed, move |_p, rng| {
+        let x: Vec<f32> = (0..dim).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        let y = truth[..dim].iter().zip(&x).map(|(w, xi)| w * xi).sum::<f32>()
+            + truth[dim]
+            + (rng.gen_f32() - 0.5) * 0.02;
+        Sample::new(
+            vec![Tensor::from_f32(vec![dim], x)],
+            Tensor::from_f32(vec![], vec![y]),
+        )
+    })
+}
+
+/// Wraps an [`OptimMethod`] with simulated per-shard update cost: every
+/// `update` sleeps `base`, and one call per round of `period` calls
+/// additionally sleeps `straggle` (rotating). This models the parameter-
+/// synchronization cost of a real-sized model so benches can expose the
+/// sync barrier that pipelined training overlaps. The numeric update is
+/// delegated untouched.
+pub struct SimOptim {
+    inner: Arc<dyn OptimMethod>,
+    base: Duration,
+    straggle: Duration,
+    period: usize,
+    calls: AtomicUsize,
+}
+
+impl SimOptim {
+    pub fn new(
+        inner: Arc<dyn OptimMethod>,
+        base: Duration,
+        straggle: Duration,
+        period: usize,
+    ) -> SimOptim {
+        SimOptim { inner, base, straggle, period: period.max(1), calls: AtomicUsize::new(0) }
+    }
+}
+
+impl OptimMethod for SimOptim {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn state_bufs(&self) -> usize {
+        self.inner.state_bufs()
+    }
+
+    fn update(
+        &self,
+        step: usize,
+        lr_mult: f32,
+        weights: &mut [f32],
+        grad: &[f32],
+        state: &mut [Vec<f32>],
+    ) {
+        let c = self.calls.fetch_add(1, Ordering::Relaxed);
+        let (round, slot) = (c / self.period, c % self.period);
+        let mut d = self.base;
+        if slot == round % self.period {
+            d += self.straggle;
+        }
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+        self.inner.update(step, lr_mult, weights, grad, state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linreg_gradient_matches_finite_difference() {
+        let m = LinReg::new(3, 4);
+        let samples: Vec<Sample> = (0..4)
+            .map(|i| {
+                Sample::new(
+                    vec![Tensor::from_f32(vec![3], vec![i as f32, 1.0, -0.5])],
+                    Tensor::from_f32(vec![], vec![i as f32 * 0.3]),
+                )
+            })
+            .collect();
+        let idx = [0, 1, 2, 3];
+        let w: Vec<f32> = vec![0.1, -0.2, 0.3, 0.05];
+        let sc = StepCtx { node: 0, partition: 0 };
+        let (_, grad) = m.fwd_bwd(&sc, &w, &samples, &idx).unwrap();
+        let eps = 1e-3f32;
+        for p in 0..4 {
+            let mut wp = w.clone();
+            wp[p] += eps;
+            let (lp, _) = m.fwd_bwd(&sc, &wp, &samples, &idx).unwrap();
+            let mut wm = w.clone();
+            wm[p] -= eps;
+            let (lm, _) = m.fwd_bwd(&sc, &wm, &samples, &idx).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((grad[p] - fd).abs() < 1e-2, "param {p}: {} vs fd {fd}", grad[p]);
+        }
+    }
+
+    #[test]
+    fn linreg_fwd_bwd_is_deterministic() {
+        let m = LinReg::new(2, 2);
+        let samples = vec![
+            Sample::new(vec![Tensor::from_f32(vec![2], vec![1.0, 2.0])], Tensor::from_f32(vec![], vec![0.5])),
+            Sample::new(vec![Tensor::from_f32(vec![2], vec![-1.0, 0.3])], Tensor::from_f32(vec![], vec![1.5])),
+        ];
+        let sc = StepCtx { node: 0, partition: 0 };
+        let a = m.fwd_bwd(&sc, &[0.1, 0.2, 0.0], &samples, &[0, 1]).unwrap();
+        let b = m.fwd_bwd(&sc, &[0.1, 0.2, 0.0], &samples, &[0, 1]).unwrap();
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(
+            a.1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.1.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -17,8 +17,15 @@ pub struct IterMetrics {
     pub compute_s: f64,
     /// Max per-task weight-fetch (broadcast read) time.
     pub fetch_s: f64,
-    /// Wall time of the "parameter synchronization" job.
+    /// Wall time of the "parameter synchronization" job. In pipelined
+    /// mode this is the *exposed* cost only (dispatch + any
+    /// bounded-staleness wait); the overlapped part runs under the next
+    /// iteration's forward-backward.
     pub sync_s: f64,
+    /// Sync rounds still uncommitted when this iteration's forward-
+    /// backward read the weights (0 in `Sync` mode; ≤ `staleness` in
+    /// pipelined mode).
+    pub sync_lag: usize,
     /// Driver dispatch time spent this iteration (ns).
     pub dispatch_ns: u64,
     /// Block-store traffic this iteration.

@@ -17,6 +17,7 @@
 //! * [`metrics`] — per-iteration breakdowns and evaluation metrics.
 
 pub mod allreduce;
+pub mod builtin;
 pub mod checkpoint;
 pub mod inference;
 pub mod metrics;
@@ -29,12 +30,13 @@ pub mod schedule;
 pub mod serving;
 pub mod trigger;
 
+pub use builtin::{BuiltinModel, ComputeSim, LinReg, SimOptim, StepCtx};
 pub use metrics::{IterMetrics, TrainReport};
 pub use module::Module;
 pub use optim::{Adagrad, Adam, Lars, OptimMethod, Sgd};
-pub use optimizer::{DistributedOptimizer, TrainConfig};
+pub use optimizer::{DistributedOptimizer, SyncMode, TrainConfig};
 pub use checkpoint::Checkpoint;
-pub use param_mgr::{GradPolicy, ParameterManager};
+pub use param_mgr::{GradPolicy, ParameterManager, PendingSync};
 pub use schedule::LrSchedule;
 pub use serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
 pub use trigger::{TrainState, Trigger};

@@ -1,89 +1,161 @@
-//! `Module` — a neural-network model handle: the AOT artifact (HLO
-//! executables + metadata) plus helpers to run `fwd_bwd` / `predict` with
-//! host tensors. The analogue of BigDL's `Module` API, except the graph
-//! was defined in JAX (L2) + Pallas (L1) and frozen at build time.
+//! `Module` — a neural-network model handle: either an AOT artifact (HLO
+//! executables + metadata, defined in JAX (L2) + Pallas (L1) and frozen at
+//! build time) or a [`BuiltinModel`] (pure-Rust forward-backward — no
+//! artifacts or PJRT plugin required). The analogue of BigDL's `Module`
+//! API; the distributed machinery (Algorithms 1+2, pipelined sync, the
+//! serving stack) is backend-agnostic and only calls the unified surface
+//! here.
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use super::builtin::{BuiltinModel, StepCtx};
+use super::sample::{assemble_train_inputs, Sample};
 use crate::runtime::{ArtifactMeta, EntryMeta, RuntimeHandle};
 use crate::tensor::Tensor;
 
-/// Handle to one AOT-compiled model.
+#[derive(Clone)]
+enum Backend {
+    Aot { rt: RuntimeHandle, meta: Arc<ArtifactMeta> },
+    Builtin(Arc<dyn BuiltinModel>),
+}
+
+/// Handle to one model (AOT-compiled or builtin).
 #[derive(Clone)]
 pub struct Module {
     pub name: String,
-    rt: RuntimeHandle,
-    meta: Arc<ArtifactMeta>,
+    backend: Backend,
 }
 
 impl Module {
     pub fn load(rt: &RuntimeHandle, name: &str) -> Result<Module> {
         let meta = Arc::new(rt.meta(name)?.clone());
-        Ok(Module { name: name.to_string(), rt: rt.clone(), meta })
+        Ok(Module {
+            name: name.to_string(),
+            backend: Backend::Aot { rt: rt.clone(), meta },
+        })
     }
 
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
+    /// Wrap a pure-Rust model. Builtin modules train through the identical
+    /// distributed path as AOT ones; only `fwd_bwd` runs in-process.
+    pub fn builtin(model: Arc<dyn BuiltinModel>) -> Module {
+        Module { name: model.name().to_string(), backend: Backend::Builtin(model) }
     }
 
-    pub fn runtime(&self) -> &RuntimeHandle {
-        &self.rt
+    pub fn is_builtin(&self) -> bool {
+        matches!(self.backend, Backend::Builtin(_))
+    }
+
+    pub fn meta(&self) -> Result<&ArtifactMeta> {
+        match &self.backend {
+            Backend::Aot { meta, .. } => Ok(meta),
+            Backend::Builtin(m) => bail!("builtin module {} has no artifact metadata", m.name()),
+        }
+    }
+
+    pub fn runtime(&self) -> Result<&RuntimeHandle> {
+        match &self.backend {
+            Backend::Aot { rt, .. } => Ok(rt),
+            Backend::Builtin(m) => bail!("builtin module {} has no runtime", m.name()),
+        }
     }
 
     pub fn param_count(&self) -> usize {
-        self.meta.param_count
+        match &self.backend {
+            Backend::Aot { meta, .. } => meta.param_count,
+            Backend::Builtin(m) => m.param_count(),
+        }
     }
 
     pub fn train_entry(&self) -> Result<&EntryMeta> {
-        self.meta.entry("fwd_bwd")
+        self.meta()?.entry("fwd_bwd")
     }
 
     pub fn predict_entry(&self) -> Result<&EntryMeta> {
-        self.meta.entry("predict")
+        self.meta()?.entry("predict")
     }
 
-    /// Per-replica train batch size baked into the artifact.
+    /// Per-replica train batch size (artifact contract or builtin config).
     pub fn train_batch(&self) -> Result<usize> {
-        Ok(self.train_entry()?.batch_size)
+        match &self.backend {
+            Backend::Aot { .. } => Ok(self.train_entry()?.batch_size),
+            Backend::Builtin(m) => Ok(m.batch_size()),
+        }
     }
 
-    /// Initial parameters (as exported by aot.py).
+    /// Initial parameters (as exported by aot.py, or the builtin's init).
     pub fn initial_params(&self) -> Result<Vec<f32>> {
-        self.rt.initial_params(&self.name)
+        match &self.backend {
+            Backend::Aot { rt, .. } => rt.initial_params(&self.name),
+            Backend::Builtin(m) => Ok(m.initial_params()),
+        }
     }
 
-    /// Pre-compile both entry points (off the training path).
+    /// Pre-compile both entry points (off the training path; no-op for
+    /// builtin models).
     pub fn warmup(&self) -> Result<()> {
-        for entry in self.meta.entries.keys() {
-            self.rt.warmup(&self.name, entry)?;
+        if let Backend::Aot { rt, meta } = &self.backend {
+            for entry in meta.entries.keys() {
+                rt.warmup(&self.name, entry)?;
+            }
         }
         Ok(())
     }
 
-    /// Run one forward-backward: returns (loss, flat gradient).
+    /// One local forward-backward over `samples[idx]` with flat `weights`:
+    /// the backend-agnostic training step (Algorithm 1 line 6). The AOT
+    /// path assembles the artifact's static-shape inputs and executes
+    /// `fwd_bwd`; the builtin path calls the model directly.
+    pub fn train_step(
+        &self,
+        step: &StepCtx,
+        weights: Vec<f32>,
+        samples: &[Sample],
+        idx: &[usize],
+    ) -> Result<(f32, Vec<f32>)> {
+        match &self.backend {
+            Backend::Aot { .. } => {
+                let entry = self.train_entry()?;
+                let inputs = assemble_train_inputs(
+                    entry,
+                    Tensor::from_f32(vec![weights.len()], weights),
+                    samples,
+                    idx,
+                )?;
+                self.fwd_bwd(inputs)
+            }
+            Backend::Builtin(m) => m.fwd_bwd(step, &weights, samples, idx),
+        }
+    }
+
+    /// Run one forward-backward on assembled tensors (AOT path): returns
+    /// (loss, flat gradient).
     pub fn fwd_bwd(&self, inputs: Vec<Tensor>) -> Result<(f32, Vec<f32>)> {
-        let out = self
-            .rt
+        let Backend::Aot { rt, meta } = &self.backend else {
+            bail!("builtin module {}: use train_step, not tensor-level fwd_bwd", self.name)
+        };
+        let out = rt
             .execute(&self.name, "fwd_bwd", inputs)
             .with_context(|| format!("{} fwd_bwd", self.name))?;
         ensure!(out.len() == 2, "fwd_bwd must return (loss, grads)");
         let loss = out[0].item_f32()?;
         let grads = out.into_iter().nth(1).unwrap().into_f32()?;
         ensure!(
-            grads.len() == self.meta.param_count,
+            grads.len() == meta.param_count,
             "gradient length {} != param_count {}",
             grads.len(),
-            self.meta.param_count
+            meta.param_count
         );
         Ok((loss, grads))
     }
 
-    /// Run prediction; returns all model outputs.
+    /// Run prediction; returns all model outputs (AOT path).
     pub fn predict(&self, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        self.rt
-            .execute(&self.name, "predict", inputs)
+        let Backend::Aot { rt, .. } = &self.backend else {
+            bail!("builtin module {} has no predict entry", self.name)
+        };
+        rt.execute(&self.name, "predict", inputs)
             .with_context(|| format!("{} predict", self.name))
     }
 }
@@ -92,7 +164,8 @@ impl std::fmt::Debug for Module {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Module")
             .field("name", &self.name)
-            .field("params", &self.meta.param_count)
+            .field("params", &self.param_count())
+            .field("builtin", &self.is_builtin())
             .finish()
     }
 }

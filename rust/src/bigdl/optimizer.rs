@@ -1,32 +1,81 @@
 //! `DistributedOptimizer` — Algorithm 1: the logically-centralized driver
-//! loop. Every iteration runs exactly two short-lived Sparklet jobs:
+//! loop. Every iteration runs two short-lived Sparklet jobs:
 //!
 //! 1. **model forward-backward** — one task per Sample-RDD partition; each
 //!    task reads the latest weights (task-side broadcast shards), draws a
-//!    random local minibatch, runs the AOT `fwd_bwd` executable, slices
-//!    its local gradient N ways and publishes the slices (shuffle write);
+//!    random local minibatch, runs the model's `fwd_bwd` (AOT executable
+//!    or builtin), slices its local gradient N ways and publishes the
+//!    slices (shuffle write);
 //! 2. **parameter synchronization** — [`ParameterManager::sync_round`]
 //!    (Algorithm 2).
+//!
+//! With [`SyncMode::Pipelined`] the two jobs of consecutive iterations
+//! overlap: round k's parameter sync is dispatched asynchronously
+//! ([`ParameterManager::sync_round_async`], a [`crate::sparklet::JobHandle`]
+//! under the hood) and runs on the executor pool while round k+1's
+//! forward-backward computes against the round-k-1 weights broadcast —
+//! bounded-staleness SGD in the SparkNet sense. `staleness` bounds how
+//! many un-committed sync rounds may be outstanding when a
+//! forward-backward reads the weights; `staleness: 0` degenerates to a
+//! full barrier per iteration and is bit-identical to [`SyncMode::Sync`].
 //!
 //! Tasks are stateless and individually re-runnable: a retried task
 //! re-reads the same broadcast round, re-draws the same minibatch (the
 //! task RNG is seeded by job+partition) and regenerates identical slices.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
+use super::builtin::StepCtx;
 use super::checkpoint::Checkpoint;
 use super::metrics::{IterMetrics, TrainReport};
 use super::module::Module;
 use super::optim::OptimMethod;
-use super::param_mgr::ParameterManager;
-use super::sample::{assemble_train_inputs, draw_batch_indices, Sample};
+use super::param_mgr::{ParameterManager, PendingSync};
+use super::sample::{draw_batch_indices, Sample};
 use super::serving::PredictService;
 use super::trigger::{TrainState, Trigger};
 use crate::sparklet::{GroupPlan, Rdd, Shuffle, SparkletContext};
-use crate::tensor::Tensor;
+
+/// How the parameter-synchronization job is scheduled relative to the
+/// next iteration's forward-backward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Algorithm 1 as written: a full driver barrier after every sync
+    /// round (iteration k+1 starts only after round k committed).
+    Sync,
+    /// Overlap iteration k+1's forward-backward with round k's sync.
+    /// `staleness` is the max number of un-committed sync rounds allowed
+    /// to be outstanding when a forward-backward reads the weights — a
+    /// task therefore never reads a weights broadcast missing more than
+    /// `staleness` updates (`staleness: 0` ≡ `Sync`, bit-for-bit).
+    Pipelined { staleness: usize },
+}
+
+impl SyncMode {
+    /// Parse a `--sync-mode` CLI value: `sync`, `pipelined` (staleness 1)
+    /// or `pipelined:<staleness>`.
+    pub fn parse(s: &str) -> Result<SyncMode> {
+        match s {
+            "sync" => Ok(SyncMode::Sync),
+            "pipelined" => Ok(SyncMode::Pipelined { staleness: 1 }),
+            other => match other.strip_prefix("pipelined:") {
+                Some(n) => Ok(SyncMode::Pipelined { staleness: n.parse()? }),
+                None => bail!("unknown sync mode {other:?} (sync | pipelined[:<staleness>])"),
+            },
+        }
+    }
+
+    fn staleness(&self) -> usize {
+        match self {
+            SyncMode::Sync => 0,
+            SyncMode::Pipelined { staleness } => *staleness,
+        }
+    }
+}
 
 /// Training-run configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +88,8 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Drizzle group size (>1 pre-plans placements for whole groups).
     pub group_size: usize,
+    /// Sync scheduling: barrier per round, or bounded-staleness pipelining.
+    pub sync_mode: SyncMode,
     /// Custom end condition (e.g. `MaxEpoch(5).or(MinLoss(0.1))`).
     pub end_trigger: Option<Trigger>,
     /// Checkpoint cadence + directory (BigDL `setCheckpoint`).
@@ -53,6 +104,7 @@ impl Default for TrainConfig {
             n_shards: None,
             log_every: 5,
             group_size: 1,
+            sync_mode: SyncMode::Sync,
             end_trigger: None,
             checkpoint_dir: None,
             checkpoint_trigger: Trigger::Never,
@@ -63,6 +115,28 @@ impl Default for TrainConfig {
 /// Validation hook: given the current full weights, produce a named score
 /// (runs on the driver between iterations, e.g. distributed evaluate).
 pub type ValidationFn = Box<dyn FnMut(&[f32]) -> Result<f64>>;
+
+/// A round whose gradients are computed (shuffle written) but whose sync
+/// hasn't been dispatched yet — queued behind the in-flight round.
+struct ReadyGrads {
+    shuffle: Shuffle,
+    replicas: usize,
+}
+
+/// Pipeline state: at most one sync in flight (the round chain is
+/// serial), plus gradient rounds queued behind it.
+#[derive(Default)]
+struct Pipeline {
+    ready: VecDeque<ReadyGrads>,
+    inflight: Option<PendingSync>,
+}
+
+impl Pipeline {
+    /// Rounds whose weight update hasn't committed yet.
+    fn unsettled(&self) -> usize {
+        self.ready.len() + usize::from(self.inflight.is_some())
+    }
+}
 
 /// The driver-side distributed trainer.
 pub struct DistributedOptimizer {
@@ -79,6 +153,7 @@ pub struct DistributedOptimizer {
     /// once per `cfg.group_size` iterations; every job inside a group is
     /// dispatched as bare batched enqueues.
     plans: Option<(GroupPlan, GroupPlan)>,
+    pipeline: Pipeline,
 }
 
 impl DistributedOptimizer {
@@ -114,6 +189,7 @@ impl DistributedOptimizer {
             validation: None,
             dataset_len: counts.iter().sum(),
             plans: None,
+            pipeline: Pipeline::default(),
         })
     }
 
@@ -173,15 +249,106 @@ impl DistributedOptimizer {
 
     /// Global batch = per-replica batch × partitions (paper §2 of Fig 3).
     pub fn global_batch(&self) -> usize {
-        self.module.train_entry().map(|e| e.batch_size).unwrap_or(0)
-            * self.dataset.num_partitions()
+        self.module.train_batch().unwrap_or(0) * self.dataset.num_partitions()
     }
 
-    /// Run one training iteration (two jobs); returns its metrics.
+    /// Dispatch the oldest queued sync round if none is in flight. The
+    /// submitted job's tasks run on the executor pool concurrently with
+    /// whatever the driver does next — this is the overlap.
+    fn pump(&mut self) -> Result<()> {
+        if self.pipeline.inflight.is_some() {
+            return Ok(());
+        }
+        let Some(r) = self.pipeline.ready.pop_front() else {
+            return Ok(());
+        };
+        let begun = match &self.plans {
+            Some((_, sync)) => {
+                self.pm.sync_round_async_planned(&r.shuffle, r.replicas, sync)
+            }
+            None => self.pm.sync_round_async(&r.shuffle, r.replicas),
+        };
+        match begun {
+            Ok(p) => {
+                self.pipeline.inflight = Some(p);
+                Ok(())
+            }
+            Err(e) => {
+                // sync_begin's own failure paths clean the shuffle, but
+                // its entry guards (width checks, the single-inflight CAS
+                // — reachable when a caller drives the public
+                // ParameterManager directly) fail before touching blocks;
+                // cleanup is idempotent, so always drop this round's
+                // slices here, then the still-queued rounds'.
+                r.shuffle.cleanup(&self.ctx.blocks());
+                self.abort_pipeline();
+                Err(e)
+            }
+        }
+    }
+
+    /// Wait for (and commit) one outstanding sync round, dispatching from
+    /// the ready queue first if needed. Returns false when nothing was
+    /// outstanding. A failed round rolls back inside
+    /// [`ParameterManager::sync_wait`]; the queued rounds behind it are
+    /// then discarded (their gradients were computed against a lineage
+    /// that no longer advances).
+    fn advance_one(&mut self) -> Result<bool> {
+        if self.pipeline.inflight.is_none() {
+            self.pump()?;
+        }
+        match self.pipeline.inflight.take() {
+            None => Ok(false),
+            Some(pending) => match self.pm.sync_wait(pending) {
+                Ok(_) => {
+                    // Keep the pipe full: next queued round starts now.
+                    self.pump()?;
+                    Ok(true)
+                }
+                Err(e) => {
+                    self.abort_pipeline();
+                    Err(e)
+                }
+            },
+        }
+    }
+
+    /// Block until at most `max_unsettled` sync rounds are outstanding —
+    /// the bounded-staleness backpressure.
+    fn settle_to(&mut self, max_unsettled: usize) -> Result<()> {
+        while self.pipeline.unsettled() > max_unsettled {
+            if !self.advance_one()? {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit every outstanding sync round (no-op in `Sync` mode). Called
+    /// automatically at the end of [`DistributedOptimizer::optimize`];
+    /// step-driven callers should call it before reading final weights.
+    pub fn drain(&mut self) -> Result<()> {
+        self.settle_to(0)
+    }
+
+    /// Drop queued gradient rounds after a mid-pipeline failure (the
+    /// failed round itself was already rolled back by `sync_wait`).
+    fn abort_pipeline(&mut self) {
+        let bm = self.ctx.blocks();
+        for r in self.pipeline.ready.drain(..) {
+            r.shuffle.cleanup(&bm);
+        }
+    }
+
+    /// Run one training iteration; returns its metrics. In pipelined mode
+    /// the returned metrics' `sync_s` is the *exposed* sync cost (submit
+    /// plus any bounded-staleness wait), and the round's weight update may
+    /// still be uncommitted when this returns — `drain()` forces it.
     pub fn step(&mut self) -> Result<IterMetrics> {
         let iter_idx = self.history.len();
         let m = self.dataset.num_partitions();
         let n = self.pm.n_shards;
+        let staleness = self.cfg.sync_mode.staleness();
         let bm = self.ctx.blocks();
         let traffic0 = bm.stats.snapshot();
         let sched0 = self.ctx.scheduler().stats.snapshot();
@@ -201,33 +368,33 @@ impl DistributedOptimizer {
             self.plans = None;
         }
 
+        // How many weight updates the broadcast read below is missing —
+        // bounded by `staleness` thanks to last iteration's settle_to.
+        let sync_lag = self.pipeline.unsettled();
+
         // ---- job 1: model forward-backward --------------------------------
         let bcast = self.pm.weights_broadcast();
         let shuffle = Shuffle::new(self.ctx.next_shuffle_id(), m, n);
         let module = self.module.clone();
         let ranges: Arc<Vec<std::ops::Range<usize>>> = Arc::new(self.pm.ranges().to_vec());
-        let entry = self.module.train_entry()?.clone();
-        let batch = entry.batch_size;
+        let batch = self.module.train_batch()?;
 
         let t_job1 = Instant::now();
         let fwd_bwd_task = move |tc: &crate::sparklet::TaskContext, samples: &[Sample]| {
             let bm = tc.blocks();
-            // (line 4) read the latest weights.
+            // (line 4) read the latest *committed* weights. In pipelined
+            // mode this broadcast can lag the in-flight round — the
+            // bounded-staleness read.
             let t0 = Instant::now();
             let weights = bcast.fetch_all_concat(&bm, tc.node)?;
             let fetch_s = t0.elapsed().as_secs_f64();
             // (line 5) random local minibatch.
             let mut rng = tc.rng();
             let idx = draw_batch_indices(&mut rng, samples.len(), batch);
-            let inputs = assemble_train_inputs(
-                &entry,
-                Tensor::from_f32(vec![weights.len()], weights),
-                samples,
-                &idx,
-            )?;
             // (line 6) local gradients on the model replica.
             let t1 = Instant::now();
-            let (loss, grads) = module.fwd_bwd(inputs)?;
+            let step_ctx = StepCtx { node: tc.node, partition: tc.partition };
+            let (loss, grads) = module.train_step(&step_ctx, weights, samples, &idx)?;
             let compute_s = t1.elapsed().as_secs_f64();
             // Slice N ways and publish (input to Algorithm 2) as views:
             // one shared allocation, zero per-shard copies (§Perf P2).
@@ -237,9 +404,22 @@ impl DistributedOptimizer {
             }
             Ok((loss, fetch_s, compute_s))
         };
-        let task_results = match &self.plans {
-            Some((fwd, _)) => self.dataset.run_partition_job_planned(fwd, fwd_bwd_task)?,
-            None => self.dataset.run_partition_job(fwd_bwd_task)?,
+        let dispatched = match &self.plans {
+            Some((fwd, _)) => self.dataset.run_partition_job_planned(fwd, fwd_bwd_task),
+            None => self.dataset.run_partition_job(fwd_bwd_task),
+        };
+        let task_results = match dispatched {
+            Ok(r) => r,
+            Err(e) => {
+                // This round is dead: drop its gradient slices, then drain
+                // the in-flight rounds (their commits/rollbacks are
+                // independent of this failure) before surfacing the error.
+                shuffle.cleanup(&bm);
+                if let Err(de) = self.drain() {
+                    log::warn!("pipeline drain after failed forward-backward: {de}");
+                }
+                return Err(e);
+            }
         };
         let fwdbwd_s = t_job1.elapsed().as_secs_f64();
 
@@ -248,11 +428,13 @@ impl DistributedOptimizer {
         let compute_s = task_results.iter().map(|r| r.2).fold(0.0, f64::max);
 
         // ---- job 2: parameter synchronization ------------------------------
+        // Queue this round's gradients, dispatch if the slot is free, and
+        // apply bounded-staleness backpressure. With `Sync` (staleness 0)
+        // this commits the round before returning — the classic barrier.
         let t_sync = Instant::now();
-        match &self.plans {
-            Some((_, sync)) => self.pm.sync_round_planned(&shuffle, m, sync)?,
-            None => self.pm.sync_round(&shuffle, m)?,
-        };
+        self.pipeline.ready.push_back(ReadyGrads { shuffle, replicas: m });
+        self.pump()?;
+        self.settle_to(staleness)?;
         let sync_s = t_sync.elapsed().as_secs_f64();
 
         let sched1 = self.ctx.scheduler().stats.snapshot();
@@ -264,13 +446,14 @@ impl DistributedOptimizer {
             compute_s,
             fetch_s,
             sync_s,
+            sync_lag,
             dispatch_ns: sched1.dispatch_ns - sched0.dispatch_ns,
             traffic: bm.stats.snapshot().delta(traffic0),
             sched: sched1,
         };
         if self.cfg.log_every > 0 && iter_idx % self.cfg.log_every == 0 {
             log::info!(
-                "iter {iter_idx}: loss={loss:.4} compute={:.1}ms sync={:.1}ms ({:.1}%)",
+                "iter {iter_idx}: loss={loss:.4} compute={:.1}ms sync={:.1}ms ({:.1}%) lag={sync_lag}",
                 compute_s * 1e3,
                 sync_s * 1e3,
                 metrics.sync_overhead_frac() * 100.0
@@ -282,7 +465,13 @@ impl DistributedOptimizer {
 
     /// Algorithm 1's outer loop: run until the end trigger fires
     /// (default `MaxIteration(cfg.iterations)`), firing validation and
-    /// checkpoint triggers along the way.
+    /// checkpoint triggers along the way, then drain the sync pipeline so
+    /// the final weights reflect every iteration.
+    ///
+    /// In pipelined mode, validation/checkpoint hooks observe the latest
+    /// *committed* weights, which may lag the current iteration by up to
+    /// `staleness` rounds (with `staleness: 0` they see exactly what
+    /// `Sync` sees).
     pub fn optimize(&mut self) -> Result<TrainReport> {
         let end = self
             .cfg
@@ -316,10 +505,13 @@ impl DistributedOptimizer {
                 anyhow::bail!("end trigger never fired after {} iterations", self.history.len());
             }
         }
+        self.drain()?;
         Ok(TrainReport::from_history(&self.history, self.global_batch()))
     }
 
-    /// Latest full weight vector (driver-side).
+    /// Latest full weight vector (driver-side). In pipelined mode call
+    /// [`DistributedOptimizer::drain`] first if you need every committed
+    /// round reflected.
     pub fn weights(&self) -> Result<Vec<f32>> {
         self.pm.current_weights()
     }
@@ -334,5 +526,48 @@ impl DistributedOptimizer {
         service: &PredictService<T>,
     ) -> Result<()> {
         service.deploy_sharded(&self.pm.weights_broadcast(), self.pm.param_count)
+    }
+}
+
+impl Drop for DistributedOptimizer {
+    fn drop(&mut self) {
+        // Best-effort pipeline settlement for step-driven callers that
+        // drop without drain(): the in-flight round is waited (commit and
+        // rollback both retire their blocks) and queued gradient rounds
+        // are discarded — a dropped optimizer must not leak blocks into
+        // the shared context's store. No-op when already drained.
+        if let Some(pending) = self.pipeline.inflight.take() {
+            if let Err(e) = self.pm.sync_wait(pending) {
+                log::warn!("in-flight sync round failed during optimizer drop: {e}");
+            }
+        }
+        self.abort_pipeline();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_mode_parses() {
+        assert_eq!(SyncMode::parse("sync").unwrap(), SyncMode::Sync);
+        assert_eq!(
+            SyncMode::parse("pipelined").unwrap(),
+            SyncMode::Pipelined { staleness: 1 }
+        );
+        assert_eq!(
+            SyncMode::parse("pipelined:3").unwrap(),
+            SyncMode::Pipelined { staleness: 3 }
+        );
+        assert!(SyncMode::parse("async").is_err());
+        assert!(SyncMode::parse("pipelined:x").is_err());
+    }
+
+    #[test]
+    fn staleness_zero_means_barrier() {
+        assert_eq!(SyncMode::Sync.staleness(), 0);
+        assert_eq!(SyncMode::Pipelined { staleness: 0 }.staleness(), 0);
+        assert_eq!(SyncMode::Pipelined { staleness: 2 }.staleness(), 2);
     }
 }

@@ -22,7 +22,7 @@
 //! aggregate+norm job before the update job, since the global norm needs
 //! all shards).
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, ensure, Result};
@@ -30,7 +30,7 @@ use anyhow::{anyhow, ensure, Result};
 use super::optim::OptimMethod;
 use super::schedule::LrSchedule;
 use crate::sparklet::{
-    BlockData, BlockId, Broadcast, GroupPlan, Shuffle, SparkletContext, TaskContext,
+    BlockData, BlockId, Broadcast, GroupPlan, JobHandle, Shuffle, SparkletContext, TaskContext,
 };
 use crate::tensor::partition_ranges;
 
@@ -60,6 +60,67 @@ pub struct ParameterManager {
     instance: u64,
     pub grad_policy: RwLock<GradPolicy>,
     pub lr_schedule: RwLock<LrSchedule>,
+    /// Guards the async path: at most one un-waited sync round at a time
+    /// (the round chain is serial — round k+1's old weights are round k's
+    /// output).
+    sync_inflight: Arc<AtomicBool>,
+}
+
+/// A parameter-synchronization round whose update job is still running on
+/// the executor pool ([`ParameterManager::sync_round_async`]). Pass it to
+/// [`ParameterManager::sync_wait`] to commit (or roll back) the round.
+///
+/// Exactly one `PendingSync` may exist per manager at a time; starting
+/// another before waiting this one errors. Dropping it without waiting
+/// drains the in-flight job (blocking), rolls the abandoned round's
+/// staged blocks back, and releases the slot — the round simply never
+/// happened.
+pub struct PendingSync {
+    /// `Some` until waited (`Option` so `sync_wait` can move it out past
+    /// the `Drop` impl).
+    handle: Option<JobHandle<()>>,
+    new_round: u64,
+    old_round: u64,
+    step: usize,
+    shuffle: Shuffle,
+    two_phase: bool,
+    inflight: Arc<AtomicBool>,
+    /// Rollback context for the un-waited-drop path.
+    bm: Arc<crate::sparklet::BlockManager>,
+    n_shards: usize,
+    state_bufs: usize,
+    instance: u64,
+}
+
+impl PendingSync {
+    /// The broadcast round this sync will publish if it commits.
+    pub fn round(&self) -> u64 {
+        self.new_round
+    }
+}
+
+impl Drop for PendingSync {
+    fn drop(&mut self) {
+        // Quiesce the in-flight update job BEFORE touching blocks or
+        // releasing the single-inflight slot: no task of the abandoned
+        // round may still be running (or publish afterwards — tasks only
+        // write under `new_round`, removed below).
+        if let Some(handle) = self.handle.take() {
+            drop(handle);
+            // Un-waited drop: the round never happened — remove its
+            // staged shards/state/aggregates and the consumed gradient
+            // slices, exactly like a failed round's rollback.
+            remove_staged_round(
+                &self.bm,
+                self.new_round,
+                self.n_shards,
+                self.state_bufs,
+                self.instance,
+                &self.shuffle,
+            );
+        }
+        self.inflight.store(false, Ordering::SeqCst);
+    }
 }
 
 impl ParameterManager {
@@ -100,6 +161,7 @@ impl ParameterManager {
             instance,
             grad_policy: RwLock::new(GradPolicy::default()),
             lr_schedule: RwLock::new(LrSchedule::Constant),
+            sync_inflight: Arc::new(AtomicBool::new(false)),
         })
     }
 
@@ -218,13 +280,62 @@ impl ParameterManager {
         n_replicas: usize,
         plan: Option<&GroupPlan>,
     ) -> Result<Broadcast> {
+        let pending = self.sync_begin(shuffle, n_replicas, plan)?;
+        self.sync_wait(pending)
+    }
+
+    /// Start a synchronization round WITHOUT waiting for it: the update
+    /// job is dispatched asynchronously (its tasks run on the executor
+    /// pool) and a [`PendingSync`] is returned immediately, so the driver
+    /// can overlap the next iteration's forward-backward with this round's
+    /// aggregation + weight update. Nothing commits until
+    /// [`ParameterManager::sync_wait`] — the committed round (and
+    /// therefore [`ParameterManager::weights_broadcast`]) stays at the
+    /// previous round for the whole async window, which is exactly the
+    /// stale broadcast the overlapped forward-backward reads.
+    ///
+    /// At most one round may be in flight per manager (the round chain is
+    /// serial). With global-L2 clipping configured, the short norm job
+    /// (phase A) still runs synchronously inside this call — only the
+    /// update job is overlapped.
+    pub fn sync_round_async(&self, shuffle: &Shuffle, n_replicas: usize) -> Result<PendingSync> {
+        self.sync_begin(shuffle, n_replicas, None)
+    }
+
+    /// [`ParameterManager::sync_round_async`] dispatched against a Drizzle
+    /// [`GroupPlan`] (one bare batched enqueue per node).
+    pub fn sync_round_async_planned(
+        &self,
+        shuffle: &Shuffle,
+        n_replicas: usize,
+        plan: &GroupPlan,
+    ) -> Result<PendingSync> {
+        self.sync_begin(shuffle, n_replicas, Some(plan))
+    }
+
+    fn sync_begin(
+        &self,
+        shuffle: &Shuffle,
+        n_replicas: usize,
+        plan: Option<&GroupPlan>,
+    ) -> Result<PendingSync> {
         ensure!(shuffle.reduces == self.n_shards, "shuffle/shard mismatch");
         ensure!(shuffle.maps == n_replicas, "shuffle writers != replicas");
+        ensure!(
+            self.sync_inflight
+                .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok(),
+            "a sync round is already in flight (wait it before starting another)"
+        );
+        let release_on_err = |e: anyhow::Error| -> anyhow::Error {
+            self.sync_inflight.store(false, Ordering::SeqCst);
+            e
+        };
         let policy = self.grad_policy.read().unwrap().clone();
         let old_round = self.round.load(Ordering::SeqCst);
         let new_round = self.ctx.next_broadcast_id();
         // The step this round WILL commit. It is only stored (together
-        // with the round id) after both jobs succeed — a failed round must
+        // with the round id) after the jobs succeed — a failed round must
         // leave step, round and weights exactly as they were.
         let step = self.step.load(Ordering::SeqCst) + 1;
         let lr_mult = self.lr_schedule.read().unwrap().multiplier(step) as f32;
@@ -245,140 +356,193 @@ impl ParameterManager {
 
         // Optional phase A (global-L2 clipping): aggregate + clamp + norm.
         // The aggregated slice is parked in the block store so phase B does
-        // not re-read the raw shuffle slices.
-        let agg_key = |shard: usize| BlockId::Named(format!("agg/{new_round}/{shard}"));
+        // not re-read the raw shuffle slices. The global norm is a driver
+        // barrier, so this phase runs synchronously even on the async path.
         let two_phase = policy.clip_l2.is_some();
-
-        // Both jobs run inside this closure so success and failure share
-        // one commit/rollback point below.
-        let run = move || -> Result<()> {
-            let clip_scale: f32 = if let Some(max_norm) = policy.clip_l2 {
-                let clip_const = policy.clip_const;
-                let norm_task: Arc<dyn Fn(&TaskContext) -> Result<f64> + Send + Sync> =
-                    Arc::new(move |tc| {
-                        let bm = tc.blocks();
-                        let n = tc.partition;
-                        let mut grad = sh.read_and_sum(&bm, tc.node, n)?;
-                        crate::tensor::scale(&mut grad, scale);
-                        if let Some(c) = clip_const {
-                            grad.iter_mut().for_each(|g| *g = g.clamp(-c, c));
-                        }
-                        let sq: f64 = grad.iter().map(|g| (*g as f64) * (*g as f64)).sum();
-                        bm.put(
-                            tc.node,
-                            BlockId::Named(format!("agg/{new_round}/{n}")),
-                            BlockData::F32(Arc::new(grad)),
-                        );
-                        Ok(sq)
-                    });
-                let sqnorms = match plan {
-                    Some(p) => runner.run_planned(p, norm_task)?,
-                    None => runner.run(&preferred, norm_task)?,
-                };
-                let norm = sqnorms.iter().sum::<f64>().sqrt() as f32;
-                if norm > max_norm {
-                    max_norm / norm
-                } else {
-                    1.0
-                }
-            } else {
-                1.0
-            };
-
+        let clip_scale: f32 = if let Some(max_norm) = policy.clip_l2 {
             let clip_const = policy.clip_const;
-            let update_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
+            let norm_task: Arc<dyn Fn(&TaskContext) -> Result<f64> + Send + Sync> =
                 Arc::new(move |tc| {
                     let bm = tc.blocks();
                     let n = tc.partition;
-                    // (2)-(3): aggregate the n-th slice of all local gradients.
-                    let mut grad = if two_phase {
-                        bm.get(tc.node, &BlockId::Named(format!("agg/{new_round}/{n}")))
-                            .ok_or_else(|| anyhow!("aggregated slice {n} missing"))?
-                            .as_f32()?
-                            .as_ref()
-                            .clone()
-                    } else {
-                        let mut g = sh.read_and_sum(&bm, tc.node, n)?;
-                        crate::tensor::scale(&mut g, scale);
-                        if let Some(c) = clip_const {
-                            g.iter_mut().for_each(|x| *x = x.clamp(-c, c));
-                        }
-                        g
-                    };
-                    if clip_scale != 1.0 {
-                        crate::tensor::scale(&mut grad, clip_scale);
+                    let mut grad = sh.read_and_sum(&bm, tc.node, n)?;
+                    crate::tensor::scale(&mut grad, scale);
+                    if let Some(c) = clip_const {
+                        grad.iter_mut().for_each(|g| *g = g.clamp(-c, c));
                     }
-                    // (4): update the n-th weight partition (copy-on-write;
-                    // state is staged under `new_round` and committed below).
-                    let mut weights = old_bcast.fetch(&bm, tc.node, n)?.as_ref().clone();
-                    let mut state: Vec<Vec<f32>> = (0..state_bufs)
-                        .map(|b| {
-                            bm.get(tc.node, &Self::state_key(instance, old_round, n, b))
-                                .ok_or_else(|| anyhow!("optimizer state {n}/{b} missing"))?
-                                .as_f32()
-                                .map(|a| a.as_ref().clone())
-                        })
-                        .collect::<Result<_>>()?;
-                    optim.update(step, lr_mult, &mut weights, &grad, &mut state);
-                    for (b, s) in state.into_iter().enumerate() {
-                        bm.put(
-                            tc.node,
-                            Self::state_key(instance, new_round, n, b),
-                            BlockData::F32(Arc::new(s)),
-                        );
-                    }
-                    // (5): task-side broadcast of the updated shard.
-                    new_bcast.publish(&bm, tc.node, n, Arc::new(weights));
-                    Ok(())
+                    let sq: f64 = grad.iter().map(|g| (*g as f64) * (*g as f64)).sum();
+                    bm.put(
+                        tc.node,
+                        BlockId::Named(format!("agg/{new_round}/{n}")),
+                        BlockData::F32(Arc::new(grad)),
+                    );
+                    Ok(sq)
                 });
-            match plan {
-                Some(p) => runner.run_planned(p, update_task)?,
-                None => runner.run(&preferred, update_task)?,
-            };
-            Ok(())
+            let sqnorms = match plan {
+                Some(p) => runner.run_planned(p, norm_task),
+                None => runner.run(&preferred, norm_task),
+            }
+            .map_err(|e| {
+                self.rollback_round(new_round, &sh);
+                release_on_err(e)
+            })?;
+            let norm = sqnorms.iter().sum::<f64>().sqrt() as f32;
+            if norm > max_norm {
+                max_norm / norm
+            } else {
+                1.0
+            }
+        } else {
+            1.0
         };
 
+        let clip_const = policy.clip_const;
+        let update_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
+            Arc::new(move |tc| {
+                let bm = tc.blocks();
+                let n = tc.partition;
+                // (2)-(3): aggregate the n-th slice of all local gradients.
+                let mut grad = if two_phase {
+                    bm.get(tc.node, &BlockId::Named(format!("agg/{new_round}/{n}")))
+                        .ok_or_else(|| anyhow!("aggregated slice {n} missing"))?
+                        .as_f32()?
+                        .as_ref()
+                        .clone()
+                } else {
+                    let mut g = sh.read_and_sum(&bm, tc.node, n)?;
+                    crate::tensor::scale(&mut g, scale);
+                    if let Some(c) = clip_const {
+                        g.iter_mut().for_each(|x| *x = x.clamp(-c, c));
+                    }
+                    g
+                };
+                if clip_scale != 1.0 {
+                    crate::tensor::scale(&mut grad, clip_scale);
+                }
+                // (4): update the n-th weight partition (copy-on-write;
+                // state is staged under `new_round` and committed at wait).
+                let mut weights = old_bcast.fetch(&bm, tc.node, n)?.as_ref().clone();
+                let mut state: Vec<Vec<f32>> = (0..state_bufs)
+                    .map(|b| {
+                        bm.get(tc.node, &Self::state_key(instance, old_round, n, b))
+                            .ok_or_else(|| anyhow!("optimizer state {n}/{b} missing"))?
+                            .as_f32()
+                            .map(|a| a.as_ref().clone())
+                    })
+                    .collect::<Result<_>>()?;
+                optim.update(step, lr_mult, &mut weights, &grad, &mut state);
+                for (b, s) in state.into_iter().enumerate() {
+                    bm.put(
+                        tc.node,
+                        Self::state_key(instance, new_round, n, b),
+                        BlockData::F32(Arc::new(s)),
+                    );
+                }
+                // (5): task-side broadcast of the updated shard.
+                new_bcast.publish(&bm, tc.node, n, Arc::new(weights));
+                Ok(())
+            });
+        let handle = match plan {
+            Some(p) => runner.submit_planned(p, update_task),
+            None => runner.submit(&preferred, update_task),
+        }
+        .map_err(|e| {
+            self.rollback_round(new_round, &sh);
+            release_on_err(e)
+        })?;
+        Ok(PendingSync {
+            handle: Some(handle),
+            new_round,
+            old_round,
+            step,
+            shuffle: sh,
+            two_phase,
+            inflight: Arc::clone(&self.sync_inflight),
+            bm: self.ctx.blocks(),
+            n_shards: self.n_shards,
+            state_bufs,
+            instance,
+        })
+    }
+
+    /// Wait for an in-flight round ([`ParameterManager::sync_round_async`])
+    /// and commit it — or roll every staged block back if it failed,
+    /// leaving step/round/weights exactly as they were. On success the
+    /// previous round's blocks are retired and the returned broadcast
+    /// becomes [`ParameterManager::weights_broadcast`].
+    pub fn sync_wait(&self, mut pending: PendingSync) -> Result<Broadcast> {
         let bm = self.ctx.blocks();
-        match run() {
-            Ok(()) => {
+        let new_bcast = Broadcast::new(pending.new_round, self.n_shards);
+        let handle = pending.handle.take().expect("handle present until waited");
+        match handle.join() {
+            Ok(_) => {
                 // Commit: advance step + round, then retire consumed blocks
                 // (shuffle slices, staged aggregates, previous weights and
                 // the previous round's optimizer state).
-                self.step.store(step, Ordering::SeqCst);
-                self.round.store(new_round, Ordering::SeqCst);
-                shuffle.cleanup(&bm);
-                if two_phase {
+                self.step.store(pending.step, Ordering::SeqCst);
+                self.round.store(pending.new_round, Ordering::SeqCst);
+                pending.shuffle.cleanup(&bm);
+                if pending.two_phase {
                     for n in 0..self.n_shards {
-                        bm.remove(&agg_key(n));
+                        bm.remove(&Self::agg_key(pending.new_round, n));
                     }
                 }
                 for n in 0..self.n_shards {
-                    for b in 0..state_bufs {
-                        bm.remove(&Self::state_key(instance, old_round, n, b));
+                    for b in 0..self.optim.state_bufs() {
+                        bm.remove(&Self::state_key(self.instance, pending.old_round, n, b));
                     }
                 }
-                old_bcast.cleanup(&bm);
+                Broadcast::new(pending.old_round, self.n_shards).cleanup(&bm);
                 Ok(new_bcast)
             }
             Err(e) => {
-                // Roll back every staged block: aggregates, partially
-                // published new-round shards, the new round's staged
-                // optimizer state — and drop the consumed gradient slices
-                // (the round is dead; a retry needs fresh gradients). A
-                // straggler task of this dead round can only republish
-                // under `new_round`, an id no retry will ever reuse.
-                for n in 0..self.n_shards {
-                    bm.remove(&agg_key(n));
-                    for b in 0..state_bufs {
-                        bm.remove(&Self::state_key(instance, new_round, n, b));
-                    }
-                }
-                new_bcast.cleanup(&bm);
-                shuffle.cleanup(&bm);
+                self.rollback_round(pending.new_round, &pending.shuffle);
                 Err(e)
             }
         }
     }
+
+    fn agg_key(round: u64, shard: usize) -> BlockId {
+        BlockId::Named(format!("agg/{round}/{shard}"))
+    }
+
+    /// Roll back every staged block of a dead round — see
+    /// [`remove_staged_round`]. A straggler task of this dead round can
+    /// only republish under its round id, an id no retry will ever reuse.
+    fn rollback_round(&self, new_round: u64, shuffle: &Shuffle) {
+        remove_staged_round(
+            &self.ctx.blocks(),
+            new_round,
+            self.n_shards,
+            self.optim.state_bufs(),
+            self.instance,
+            shuffle,
+        );
+    }
+}
+
+/// Remove everything a sync round staged under its (globally unique)
+/// round id: aggregate slices, staged optimizer state, partially
+/// published new-round shards — and the consumed gradient slices (the
+/// round is dead; a retry needs fresh gradients). The single source of
+/// truth for the staged-block layout, shared by the failure rollback and
+/// the un-waited [`PendingSync`] drop.
+fn remove_staged_round(
+    bm: &crate::sparklet::BlockManager,
+    round: u64,
+    n_shards: usize,
+    state_bufs: usize,
+    instance: u64,
+    shuffle: &Shuffle,
+) {
+    for n in 0..n_shards {
+        bm.remove(&ParameterManager::agg_key(round, n));
+        for b in 0..state_bufs {
+            bm.remove(&ParameterManager::state_key(instance, round, n, b));
+        }
+    }
+    Broadcast::new(round, n_shards).cleanup(bm);
+    shuffle.cleanup(bm);
 }
 
 #[cfg(test)]
@@ -476,6 +640,90 @@ mod tests {
         for (a, b) in got.iter().zip(init.iter().map(|w| w - 0.5)) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
+    }
+
+    /// The async begin/wait path must produce the same committed state as
+    /// the synchronous round (same blocks retired, same weights).
+    #[test]
+    fn async_sync_round_equals_sync_round() {
+        let ctx = SparkletContext::local(3);
+        let init: Vec<f32> = (0..60).map(|i| i as f32 * 0.1).collect();
+        let mk = || {
+            ParameterManager::init(
+                &ctx,
+                &init,
+                3,
+                Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.5) }),
+            )
+            .unwrap()
+        };
+        let pm_a = mk();
+        let pm_b = mk();
+        for _ in 0..3 {
+            let sh = write_grads(&ctx, &pm_a, &[vec![1.0f32; 60], vec![2.0f32; 60]]);
+            pm_a.sync_round(&sh, 2).unwrap();
+            let sh = write_grads(&ctx, &pm_b, &[vec![1.0f32; 60], vec![2.0f32; 60]]);
+            let pending = pm_b.sync_round_async(&sh, 2).unwrap();
+            pm_b.sync_wait(pending).unwrap();
+        }
+        assert_eq!(pm_a.current_weights().unwrap(), pm_b.current_weights().unwrap());
+        assert_eq!(pm_a.optimizer_step(), pm_b.optimizer_step());
+        assert_eq!(pm_a.export_state().unwrap(), pm_b.export_state().unwrap());
+    }
+
+    /// Dropping an un-waited round rolls it back completely: no staged
+    /// blocks survive, state is untouched, and the manager keeps working.
+    #[test]
+    fn dropped_unwaited_round_rolls_back() {
+        let ctx = SparkletContext::local(2);
+        let init: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let pm = ParameterManager::init(
+            &ctx,
+            &init,
+            2,
+            Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.5) }),
+        )
+        .unwrap();
+        let baseline = ctx.blocks().usage().0;
+        let w0 = pm.current_weights().unwrap();
+
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 10]]);
+        let pending = pm.sync_round_async(&sh, 1).unwrap();
+        drop(pending);
+
+        assert_eq!(pm.optimizer_step(), 0, "abandoned round must not commit");
+        assert_eq!(pm.current_weights().unwrap(), w0);
+        assert_eq!(
+            ctx.blocks().usage().0,
+            baseline,
+            "abandoned round must leave no staged shards/state/slices"
+        );
+        // The inflight slot was released: a new round runs and commits.
+        let sh2 = write_grads(&ctx, &pm, &[vec![1.0f32; 10]]);
+        pm.sync_round(&sh2, 1).unwrap();
+        assert_eq!(pm.optimizer_step(), 1);
+    }
+
+    /// The round chain is serial: a second `sync_round_async` before the
+    /// first is waited must error without disturbing either round.
+    #[test]
+    fn async_round_rejects_second_inflight() {
+        let ctx = SparkletContext::local(2);
+        let pm = ParameterManager::init(&ctx, &vec![0.0f32; 8], 2, Arc::new(Sgd::new(1.0)))
+            .unwrap();
+        let sh1 = write_grads(&ctx, &pm, &[vec![1.0f32; 8]]);
+        let pending = pm.sync_round_async(&sh1, 1).unwrap();
+        let sh2 = write_grads(&ctx, &pm, &[vec![2.0f32; 8]]);
+        assert!(
+            pm.sync_round_async(&sh2, 1).is_err(),
+            "second in-flight round must be rejected"
+        );
+        pm.sync_wait(pending).unwrap();
+        // The rejected round's gradients are untouched; it can run now.
+        pm.sync_round(&sh2, 1).unwrap();
+        assert_eq!(pm.optimizer_step(), 2);
+        let w = pm.current_weights().unwrap();
+        assert!(w.iter().all(|&x| (x + 3.0).abs() < 1e-6), "{w:?}");
     }
 
     #[test]

@@ -85,6 +85,7 @@ mod tests {
             compute_s: 0.0,
             fetch_s: 0.0,
             sync_s: 0.0,
+            sync_lag: 0,
             dispatch_ns: 0,
             traffic: Default::default(),
             sched: Default::default(),

@@ -71,7 +71,8 @@ COMMANDS:
   info                       list artifacts, entry points and param counts
   train   --model ncf        distributed data-parallel training (Alg 1+2)
           [--nodes 4] [--iterations 50] [--lr 0.01] [--optim sgd|adagrad|adam]
-          [--partitions N] [--seed 42]
+          [--partitions N] [--seed 42] [--group N]
+          [--sync-mode sync|pipelined|pipelined:<staleness>]
   predict --model ncf        distributed inference over synthetic samples
           [--nodes 4] [--records 8192]
   help                       this message

@@ -143,6 +143,10 @@ pub fn train(opts: &Opts) -> Result<()> {
             // Drizzle group pre-assignment (--group N): plan placements
             // once per N iterations, dispatch as bare batched enqueues.
             group_size: opts.get_usize("group", 1)?,
+            // --sync-mode sync|pipelined|pipelined:<staleness> — overlap
+            // iteration k+1's forward-backward with round k's parameter
+            // sync (bounded-staleness SGD).
+            sync_mode: bigdl::bigdl::SyncMode::parse(opts.get_or("sync-mode", "sync"))?,
             checkpoint_dir: opts.get("checkpoint-dir").map(Into::into),
             checkpoint_trigger: match opts.get_usize("checkpoint-every", 0)? {
                 0 => bigdl::bigdl::Trigger::Never,

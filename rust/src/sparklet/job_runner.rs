@@ -12,7 +12,14 @@
 //!   N-iteration loop (training rounds, streaming micro-batches)
 //!   dispatched as bare batched enqueues;
 //! * [`JobRunner::run_rounds`] — the generalized N-iteration loop: plan
-//!   once per `group` rounds, dispatch every round pre-assigned.
+//!   once per `group` rounds, dispatch every round pre-assigned;
+//! * [`JobRunner::submit`] / [`JobRunner::submit_planned`] — **async**
+//!   dispatch: launch the job's tasks and return a [`JobHandle`]
+//!   immediately, so a dependent stage can run concurrently with it (the
+//!   training pipeline overlaps iteration N's forward-backward with
+//!   iteration N-1's parameter sync this way). Results flow through the
+//!   same reusable `CompletionHub` inbox as synchronous jobs — no new
+//!   channels.
 
 use std::sync::Arc;
 
@@ -20,7 +27,7 @@ use anyhow::Result;
 
 use super::cluster::Cluster;
 use super::context::{SparkletContext, TaskContext};
-use super::scheduler::Assignment;
+use super::scheduler::{Assignment, PendingJob};
 
 /// Cloneable handle; cheap to create from a context.
 #[derive(Clone)]
@@ -59,6 +66,34 @@ pub struct RoundInfo {
     /// True when this round re-planned placements — a group boundary, or
     /// a planned node died mid-group.
     pub replanned: bool,
+}
+
+/// Handle to a job whose tasks were dispatched asynchronously
+/// ([`JobRunner::submit`] / [`JobRunner::submit_planned`]). The tasks run
+/// on the executor pool while the driver does other work; [`JobHandle::join`]
+/// drives retries/gang restarts to completion and returns the results in
+/// partition order.
+///
+/// Dropping an un-joined handle **blocks** until every dispatched attempt
+/// has completed, then discards the results — after the drop no task of
+/// the job is still running, so the caller can safely roll back any
+/// blocks the job's tasks published.
+pub struct JobHandle<R: Send + 'static> {
+    ctx: SparkletContext,
+    pending: Option<PendingJob<R>>,
+}
+
+impl<R: Send + 'static> JobHandle<R> {
+    pub fn job_id(&self) -> u64 {
+        self.pending.as_ref().expect("pending present until join").job_id()
+    }
+
+    /// Drive the job to completion (completion loop, retries, gang
+    /// restarts, quiesce) and return its results in partition order.
+    pub fn join(mut self) -> Result<Vec<R>> {
+        let pending = self.pending.take().expect("join consumes the handle");
+        self.ctx.scheduler().join_job(&self.ctx, pending)
+    }
 }
 
 impl JobRunner {
@@ -101,6 +136,44 @@ impl JobRunner {
             Some(&plan.assignment),
             task_fn,
         )
+    }
+
+    /// Dispatch one job asynchronously with per-task placement: the tasks
+    /// start executing immediately, the call returns a [`JobHandle`]
+    /// without waiting for any of them. Failed tasks are retried when the
+    /// handle is joined.
+    pub fn submit<R: Send + 'static>(
+        &self,
+        preferred: &[Option<usize>],
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<JobHandle<R>> {
+        let job_id = self.ctx.next_job_id();
+        let policy = self.ctx.schedule_policy();
+        let pending = self
+            .ctx
+            .scheduler()
+            .submit_job(&self.ctx, job_id, preferred, &policy, None, task_fn)?;
+        Ok(JobHandle { ctx: self.ctx.clone(), pending: Some(pending) })
+    }
+
+    /// [`JobRunner::submit`] against a precomputed [`GroupPlan`]: the
+    /// async dispatch is one bare batched enqueue per node.
+    pub fn submit_planned<R: Send + 'static>(
+        &self,
+        plan: &GroupPlan,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<JobHandle<R>> {
+        let job_id = self.ctx.next_job_id();
+        let policy = self.ctx.schedule_policy();
+        let pending = self.ctx.scheduler().submit_job(
+            &self.ctx,
+            job_id,
+            &plan.preferred,
+            &policy,
+            Some(&plan.assignment),
+            task_fn,
+        )?;
+        Ok(JobHandle { ctx: self.ctx.clone(), pending: Some(pending) })
     }
 
     /// Compute placements for a job width once (the Drizzle planning pass).

@@ -38,7 +38,7 @@ pub use broadcast::Broadcast;
 pub use cluster::{Cluster, ClusterSpec, Completion, CompletionHub, JobInbox};
 pub use context::{SparkletContext, TaskContext};
 pub use fault::FailurePolicy;
-pub use job_runner::{GroupPlan, JobRunner, RoundInfo};
+pub use job_runner::{GroupPlan, JobHandle, JobRunner, RoundInfo};
 pub use rdd::Rdd;
 pub use scheduler::{Assignment, SchedSnapshot, SchedulePolicy, Scheduler};
 pub use shuffle::Shuffle;

@@ -17,6 +17,13 @@
 //! Results flow back through the cluster's reusable [`CompletionHub`]
 //! instead of per-job channel plumbing, and task panics are caught and
 //! converted into ordinary task failures (retried like any other).
+//!
+//! Jobs can also be dispatched **asynchronously**: [`Scheduler::submit_job`]
+//! launches the first wave of tasks and returns a [`PendingJob`] whose
+//! completions accumulate in the job's inbox while the driver does other
+//! work; [`Scheduler::join_job`] later drives retries/gang restarts to
+//! completion. This is what lets the training pipeline overlap iteration
+//! N's forward-backward with iteration N-1's parameter sync.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -96,6 +103,60 @@ pub struct Assignment {
 
 pub struct Scheduler {
     pub stats: SchedStats,
+}
+
+/// A job whose first wave has been dispatched but whose completion loop
+/// has not run yet — the state [`Scheduler::join_job`] needs to finish
+/// driving it (retries, gang restarts, quiesce). Completions pile up in
+/// the job's [`JobInbox`] (the existing [`CompletionHub`] path — no new
+/// channels) while the driver runs other jobs.
+///
+/// Dropping a `PendingJob` without joining it **blocks** until every
+/// dispatched attempt has delivered its completion, then unregisters the
+/// inbox — no task of an abandoned job is ever still running afterwards,
+/// so callers can roll back the blocks its tasks published.
+pub struct PendingJob<R: Send + 'static> {
+    job_id: u64,
+    inbox: Arc<JobInbox>,
+    hub: Arc<super::cluster::CompletionHub>,
+    preferred: Vec<Option<usize>>,
+    policy: SchedulePolicy,
+    preassigned: Option<Assignment>,
+    task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    failure: FailurePolicy,
+    /// Dispatched attempts whose completions haven't been popped yet.
+    outstanding: usize,
+    generation: usize,
+    attempts: Vec<usize>,
+    results: Vec<Option<R>>,
+    done: usize,
+    gang_restarts: usize,
+    finished: bool,
+}
+
+impl<R: Send + 'static> PendingJob<R> {
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Pop every outstanding completion (block until the executors have
+    /// delivered them all) and drop the hub's inbox registration.
+    fn quiesce(&mut self) {
+        while self.outstanding > 0 {
+            let _ = self.inbox.wait();
+            self.outstanding -= 1;
+        }
+        self.hub.unregister(self.job_id);
+        self.finished = true;
+    }
+}
+
+impl<R: Send + 'static> Drop for PendingJob<R> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.quiesce();
+        }
+    }
 }
 
 fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
@@ -181,161 +242,136 @@ impl Scheduler {
         preassigned: Option<&Assignment>,
         task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
     ) -> Result<Vec<R>> {
+        let pending = self.submit_job(ctx, job_id, preferred, policy, preassigned, task_fn)?;
+        self.join_job(ctx, pending)
+    }
+
+    /// Dispatch a job's first wave of tasks WITHOUT waiting for any of
+    /// them: the async half of [`Scheduler::run_job`]. The tasks run on
+    /// the executor pool while the driver does other work; completions
+    /// accumulate in the job's inbox until [`Scheduler::join_job`] drives
+    /// the completion/retry loop. Retries and gang restarts happen at join
+    /// time (the initial wave is the overlapped part).
+    pub fn submit_job<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        job_id: u64,
+        preferred: &[Option<usize>],
+        policy: &SchedulePolicy,
+        preassigned: Option<&Assignment>,
+        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
+    ) -> Result<PendingJob<R>> {
         let cluster = ctx.cluster();
         let hub = cluster.completions();
         self.stats.jobs.fetch_add(1, Ordering::Relaxed);
-        let failure = ctx.failure_policy();
-        let inbox = hub.register(job_id);
-        let out = self.drive_job(
-            ctx, &cluster, &inbox, job_id, preferred, policy, preassigned, task_fn, &failure,
-        );
-        hub.unregister(job_id);
-        out
+        let n = preferred.len();
+        let mut pending = PendingJob {
+            job_id,
+            inbox: hub.register(job_id),
+            hub,
+            preferred: preferred.to_vec(),
+            policy: policy.clone(),
+            preassigned: preassigned.cloned(),
+            task_fn,
+            failure: ctx.failure_policy(),
+            outstanding: 0,
+            generation: 0,
+            attempts: vec![0usize; n],
+            results: (0..n).map(|_| None).collect(),
+            done: 0,
+            gang_restarts: 0,
+            finished: false,
+        };
+        if let Err(e) = self.dispatch_wave(ctx, &cluster, &mut pending) {
+            pending.quiesce();
+            return Err(e);
+        }
+        Ok(pending)
     }
 
-    /// Drive a job to completion, then quiesce: every attempt this job
-    /// dispatched pushes exactly one completion, and `drive_job` does not
-    /// return — success OR error — until all of them have been popped. A
-    /// failed job therefore has NO task still running when the caller
+    /// Drive a submitted job to completion, then quiesce: every attempt the
+    /// job dispatched pushes exactly one completion, and `join_job` does
+    /// not return — success OR error — until all of them have been popped.
+    /// A failed job therefore has NO task still running when the caller
     /// rolls back blocks the job's tasks publish (param-manager rounds,
     /// serving deployments).
-    #[allow(clippy::too_many_arguments)]
-    fn drive_job<R: Send + 'static>(
+    pub fn join_job<R: Send + 'static>(
         &self,
         ctx: &SparkletContext,
-        cluster: &Arc<Cluster>,
-        inbox: &Arc<JobInbox>,
-        job_id: u64,
-        preferred: &[Option<usize>],
-        policy: &SchedulePolicy,
-        preassigned: Option<&Assignment>,
-        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
-        failure: &FailurePolicy,
+        mut pending: PendingJob<R>,
     ) -> Result<Vec<R>> {
-        // Dispatched attempts whose completions haven't been popped yet.
-        let mut outstanding = 0usize;
-        let out = self.drive_attempts(
-            ctx, cluster, inbox, job_id, preferred, policy, preassigned, task_fn, failure,
-            &mut outstanding,
-        );
-        while outstanding > 0 {
-            let _ = inbox.wait();
-            outstanding -= 1;
-        }
+        let out = self.drive_pending(ctx, &mut pending);
+        pending.quiesce();
         out
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn drive_attempts<R: Send + 'static>(
+    /// Dispatch a full wave (initial launch or gang restart). With a
+    /// pre-assignment this is a bare batched enqueue: zero placement
+    /// decisions, one channel send per node. `pending.outstanding` counts
+    /// every attempt actually enqueued — including those of a wave that
+    /// then errors midway — so the quiesce drain stays exact.
+    fn dispatch_wave<R: Send + 'static>(
         &self,
         ctx: &SparkletContext,
         cluster: &Arc<Cluster>,
-        inbox: &Arc<JobInbox>,
-        job_id: u64,
-        preferred: &[Option<usize>],
-        policy: &SchedulePolicy,
-        preassigned: Option<&Assignment>,
-        task_fn: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>,
-        failure: &FailurePolicy,
-        outstanding: &mut usize,
-    ) -> Result<Vec<R>> {
-        let n = preferred.len();
-
-        // Build one executor closure for (partition, generation, attempt).
-        // Each task carries its own Arc to the job's inbox — completion
-        // delivery never touches shared cluster state. Panics inside the
-        // task function are caught and surfaced as ordinary task failures
-        // (retried / gang-restarted like any other).
-        let make_task = |part: usize, gen: usize, attempt: usize| -> TaskFn {
-            let inbox = Arc::clone(inbox);
-            let ctx2 = ctx.clone();
-            let f = Arc::clone(&task_fn);
-            let fail = failure.clone();
-            Box::new(move |node_id: usize| {
-                let tc = TaskContext {
-                    ctx: ctx2,
-                    job: job_id,
-                    partition: part,
-                    attempt,
-                    node: node_id,
-                };
-                let result: Result<R> = if !tc.ctx.cluster().node_alive(node_id) {
-                    Err(anyhow!("node {node_id} died"))
-                } else if fail.should_fail(job_id, part, attempt) {
-                    Err(anyhow!(
-                        "injected task failure (job {job_id} part {part} attempt {attempt})"
-                    ))
-                } else {
-                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&tc))) {
-                        Ok(r) => r,
-                        Err(p) => Err(anyhow!(
-                            "task panicked (job {job_id} part {part}): {}",
-                            panic_message(p.as_ref())
-                        )),
-                    }
-                };
-                inbox.push(Completion {
-                    job: job_id,
-                    partition: part,
-                    generation: gen,
-                    attempt,
-                    node: node_id,
-                    payload: Box::new(result),
-                });
-            })
+        pending: &mut PendingJob<R>,
+    ) -> Result<()> {
+        let n = pending.preferred.len();
+        let t0 = Instant::now();
+        // Copy the plan out of `pending` so task construction below can
+        // borrow `pending` freely while `outstanding` is updated.
+        let plan_nodes: Option<Vec<usize>> = match &pending.preassigned {
+            Some(a) if a.nodes.iter().all(|&nd| cluster.node_alive(nd)) => Some(a.nodes.clone()),
+            _ => None,
         };
-
-        // Dispatch a full wave (initial launch or gang restart). With a
-        // pre-assignment this is a bare batched enqueue: zero placement
-        // decisions, one channel send per node. `outstanding` counts every
-        // attempt actually enqueued — including those of a wave that then
-        // errors midway — so the quiesce drain above stays exact.
-        let dispatch_wave =
-            |generation: usize, attempts: &[usize], outstanding: &mut usize| -> Result<()> {
-                let t0 = Instant::now();
-                match preassigned {
-                    Some(a) if a.nodes.iter().all(|&nd| cluster.node_alive(nd)) => {
-                        let mut batches: Vec<Vec<TaskFn>> =
-                            (0..cluster.nodes()).map(|_| Vec::new()).collect();
-                        for part in 0..n {
-                            batches[a.nodes[part]]
-                                .push(make_task(part, generation, attempts[part]));
-                        }
-                        for (node, batch) in batches.into_iter().enumerate() {
-                            let k = batch.len();
-                            cluster.submit_batch(node, batch)?;
-                            *outstanding += k;
-                        }
-                    }
-                    _ => {
-                        // No plan (or the plan references a dead node):
-                        // per-task placement.
-                        for part in 0..n {
-                            let node = self.place(cluster, preferred[part], policy, None)?;
-                            cluster.submit(node, make_task(part, generation, attempts[part]))?;
-                            *outstanding += 1;
-                        }
-                    }
+        match plan_nodes {
+            Some(nodes) => {
+                let mut batches: Vec<Vec<TaskFn>> =
+                    (0..cluster.nodes()).map(|_| Vec::new()).collect();
+                for part in 0..n {
+                    let task =
+                        make_task(ctx, pending, part, pending.generation, pending.attempts[part]);
+                    batches[nodes[part]].push(task);
                 }
-                self.stats.tasks_launched.fetch_add(n as u64, Ordering::Relaxed);
-                self.stats
-                    .dispatch_ns
-                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                Ok(())
-            };
+                for (node, batch) in batches.into_iter().enumerate() {
+                    let k = batch.len();
+                    cluster.submit_batch(node, batch)?;
+                    pending.outstanding += k;
+                }
+            }
+            None => {
+                // No plan (or the plan references a dead node):
+                // per-task placement.
+                for part in 0..n {
+                    let node =
+                        self.place(cluster, pending.preferred[part], &pending.policy, None)?;
+                    let task =
+                        make_task(ctx, pending, part, pending.generation, pending.attempts[part]);
+                    cluster.submit(node, task)?;
+                    pending.outstanding += 1;
+                }
+            }
+        }
+        self.stats.tasks_launched.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats
+            .dispatch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(())
+    }
 
-        let mut generation = 0usize;
-        let mut attempts = vec![0usize; n];
-        dispatch_wave(generation, &attempts, outstanding)?;
+    fn drive_pending<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        pending: &mut PendingJob<R>,
+    ) -> Result<Vec<R>> {
+        let n = pending.preferred.len();
+        let cluster = ctx.cluster();
+        let job_id = pending.job_id;
 
-        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        let mut done = 0usize;
-        let mut gang_restarts = 0usize;
-
-        while done < n {
-            let c = inbox.wait();
-            *outstanding -= 1;
-            if c.generation != generation {
+        while pending.done < n {
+            let c = pending.inbox.wait();
+            pending.outstanding -= 1;
+            if c.generation != pending.generation {
                 continue; // stale result from before a gang restart
             }
             let part = c.partition;
@@ -346,38 +382,41 @@ impl Scheduler {
                 .map_err(|_| anyhow!("completion payload type mismatch (job {job_id})"))?;
             match result {
                 Ok(r) => {
-                    if results[part].is_none() {
-                        results[part] = Some(r);
-                        done += 1;
+                    if pending.results[part].is_none() {
+                        pending.results[part] = Some(r);
+                        pending.done += 1;
                     }
                 }
-                Err(e) if policy.gang => {
-                    gang_restarts += 1;
+                Err(e) if pending.policy.gang => {
+                    pending.gang_restarts += 1;
                     self.stats.gang_restarts.fetch_add(1, Ordering::Relaxed);
-                    if gang_restarts > failure.max_job_restarts {
+                    if pending.gang_restarts > pending.failure.max_job_restarts {
                         bail!(
                             "gang job {job_id} exceeded {} restarts: {e}",
-                            failure.max_job_restarts
+                            pending.failure.max_job_restarts
                         );
                     }
                     log::debug!("gang job {job_id}: task {part} failed ({e}); restarting ALL tasks");
-                    generation += 1;
-                    results.iter_mut().for_each(|r| *r = None);
-                    done = 0;
-                    for a in attempts.iter_mut() {
+                    pending.generation += 1;
+                    pending.results.iter_mut().for_each(|r| *r = None);
+                    pending.done = 0;
+                    for a in pending.attempts.iter_mut() {
                         *a += 1;
                     }
-                    dispatch_wave(generation, &attempts, outstanding)?;
+                    self.dispatch_wave(ctx, &cluster, pending)?;
                 }
                 Err(e) => {
-                    attempts[part] += 1;
+                    pending.attempts[part] += 1;
                     self.stats.task_retries.fetch_add(1, Ordering::Relaxed);
-                    if attempts[part] >= failure.max_attempts {
-                        bail!("task {part} of job {job_id} failed {} times: {e}", attempts[part]);
+                    if pending.attempts[part] >= pending.failure.max_attempts {
+                        bail!(
+                            "task {part} of job {job_id} failed {} times: {e}",
+                            pending.attempts[part]
+                        );
                     }
                     log::debug!(
                         "job {job_id}: retrying task {part} (attempt {}): {e}",
-                        attempts[part]
+                        pending.attempts[part]
                     );
                     // Avoid the node that executed the failed attempt —
                     // even when it is still alive. (Previously only a DEAD
@@ -385,9 +424,16 @@ impl Scheduler {
                     // deterministically on an alive node was re-placed onto
                     // the same node every retry.)
                     let t0 = Instant::now();
-                    let node = self.place(cluster, preferred[part], policy, Some(failed_on))?;
-                    cluster.submit(node, make_task(part, generation, attempts[part]))?;
-                    *outstanding += 1;
+                    let node = self.place(
+                        &cluster,
+                        pending.preferred[part],
+                        &pending.policy,
+                        Some(failed_on),
+                    )?;
+                    let task =
+                        make_task(ctx, pending, part, pending.generation, pending.attempts[part]);
+                    cluster.submit(node, task)?;
+                    pending.outstanding += 1;
                     self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
                     self.stats
                         .dispatch_ns
@@ -395,8 +441,59 @@ impl Scheduler {
                 }
             }
         }
-        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+        Ok(pending.results.iter_mut().map(|r| r.take().unwrap()).collect())
     }
+}
+
+/// Build one executor closure for (partition, generation, attempt). Each
+/// task carries its own Arc to the job's inbox — completion delivery never
+/// touches shared cluster state. Panics inside the task function are
+/// caught and surfaced as ordinary task failures (retried /
+/// gang-restarted like any other).
+fn make_task<R: Send + 'static>(
+    ctx: &SparkletContext,
+    pending: &PendingJob<R>,
+    part: usize,
+    gen: usize,
+    attempt: usize,
+) -> TaskFn {
+    let inbox = Arc::clone(&pending.inbox);
+    let ctx2 = ctx.clone();
+    let f = Arc::clone(&pending.task_fn);
+    let fail = pending.failure.clone();
+    let job_id = pending.job_id;
+    Box::new(move |node_id: usize| {
+        let tc = TaskContext {
+            ctx: ctx2,
+            job: job_id,
+            partition: part,
+            attempt,
+            node: node_id,
+        };
+        let result: Result<R> = if !tc.ctx.cluster().node_alive(node_id) {
+            Err(anyhow!("node {node_id} died"))
+        } else if fail.should_fail(job_id, part, attempt) {
+            Err(anyhow!(
+                "injected task failure (job {job_id} part {part} attempt {attempt})"
+            ))
+        } else {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&tc))) {
+                Ok(r) => r,
+                Err(p) => Err(anyhow!(
+                    "task panicked (job {job_id} part {part}): {}",
+                    panic_message(p.as_ref())
+                )),
+            }
+        };
+        inbox.push(Completion {
+            job: job_id,
+            partition: part,
+            generation: gen,
+            attempt,
+            node: node_id,
+            payload: Box::new(result),
+        });
+    })
 }
 
 impl Default for Scheduler {

@@ -312,6 +312,80 @@ fn retry_avoids_alive_node_that_failed_the_task() {
     assert_eq!(ctx.scheduler().stats.snapshot().task_retries, 1);
 }
 
+/// Async submission: a submitted job's tasks run on the executor pool
+/// while the driver dispatches and completes OTHER jobs; join returns the
+/// submitted job's results afterwards.
+#[test]
+fn submitted_job_overlaps_with_driver_work() {
+    let ctx = SparkletContext::local(2);
+    let runner = ctx.runner();
+    let gate = Arc::new(AtomicU32::new(0));
+    let g = Arc::clone(&gate);
+    let handle = runner
+        .submit(
+            &[Some(0)],
+            Arc::new(move |_tc| {
+                while g.load(Ordering::Relaxed) == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(7usize)
+            }),
+        )
+        .unwrap();
+    // Node 0's only slot is blocked by the submitted task; the driver can
+    // still run a whole other job on node 1 to completion.
+    let out = ctx.run_job(&[Some(1)], Arc::new(|tc| Ok(tc.node))).unwrap();
+    assert_eq!(out, vec![1]);
+    gate.store(1, Ordering::Relaxed);
+    assert_eq!(handle.join().unwrap(), vec![7]);
+}
+
+/// Retries of a submitted job happen at join time and still migrate off
+/// the failing node.
+#[test]
+fn submitted_job_retries_failed_tasks_at_join() {
+    let ctx = SparkletContext::local(2);
+    let runner = ctx.runner();
+    let handle = runner
+        .submit(
+            &[Some(0)],
+            Arc::new(|tc: &TaskContext| {
+                if tc.node == 0 {
+                    anyhow::bail!("deterministic failure on node 0");
+                }
+                Ok(tc.node)
+            }),
+        )
+        .unwrap();
+    assert_eq!(handle.join().unwrap(), vec![1]);
+    assert_eq!(ctx.scheduler().stats.snapshot().task_retries, 1);
+}
+
+/// Dropping an un-joined handle must block until every dispatched attempt
+/// finished — afterwards no task of the abandoned job is still running.
+#[test]
+fn dropping_unjoined_handle_drains_outstanding_tasks() {
+    let ctx = SparkletContext::local(1);
+    let runner = ctx.runner();
+    let done = Arc::new(AtomicU32::new(0));
+    let d = Arc::clone(&done);
+    let handle = runner
+        .submit(
+            &[Some(0)],
+            Arc::new(move |_tc| {
+                std::thread::sleep(Duration::from_millis(30));
+                d.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }),
+        )
+        .unwrap();
+    drop(handle);
+    assert_eq!(done.load(Ordering::Relaxed), 1, "drop must wait for the task");
+    // The executor slot is free again.
+    let out = ctx.run_job(&[Some(0)], Arc::new(|tc| Ok(tc.node))).unwrap();
+    assert_eq!(out, vec![0]);
+}
+
 #[test]
 fn task_panics_surface_as_job_errors() {
     let ctx = SparkletContext::local(2);
