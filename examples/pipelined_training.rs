@@ -2,11 +2,13 @@
 //! runs everywhere, no AOT artifacts needed.
 //!
 //! Sync mode pays two barriers per iteration (forward-backward, then the
-//! parameter sync). `SyncMode::Pipelined { staleness: 1 }` dispatches
-//! round k's sync asynchronously (`ParameterManager::sync_round_async`,
-//! a `JobHandle` over the engine's CompletionHub) and lets round k+1's
-//! forward-backward compute against the round-k-1 broadcast while it
-//! runs — one barrier per iteration instead of two.
+//! parameter sync). `SyncMode::Pipelined { staleness: s }` dispatches
+//! BOTH jobs asynchronously — the forward-backward through
+//! `Rdd::submit_partition_job` and the sync through
+//! `ParameterManager::sync_round_async`, `JobHandle`s over the engine's
+//! CompletionHub — so up to `s` gradient rounds are genuinely in flight
+//! at once: iteration k's forward overlapping iteration k+1's forward
+//! AND the in-flight sync (watch `max fwd jobs in flight` below).
 //!
 //!     cargo run --release --example pipelined_training
 
@@ -39,8 +41,10 @@ fn run(mode: SyncMode) -> anyhow::Result<()> {
     let t0 = Instant::now();
     let report = opt.optimize()?;
     let max_lag = opt.history.iter().map(|m| m.sync_lag).max().unwrap_or(0);
+    let max_overlap = opt.history.iter().map(|m| m.fwd_overlap).max().unwrap_or(1);
     println!(
-        "{mode:?}: {:.0} ms wall, {:.1} ms/iter, final loss {:.4}, max weight-read lag {max_lag}",
+        "{mode:?}: {:.0} ms wall, {:.1} ms/iter, final loss {:.4}, max weight-read lag \
+         {max_lag}, max fwd jobs in flight {max_overlap}",
         t0.elapsed().as_secs_f64() * 1e3,
         t0.elapsed().as_secs_f64() * 1e3 / rounds as f64,
         report.final_loss,

@@ -11,7 +11,10 @@
 //!  (b) pipelined vs sync on the in-process simulated cluster (builtin
 //!      LinReg with per-node rotating stragglers on both the forward-
 //!      backward and the shard update): equal rounds, wall-clock ratio.
-//!      Acceptance: pipelined (staleness 1) ≥ 1.3× faster than Sync;
+//!      Acceptance: pipelined (staleness 1) ≥ 1.3× faster than Sync, and
+//!      the DEEP pipeline (async forward dispatch, staleness 2) ≥ 1.5×,
+//!      plus a multi-slot (2 slots/node) deep series where sync and
+//!      forward tasks coexist on a node's slots;
 //!  (c) real mode on this testbed (Inception-lite, 2/4 nodes) — measures
 //!      the same quantity end-to-end through Algorithms 1+2 as a sanity
 //!      anchor for the model (skips without AOT artifacts).
@@ -31,12 +34,15 @@ use bigdl::sparklet::SparkletContext;
 
 /// One full training run of the heterogeneous-cluster model; returns
 /// (wall seconds, report).
-fn train_wall(mode: SyncMode, rounds: usize, nodes: usize) -> (f64, TrainReport) {
+fn train_wall(mode: SyncMode, rounds: usize, nodes: usize, slots: usize) -> (f64, TrainReport) {
     let dim = 2048;
     let batch = 16;
     let base = Duration::from_micros(1500);
     let straggle = Duration::from_millis(8);
-    let ctx = SparkletContext::local(nodes);
+    let ctx = SparkletContext::new(bigdl::sparklet::ClusterSpec {
+        nodes,
+        slots_per_node: slots,
+    });
     // Rotating straggler on the forward-backward (one slow partition per
     // round) AND on the shard update (one slow shard per sync round) —
     // the barrier cost pipelining is designed to hide.
@@ -98,38 +104,71 @@ fn main() {
     // -- (b) pipelined vs sync at equal rounds ------------------------------
     let nodes = 4;
     let rounds = common::iters(30, 8);
-    println!("\n[pipelined] Sync vs Pipelined{{staleness: 1}} on the simulated cluster");
+    println!("\n[pipelined] Sync vs Pipelined on the simulated cluster");
     println!("            ({nodes} nodes, rotating stragglers on fwd-bwd AND shard update):");
-    let (sync_wall, sync_report) = train_wall(SyncMode::Sync, rounds, nodes);
+    let (sync_wall, sync_report) = train_wall(SyncMode::Sync, rounds, nodes, 1);
     let (pipe_wall, pipe_report) =
-        train_wall(SyncMode::Pipelined { staleness: 1 }, rounds, nodes);
+        train_wall(SyncMode::Pipelined { staleness: 1 }, rounds, nodes, 1);
+    // Deep pipeline: the forward-backward itself is dispatched async, so
+    // at staleness 2 two gradient rounds genuinely overlap (fwd of k
+    // running while the syncs of k-1/k-2 are in flight).
+    let (deep_wall, deep_report) =
+        train_wall(SyncMode::Pipelined { staleness: 2 }, rounds, nodes, 1);
+    // Same deep pipeline on 2 slots/node: sync tasks and forward tasks
+    // coexist on a node's slots without head-of-line blocking.
+    let (deep2_wall, deep2_report) =
+        train_wall(SyncMode::Pipelined { staleness: 2 }, rounds, nodes, 2);
     let speedup = sync_wall / pipe_wall.max(1e-9);
+    let deep_speedup = sync_wall / deep_wall.max(1e-9);
+    let deep2_speedup = sync_wall / deep2_wall.max(1e-9);
     println!(
-        "{:>24} {:>12} {:>14} {:>12}",
+        "{:>28} {:>12} {:>14} {:>12}",
         "mode", "wall(ms)", "ms/iter", "final loss"
     );
-    println!(
-        "{:>24} {:>12.1} {:>14.2} {:>12.4}",
-        "Sync",
-        sync_wall * 1e3,
-        sync_wall * 1e3 / rounds as f64,
-        sync_report.final_loss
-    );
-    println!(
-        "{:>24} {:>12.1} {:>14.2} {:>12.4}",
-        "Pipelined{staleness:1}",
-        pipe_wall * 1e3,
-        pipe_wall * 1e3 / rounds as f64,
-        pipe_report.final_loss
-    );
-    println!("  pipelined speedup: {speedup:.2}x at equal rounds (target >= 1.3x)");
+    for (name, wall, report) in [
+        ("Sync", sync_wall, &sync_report),
+        ("Pipelined{staleness:1}", pipe_wall, &pipe_report),
+        ("Deep{staleness:2}", deep_wall, &deep_report),
+        ("Deep{staleness:2,slots:2}", deep2_wall, &deep2_report),
+    ] {
+        println!(
+            "{:>28} {:>12.1} {:>14.2} {:>12.4}",
+            name,
+            wall * 1e3,
+            wall * 1e3 / rounds as f64,
+            report.final_loss
+        );
+    }
+    println!("  pipelined speedup:      {speedup:.2}x at equal rounds (target >= 1.3x)");
+    println!("  deep-pipeline speedup:  {deep_speedup:.2}x at equal rounds (target >= 1.5x)");
+    println!("  deep multi-slot:        {deep2_speedup:.2}x at equal rounds");
     if speedup < 1.3 {
         println!("  WARNING: pipelined speedup below the 1.3x acceptance target");
+    }
+    if deep_speedup < 1.5 {
+        println!("  WARNING: deep-pipeline speedup below the 1.5x acceptance target");
     }
     rec.add(
         "pipelined_vs_sync_speedup",
         &[("nodes", nodes as f64), ("rounds", rounds as f64), ("staleness", 1.0)],
         speedup,
+        "x",
+    );
+    rec.add(
+        "deep_pipelined_vs_sync_speedup",
+        &[("nodes", nodes as f64), ("rounds", rounds as f64), ("staleness", 2.0)],
+        deep_speedup,
+        "x",
+    );
+    rec.add(
+        "deep_pipelined_multislot_speedup",
+        &[
+            ("nodes", nodes as f64),
+            ("rounds", rounds as f64),
+            ("staleness", 2.0),
+            ("slots_per_node", 2.0),
+        ],
+        deep2_speedup,
         "x",
     );
     rec.add(
@@ -142,6 +181,12 @@ fn main() {
         "pipelined_wall_ms",
         &[("nodes", nodes as f64), ("rounds", rounds as f64), ("staleness", 1.0)],
         pipe_wall * 1e3,
+        "ms",
+    );
+    rec.add(
+        "deep_pipelined_wall_ms",
+        &[("nodes", nodes as f64), ("rounds", rounds as f64), ("staleness", 2.0)],
+        deep_wall * 1e3,
         "ms",
     );
 

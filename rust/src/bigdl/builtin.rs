@@ -57,6 +57,16 @@ pub trait BuiltinModel: Send + Sync {
 /// `(round + partition) % period`) the call additionally costs `straggle`
 /// — a deterministic rotating straggler, the cluster heterogeneity of
 /// paper §4.4. Timing only; gradients are unaffected.
+///
+/// The simulator doubles as the pipeline-overlap probe: it tracks how many
+/// *distinct gradient rounds* are inside a forward-backward simultaneously
+/// ([`ComputeSim::max_round_overlap`]). Under `Sync` (or staleness 0)
+/// without failure injection this is exactly 1 — partitions of the same
+/// round overlap, rounds never do; the deep pipeline's concurrency tests
+/// assert it reaches ≥ 2 at `staleness: 2`. The round key is the
+/// per-partition call counter, so a RETRIED attempt registers as a new
+/// round — the probe is only a valid overlap oracle on runs without
+/// injected failures (as its tests are).
 #[derive(Debug)]
 pub struct ComputeSim {
     pub base: Duration,
@@ -65,11 +75,32 @@ pub struct ComputeSim {
     /// Per-partition call counter (a retry advances it — retries only
     /// perturb timing, never results).
     rounds: Mutex<HashMap<usize, usize>>,
+    /// Round index → number of partitions currently sleeping inside it.
+    active: Mutex<HashMap<usize, usize>>,
+    /// High-water mark of distinct rounds simultaneously active.
+    max_overlap: AtomicUsize,
 }
 
 impl ComputeSim {
     pub fn new(base: Duration, straggle: Duration, period: usize) -> ComputeSim {
-        ComputeSim { base, straggle, period: period.max(1), rounds: Mutex::new(HashMap::new()) }
+        ComputeSim {
+            base,
+            straggle,
+            period: period.max(1),
+            rounds: Mutex::new(HashMap::new()),
+            active: Mutex::new(HashMap::new()),
+            max_overlap: AtomicUsize::new(0),
+        }
+    }
+
+    /// Max number of DISTINCT gradient rounds that were ever inside the
+    /// simulated forward-backward at the same moment: 1 under barrier
+    /// execution, ≥ 2 once the deep pipeline genuinely overlaps the
+    /// forward-backward jobs of neighbouring iterations. Only meaningful
+    /// on runs without injected failures — a retried attempt advances the
+    /// per-partition round counter and would register as phantom overlap.
+    pub fn max_round_overlap(&self) -> usize {
+        self.max_overlap.load(Ordering::SeqCst)
     }
 
     fn sleep(&self, partition: usize) {
@@ -80,12 +111,24 @@ impl ComputeSim {
             *r += 1;
             cur
         };
+        {
+            let mut act = self.active.lock().unwrap();
+            *act.entry(round).or_insert(0) += 1;
+            self.max_overlap.fetch_max(act.len(), Ordering::SeqCst);
+        }
         let mut d = self.base;
         if (round + partition) % self.period == 0 {
             d += self.straggle;
         }
         if !d.is_zero() {
             std::thread::sleep(d);
+        }
+        let mut act = self.active.lock().unwrap();
+        if let Some(c) = act.get_mut(&round) {
+            *c -= 1;
+            if *c == 0 {
+                act.remove(&round);
+            }
         }
     }
 }

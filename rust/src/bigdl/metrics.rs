@@ -9,9 +9,13 @@ pub struct IterMetrics {
     pub iteration: usize,
     /// Mean loss across replicas.
     pub loss: f32,
-    /// Wall time of the whole iteration.
+    /// Wall time of the whole iteration. In deep-pipelined mode this is
+    /// the driver-exposed step time (submit + backpressure waits); the
+    /// overlapped tail runs under later iterations.
     pub total_s: f64,
-    /// Wall time of the "model forward-backward" job.
+    /// Wall time of the "model forward-backward" job, submit → join. In
+    /// deep-pipelined mode the join is deferred, so this spans the async
+    /// window (it overlaps other rounds' work, not pure compute).
     pub fwdbwd_s: f64,
     /// Max per-task model compute (fwd+bwd execute) time.
     pub compute_s: f64,
@@ -26,6 +30,11 @@ pub struct IterMetrics {
     /// backward read the weights (0 in `Sync` mode; ≤ `staleness` in
     /// pipelined mode).
     pub sync_lag: usize,
+    /// Forward-backward jobs in flight right after this iteration's was
+    /// dispatched — the deep-pipeline overlap depth (1 in `Sync` mode:
+    /// just this iteration's own job; up to `staleness + 1` when the
+    /// pipeline genuinely overlaps forward rounds).
+    pub fwd_overlap: usize,
     /// Driver dispatch time spent this iteration (ns).
     pub dispatch_ns: u64,
     /// Block-store traffic this iteration.

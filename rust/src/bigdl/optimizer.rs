@@ -9,15 +9,28 @@
 //! 2. **parameter synchronization** — [`ParameterManager::sync_round`]
 //!    (Algorithm 2).
 //!
-//! With [`SyncMode::Pipelined`] the two jobs of consecutive iterations
-//! overlap: round k's parameter sync is dispatched asynchronously
-//! ([`ParameterManager::sync_round_async`], a [`crate::sparklet::JobHandle`]
-//! under the hood) and runs on the executor pool while round k+1's
-//! forward-backward computes against the round-k-1 weights broadcast —
-//! bounded-staleness SGD in the SparkNet sense. `staleness` bounds how
-//! many un-committed sync rounds may be outstanding when a
+//! With [`SyncMode::Pipelined`] BOTH jobs are dispatched asynchronously —
+//! the deep pipeline. Each iteration's forward-backward is submitted via
+//! [`crate::sparklet::JobRunner::submit_planned`] and joined only when
+//! the bounded-staleness backpressure requires it (weight reads always
+//! see the latest *committed* round without forcing a join — lagging by
+//! at most `staleness` updates; `drain()` forces every round to commit
+//! before a final read), so at `staleness: N`
+//! up to N gradient rounds are genuinely in flight at once: iteration k's
+//! forward running on some slots while the forward of k+1 and the
+//! parameter sync of k−1 run on others. Rounds flow through a small state
+//! machine (`Fwd → Ready → Syncing → committed`), advanced
+//! opportunistically by non-blocking polls between iterations, with the
+//! sync chain kept serial (round k+1's update applies to round k's
+//! output) — bounded-staleness SGD in the SparkNet sense. `staleness`
+//! bounds how many un-committed rounds may be outstanding when a
 //! forward-backward reads the weights; `staleness: 0` degenerates to a
 //! full barrier per iteration and is bit-identical to [`SyncMode::Sync`].
+//!
+//! Because a forward job may still be fetching round k−1's weight shards
+//! when round k commits, a commit retires the replaced weights broadcast
+//! *deferred* ([`ParameterManager::sync_wait_deferred`]): the optimizer
+//! keeps it resident until no in-flight forward can read it.
 //!
 //! Tasks are stateless and individually re-runnable: a retried task
 //! re-reads the same broadcast round, re-draws the same minibatch (the
@@ -38,7 +51,7 @@ use super::param_mgr::{ParameterManager, PendingSync};
 use super::sample::{draw_batch_indices, Sample};
 use super::serving::PredictService;
 use super::trigger::{TrainState, Trigger};
-use crate::sparklet::{GroupPlan, Rdd, Shuffle, SparkletContext};
+use crate::sparklet::{Broadcast, GroupPlan, JobHandle, Rdd, Shuffle, SparkletContext};
 
 /// How the parameter-synchronization job is scheduled relative to the
 /// next iteration's forward-backward.
@@ -116,26 +129,49 @@ impl Default for TrainConfig {
 /// (runs on the driver between iterations, e.g. distributed evaluate).
 pub type ValidationFn = Box<dyn FnMut(&[f32]) -> Result<f64>>;
 
-/// A round whose gradients are computed (shuffle written) but whose sync
-/// hasn't been dispatched yet — queued behind the in-flight round.
-struct ReadyGrads {
+/// Per-partition forward-backward result: (loss, fetch_s, compute_s).
+type FwdResult = (f32, f64, f64);
+
+/// Where one gradient round is in the deep pipeline.
+enum RoundStage {
+    /// Forward-backward job in flight (dispatched asynchronously).
+    Fwd(JobHandle<FwdResult>),
+    /// Gradients written; waiting for the (serial) sync slot.
+    Ready,
+    /// Parameter-synchronization round in flight.
+    Syncing(PendingSync),
+}
+
+/// One gradient round flowing through the deep pipeline.
+struct PipeRound {
+    /// Index of this round's `history` entry.
+    iter: usize,
     shuffle: Shuffle,
     replicas: usize,
+    /// Weights broadcast this round's forward tasks read. A commit that
+    /// replaces it defers its cleanup until this round's forward settles
+    /// (retried fetches re-read the same round id).
+    reads: Broadcast,
+    submitted: Instant,
+    stage: RoundStage,
 }
 
-/// Pipeline state: at most one sync in flight (the round chain is
-/// serial), plus gradient rounds queued behind it.
+impl PipeRound {
+    fn fwd_inflight(&self) -> bool {
+        matches!(self.stage, RoundStage::Fwd(_))
+    }
+}
+
+/// Deep-pipeline state: rounds progress front-to-back through
+/// `Fwd → Ready → Syncing → committed` (popped). At most one round is
+/// `Syncing` — the round chain is serial — and it is always the front;
+/// the forward jobs of younger rounds run concurrently behind it.
 #[derive(Default)]
 struct Pipeline {
-    ready: VecDeque<ReadyGrads>,
-    inflight: Option<PendingSync>,
-}
-
-impl Pipeline {
-    /// Rounds whose weight update hasn't committed yet.
-    fn unsettled(&self) -> usize {
-        self.ready.len() + usize::from(self.inflight.is_some())
-    }
+    rounds: VecDeque<PipeRound>,
+    /// Weight broadcasts replaced by a commit but possibly still read by
+    /// an in-flight forward job; cleaned once no forward can read them.
+    retired: Vec<Broadcast>,
 }
 
 /// The driver-side distributed trainer.
@@ -150,10 +186,19 @@ pub struct DistributedOptimizer {
     validation: Option<(Trigger, ValidationFn, Vec<(usize, f64)>)>,
     dataset_len: usize,
     /// Drizzle group plans (forward-backward width, sync width), replanned
-    /// once per `cfg.group_size` iterations; every job inside a group is
-    /// dispatched as bare batched enqueues.
+    /// once per `cfg.group_size` iterations — or earlier when a plan goes
+    /// stale (a planned node died, or inflight imbalance crossed
+    /// `SchedulePolicy::skew_replan_threshold`); every job inside a group
+    /// is dispatched as bare batched enqueues.
     plans: Option<(GroupPlan, GroupPlan)>,
     pipeline: Pipeline,
+    /// Iterations whose forward job has joined (their history entries are
+    /// complete). Entries beyond this are placeholders filled at join —
+    /// and truncated if their round aborts.
+    completed_iters: usize,
+    /// Exposed sync time accumulated during the current `step` call
+    /// (dispatching + blocking on sync commits; forward joins excluded).
+    exposed_sync_s: f64,
 }
 
 impl DistributedOptimizer {
@@ -190,6 +235,8 @@ impl DistributedOptimizer {
             dataset_len: counts.iter().sum(),
             plans: None,
             pipeline: Pipeline::default(),
+            completed_iters: 0,
+            exposed_sync_s: 0.0,
         })
     }
 
@@ -252,25 +299,78 @@ impl DistributedOptimizer {
         self.module.train_batch().unwrap_or(0) * self.dataset.num_partitions()
     }
 
-    /// Dispatch the oldest queued sync round if none is in flight. The
-    /// submitted job's tasks run on the executor pool concurrently with
-    /// whatever the driver does next — this is the overlap.
-    fn pump(&mut self) -> Result<()> {
-        if self.pipeline.inflight.is_some() {
-            return Ok(());
-        }
-        let Some(r) = self.pipeline.ready.pop_front() else {
-            return Ok(());
-        };
-        let begun = match &self.plans {
-            Some((_, sync)) => {
-                self.pm.sync_round_async_planned(&r.shuffle, r.replicas, sync)
+    /// Rounds whose weight update hasn't committed yet.
+    fn unsettled(&self) -> usize {
+        self.pipeline.rounds.len()
+    }
+
+    /// Clean retired weight broadcasts that no in-flight forward job can
+    /// read anymore (a forward settles when its handle joins — retries
+    /// included, so after the join nothing re-fetches its round).
+    fn release_retired(&mut self) {
+        let bm = self.ctx.blocks();
+        let rounds = &self.pipeline.rounds;
+        self.pipeline.retired.retain(|b| {
+            let still_read = rounds.iter().any(|r| r.fwd_inflight() && r.reads.id == b.id);
+            if !still_read {
+                b.cleanup(&bm);
             }
-            None => self.pm.sync_round_async(&r.shuffle, r.replicas),
+            still_read
+        });
+    }
+
+    /// Join the front round's forward job (blocking unless a poll already
+    /// settled it), record its metrics into the round's history entry,
+    /// and move the round to `Ready`. On failure the round and everything
+    /// queued behind it is dead: quiesce, clean, surface the error.
+    fn join_front_fwd(&mut self) -> Result<()> {
+        let front = self.pipeline.rounds.front_mut().expect("front round exists");
+        let RoundStage::Fwd(handle) = std::mem::replace(&mut front.stage, RoundStage::Ready)
+        else {
+            unreachable!("join_front_fwd requires a Fwd front");
+        };
+        let iter = front.iter;
+        let submitted = front.submitted;
+        match handle.join() {
+            Ok(results) => {
+                let entry = &mut self.history[iter];
+                entry.loss =
+                    results.iter().map(|r| r.0).sum::<f32>() / results.len().max(1) as f32;
+                entry.fetch_s = results.iter().map(|r| r.1).fold(0.0, f64::max);
+                entry.compute_s = results.iter().map(|r| r.2).fold(0.0, f64::max);
+                entry.fwdbwd_s = submitted.elapsed().as_secs_f64();
+                self.completed_iters = iter + 1;
+                self.release_retired();
+                Ok(())
+            }
+            Err(e) => {
+                // `join` quiesced every attempt, so no straggler can still
+                // write this round's slices — the shuffle is safe to clean.
+                let dead = self.pipeline.rounds.pop_front().expect("front round exists");
+                dead.shuffle.cleanup(&self.ctx.blocks());
+                self.abort_pipeline();
+                Err(e)
+            }
+        }
+    }
+
+    /// Dispatch the front round's sync job (the round chain is serial, so
+    /// only the front ever syncs). The submitted job's tasks run on the
+    /// executor pool concurrently with whatever the driver does next —
+    /// this is the sync half of the overlap.
+    fn dispatch_front_sync(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let sync_plan = self.plans.as_ref().map(|(_, s)| s.clone());
+        let front = self.pipeline.rounds.front_mut().expect("front round exists");
+        debug_assert!(matches!(front.stage, RoundStage::Ready));
+        let begun = match &sync_plan {
+            Some(p) => self.pm.sync_round_async_planned(&front.shuffle, front.replicas, p),
+            None => self.pm.sync_round_async(&front.shuffle, front.replicas),
         };
         match begun {
             Ok(p) => {
-                self.pipeline.inflight = Some(p);
+                front.stage = RoundStage::Syncing(p);
+                self.exposed_sync_s += t0.elapsed().as_secs_f64();
                 Ok(())
             }
             Err(e) => {
@@ -279,73 +379,172 @@ impl DistributedOptimizer {
                 // — reachable when a caller drives the public
                 // ParameterManager directly) fail before touching blocks;
                 // cleanup is idempotent, so always drop this round's
-                // slices here, then the still-queued rounds'.
-                r.shuffle.cleanup(&self.ctx.blocks());
+                // slices here, then the pipeline behind it.
+                let dead = self.pipeline.rounds.pop_front().expect("front round exists");
+                dead.shuffle.cleanup(&self.ctx.blocks());
                 self.abort_pipeline();
                 Err(e)
             }
         }
     }
 
-    /// Wait for (and commit) one outstanding sync round, dispatching from
-    /// the ready queue first if needed. Returns false when nothing was
-    /// outstanding. A failed round rolls back inside
-    /// [`ParameterManager::sync_wait`]; the queued rounds behind it are
+    /// Wait the front round's sync (blocking unless a poll already
+    /// settled it) and commit it; the round is popped. The replaced
+    /// weights broadcast is retired *deferred* — overlapped forward jobs
+    /// may still be reading it. A failed round rolls back inside
+    /// [`ParameterManager::sync_wait_deferred`]; the rounds behind it are
     /// then discarded (their gradients were computed against a lineage
     /// that no longer advances).
-    fn advance_one(&mut self) -> Result<bool> {
-        if self.pipeline.inflight.is_none() {
-            self.pump()?;
-        }
-        match self.pipeline.inflight.take() {
-            None => Ok(false),
-            Some(pending) => match self.pm.sync_wait(pending) {
-                Ok(_) => {
-                    // Keep the pipe full: next queued round starts now.
-                    self.pump()?;
-                    Ok(true)
-                }
-                Err(e) => {
-                    self.abort_pipeline();
-                    Err(e)
-                }
-            },
+    fn commit_front_sync(&mut self) -> Result<()> {
+        let front = self.pipeline.rounds.pop_front().expect("front round exists");
+        let RoundStage::Syncing(pending) = front.stage else {
+            unreachable!("commit_front_sync requires a Syncing front");
+        };
+        let t0 = Instant::now();
+        match self.pm.sync_wait_deferred(pending) {
+            Ok((_committed, replaced)) => {
+                self.exposed_sync_s += t0.elapsed().as_secs_f64();
+                self.pipeline.retired.push(replaced);
+                self.release_retired();
+                Ok(())
+            }
+            Err(e) => {
+                self.abort_pipeline();
+                Err(e)
+            }
         }
     }
 
-    /// Block until at most `max_unsettled` sync rounds are outstanding —
-    /// the bounded-staleness backpressure.
+    /// Make every stage transition that is possible WITHOUT blocking:
+    /// join forward jobs whose completions have all arrived, start the
+    /// sync of the oldest ready round, commit syncs that finished — in a
+    /// loop, so one driver visit drains everything that settled since the
+    /// last one. Also polls the younger forward rounds so their retries
+    /// dispatch promptly instead of waiting to reach the front.
+    fn pump(&mut self) -> Result<()> {
+        enum Next {
+            JoinFwd,
+            DispatchSync,
+            CommitSync,
+            Wait,
+        }
+        for r in self.pipeline.rounds.iter_mut().skip(1) {
+            if let RoundStage::Fwd(h) = &mut r.stage {
+                let _ = h.poll();
+            }
+        }
+        loop {
+            let next = match self.pipeline.rounds.front_mut() {
+                None => return Ok(()),
+                Some(r) => match &mut r.stage {
+                    RoundStage::Fwd(h) => {
+                        if h.poll() {
+                            Next::JoinFwd
+                        } else {
+                            Next::Wait
+                        }
+                    }
+                    RoundStage::Ready => Next::DispatchSync,
+                    RoundStage::Syncing(p) => {
+                        if p.poll() {
+                            Next::CommitSync
+                        } else {
+                            Next::Wait
+                        }
+                    }
+                },
+            };
+            match next {
+                Next::JoinFwd => self.join_front_fwd()?,
+                Next::DispatchSync => self.dispatch_front_sync()?,
+                Next::CommitSync => self.commit_front_sync()?,
+                Next::Wait => return Ok(()),
+            }
+        }
+    }
+
+    /// Drive the front round all the way to commit (blocking as needed).
+    /// Returns `false` when the pipeline is empty.
+    fn advance_front(&mut self) -> Result<bool> {
+        if self.pipeline.rounds.is_empty() {
+            return Ok(false);
+        }
+        if self.pipeline.rounds.front().is_some_and(|r| r.fwd_inflight()) {
+            self.join_front_fwd()?;
+        }
+        if matches!(
+            self.pipeline.rounds.front().map(|r| &r.stage),
+            Some(RoundStage::Ready)
+        ) {
+            self.dispatch_front_sync()?;
+        }
+        self.commit_front_sync()?;
+        Ok(true)
+    }
+
+    /// Block until at most `max_unsettled` gradient rounds are
+    /// outstanding — the bounded-staleness backpressure. Starts with a
+    /// non-blocking pump so already-finished rounds commit for free, and
+    /// ends with one so the pipe leaves full: the blocking loop can leave
+    /// the new front settled-but-unjoined (its sync undispatched), which
+    /// would otherwise idle the executors until the driver's next visit —
+    /// e.g. across a long validation hook between steps.
     fn settle_to(&mut self, max_unsettled: usize) -> Result<()> {
-        while self.pipeline.unsettled() > max_unsettled {
-            if !self.advance_one()? {
+        self.pump()?;
+        while self.unsettled() > max_unsettled {
+            if !self.advance_front()? {
                 break;
             }
+        }
+        if self.unsettled() > 0 {
+            self.pump()?;
         }
         Ok(())
     }
 
-    /// Commit every outstanding sync round (no-op in `Sync` mode). Called
+    /// Commit every outstanding round (no-op in `Sync` mode). Called
     /// automatically at the end of [`DistributedOptimizer::optimize`];
     /// step-driven callers should call it before reading final weights.
     pub fn drain(&mut self) -> Result<()> {
         self.settle_to(0)
     }
 
-    /// Drop queued gradient rounds after a mid-pipeline failure (the
-    /// failed round itself was already rolled back by `sync_wait`).
+    /// Tear the pipeline down after a failure (the failed round itself is
+    /// already popped and rolled back): quiesce and discard every
+    /// remaining round, release the retired weight rounds, and drop the
+    /// history placeholders of iterations whose forward never completed.
     fn abort_pipeline(&mut self) {
         let bm = self.ctx.blocks();
-        for r in self.pipeline.ready.drain(..) {
-            r.shuffle.cleanup(&bm);
+        for r in self.pipeline.rounds.drain(..) {
+            match r.stage {
+                RoundStage::Fwd(handle) => {
+                    // Dropping the handle blocks until every dispatched
+                    // attempt delivered its completion — only then is the
+                    // shuffle safe to clean (no straggler re-publishes).
+                    drop(handle);
+                    r.shuffle.cleanup(&bm);
+                }
+                RoundStage::Ready => r.shuffle.cleanup(&bm),
+                // PendingSync's drop quiesces the update job and rolls the
+                // round back, including its consumed shuffle slices.
+                RoundStage::Syncing(pending) => drop(pending),
+            }
         }
+        for b in self.pipeline.retired.drain(..) {
+            b.cleanup(&bm);
+        }
+        self.history.truncate(self.completed_iters);
     }
 
     /// Run one training iteration; returns its metrics. In pipelined mode
-    /// the returned metrics' `sync_s` is the *exposed* sync cost (submit
-    /// plus any bounded-staleness wait), and the round's weight update may
-    /// still be uncommitted when this returns — `drain()` forces it.
+    /// the iteration's forward-backward is *submitted*, not joined: the
+    /// returned metrics' `sync_s` is the exposed sync cost only, and
+    /// `loss`/`compute_s`/`fetch_s`/`fwdbwd_s` may still be pending
+    /// (`loss` is NaN until the round's forward joins — the entry in
+    /// [`DistributedOptimizer::history`] is completed in place, at the
+    /// latest by `drain()`). With `Sync` (or `staleness: 0`) the round is
+    /// fully settled before returning and the metrics are final.
     pub fn step(&mut self) -> Result<IterMetrics> {
-        let iter_idx = self.history.len();
         let m = self.dataset.num_partitions();
         let n = self.pm.n_shards;
         let staleness = self.cfg.sync_mode.staleness();
@@ -353,12 +552,34 @@ impl DistributedOptimizer {
         let traffic0 = bm.stats.snapshot();
         let sched0 = self.ctx.scheduler().stats.snapshot();
         let t_iter = Instant::now();
+        self.exposed_sync_s = 0.0;
+
+        // Commit whatever settled since the last step (non-blocking) —
+        // this is what keeps rounds flowing through the pipe while the
+        // driver is elsewhere.
+        self.pump()?;
+        let iter_idx = self.history.len();
 
         // Drizzle group scheduling (§4.4 / Fig 8): plan placements for the
         // whole group once; every iteration inside the group dispatches
-        // both jobs as bare batched enqueues.
+        // both jobs as bare batched enqueues. Replanned at group
+        // boundaries and whenever a plan goes stale — a planned node died,
+        // or (with `SchedulePolicy::skew_replan_threshold` set) inflight
+        // imbalance crossed the threshold.
         if self.cfg.group_size > 1 {
-            if self.plans.is_none() || iter_idx % self.cfg.group_size == 0 {
+            // A group boundary (or missing plan) replans unconditionally;
+            // only mid-group iterations pay the staleness/skew scan.
+            let boundary =
+                self.plans.is_none() || iter_idx % self.cfg.group_size == 0;
+            let stale = !boundary && {
+                // `boundary` covers the missing-plan case, so mid-group
+                // the plans are always present.
+                let (fwd, sync) = self.plans.as_ref().expect("plans present mid-group");
+                let cluster = self.ctx.cluster();
+                let policy = self.ctx.schedule_policy();
+                fwd.staleness(&cluster, &policy).0 || sync.staleness(&cluster, &policy).0
+            };
+            if boundary || stale {
                 let runner = self.ctx.runner();
                 let fwd = runner.plan_group(self.dataset.preferred_nodes())?;
                 let sync = runner.plan_group(&self.ctx.default_preferred(n))?;
@@ -370,21 +591,22 @@ impl DistributedOptimizer {
 
         // How many weight updates the broadcast read below is missing —
         // bounded by `staleness` thanks to last iteration's settle_to.
-        let sync_lag = self.pipeline.unsettled();
+        let sync_lag = self.unsettled();
 
-        // ---- job 1: model forward-backward --------------------------------
+        // ---- job 1: model forward-backward (dispatched asynchronously) ----
         let bcast = self.pm.weights_broadcast();
         let shuffle = Shuffle::new(self.ctx.next_shuffle_id(), m, n);
         let module = self.module.clone();
         let ranges: Arc<Vec<std::ops::Range<usize>>> = Arc::new(self.pm.ranges().to_vec());
         let batch = self.module.train_batch()?;
 
-        let t_job1 = Instant::now();
+        let t_submit = Instant::now();
         let fwd_bwd_task = move |tc: &crate::sparklet::TaskContext, samples: &[Sample]| {
             let bm = tc.blocks();
             // (line 4) read the latest *committed* weights. In pipelined
-            // mode this broadcast can lag the in-flight round — the
-            // bounded-staleness read.
+            // mode this broadcast can lag the in-flight rounds — the
+            // bounded-staleness read. (A commit that replaces this round
+            // defers its cleanup until this job settles.)
             let t0 = Instant::now();
             let weights = bcast.fetch_all_concat(&bm, tc.node)?;
             let fetch_s = t0.elapsed().as_secs_f64();
@@ -404,62 +626,86 @@ impl DistributedOptimizer {
             }
             Ok((loss, fetch_s, compute_s))
         };
-        let dispatched = match &self.plans {
-            Some((fwd, _)) => self.dataset.run_partition_job_planned(fwd, fwd_bwd_task),
-            None => self.dataset.run_partition_job(fwd_bwd_task),
+        let submitted = match &self.plans {
+            Some((fwd, _)) => self.dataset.submit_partition_job_planned(fwd, fwd_bwd_task),
+            None => self.dataset.submit_partition_job(fwd_bwd_task),
         };
-        let task_results = match dispatched {
-            Ok(r) => r,
+        let handle = match submitted {
+            Ok(h) => h,
             Err(e) => {
-                // This round is dead: drop its gradient slices, then drain
-                // the in-flight rounds (their commits/rollbacks are
-                // independent of this failure) before surfacing the error.
+                // Dispatch failed before any task could write a slice:
+                // drop this round's (empty) shuffle, then drain the
+                // in-flight rounds (their commits/rollbacks are
+                // independent of this failure) before surfacing.
                 shuffle.cleanup(&bm);
                 if let Err(de) = self.drain() {
-                    log::warn!("pipeline drain after failed forward-backward: {de}");
+                    log::warn!("pipeline drain after failed forward-backward dispatch: {de}");
                 }
                 return Err(e);
             }
         };
-        let fwdbwd_s = t_job1.elapsed().as_secs_f64();
+        self.pipeline.rounds.push_back(PipeRound {
+            iter: iter_idx,
+            shuffle,
+            replicas: m,
+            reads: bcast,
+            submitted: t_submit,
+            stage: RoundStage::Fwd(handle),
+        });
+        // Deep-pipeline overlap depth: forward jobs in flight right now,
+        // including the one just dispatched (1 means no fwd overlap).
+        let fwd_overlap = self.pipeline.rounds.iter().filter(|r| r.fwd_inflight()).count();
+        self.history.push(IterMetrics {
+            iteration: iter_idx,
+            loss: f32::NAN, // filled when this round's forward joins
+            total_s: 0.0,
+            fwdbwd_s: 0.0,
+            compute_s: 0.0,
+            fetch_s: 0.0,
+            sync_s: 0.0,
+            sync_lag,
+            fwd_overlap,
+            dispatch_ns: 0,
+            traffic: Default::default(),
+            sched: sched0,
+        });
 
-        let loss = task_results.iter().map(|r| r.0).sum::<f32>() / m as f32;
-        let fetch_s = task_results.iter().map(|r| r.1).fold(0.0, f64::max);
-        let compute_s = task_results.iter().map(|r| r.2).fold(0.0, f64::max);
-
-        // ---- job 2: parameter synchronization ------------------------------
-        // Queue this round's gradients, dispatch if the slot is free, and
-        // apply bounded-staleness backpressure. With `Sync` (staleness 0)
-        // this commits the round before returning — the classic barrier.
-        let t_sync = Instant::now();
-        self.pipeline.ready.push_back(ReadyGrads { shuffle, replicas: m });
-        self.pump()?;
+        // ---- job 2: parameter synchronization (pipelined) -----------------
+        // Bounded-staleness backpressure: block until at most `staleness`
+        // rounds are unsettled. With `Sync` (staleness 0) this joins the
+        // forward AND commits the sync of THIS round before returning —
+        // the classic barrier, the same code path end to end.
         self.settle_to(staleness)?;
-        let sync_s = t_sync.elapsed().as_secs_f64();
 
         let sched1 = self.ctx.scheduler().stats.snapshot();
-        let metrics = IterMetrics {
-            iteration: iter_idx,
-            loss,
-            total_s: t_iter.elapsed().as_secs_f64(),
-            fwdbwd_s,
-            compute_s,
-            fetch_s,
-            sync_s,
-            sync_lag,
-            dispatch_ns: sched1.dispatch_ns - sched0.dispatch_ns,
-            traffic: bm.stats.snapshot().delta(traffic0),
-            sched: sched1,
-        };
+        let entry = &mut self.history[iter_idx];
+        entry.total_s = t_iter.elapsed().as_secs_f64();
+        entry.sync_s = self.exposed_sync_s;
+        entry.dispatch_ns = sched1.dispatch_ns - sched0.dispatch_ns;
+        entry.traffic = bm.stats.snapshot().delta(traffic0);
+        entry.sched = sched1;
+        let metrics = entry.clone();
         if self.cfg.log_every > 0 && iter_idx % self.cfg.log_every == 0 {
+            // In deep-pipelined mode this iteration's own forward may
+            // still be in flight (loss NaN, compute 0) — report the
+            // latest COMPLETED iteration's numbers so the line stays a
+            // real training signal instead of NaN / 0.0%.
+            let (src_iter, src) = if metrics.loss.is_finite() {
+                (iter_idx, &metrics)
+            } else {
+                match self.completed_iters.checked_sub(1) {
+                    Some(i) => (i, &self.history[i]),
+                    None => (iter_idx, &metrics),
+                }
+            };
             log::info!(
-                "iter {iter_idx}: loss={loss:.4} compute={:.1}ms sync={:.1}ms ({:.1}%) lag={sync_lag}",
-                compute_s * 1e3,
-                sync_s * 1e3,
-                metrics.sync_overhead_frac() * 100.0
+                "iter {iter_idx}: loss[{src_iter}]={:.4} compute={:.1}ms sync={:.1}ms ({:.1}%) lag={sync_lag} fwd_overlap={fwd_overlap}",
+                src.loss,
+                src.compute_s * 1e3,
+                src.sync_s * 1e3,
+                src.sync_overhead_frac() * 100.0
             );
         }
-        self.history.push(metrics.clone());
         Ok(metrics)
     }
 
@@ -479,12 +725,20 @@ impl DistributedOptimizer {
             .clone()
             .unwrap_or(Trigger::MaxIteration(self.cfg.iterations));
         loop {
-            let metrics = self.step()?;
+            self.step()?;
             let epoch = self.epoch();
+            // Triggers observe the latest COMPLETED iteration's metrics —
+            // with deep pipelining the just-submitted round's loss may not
+            // be known yet (at `staleness: 0` this is exactly the round
+            // that just ran, as before).
+            let last_done = self
+                .completed_iters
+                .checked_sub(1)
+                .map(|i| self.history[i].clone());
             let state = TrainState {
                 iteration: self.history.len(),
                 epoch,
-                last: Some(&metrics),
+                last: last_done.as_ref(),
             };
             if let Some((trigger, hook, scores)) = &mut self.validation {
                 if trigger.fired(&state) {
@@ -532,13 +786,26 @@ impl DistributedOptimizer {
 impl Drop for DistributedOptimizer {
     fn drop(&mut self) {
         // Best-effort pipeline settlement for step-driven callers that
-        // drop without drain(): the in-flight round is waited (commit and
-        // rollback both retire their blocks) and queued gradient rounds
-        // are discarded — a dropped optimizer must not leak blocks into
-        // the shared context's store. No-op when already drained.
-        if let Some(pending) = self.pipeline.inflight.take() {
-            if let Err(e) = self.pm.sync_wait(pending) {
-                log::warn!("in-flight sync round failed during optimizer drop: {e}");
+        // drop without drain(): the front round's in-flight sync is waited
+        // (commit and rollback both retire their blocks); the rounds
+        // behind it are quiesced and discarded — a dropped optimizer must
+        // not leak blocks into the shared context's store. No-op when
+        // already drained.
+        if matches!(
+            self.pipeline.rounds.front().map(|r| &r.stage),
+            Some(RoundStage::Syncing(_))
+        ) {
+            let front = self.pipeline.rounds.pop_front().expect("front round exists");
+            if let RoundStage::Syncing(pending) = front.stage {
+                match self.pm.sync_wait_deferred(pending) {
+                    // The replaced round joins `retired`; `abort_pipeline`
+                    // cleans it after quiescing the forward jobs that may
+                    // still read it.
+                    Ok((_committed, replaced)) => self.pipeline.retired.push(replaced),
+                    Err(e) => {
+                        log::warn!("in-flight sync round failed during optimizer drop: {e}")
+                    }
+                }
             }
         }
         self.abort_pipeline();

@@ -97,6 +97,18 @@ impl PendingSync {
     pub fn round(&self) -> u64 {
         self.new_round
     }
+
+    /// Non-blocking progress check on the in-flight update job: drains
+    /// already-arrived completions (dispatching retries) and returns
+    /// `true` once [`ParameterManager::sync_wait`] would no longer block
+    /// on task execution. The deep training pipeline uses this to commit
+    /// finished rounds opportunistically between iterations.
+    pub fn poll(&mut self) -> bool {
+        match self.handle.as_mut() {
+            Some(h) => h.poll(),
+            None => true,
+        }
+    }
 }
 
 impl Drop for PendingSync {
@@ -470,15 +482,40 @@ impl ParameterManager {
     /// leaving step/round/weights exactly as they were. On success the
     /// previous round's blocks are retired and the returned broadcast
     /// becomes [`ParameterManager::weights_broadcast`].
-    pub fn sync_wait(&self, mut pending: PendingSync) -> Result<Broadcast> {
+    pub fn sync_wait(&self, pending: PendingSync) -> Result<Broadcast> {
+        let (new_bcast, retired) = self.sync_wait_deferred(pending)?;
+        retired.cleanup(&self.ctx.blocks());
+        Ok(new_bcast)
+    }
+
+    /// [`ParameterManager::sync_wait`] with the retirement of the
+    /// *previous* round's weight blocks handed to the caller: on success
+    /// returns `(committed, retired)` where `retired` is the now-replaced
+    /// weights broadcast, still resident in the block store. The caller
+    /// owns cleaning it up.
+    ///
+    /// This exists for the deep pipeline: with asynchronous
+    /// forward-backward dispatch, a forward job submitted against round
+    /// k−1's weights may still be fetching shards when round k commits —
+    /// retiring the old round inside the commit would make those reads
+    /// (and their retries, which re-read the same round id) fail. The
+    /// optimizer keeps `retired` alive until no in-flight forward job can
+    /// read it. Everything else (consumed shuffle slices, staged
+    /// aggregates, the previous round's optimizer state — none of which a
+    /// forward task reads) is retired here as usual.
+    pub fn sync_wait_deferred(
+        &self,
+        mut pending: PendingSync,
+    ) -> Result<(Broadcast, Broadcast)> {
         let bm = self.ctx.blocks();
         let new_bcast = Broadcast::new(pending.new_round, self.n_shards);
         let handle = pending.handle.take().expect("handle present until waited");
         match handle.join() {
             Ok(_) => {
                 // Commit: advance step + round, then retire consumed blocks
-                // (shuffle slices, staged aggregates, previous weights and
-                // the previous round's optimizer state).
+                // (shuffle slices, staged aggregates and the previous
+                // round's optimizer state; the previous round's WEIGHTS are
+                // returned to the caller).
                 self.step.store(pending.step, Ordering::SeqCst);
                 self.round.store(pending.new_round, Ordering::SeqCst);
                 pending.shuffle.cleanup(&bm);
@@ -492,8 +529,7 @@ impl ParameterManager {
                         bm.remove(&Self::state_key(self.instance, pending.old_round, n, b));
                     }
                 }
-                Broadcast::new(pending.old_round, self.n_shards).cleanup(&bm);
-                Ok(new_bcast)
+                Ok((new_bcast, Broadcast::new(pending.old_round, self.n_shards)))
             }
             Err(e) => {
                 self.rollback_round(pending.new_round, &pending.shuffle);
@@ -669,6 +705,37 @@ mod tests {
         assert_eq!(pm_a.current_weights().unwrap(), pm_b.current_weights().unwrap());
         assert_eq!(pm_a.optimizer_step(), pm_b.optimizer_step());
         assert_eq!(pm_a.export_state().unwrap(), pm_b.export_state().unwrap());
+    }
+
+    /// `sync_wait_deferred` commits exactly like `sync_wait` but leaves
+    /// the replaced round's weight blocks resident for the caller to
+    /// retire (the deep pipeline keeps them alive while overlapped
+    /// forward jobs still read them).
+    #[test]
+    fn deferred_wait_hands_old_round_to_caller() {
+        let ctx = SparkletContext::local(2);
+        let init: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let pm = ParameterManager::init(&ctx, &init, 2, Arc::new(Sgd::new(0.5))).unwrap();
+        let bm = ctx.blocks();
+        let baseline = bm.usage().0;
+        let old = pm.weights_broadcast();
+        let sh = write_grads(&ctx, &pm, &[vec![1.0f32; 10]]);
+        let pending = pm.sync_round_async(&sh, 1).unwrap();
+        let (new_bcast, retired) = pm.sync_wait_deferred(pending).unwrap();
+        assert_eq!(retired.id, old.id, "retired round must be the replaced one");
+        assert_eq!(pm.optimizer_step(), 1, "deferred wait still commits");
+        assert_eq!(new_bcast.id, pm.weights_broadcast().id);
+        assert!(
+            old.fetch(&bm, 0, 0).is_ok(),
+            "replaced round must stay readable until the caller retires it"
+        );
+        retired.cleanup(&bm);
+        assert!(old.fetch(&bm, 0, 0).is_err());
+        assert_eq!(
+            bm.usage().0,
+            baseline,
+            "after the caller's cleanup the round replaced blocks one-for-one"
+        );
     }
 
     /// Dropping an un-waited round rolls it back completely: no staged

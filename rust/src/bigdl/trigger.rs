@@ -86,6 +86,7 @@ mod tests {
             fetch_s: 0.0,
             sync_s: 0.0,
             sync_lag: 0,
+            fwd_overlap: 1,
             dispatch_ns: 0,
             traffic: Default::default(),
             sched: Default::default(),

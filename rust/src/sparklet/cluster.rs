@@ -78,6 +78,12 @@ impl JobInbox {
         self.ready.notify_one();
     }
 
+    /// Pop a completion if one is already queued (non-blocking; the poll
+    /// path of [`super::JobHandle`] drains with this).
+    pub fn try_pop(&self) -> Option<Completion> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
     /// Block until a completion arrives.
     pub fn wait(&self) -> Completion {
         let mut q = self.queue.lock().unwrap();
@@ -123,7 +129,10 @@ impl CompletionHub {
 }
 
 struct Node {
-    tx: mpsc::Sender<Vec<TaskFn>>,
+    /// Task queue sender; `None` once the cluster has shut down (taking
+    /// the sender closes the channel, which is what lets the executor
+    /// threads observe shutdown and exit).
+    tx: Mutex<Option<mpsc::Sender<Vec<TaskFn>>>>,
     alive: Arc<AtomicBool>,
     /// Tasks queued or running on this node (placement load signal).
     inflight: Arc<AtomicUsize>,
@@ -178,7 +187,7 @@ impl Cluster {
                     .expect("spawning executor thread");
                 threads.push(handle);
             }
-            nodes.push(Node { tx, alive, inflight, slot_signal });
+            nodes.push(Node { tx: Mutex::new(Some(tx)), alive, inflight, slot_signal });
         }
         Arc::new(Cluster {
             spec,
@@ -219,8 +228,7 @@ impl Cluster {
     /// slot-availability signal that delay scheduling waits on (no
     /// busy-wait).
     pub fn wait_for_slot(&self, node: usize, timeout: Duration) -> bool {
-        let slots = self.spec.slots_per_node;
-        if self.inflight(node) < slots {
+        if self.has_capacity(node) {
             return true;
         }
         if timeout.is_zero() {
@@ -229,7 +237,7 @@ impl Cluster {
         let deadline = Instant::now() + timeout;
         let (lock, cv) = &*self.nodes[node].slot_signal;
         let mut guard = lock.lock().unwrap();
-        while self.inflight(node) >= slots {
+        while !self.has_capacity(node) {
             let now = Instant::now();
             if now >= deadline {
                 return false;
@@ -240,13 +248,46 @@ impl Cluster {
         true
     }
 
+    /// Free task slots on a node right now (slots minus queued+running).
+    pub fn free_slots(&self, node: usize) -> usize {
+        self.spec.slots_per_node.saturating_sub(self.inflight(node))
+    }
+
+    /// Whether a node has at least one free task slot.
+    pub fn has_capacity(&self, node: usize) -> bool {
+        self.free_slots(node) > 0
+    }
+
+    /// Tasks queued BEYOND a node's slot capacity (`inflight` in excess
+    /// of slots) — the signal skew-aware replanning measures.
+    ///
+    /// Deliberately backlog, not raw `inflight`: a node whose slots are
+    /// merely full (one running straggler, or the deep pipeline's own
+    /// overlapped fwd/sync tasks) is doing its job — only work queued
+    /// behind full slots indicates placements worth moving. With deep
+    /// pipelining a transient backlog of up to the pipeline depth is
+    /// normal; set `SchedulePolicy::skew_replan_threshold` accordingly
+    /// (≥ `staleness`).
+    pub fn backlog(&self, node: usize) -> usize {
+        self.inflight(node).saturating_sub(self.spec.slots_per_node)
+    }
+
+    /// Cluster-wide load skew: max minus min [`Cluster::backlog`] across
+    /// alive nodes (observability; [`super::GroupPlan::skewed`] applies
+    /// the plan-aware variant of this signal).
+    pub fn load_imbalance(&self) -> usize {
+        let backlog: Vec<usize> =
+            self.alive_nodes().into_iter().map(|n| self.backlog(n)).collect();
+        match (backlog.iter().max(), backlog.iter().min()) {
+            (Some(max), Some(min)) => max - min,
+            _ => 0,
+        }
+    }
+
     /// First alive node with a free slot (delay-scheduling fallback).
     pub fn idle_alive(&self, exclude: Option<usize>) -> Option<usize> {
-        (0..self.nodes()).find(|&n| {
-            Some(n) != exclude
-                && self.node_alive(n)
-                && self.inflight(n) < self.spec.slots_per_node
-        })
+        (0..self.nodes())
+            .find(|&n| Some(n) != exclude && self.node_alive(n) && self.has_capacity(n))
     }
 
     /// Mark a node dead. Its executor threads keep draining the queue, but
@@ -280,6 +321,10 @@ impl Cluster {
         if !self.node_alive(node) {
             bail!("node {node} is dead");
         }
+        let tx = match self.nodes[node].tx.lock().unwrap().clone() {
+            Some(tx) => tx,
+            None => bail!("node {node} executor is gone (cluster shut down)"),
+        };
         let sends: Vec<Vec<TaskFn>> = if self.spec.slots_per_node == 1 {
             vec![batch]
         } else {
@@ -288,7 +333,7 @@ impl Cluster {
         for chunk in sends {
             let k = chunk.len();
             self.nodes[node].inflight.fetch_add(k, Ordering::Relaxed);
-            if self.nodes[node].tx.send(chunk).is_err() {
+            if tx.send(chunk).is_err() {
                 self.nodes[node].inflight.fetch_sub(k, Ordering::Relaxed);
                 bail!("node {node} executor is gone");
             }
@@ -304,19 +349,42 @@ impl Cluster {
             .min_by_key(|&n| self.inflight(n))
     }
 
-    /// Shut down all executors (drops senders; threads drain and exit).
+    /// Shut down all executors: close every node's task queue (taking the
+    /// sender is what closes the channel — previously the senders stayed
+    /// alive inside `self.nodes`, so workers never saw a closed channel
+    /// and the "cleared" `JoinHandle`s leaked running threads), then join
+    /// the executor threads. Blocks until already-queued tasks have
+    /// drained; afterwards every submission fails fast. Idempotent.
+    /// (Dropping the cluster closes the queues too but deliberately does
+    /// NOT join — see `Drop` — so only this explicit call can block.)
+    ///
+    /// Defensive: if the caller somehow IS an executor thread, that
+    /// thread's own handle is skipped instead of self-joining into a
+    /// deadlock.
     pub fn shutdown(&self) {
-        // Senders still alive inside self.nodes; detach threads instead
-        // (they drain and exit when Cluster drops).
-        let mut threads = self.threads.lock().unwrap();
-        threads.clear();
+        for node in &self.nodes {
+            node.tx.lock().unwrap().take();
+        }
+        let me = std::thread::current().id();
+        let handles: Vec<JoinHandle<()>> = self.threads.lock().unwrap().drain(..).collect();
+        for h in handles {
+            if h.thread().id() != me {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        // Channel senders drop with self.nodes → workers exit. Threads were
-        // either joined by shutdown() or detach here (drain & exit).
+        // Close the queues so the workers exit as soon as they drain —
+        // but do NOT join them: a task wedged on an external condition
+        // must not turn teardown (including panic unwinding) into an
+        // indefinite hang. Explicit `shutdown()` is the blocking,
+        // fully-joined path.
+        for node in &self.nodes {
+            node.tx.lock().unwrap().take();
+        }
     }
 }
 
@@ -354,6 +422,7 @@ mod tests {
     fn least_loaded_prefers_idle() {
         let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1 });
         let gate = Arc::new(AtomicU32::new(0));
+        let _guard = GateGuard(Arc::clone(&gate));
         // Occupy node 0 with a spinning task.
         let g = Arc::clone(&gate);
         c.submit(0, Box::new(move |_| {
@@ -391,6 +460,92 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         assert_eq!(c.inflight(0), 0);
+    }
+
+    /// Regression: `shutdown` used to clear the `JoinHandle`s while the
+    /// queue senders stayed alive in `self.nodes`, so executor threads
+    /// never observed a closed channel and kept running. It must now
+    /// close the queues, drain already-submitted work, and join every
+    /// thread before returning.
+    #[test]
+    fn shutdown_quiesces_executor_threads() {
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 2 });
+        let done = Arc::new(AtomicU32::new(0));
+        for n in 0..2 {
+            for _ in 0..3 {
+                let d = Arc::clone(&done);
+                c.submit(
+                    n,
+                    Box::new(move |_| {
+                        std::thread::sleep(Duration::from_millis(5));
+                        d.fetch_add(1, Ordering::SeqCst);
+                    }),
+                )
+                .unwrap();
+            }
+        }
+        c.shutdown();
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            6,
+            "shutdown must not return before queued tasks drained and threads joined"
+        );
+        assert!(
+            c.submit(0, Box::new(|_| {})).is_err(),
+            "submissions after shutdown must fail fast"
+        );
+        // Idempotent: a second shutdown (and the eventual Drop) is a no-op.
+        c.shutdown();
+    }
+
+    /// Opens a gate on drop so a failing assertion can never leave gated
+    /// tasks wedged: during unwind a dropped `JobHandle`/`PendingJob`
+    /// quiesces by WAITING for its tasks' completions (and an explicit
+    /// `Cluster::shutdown` joins executor threads), either of which would
+    /// turn the panic into a hang; even bare gated submits would leave a
+    /// spinning executor burning CPU for the rest of the test run.
+    struct GateGuard(Arc<AtomicU32>);
+    impl Drop for GateGuard {
+        fn drop(&mut self) {
+            self.0.store(1, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn slot_accounting_and_imbalance() {
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 2 });
+        assert_eq!(c.free_slots(0), 2);
+        assert!(c.has_capacity(0));
+        assert_eq!(c.load_imbalance(), 0);
+        let gate = Arc::new(AtomicU32::new(0));
+        let _guard = GateGuard(Arc::clone(&gate));
+        // 4 gated tasks on node 0: two occupy the slots, two queue behind
+        // them (backlog 2). Node 1 stays idle.
+        for _ in 0..4 {
+            let g = Arc::clone(&gate);
+            c.submit(0, Box::new(move |_| {
+                while g.load(Ordering::Relaxed) == 0 {
+                    std::thread::yield_now();
+                }
+            }))
+            .unwrap();
+        }
+        while c.inflight(0) < 4 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(c.free_slots(0), 0);
+        assert!(!c.has_capacity(0));
+        assert!(c.has_capacity(1));
+        // Imbalance is queued-beyond-capacity backlog: 4 inflight − 2
+        // slots = 2 on node 0, none on node 1. Merely-full slots (inflight
+        // == slots) would read 0 — running work is not skew.
+        assert_eq!(c.load_imbalance(), 2);
+        // Dead nodes drop out of the imbalance signal.
+        c.kill_node(0);
+        assert_eq!(c.load_imbalance(), 0);
+        c.revive_node(0);
+        gate.store(1, Ordering::Relaxed);
+        assert!(c.wait_for_slot(0, Duration::from_millis(500)));
     }
 
     #[test]

@@ -56,6 +56,60 @@ impl GroupPlan {
     pub fn live(&self, cluster: &Cluster) -> bool {
         self.assignment.nodes.iter().all(|&n| cluster.node_alive(n))
     }
+
+    /// Whether load skew has outgrown THIS plan: some node the plan
+    /// places work on carries queued-beyond-capacity backlog
+    /// ([`Cluster::backlog`]) exceeding the cluster-wide minimum by more
+    /// than `threshold`. A skewed plan keeps steering every round onto
+    /// the backlogged node; replanning (capacity-aware) moves work off
+    /// it. Backlog the plan does NOT touch is deliberately ignored — an
+    /// external job hogging some other node must not force a replan of a
+    /// plan already routed around it (that churn would defeat the group
+    /// amortization the plan exists for).
+    ///
+    /// Executors release their slot (decrement `inflight`) just AFTER
+    /// delivering a task's completion, so immediately after a round
+    /// returns the just-finished tasks can read as phantom load. A
+    /// first reading above the threshold is therefore confirmed across a
+    /// scheduler yield before the plan is declared skewed — one atomic
+    /// re-read, not a sleep.
+    pub fn skewed(&self, cluster: &Cluster, threshold: usize) -> bool {
+        let check = || {
+            let min = cluster
+                .alive_nodes()
+                .into_iter()
+                .map(|n| cluster.backlog(n))
+                .min()
+                .unwrap_or(0);
+            self.assignment
+                .nodes
+                .iter()
+                .any(|&n| cluster.node_alive(n) && cluster.backlog(n) > min + threshold)
+        };
+        check() && {
+            std::thread::yield_now();
+            check()
+        }
+    }
+
+    /// Combined staleness check used by round loops: a plan is stale when
+    /// a planned node died (always) or, with
+    /// `SchedulePolicy::skew_replan_threshold` configured, when inflight
+    /// imbalance crossed the threshold. Returns `(stale, skew)` so the
+    /// caller can report the cause through [`RoundInfo`].
+    pub fn staleness(
+        &self,
+        cluster: &Cluster,
+        policy: &super::scheduler::SchedulePolicy,
+    ) -> (bool, bool) {
+        if !self.live(cluster) {
+            return (true, false);
+        }
+        let skew = policy
+            .skew_replan_threshold
+            .is_some_and(|t| self.skewed(cluster, t));
+        (skew, skew)
+    }
 }
 
 /// Per-round feedback handed to the [`JobRunner::run_rounds_with`]
@@ -63,9 +117,13 @@ impl GroupPlan {
 #[derive(Debug, Clone, Copy)]
 pub struct RoundInfo {
     pub round: usize,
-    /// True when this round re-planned placements — a group boundary, or
-    /// a planned node died mid-group.
+    /// True when this round re-planned placements — a group boundary, a
+    /// planned node died mid-group, or load skew crossed the threshold.
     pub replanned: bool,
+    /// True when the replan was triggered by inflight imbalance crossing
+    /// `SchedulePolicy::skew_replan_threshold` (load-skew locality
+    /// refresh) rather than a group boundary or node death.
+    pub skew: bool,
 }
 
 /// Handle to a job whose tasks were dispatched asynchronously
@@ -93,6 +151,23 @@ impl<R: Send + 'static> JobHandle<R> {
     pub fn join(mut self) -> Result<Vec<R>> {
         let pending = self.pending.take().expect("join consumes the handle");
         self.ctx.scheduler().join_job(&self.ctx, pending)
+    }
+
+    /// Non-blocking progress check: drain the completions that have
+    /// already arrived (dispatching any retries / gang restarts they call
+    /// for, placed with zero delay-scheduling wait) and report whether
+    /// the job is settled — every partition has a result, or a fatal
+    /// failure is recorded. A settled job's [`JobHandle::join`] does not
+    /// wait on the live generation's execution; it can still block in the
+    /// quiesce drain on *superseded* attempts (a gang restart's stale
+    /// generation, or a failed job's sibling attempts) — those must
+    /// finish before the caller may touch the blocks the job's tasks
+    /// publish. The deep training pipeline polls the oldest round's
+    /// forward job with this between iterations so finished rounds commit
+    /// opportunistically instead of stalling the driver.
+    pub fn poll(&mut self) -> bool {
+        let pending = self.pending.as_mut().expect("pending present until join");
+        self.ctx.scheduler().poll_job(&self.ctx, pending)
     }
 }
 
@@ -201,10 +276,12 @@ impl JobRunner {
     }
 
     /// [`JobRunner::run_rounds`] with round-loop hooks: the plan is
-    /// refreshed mid-group as soon as a planned node dies (instead of
-    /// per-task placement fallback on every remaining round), and
-    /// `on_round` observes each finished round — the serving loop counts
-    /// replans and batch results through it.
+    /// refreshed mid-group as soon as it goes stale — a planned node died
+    /// (instead of per-task placement fallback on every remaining round)
+    /// or, with [`super::SchedulePolicy::skew_replan_threshold`] set,
+    /// inflight imbalance crossed the threshold — and `on_round` observes
+    /// each finished round ([`RoundInfo::skew`] reports skew replans; the
+    /// serving loop counts replans and batch results through it).
     pub fn run_rounds_with<R: Send + 'static>(
         &self,
         preferred: &[Option<usize>],
@@ -215,17 +292,28 @@ impl JobRunner {
     ) -> Result<Vec<Vec<R>>> {
         let group = group.max(1);
         let cluster = self.ctx.cluster();
+        let policy = self.ctx.schedule_policy();
         let mut out = Vec::with_capacity(rounds);
         let mut plan: Option<GroupPlan> = None;
         for round in 0..rounds {
-            let stale = !plan.as_ref().is_some_and(|p| p.live(&cluster));
-            let replanned = round % group == 0 || stale;
+            // A group boundary replans unconditionally — skip the
+            // staleness scan (and its skew double-read) entirely there.
+            let boundary = round % group == 0;
+            let (stale, skew) = if boundary {
+                (false, false)
+            } else {
+                match &plan {
+                    None => (true, false),
+                    Some(p) => p.staleness(&cluster, &policy),
+                }
+            };
+            let replanned = boundary || stale;
             if replanned {
                 plan = Some(self.plan_group(preferred)?);
             }
             let p = plan.as_ref().expect("plan set above");
             let results = self.run_planned(p, round_fn(round))?;
-            on_round(RoundInfo { round, replanned }, &results);
+            on_round(RoundInfo { round, replanned, skew }, &results);
             out.push(results);
         }
         Ok(out)

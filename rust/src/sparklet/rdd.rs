@@ -21,7 +21,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::block_manager::{BlockData, BlockId};
 use super::context::{SparkletContext, TaskContext};
-use super::job_runner::{GroupPlan, JobRunner};
+use super::job_runner::{GroupPlan, JobHandle, JobRunner};
 use super::stage::{OpKind, RddMeta, StageDag, WideDep};
 
 type ComputeFn<T> = dyn Fn(usize, &TaskContext) -> Result<Vec<T>> + Send + Sync;
@@ -313,27 +313,81 @@ impl<T: Clone + Send + Sync + 'static> Rdd<T> {
         Ok(())
     }
 
-    /// Resolve deps, wrap `f` as a partition task, and dispatch: forced
-    /// through `plan` when given, else this RDD's installed plan (width
-    /// permitting), else per-task placement.
+    /// Resolve deps and wrap `f` as a partition task closure (shared by
+    /// the synchronous and async dispatch paths).
+    fn partition_task<R, F>(
+        &self,
+        runner: &JobRunner,
+        f: F,
+    ) -> Result<Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync>>
+    where
+        R: Send + 'static,
+        F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        self.resolve_wide_deps(runner)?;
+        let rdd = self.clone();
+        Ok(Arc::new(move |tc: &TaskContext| {
+            let data = rdd.materialize(tc.partition, tc)?;
+            f(tc, &data)
+        }))
+    }
+
+    /// Dispatch `f` over every partition: forced through `plan` when
+    /// given, else this RDD's installed plan (width permitting), else
+    /// per-task placement.
     fn dispatch_partition_job<R, F>(&self, plan: Option<&GroupPlan>, f: F) -> Result<Vec<R>>
     where
         R: Send + 'static,
         F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
     {
         let runner = self.ctx.runner();
-        self.resolve_wide_deps(&runner)?;
-        let rdd = self.clone();
-        let task: Arc<dyn Fn(&TaskContext) -> Result<R> + Send + Sync> =
-            Arc::new(move |tc: &TaskContext| {
-                let data = rdd.materialize(tc.partition, tc)?;
-                f(tc, &data)
-            });
+        let task = self.partition_task(&runner, f)?;
         match (plan, &self.plan) {
             (Some(p), _) => runner.run_planned(p, task),
             (None, Some(p)) if p.parts() == self.nparts => runner.run_planned(p, task),
             _ => runner.run(&self.preferred, task),
         }
+    }
+
+    /// Async variant of [`Rdd::run_partition_job`]: dispatch the job's
+    /// tasks and return a [`JobHandle`] immediately — the deep training
+    /// pipeline submits each iteration's forward-backward this way so the
+    /// driver can overlap it with in-flight parameter syncs (and with the
+    /// forward-backwards of neighbouring iterations).
+    pub fn submit_partition_job<R, F>(&self, f: F) -> Result<JobHandle<R>>
+    where
+        R: Send + 'static,
+        F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        let runner = self.ctx.runner();
+        let task = self.partition_task(&runner, f)?;
+        match &self.plan {
+            Some(p) if p.parts() == self.nparts => runner.submit_planned(p, task),
+            _ => runner.submit(&self.preferred, task),
+        }
+    }
+
+    /// [`Rdd::submit_partition_job`] forced through a precomputed
+    /// [`GroupPlan`]: the async dispatch is one bare batched enqueue per
+    /// node.
+    pub fn submit_partition_job_planned<R, F>(
+        &self,
+        plan: &GroupPlan,
+        f: F,
+    ) -> Result<JobHandle<R>>
+    where
+        R: Send + 'static,
+        F: Fn(&TaskContext, &[T]) -> Result<R> + Send + Sync + 'static,
+    {
+        ensure!(
+            plan.parts() == self.nparts,
+            "group plan width {} != partitions {}",
+            plan.parts(),
+            self.nparts
+        );
+        let runner = self.ctx.runner();
+        let task = self.partition_task(&runner, f)?;
+        runner.submit_planned(plan, task)
     }
 
     /// Run `f` over every partition's data; results in partition order.

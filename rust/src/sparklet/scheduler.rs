@@ -43,11 +43,30 @@ pub struct SchedulePolicy {
     /// How long to wait for a slot on the preferred node before falling
     /// back to an idle node (delay scheduling).
     pub locality_wait: Duration,
+    /// Skew-aware replanning: a [`super::GroupPlan`] goes stale (round
+    /// loops replan it) when a node it places work on carries
+    /// queued-beyond-capacity backlog ([`Cluster::backlog`]) exceeding
+    /// the cluster-wide minimum by more than this — not only when a
+    /// planned node dies. `None` disables the check.
+    pub skew_replan_threshold: Option<usize>,
 }
 
 impl Default for SchedulePolicy {
     fn default() -> Self {
-        SchedulePolicy { gang: false, locality_wait: Duration::from_millis(0) }
+        SchedulePolicy {
+            gang: false,
+            locality_wait: Duration::from_millis(0),
+            skew_replan_threshold: None,
+        }
+    }
+}
+
+impl SchedulePolicy {
+    /// The policy non-blocking (poll-path) placement runs under: identical
+    /// except delay scheduling never sleeps (`locality_wait` zeroed —
+    /// strict locality, queue-behind fallback).
+    fn no_wait(&self) -> SchedulePolicy {
+        SchedulePolicy { locality_wait: Duration::from_millis(0), ..self.clone() }
     }
 }
 
@@ -131,6 +150,11 @@ pub struct PendingJob<R: Send + 'static> {
     results: Vec<Option<R>>,
     done: usize,
     gang_restarts: usize,
+    /// Fatal job failure (task out of attempts, gang budget exhausted, a
+    /// restart/retry dispatch error) recorded by the completion loop; the
+    /// blocking join surfaces it after quiescing. Recording instead of
+    /// bailing is what lets the non-blocking poll path observe failures.
+    error: Option<anyhow::Error>,
     finished: bool,
 }
 
@@ -216,17 +240,66 @@ impl Scheduler {
             .ok_or_else(|| anyhow!("no alive nodes"))
     }
 
-    /// Plan placements for a job without dispatching (Drizzle).
+    /// Place one task of a *planning* pass: never blocks and never touches
+    /// the delay-scheduling counters — planning enqueues nothing, so there
+    /// is nothing to wait for. Capacity-aware: the preferred node is kept
+    /// while it has a free slot net of tasks already planned in this pass
+    /// (`planned` — slot accounting across the whole plan, which is what
+    /// interleaves a wide plan across multi-slot nodes); once it is at
+    /// capacity the task goes to the least-loaded alive node with room,
+    /// and when every node is saturated locality wins (queueing behind the
+    /// preferred slot costs nothing at plan time).
+    fn place_planning(
+        &self,
+        cluster: &Cluster,
+        preferred: Option<usize>,
+        planned: &[usize],
+    ) -> Result<usize> {
+        self.stats.placements.fetch_add(1, Ordering::Relaxed);
+        let slots = cluster.spec().slots_per_node;
+        let load = |n: usize| cluster.inflight(n) + planned[n];
+        if let Some(p) = preferred {
+            if cluster.node_alive(p) && load(p) < slots {
+                return Ok(p);
+            }
+        }
+        let spill = cluster
+            .alive_nodes()
+            .into_iter()
+            .filter(|&n| load(n) < slots)
+            .min_by_key(|&n| load(n));
+        if let Some(n) = spill {
+            return Ok(n);
+        }
+        // Everything saturated: strict locality (or least planned load).
+        match preferred {
+            Some(p) if cluster.node_alive(p) => Ok(p),
+            _ => cluster
+                .alive_nodes()
+                .into_iter()
+                .min_by_key(|&n| load(n))
+                .ok_or_else(|| anyhow!("no alive nodes")),
+        }
+    }
+
+    /// Plan placements for a job without dispatching (Drizzle). Uses the
+    /// non-blocking planning path: previously this went through `place()`,
+    /// which blocked up to `locality_wait` PER TASK on `wait_for_slot` and
+    /// counted `locality_misses` even though planning enqueues nothing —
+    /// planning a wide group on a busy cluster stalled the driver.
     pub fn plan(
         &self,
         cluster: &Cluster,
         preferred: &[Option<usize>],
-        policy: &SchedulePolicy,
+        _policy: &SchedulePolicy,
     ) -> Result<Assignment> {
-        let nodes = preferred
-            .iter()
-            .map(|p| self.place(cluster, *p, policy, None))
-            .collect::<Result<Vec<_>>>()?;
+        let mut planned = vec![0usize; cluster.nodes()];
+        let mut nodes = Vec::with_capacity(preferred.len());
+        for p in preferred {
+            let n = self.place_planning(cluster, *p, &planned)?;
+            planned[n] += 1;
+            nodes.push(n);
+        }
         Ok(Assignment { nodes })
     }
 
@@ -280,9 +353,10 @@ impl Scheduler {
             results: (0..n).map(|_| None).collect(),
             done: 0,
             gang_restarts: 0,
+            error: None,
             finished: false,
         };
-        if let Err(e) = self.dispatch_wave(ctx, &cluster, &mut pending) {
+        if let Err(e) = self.dispatch_wave(ctx, &cluster, &mut pending, None, true) {
             pending.quiesce();
             return Err(e);
         }
@@ -310,18 +384,39 @@ impl Scheduler {
     /// decisions, one channel send per node. `pending.outstanding` counts
     /// every attempt actually enqueued — including those of a wave that
     /// then errors midway — so the quiesce drain stays exact.
+    ///
+    /// `avoid` is the node whose failure triggered a gang restart: the
+    /// restart wave must not reuse a pre-assignment that places work there
+    /// and per-task fallback placement must steer around it. (Previously
+    /// the plan was reused after an alive-check only and the fallback
+    /// passed `avoid: None`, so a task failing deterministically on an
+    /// alive node was gang-restarted onto the very same node until
+    /// `max_job_restarts` — the PR 3 retry-placement fix never reached the
+    /// gang path.)
+    ///
+    /// `blocking: false` (a wave dispatched from the poll path) places
+    /// fallback tasks with a zeroed `locality_wait` so polling never
+    /// sleeps in delay scheduling.
     fn dispatch_wave<R: Send + 'static>(
         &self,
         ctx: &SparkletContext,
         cluster: &Arc<Cluster>,
         pending: &mut PendingJob<R>,
+        avoid: Option<usize>,
+        blocking: bool,
     ) -> Result<()> {
         let n = pending.preferred.len();
         let t0 = Instant::now();
         // Copy the plan out of `pending` so task construction below can
         // borrow `pending` freely while `outstanding` is updated.
         let plan_nodes: Option<Vec<usize>> = match &pending.preassigned {
-            Some(a) if a.nodes.iter().all(|&nd| cluster.node_alive(nd)) => Some(a.nodes.clone()),
+            Some(a)
+                if a.nodes
+                    .iter()
+                    .all(|&nd| cluster.node_alive(nd) && Some(nd) != avoid) =>
+            {
+                Some(a.nodes.clone())
+            }
             _ => None,
         };
         match plan_nodes {
@@ -340,11 +435,13 @@ impl Scheduler {
                 }
             }
             None => {
-                // No plan (or the plan references a dead node):
-                // per-task placement.
+                // No plan (or the plan references a dead/avoided node):
+                // per-task placement, steering around `avoid`.
+                let place_policy =
+                    if blocking { pending.policy.clone() } else { pending.policy.no_wait() };
                 for part in 0..n {
                     let node =
-                        self.place(cluster, pending.preferred[part], &pending.policy, None)?;
+                        self.place(cluster, pending.preferred[part], &place_policy, avoid)?;
                     let task =
                         make_task(ctx, pending, part, pending.generation, pending.attempts[part]);
                     cluster.submit(node, task)?;
@@ -359,6 +456,99 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Handle one popped completion: record a result, or dispatch the
+    /// retry / gang-restart it calls for. `Err` means the job is fatally
+    /// failed (out of attempts / restart budget, or a dispatch error);
+    /// callers record it in `pending.error` so both the blocking and the
+    /// polling completion loops surface it identically at join time.
+    ///
+    /// `blocking: false` is the poll path: any retry / restart placement
+    /// it dispatches must not sleep in delay scheduling (`wait_for_slot`
+    /// up to `locality_wait`), so placement runs with a zeroed wait —
+    /// strict locality, queue-behind fallback.
+    fn process_completion<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        cluster: &Arc<Cluster>,
+        pending: &mut PendingJob<R>,
+        c: Completion,
+        blocking: bool,
+    ) -> Result<()> {
+        let job_id = pending.job_id;
+        if c.generation != pending.generation {
+            return Ok(()); // stale result from before a gang restart
+        }
+        let part = c.partition;
+        let failed_on = c.node;
+        let result = *c
+            .payload
+            .downcast::<Result<R>>()
+            .map_err(|_| anyhow!("completion payload type mismatch (job {job_id})"))?;
+        match result {
+            Ok(r) => {
+                if pending.results[part].is_none() {
+                    pending.results[part] = Some(r);
+                    pending.done += 1;
+                }
+            }
+            Err(e) if pending.policy.gang => {
+                pending.gang_restarts += 1;
+                self.stats.gang_restarts.fetch_add(1, Ordering::Relaxed);
+                if pending.gang_restarts > pending.failure.max_job_restarts {
+                    bail!(
+                        "gang job {job_id} exceeded {} restarts: {e}",
+                        pending.failure.max_job_restarts
+                    );
+                }
+                log::debug!("gang job {job_id}: task {part} failed ({e}); restarting ALL tasks");
+                pending.generation += 1;
+                pending.results.iter_mut().for_each(|r| *r = None);
+                pending.done = 0;
+                for a in pending.attempts.iter_mut() {
+                    *a += 1;
+                }
+                self.dispatch_wave(ctx, cluster, pending, Some(failed_on), blocking)?;
+            }
+            Err(e) => {
+                pending.attempts[part] += 1;
+                self.stats.task_retries.fetch_add(1, Ordering::Relaxed);
+                if pending.attempts[part] >= pending.failure.max_attempts {
+                    bail!(
+                        "task {part} of job {job_id} failed {} times: {e}",
+                        pending.attempts[part]
+                    );
+                }
+                log::debug!(
+                    "job {job_id}: retrying task {part} (attempt {}): {e}",
+                    pending.attempts[part]
+                );
+                // Avoid the node that executed the failed attempt —
+                // even when it is still alive. (Previously only a DEAD
+                // preferred node was avoided, so a task failing
+                // deterministically on an alive node was re-placed onto
+                // the same node every retry.)
+                let place_policy =
+                    if blocking { pending.policy.clone() } else { pending.policy.no_wait() };
+                let t0 = Instant::now();
+                let node = self.place(
+                    cluster,
+                    pending.preferred[part],
+                    &place_policy,
+                    Some(failed_on),
+                )?;
+                let task =
+                    make_task(ctx, pending, part, pending.generation, pending.attempts[part]);
+                cluster.submit(node, task)?;
+                pending.outstanding += 1;
+                self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .dispatch_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
     fn drive_pending<R: Send + 'static>(
         &self,
         ctx: &SparkletContext,
@@ -366,82 +556,44 @@ impl Scheduler {
     ) -> Result<Vec<R>> {
         let n = pending.preferred.len();
         let cluster = ctx.cluster();
-        let job_id = pending.job_id;
-
-        while pending.done < n {
+        while pending.error.is_none() && pending.done < n {
             let c = pending.inbox.wait();
             pending.outstanding -= 1;
-            if c.generation != pending.generation {
-                continue; // stale result from before a gang restart
-            }
-            let part = c.partition;
-            let failed_on = c.node;
-            let result = *c
-                .payload
-                .downcast::<Result<R>>()
-                .map_err(|_| anyhow!("completion payload type mismatch (job {job_id})"))?;
-            match result {
-                Ok(r) => {
-                    if pending.results[part].is_none() {
-                        pending.results[part] = Some(r);
-                        pending.done += 1;
-                    }
-                }
-                Err(e) if pending.policy.gang => {
-                    pending.gang_restarts += 1;
-                    self.stats.gang_restarts.fetch_add(1, Ordering::Relaxed);
-                    if pending.gang_restarts > pending.failure.max_job_restarts {
-                        bail!(
-                            "gang job {job_id} exceeded {} restarts: {e}",
-                            pending.failure.max_job_restarts
-                        );
-                    }
-                    log::debug!("gang job {job_id}: task {part} failed ({e}); restarting ALL tasks");
-                    pending.generation += 1;
-                    pending.results.iter_mut().for_each(|r| *r = None);
-                    pending.done = 0;
-                    for a in pending.attempts.iter_mut() {
-                        *a += 1;
-                    }
-                    self.dispatch_wave(ctx, &cluster, pending)?;
-                }
-                Err(e) => {
-                    pending.attempts[part] += 1;
-                    self.stats.task_retries.fetch_add(1, Ordering::Relaxed);
-                    if pending.attempts[part] >= pending.failure.max_attempts {
-                        bail!(
-                            "task {part} of job {job_id} failed {} times: {e}",
-                            pending.attempts[part]
-                        );
-                    }
-                    log::debug!(
-                        "job {job_id}: retrying task {part} (attempt {}): {e}",
-                        pending.attempts[part]
-                    );
-                    // Avoid the node that executed the failed attempt —
-                    // even when it is still alive. (Previously only a DEAD
-                    // preferred node was avoided, so a task failing
-                    // deterministically on an alive node was re-placed onto
-                    // the same node every retry.)
-                    let t0 = Instant::now();
-                    let node = self.place(
-                        &cluster,
-                        pending.preferred[part],
-                        &pending.policy,
-                        Some(failed_on),
-                    )?;
-                    let task =
-                        make_task(ctx, pending, part, pending.generation, pending.attempts[part]);
-                    cluster.submit(node, task)?;
-                    pending.outstanding += 1;
-                    self.stats.tasks_launched.fetch_add(1, Ordering::Relaxed);
-                    self.stats
-                        .dispatch_ns
-                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                }
+            if let Err(e) = self.process_completion(ctx, &cluster, pending, c, true) {
+                pending.error = Some(e);
             }
         }
+        if let Some(e) = pending.error.take() {
+            return Err(e);
+        }
         Ok(pending.results.iter_mut().map(|r| r.take().unwrap()).collect())
+    }
+
+    /// Drain whatever completions have already arrived for a submitted
+    /// job WITHOUT blocking, dispatching the retries / gang restarts they
+    /// call for. Returns `true` when the job is settled — every partition
+    /// done, or a fatal failure recorded — i.e. a subsequent
+    /// [`Scheduler::join_job`] will not block on task execution. This is
+    /// what lets the training pipeline commit finished rounds
+    /// opportunistically between iterations instead of stalling on the
+    /// oldest one.
+    pub(crate) fn poll_job<R: Send + 'static>(
+        &self,
+        ctx: &SparkletContext,
+        pending: &mut PendingJob<R>,
+    ) -> bool {
+        let n = pending.preferred.len();
+        let cluster = ctx.cluster();
+        while pending.error.is_none() && pending.done < n {
+            let Some(c) = pending.inbox.try_pop() else {
+                return false;
+            };
+            pending.outstanding -= 1;
+            if let Err(e) = self.process_completion(ctx, &cluster, pending, c, false) {
+                pending.error = Some(e);
+            }
+        }
+        true
     }
 }
 

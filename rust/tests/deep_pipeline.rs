@@ -1,0 +1,339 @@
+//! Deep-pipeline suite: asynchronous forward-backward dispatch on top of
+//! the bounded-staleness sync pipeline.
+//!
+//! Covers: ≥ 2 gradient rounds *genuinely* in flight at `staleness: 2`
+//! (measured by the `ComputeSim` straggler clock, which tracks how many
+//! distinct rounds are inside a forward-backward simultaneously — not by
+//! the driver's bookkeeping), multi-slot (`slots_per_node ≥ 2`) coverage
+//! for the scheduler's planned-dispatch and retry paths, the deep
+//! pipeline composed with multi-slot nodes, and skew-aware replanning
+//! (`SchedulePolicy::skew_replan_threshold` + `RoundInfo::skew`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bigdl::bigdl::builtin::{linreg_rdd, ComputeSim, LinReg};
+use bigdl::bigdl::{DistributedOptimizer, Module, Sgd, SyncMode, TrainConfig};
+use bigdl::sparklet::{
+    ClusterSpec, FailurePolicy, SchedulePolicy, SparkletContext, TaskContext,
+};
+
+const DIM: usize = 24;
+const BATCH: usize = 8;
+
+/// Opens a gate on drop so a failing assertion can never leave gated
+/// tasks wedged: during unwind a dropped `JobHandle`/`PendingJob`
+/// quiesces by WAITING for its tasks' completions (and an explicit
+/// `Cluster::shutdown` joins executor threads), either of which would
+/// turn the panic into a hang; even bare gated submits would leave a
+/// spinning executor burning CPU for the rest of the test run.
+struct GateGuard(Arc<std::sync::atomic::AtomicU32>);
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        self.0.store(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Build an optimizer over a straggler-simulated LinReg, returning the
+/// model Arc so tests can read the simulator's overlap clock.
+fn sim_optimizer(
+    spec: ClusterSpec,
+    iterations: usize,
+    sync_mode: SyncMode,
+    base: Duration,
+    straggle: Duration,
+) -> (SparkletContext, Arc<LinReg>, DistributedOptimizer) {
+    let ctx = SparkletContext::new(spec);
+    let model = Arc::new(
+        LinReg::new(DIM, BATCH).with_compute(ComputeSim::new(base, straggle, spec.nodes)),
+    );
+    let module = Module::builtin(model.clone());
+    let data = linreg_rdd(&ctx, DIM, spec.nodes, 40, 11);
+    let opt = DistributedOptimizer::new(
+        &ctx,
+        module,
+        data,
+        Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.05) }),
+        TrainConfig { iterations, log_every: 0, sync_mode, ..Default::default() },
+    )
+    .unwrap();
+    (ctx, model, opt)
+}
+
+/// The tentpole's concurrency claim: at `staleness: 2` the forward-
+/// backward jobs of neighbouring iterations genuinely overlap — the
+/// rotating-straggler clock must see ≥ 2 distinct gradient rounds inside
+/// `fwd_bwd` at the same instant, and the per-iteration `fwd_overlap`
+/// metric must report the same depth. Under `Sync` the same clock must
+/// never see more than one round at a time.
+#[test]
+fn two_gradient_rounds_genuinely_in_flight_at_staleness_2() {
+    let spec = ClusterSpec { nodes: 4, slots_per_node: 1 };
+    let base = Duration::from_millis(8);
+    let straggle = Duration::from_millis(20);
+
+    let (_ctx, model, mut opt) =
+        sim_optimizer(spec, 10, SyncMode::Pipelined { staleness: 2 }, base, straggle);
+    opt.optimize().unwrap();
+    let sim = model.compute.as_ref().unwrap();
+    assert!(
+        sim.max_round_overlap() >= 2,
+        "staleness 2 must overlap ≥ 2 gradient rounds inside fwd_bwd (saw {})",
+        sim.max_round_overlap()
+    );
+    let max_depth = opt.history.iter().map(|m| m.fwd_overlap).max().unwrap();
+    assert!(
+        max_depth >= 2,
+        "IterMetrics::fwd_overlap must record the deep-pipeline depth (max {max_depth})"
+    );
+    assert!(
+        opt.history.iter().all(|m| m.sync_lag <= 2),
+        "the staleness bound still holds under forward overlap"
+    );
+    assert_eq!(opt.parameter_manager().optimizer_step(), 10, "every round commits");
+    assert!(opt.history.iter().all(|m| m.loss.is_finite()));
+
+    // Control: barrier execution never overlaps rounds, whatever the
+    // straggler pattern.
+    let (_ctx, model, mut opt) = sim_optimizer(spec, 6, SyncMode::Sync, base, straggle);
+    opt.optimize().unwrap();
+    let sim = model.compute.as_ref().unwrap();
+    assert_eq!(
+        sim.max_round_overlap(),
+        1,
+        "Sync must keep gradient rounds strictly serial"
+    );
+    assert!(opt.history.iter().all(|m| m.fwd_overlap == 1));
+}
+
+/// The deep pipeline composes with multi-slot executors: sync-round tasks
+/// and forward tasks coexist on a node's slots, rounds still overlap, the
+/// staleness bound holds, and training converges.
+#[test]
+fn deep_pipeline_runs_on_multislot_nodes() {
+    let spec = ClusterSpec { nodes: 2, slots_per_node: 2 };
+    let (_ctx, model, mut opt) = sim_optimizer(
+        spec,
+        25,
+        SyncMode::Pipelined { staleness: 2 },
+        Duration::from_millis(3),
+        Duration::from_millis(8),
+    );
+    let report = opt.optimize().unwrap();
+    let sim = model.compute.as_ref().unwrap();
+    assert!(
+        sim.max_round_overlap() >= 2,
+        "multi-slot nodes must overlap rounds too (saw {})",
+        sim.max_round_overlap()
+    );
+    assert!(opt.history.iter().all(|m| m.sync_lag <= 2));
+    assert_eq!(opt.parameter_manager().optimizer_step(), 25);
+    assert!(
+        report.final_loss < report.losses[0] * 0.5,
+        "loss should drop: {} -> {}",
+        report.losses[0],
+        report.final_loss
+    );
+}
+
+/// Multi-slot coverage for the scheduler's planned-dispatch path (until
+/// now only exercised at 1 slot): a width-8 plan on 2×2 slots dispatches
+/// correctly round after round, and the capacity-aware planner spreads
+/// the plan across slots without abandoning locality on an idle cluster.
+#[test]
+fn planned_dispatch_works_on_multislot_nodes() {
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 2, slots_per_node: 2 });
+    let runner = ctx.runner();
+    let preferred = ctx.default_preferred(8);
+    let plan = runner.plan_group(&preferred).unwrap();
+    // Idle cluster: locality kept (partition p → node p % 2) even though
+    // each node gets 4 tasks on 2 slots.
+    for (p, &node) in plan.assignment.nodes.iter().enumerate() {
+        assert_eq!(node, p % 2, "idle-cluster plan must keep locality");
+    }
+    let task: Arc<dyn Fn(&TaskContext) -> anyhow::Result<usize> + Send + Sync> =
+        Arc::new(|tc| Ok(tc.partition));
+    for _ in 0..5 {
+        let out = runner.run_planned(&plan, Arc::clone(&task)).unwrap();
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+}
+
+/// Multi-slot coverage for the retry path: injected failures on a 3×2
+/// cluster still resolve by per-task retries (migrating off the failing
+/// node), planned dispatch included.
+#[test]
+fn retries_resolve_on_multislot_nodes() {
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 3, slots_per_node: 2 });
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 0.3,
+        max_attempts: 30,
+        seed: 13,
+        ..Default::default()
+    });
+    let runner = ctx.runner();
+    let preferred = ctx.default_preferred(12);
+    let plan = runner.plan_group(&preferred).unwrap();
+    let task: Arc<dyn Fn(&TaskContext) -> anyhow::Result<usize> + Send + Sync> =
+        Arc::new(|tc| Ok(tc.partition));
+    for _ in 0..4 {
+        let out = runner.run_planned(&plan, Arc::clone(&task)).unwrap();
+        assert_eq!(out, (0..12).collect::<Vec<_>>());
+    }
+    assert!(
+        ctx.scheduler().stats.snapshot().task_retries > 0,
+        "p=0.3 must have injected at least one retry"
+    );
+    // Deterministic migration: a task failing on one node of a multi-slot
+    // cluster must land elsewhere on retry.
+    ctx.set_failure_policy(FailurePolicy { max_attempts: 3, ..Default::default() });
+    let out = ctx
+        .run_job(
+            &[Some(1)],
+            Arc::new(|tc: &TaskContext| {
+                if tc.node == 1 {
+                    anyhow::bail!("deterministic failure on node 1");
+                }
+                Ok(tc.node)
+            }),
+        )
+        .unwrap();
+    assert_ne!(out[0], 1, "retry must migrate off the failing multi-slot node");
+}
+
+/// Skew-aware replanning: with `skew_replan_threshold` set, a round loop
+/// replans mid-group as soon as a node its PLAN places work on develops
+/// queued-beyond-capacity backlog — `RoundInfo::replanned` +
+/// `RoundInfo::skew` report it — and, once the replanned placements
+/// route around the backlogged node, it does NOT keep replanning while
+/// the external backlog persists (plan-aware skew, no churn).
+#[test]
+fn round_loop_replans_on_load_skew() {
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 3, slots_per_node: 1 });
+    ctx.set_schedule_policy(SchedulePolicy {
+        skew_replan_threshold: Some(0),
+        ..Default::default()
+    });
+    let runner = ctx.runner();
+    let task: Arc<dyn Fn(&TaskContext) -> anyhow::Result<usize> + Send + Sync> =
+        Arc::new(|tc| Ok(tc.node));
+
+    let gate = Arc::new(std::sync::atomic::AtomicU32::new(0));
+    let _guard = GateGuard(Arc::clone(&gate));
+
+    // Round 0 plans on an idle cluster → the plan follows locality onto
+    // node 0. The on_round hook then pins a width-2 gated job onto node
+    // 0's single slot (one runs, one queues → backlog 1 > threshold 0):
+    // round 1 must skew-replan off node 0; rounds 2-3 run on the
+    // replanned placement, which no longer touches node 0, so the
+    // persisting external backlog must NOT trigger further replans.
+    let mut infos = Vec::new();
+    let mut blocker = None;
+    let r2 = runner.clone();
+    let g2 = Arc::clone(&gate);
+    let c = ctx.clone();
+    runner
+        .run_rounds_with(
+            &[Some(0)],
+            4,
+            4, // one group: without skew only round 0 would replan
+            |_r| Arc::clone(&task),
+            |info, _res| {
+                if info.round == 0 {
+                    let g = Arc::clone(&g2);
+                    let handle = r2
+                        .submit(
+                            &[Some(0), Some(0)],
+                            Arc::new(move |_tc| -> anyhow::Result<()> {
+                                while g.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+                                    std::thread::sleep(Duration::from_millis(1));
+                                }
+                                Ok(())
+                            }),
+                        )
+                        .unwrap();
+                    blocker = Some(handle);
+                    while c.cluster().inflight(0) < 2 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                // Let the just-finished round's slot accounting settle so
+                // the next round's staleness check sees only the blocker.
+                while c.cluster().inflight(1) > 0 || c.cluster().inflight(2) > 0 {
+                    std::thread::yield_now();
+                }
+                infos.push(info);
+            },
+        )
+        .unwrap();
+    gate.store(1, std::sync::atomic::Ordering::Relaxed);
+    blocker.take().unwrap().join().unwrap();
+
+    assert!(infos[0].replanned && !infos[0].skew, "round 0 replans at the group boundary");
+    assert!(
+        infos[1].replanned && infos[1].skew,
+        "backlog on a planned node must trigger a skew replan: {:?}",
+        infos[1]
+    );
+    for info in &infos[2..] {
+        assert!(
+            !info.replanned && !info.skew,
+            "backlog the plan routes around must not keep forcing replans: {info:?}"
+        );
+    }
+}
+
+/// The non-blocking planner must not stall the driver on a busy cluster:
+/// planning a wide group while a node is saturated returns immediately
+/// (no `locality_wait` sleep per task), steers the first tasks to free
+/// capacity, and counts no delay-scheduling misses.
+#[test]
+fn planning_on_a_busy_cluster_does_not_block() {
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 2, slots_per_node: 1 });
+    ctx.set_schedule_policy(SchedulePolicy {
+        locality_wait: Duration::from_millis(250),
+        ..Default::default()
+    });
+    let gate = Arc::new(std::sync::atomic::AtomicU32::new(0));
+    let _guard = GateGuard(Arc::clone(&gate));
+    let g = Arc::clone(&gate);
+    let ctx2 = ctx.clone();
+    let blocker = std::thread::spawn(move || {
+        ctx2.run_job(
+            &[Some(0)],
+            Arc::new(move |_tc| -> anyhow::Result<()> {
+                while g.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(())
+            }),
+        )
+        .unwrap();
+    });
+    while ctx.cluster().inflight(0) == 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let misses0 = ctx.scheduler().stats.snapshot().locality_misses;
+    let t0 = Instant::now();
+    // 8 tasks all preferring the saturated node 0: the old planner slept
+    // up to locality_wait (250ms) PER TASK here.
+    let plan = ctx.runner().plan_group(&[Some(0); 8]).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(200),
+        "planning must not block on busy slots (took {elapsed:?})"
+    );
+    assert_eq!(
+        ctx.scheduler().stats.snapshot().locality_misses,
+        misses0,
+        "planning must not inflate the delay-scheduling miss counter"
+    );
+    assert_eq!(
+        plan.assignment.nodes[0], 1,
+        "capacity-aware planning steers the first task to the free node"
+    );
+
+    gate.store(1, std::sync::atomic::Ordering::Relaxed);
+    blocker.join().unwrap();
+}

@@ -110,7 +110,7 @@ fn staleness_bound_survives_killed_node() {
     let s = 1usize;
     let (ctx, mut opt) = optimizer(4, 1, SyncMode::Pipelined { staleness: s }, 1);
     // Manual step loop so the kill lands mid-pipeline (between steps,
-    // while a sync round is typically still in flight). Executor-level
+    // while rounds are typically still in flight). Executor-level
     // kill only: training weight shards are not replicated (serving's
     // are), so storage-level loss is out of scope here — the point is
     // that re-placed tasks keep the staleness bound intact.
@@ -120,24 +120,30 @@ fn staleness_bound_survives_killed_node() {
         }
         let m = opt.step().unwrap();
         assert!(m.sync_lag <= s, "iter {iter}: lag {} > {s}", m.sync_lag);
-        assert!(m.loss.is_finite());
     }
     opt.drain().unwrap();
+    // With the deep pipeline a step's forward may still be in flight when
+    // step() returns; after drain every entry is complete.
+    assert!(
+        opt.history.iter().all(|m| m.loss.is_finite()),
+        "drained history must have every loss filled in"
+    );
     assert_eq!(opt.parameter_manager().optimizer_step(), 10);
     assert_eq!(opt.weights().unwrap().len(), DIM + 1);
     assert_eq!(ctx.cluster().alive_nodes(), vec![0, 2, 3], "node 1 stayed dead");
 }
 
-/// A mid-pipeline failure must drain the in-flight round (commit or roll
+/// A mid-pipeline failure must drain the in-flight rounds (commit or roll
 /// back), drop the queued rounds' gradient blocks, and leave the block
-/// store exactly as a clean state: no staged shards, no stale shuffles.
+/// store exactly as a clean state: no staged shards, no stale shuffles,
+/// no retired-but-unreleased weight rounds.
 ///
-/// The failure policy is snapshotted at job-submit time, which makes this
-/// deterministic at staleness 2: after three steps the pipeline holds one
-/// in-flight sync (submitted under the clean policy → commits during the
-/// drain) and one queued gradient round (its sync is submitted DURING the
-/// drain, under the all-fail policy → `sync_wait` errors, rolls the round
-/// back, and `abort_pipeline` discards what's left).
+/// The failure policy is snapshotted at job-submit time. With the deep
+/// pipeline the failure may not surface on the very next `step()` —
+/// a step only *submits* its forward, so the doomed jobs are discovered
+/// when bounded staleness (or the drain) joins them. Rounds whose sync
+/// was dispatched before the policy flipped still commit; everything
+/// dispatched after it rolls back.
 #[test]
 fn failure_mid_pipeline_drains_and_rolls_back() {
     let (ctx, mut opt) = optimizer(2, 1, SyncMode::Pipelined { staleness: 2 }, 1);
@@ -146,16 +152,19 @@ fn failure_mid_pipeline_drains_and_rolls_back() {
     for _ in 0..3 {
         opt.step().unwrap();
     }
-    // Steady state at staleness 2: one sync committed, one in flight,
-    // one gradient round queued. Now every new attempt fails: the next
-    // forward-backward job errors and the error path drains the pipeline.
+    // Pipeline holds up to 2 unsettled rounds. Now every new attempt
+    // fails: whatever is (or gets) dispatched from here on errors, and
+    // the error path tears the pipeline down.
     ctx.set_failure_policy(FailurePolicy {
         task_fail_prob: 1.0,
         max_attempts: 2,
         ..Default::default()
     });
-    let err = opt.step();
-    assert!(err.is_err(), "all attempts failing must surface as a step error");
+    let err = opt.step().and_then(|_| opt.drain());
+    assert!(
+        err.is_err(),
+        "with every attempt failing, the step or the drain joining its jobs must error"
+    );
     ctx.set_failure_policy(FailurePolicy::default());
 
     // Committed rounds replace the previous round's blocks one-for-one,
@@ -167,11 +176,14 @@ fn failure_mid_pipeline_drains_and_rolls_back() {
         "failed pipeline must not leak staged/shuffle blocks"
     );
     let step_after_failure = opt.parameter_manager().optimizer_step();
-    assert_eq!(
-        step_after_failure, 2,
-        "pre-failure syncs commit; the round submitted under the all-fail \
-         policy must roll back"
+    assert!(
+        (1..=3).contains(&step_after_failure),
+        "only rounds whose sync dispatched under the clean policy may commit \
+         (got step {step_after_failure})"
     );
+    // History keeps exactly the iterations whose forward completed; the
+    // aborted placeholders are dropped.
+    assert!(opt.history.iter().all(|m| m.loss.is_finite()));
 
     // The optimizer keeps working after the failure clears.
     opt.step().unwrap();

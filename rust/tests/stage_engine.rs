@@ -16,6 +16,19 @@ use bigdl::sparklet::{
 };
 use bigdl::util::prng::Rng;
 
+/// Opens a gate on drop so a failing assertion can never leave gated
+/// tasks wedged: during unwind a dropped `JobHandle`/`PendingJob`
+/// quiesces by WAITING for its tasks' completions (and an explicit
+/// `Cluster::shutdown` joins executor threads), either of which would
+/// turn the panic into a hang; even bare gated submits would leave a
+/// spinning executor burning CPU for the rest of the test run.
+struct GateGuard(Arc<AtomicU32>);
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        self.0.store(1, Ordering::Relaxed);
+    }
+}
+
 #[test]
 fn fused_narrow_chain_is_one_job_one_stage() {
     let ctx = SparkletContext::local(4);
@@ -255,10 +268,12 @@ fn delay_scheduling_uses_slot_signal_and_counts_misses() {
     ctx.set_schedule_policy(SchedulePolicy {
         gang: false,
         locality_wait: Duration::from_millis(2),
+        ..Default::default()
     });
     // Occupy node 0's only slot with a gated task (run from a side thread;
     // run_job is synchronous).
     let gate = Arc::new(AtomicU32::new(0));
+    let _guard = GateGuard(Arc::clone(&gate));
     let g2 = Arc::clone(&gate);
     let ctx2 = ctx.clone();
     let blocker = std::thread::spawn(move || {
@@ -312,6 +327,39 @@ fn retry_avoids_alive_node_that_failed_the_task() {
     assert_eq!(ctx.scheduler().stats.snapshot().task_retries, 1);
 }
 
+/// Regression (gang restart placement): a gang-scheduled job whose task
+/// fails deterministically on an ALIVE node must migrate that task on the
+/// restart wave. Before the fix, `dispatch_wave` reused the pre-assigned
+/// plan after an alive-check only and the per-task fallback placed with
+/// `avoid: None`, so the restart re-dispatched onto the node that had
+/// just failed and the job looped until `max_job_restarts`.
+#[test]
+fn gang_restart_avoids_the_failed_node() {
+    let ctx = SparkletContext::local(2);
+    ctx.set_schedule_policy(SchedulePolicy { gang: true, ..Default::default() });
+    let runner = ctx.runner();
+    // Pre-assigned plan pins partition 1 onto node 1, where the task
+    // deterministically fails.
+    let plan = runner.plan_group(&[Some(0), Some(1)]).unwrap();
+    let out = runner
+        .run_planned(
+            &plan,
+            Arc::new(|tc: &TaskContext| {
+                if tc.node == 1 {
+                    anyhow::bail!("deterministic failure on node 1");
+                }
+                Ok(tc.node)
+            }),
+        )
+        .unwrap();
+    assert_eq!(out, vec![0, 0], "the restart wave must steer every task off node 1");
+    assert_eq!(
+        ctx.scheduler().stats.snapshot().gang_restarts,
+        1,
+        "one failure, one whole-job restart — not a loop to max_job_restarts"
+    );
+}
+
 /// Async submission: a submitted job's tasks run on the executor pool
 /// while the driver dispatches and completes OTHER jobs; join returns the
 /// submitted job's results afterwards.
@@ -320,6 +368,7 @@ fn submitted_job_overlaps_with_driver_work() {
     let ctx = SparkletContext::local(2);
     let runner = ctx.runner();
     let gate = Arc::new(AtomicU32::new(0));
+    let _guard = GateGuard(Arc::clone(&gate));
     let g = Arc::clone(&gate);
     let handle = runner
         .submit(
