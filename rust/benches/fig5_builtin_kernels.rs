@@ -1,0 +1,148 @@
+//! Fig 5-style core saturation for the builtin backend's intra-task
+//! parallel kernels (§4.4: BigDL gets CPU throughput from a multi-threaded
+//! MKL inside ONE task per node — here, `tensor::kernels` inside one
+//! executor slot).
+//!
+//! Three series (recorded to `BENCH_JSONL` as `bigdl-bench/v1`):
+//!  (a) `builtin_kernel_speedup` — blocked parallel GEMM at the machine's
+//!      full core count vs the naive scalar reference (what the builtin
+//!      path computed before the kernel layer). Acceptance: ≥ 2× on a
+//!      ≥ 4-core box (CI gates on this in quick mode).
+//!  (b) `kernel_saturation_speedup` — the same GEMM at 1→N threads over
+//!      the width-1 kernel: the saturation curve.
+//!  (c) `mlp_step_speedup` — a full `Mlp::fwd_bwd` training step,
+//!      full-width vs single-thread: what the optimizer hot path gains.
+
+mod common;
+
+use std::time::Instant;
+
+use bigdl::bigdl::{BuiltinModel, Mlp, Sample, StepCtx};
+use bigdl::tensor::kernels::{self, reference, KernelPool};
+use bigdl::tensor::Tensor;
+use bigdl::util::prng::Rng;
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gen_f32() * 2.0 - 1.0).collect()
+}
+
+/// Best-of-`reps` wall seconds (first rep doubles as warm-up).
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(2) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    common::banner(
+        "Figure 5-style: intra-task kernel speedup & core saturation (builtin backend)",
+        "one multi-threaded compute task per node saturates the node's cores (BigDL 4.4)",
+    );
+    let mut rec = common::Recorder::new("fig5_builtin_kernels");
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let (m, k, n) = if common::quick() { (160, 160, 160) } else { (384, 384, 384) };
+    let reps = common::iters(7, 3);
+    let mut rng = Rng::new(0xF165);
+    let a = rand_vec(&mut rng, m * k);
+    let b = rand_vec(&mut rng, k * n);
+    let mut c = vec![0.0f32; m * n];
+    let gemm_params = [("cores", cores as f64), ("m", m as f64), ("k", k as f64), ("n", n as f64)];
+
+    // (a) naive scalar reference vs full-width blocked parallel GEMM.
+    let scalar = best_of(reps, || reference::gemm_nn(&a, &b, &mut c, m, k, n));
+    let check_ref: f32 = c.iter().sum();
+    let full = KernelPool::new(cores);
+    let par = best_of(reps, || kernels::gemm_nn(&full, &a, &b, &mut c, m, k, n));
+    let check_par: f32 = c.iter().sum();
+    let speedup = scalar / par.max(1e-12);
+    println!(
+        "\nGEMM {m}x{k}x{n} on {cores} cores ({reps} reps, best-of):\n\
+         {:>28} {:>10.2} ms   (checksum {check_ref:.3})\n\
+         {:>28} {:>10.2} ms   (checksum {check_par:.3})\n\
+         {:>28} {speedup:>9.2}x   (target >= 2x on >= 4 cores)",
+        "scalar reference:",
+        scalar * 1e3,
+        format!("parallel kernel ({cores}t):"),
+        par * 1e3,
+        "speedup:",
+    );
+    if cores >= 4 && speedup < 2.0 {
+        println!("  WARNING: kernel speedup below the 2x acceptance target");
+    }
+    rec.add("builtin_kernel_speedup", &gemm_params, speedup, "x");
+
+    // (b) saturation: 1 → cores threads, against the width-1 kernel.
+    let mut widths = Vec::new();
+    let mut t = 1;
+    while t < cores {
+        widths.push(t);
+        t *= 2;
+    }
+    widths.push(cores);
+    let p1 = KernelPool::new(1);
+    let base = best_of(reps, || kernels::gemm_nn(&p1, &a, &b, &mut c, m, k, n));
+    println!("\nsaturation (vs 1-thread kernel, {:.2} ms):", base * 1e3);
+    for &w in &widths {
+        let pool = KernelPool::new(w);
+        let tw = best_of(reps, || kernels::gemm_nn(&pool, &a, &b, &mut c, m, k, n));
+        let s = base / tw.max(1e-12);
+        println!("  {w:>3} threads: {:>8.2} ms  {s:>6.2}x", tw * 1e3);
+        rec.add(
+            "kernel_saturation_speedup",
+            &[("threads", w as f64), ("cores", cores as f64)],
+            s,
+            "x",
+        );
+    }
+
+    // (c) a full Mlp training step (fwd + exact backprop), 1 thread vs all.
+    let (dims, batch) = if common::quick() {
+        (vec![128, 256, 128, 10], 32)
+    } else {
+        (vec![256, 512, 512, 10], 64)
+    };
+    let mlp = Mlp::new(dims.clone(), batch);
+    let weights = mlp.initial_params();
+    let classes = *dims.last().unwrap();
+    let samples: Vec<Sample> = (0..batch)
+        .map(|i| {
+            Sample::new(
+                vec![Tensor::from_f32(vec![dims[0]], rand_vec(&mut rng, dims[0]))],
+                Tensor::from_i32(vec![], vec![(i % classes) as i32]),
+            )
+        })
+        .collect();
+    let idx: Vec<usize> = (0..batch).collect();
+    let step1 = StepCtx::local(1);
+    let t_one = best_of(reps, || {
+        mlp.fwd_bwd(&step1, &weights, &samples, &idx).expect("fwd_bwd");
+    });
+    let step_n = StepCtx::local(cores);
+    let t_all = best_of(reps, || {
+        mlp.fwd_bwd(&step_n, &weights, &samples, &idx).expect("fwd_bwd");
+    });
+    let mlp_speedup = t_one / t_all.max(1e-12);
+    println!(
+        "\nMlp {dims:?} batch {batch} fwd_bwd ({} params):\n\
+         {:>28} {:>10.2} ms\n\
+         {:>28} {:>10.2} ms\n\
+         {:>28} {mlp_speedup:>9.2}x",
+        mlp.param_count(),
+        "1 thread:",
+        t_one * 1e3,
+        format!("{cores} threads:"),
+        t_all * 1e3,
+        "train-step speedup:",
+    );
+    rec.add(
+        "mlp_step_speedup",
+        &[("cores", cores as f64), ("params", mlp.param_count() as f64), ("batch", batch as f64)],
+        mlp_speedup,
+        "x",
+    );
+    rec.flush();
+}

@@ -42,6 +42,7 @@ fn train_wall(mode: SyncMode, rounds: usize, nodes: usize, slots: usize) -> (f64
     let ctx = SparkletContext::new(bigdl::sparklet::ClusterSpec {
         nodes,
         slots_per_node: slots,
+        ..Default::default()
     });
     // Rotating straggler on the forward-backward (one slow partition per
     // round) AND on the shard update (one slow shard per sync round) —

@@ -16,25 +16,56 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::optim::OptimMethod;
-use super::sample::Sample;
-use crate::sparklet::{Rdd, SparkletContext};
+use super::sample::{gather_features, Sample};
+use crate::sparklet::{Rdd, SparkletContext, TaskContext};
+use crate::tensor::kernels::{self, KernelPool, Scratch};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
 
-/// Where a builtin forward-backward is executing (threaded through from
-/// the task context so compute simulators can model per-node skew).
-#[derive(Debug, Clone, Copy)]
+/// Where (and with what resources) a builtin forward-backward is
+/// executing: the node/partition identity compute simulators key on, the
+/// slot's kernel-thread budget, and the recycled scratch arena the hot
+/// path draws its temporaries from.
+#[derive(Debug, Clone)]
 pub struct StepCtx {
     pub node: usize,
     pub partition: usize,
+    /// Intra-task kernel width (the slot's core budget; 1 = serial).
+    pub threads: usize,
+    /// Recycled per-step buffers (one arena per executor thread).
+    pub scratch: Scratch,
+}
+
+impl StepCtx {
+    pub fn new(node: usize, partition: usize, threads: usize) -> StepCtx {
+        StepCtx { node, partition, threads: threads.max(1), scratch: Scratch::thread_local() }
+    }
+
+    /// Build from a task context: the kernel width is the executor slot's
+    /// core budget ([`TaskContext::core_budget`]).
+    pub fn for_task(tc: &TaskContext) -> StepCtx {
+        StepCtx::new(tc.node, tc.partition, tc.core_budget())
+    }
+
+    /// A step context with no task identity (serving-side scoring).
+    pub fn local(threads: usize) -> StepCtx {
+        StepCtx::new(0, 0, threads)
+    }
+
+    /// Run `f` on this step's kernel pool (cached per executor thread).
+    pub fn pool<R>(&self, f: impl FnOnce(&KernelPool) -> R) -> R {
+        kernels::with_pool(self.threads, f)
+    }
 }
 
 /// A pure-Rust model: deterministic `fwd_bwd` over host memory. Must be
 /// deterministic in `(weights, samples, idx)` — retried tasks regenerate
 /// byte-identical gradients, the same invariant the AOT path relies on.
+/// (The kernel layer preserves this: work splits depend only on length
+/// and the cluster-wide thread budget.)
 pub trait BuiltinModel: Send + Sync {
     fn name(&self) -> &str;
     fn param_count(&self) -> usize;
@@ -50,6 +81,17 @@ pub trait BuiltinModel: Send + Sync {
         samples: &[Sample],
         idx: &[usize],
     ) -> Result<(f32, Vec<f32>)>;
+    /// Forward-only scoring: one output row per sample (the serving
+    /// path). Models without an inference head keep the default, which
+    /// errors.
+    fn predict(
+        &self,
+        _step: &StepCtx,
+        _weights: &[f32],
+        _samples: &[Sample],
+    ) -> Result<Vec<Vec<f32>>> {
+        bail!("builtin model {} has no predict path", self.name())
+    }
 }
 
 /// Simulated compute time for a builtin model's forward-backward: every
@@ -135,8 +177,9 @@ impl ComputeSim {
 
 /// Linear regression with MSE loss: params `[w(dim), b]`, one feature
 /// tensor of shape `[dim]` per sample, scalar label. Gradients are exact
-/// and accumulated in fixed sample order, so distributed training is
-/// bit-deterministic given the seed.
+/// and accumulated in fixed sample order through the parallel kernels
+/// (column-parallel, sample-sequential), so distributed training is
+/// bit-deterministic given the seed and the cluster's thread budget.
 pub struct LinReg {
     pub dim: usize,
     pub batch: usize,
@@ -180,27 +223,59 @@ impl BuiltinModel for LinReg {
         idx: &[usize],
     ) -> Result<(f32, Vec<f32>)> {
         ensure!(weights.len() == self.dim + 1, "weights len {} != {}", weights.len(), self.dim + 1);
+        ensure!(!idx.is_empty(), "empty batch");
         if let Some(sim) = &self.compute {
             sim.sleep(step.partition);
         }
         let (w, b) = (&weights[..self.dim], weights[self.dim]);
-        let mut grad = vec![0.0f32; self.dim + 1];
-        let mut loss = 0.0f32;
-        let inv = 1.0 / idx.len() as f32;
-        for &i in idx {
-            let x = samples[i].features[0].as_f32()?;
-            ensure!(x.len() == self.dim, "feature dim {} != {}", x.len(), self.dim);
-            let y = samples[i].label.item_f32()?;
-            let pred = w.iter().zip(x).map(|(wi, xi)| wi * xi).sum::<f32>() + b;
-            let err = pred - y;
-            loss += err * err * inv;
-            let g = 2.0 * err * inv;
-            for (gi, xi) in grad[..self.dim].iter_mut().zip(x) {
-                *gi += g * xi;
+        let bsz = idx.len();
+        let inv = 1.0 / bsz as f32;
+        // Scratch-backed temporaries: the batch matrix and residuals are
+        // recycled across steps; only the gradient leaves (it is Arc'd
+        // into the shuffle).
+        let mut x = step.scratch.take(bsz * self.dim);
+        gather_features(samples, idx, 0, self.dim, &mut x)?;
+        let mut err = step.scratch.take(bsz);
+        let mut grad = step.scratch.take(self.dim + 1);
+        let loss = step.pool(|pool| -> Result<f32> {
+            kernels::gemv(pool, &x, w, &mut err, bsz, self.dim);
+            for (e, &i) in err.iter_mut().zip(idx) {
+                *e += b - samples[i].label.item_f32()?;
             }
-            grad[self.dim] += g;
-        }
+            let loss = kernels::dot(pool, &err, &err) * inv;
+            // err := 2/B · err — exactly the per-sample `g` of the scalar
+            // path; gemv_t then accumulates per column in sample order.
+            kernels::scale(pool, &mut err, 2.0 * inv);
+            kernels::gemv_t(pool, &x, &err, &mut grad[..self.dim], bsz, self.dim);
+            grad[self.dim] = kernels::sum(pool, &err);
+            Ok(loss)
+        })?;
+        step.scratch.put(x);
+        step.scratch.put(err);
         Ok((loss, grad))
+    }
+
+    fn predict(
+        &self,
+        step: &StepCtx,
+        weights: &[f32],
+        samples: &[Sample],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(weights.len() == self.dim + 1, "weights len {} != {}", weights.len(), self.dim + 1);
+        if samples.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (w, b) = (&weights[..self.dim], weights[self.dim]);
+        let bsz = samples.len();
+        let idx: Vec<usize> = (0..bsz).collect();
+        let mut x = step.scratch.take(bsz * self.dim);
+        gather_features(samples, &idx, 0, self.dim, &mut x)?;
+        let mut preds = step.scratch.take(bsz);
+        step.pool(|pool| kernels::gemv(pool, &x, w, &mut preds, bsz, self.dim));
+        let rows = preds.iter().map(|p| vec![p + b]).collect();
+        step.scratch.put(x);
+        step.scratch.put(preds);
+        Ok(rows)
     }
 }
 
@@ -300,7 +375,7 @@ mod tests {
             .collect();
         let idx = [0, 1, 2, 3];
         let w: Vec<f32> = vec![0.1, -0.2, 0.3, 0.05];
-        let sc = StepCtx { node: 0, partition: 0 };
+        let sc = StepCtx::new(0, 0, 2);
         let (_, grad) = m.fwd_bwd(&sc, &w, &samples, &idx).unwrap();
         let eps = 1e-3f32;
         for p in 0..4 {
@@ -322,7 +397,7 @@ mod tests {
             Sample::new(vec![Tensor::from_f32(vec![2], vec![1.0, 2.0])], Tensor::from_f32(vec![], vec![0.5])),
             Sample::new(vec![Tensor::from_f32(vec![2], vec![-1.0, 0.3])], Tensor::from_f32(vec![], vec![1.5])),
         ];
-        let sc = StepCtx { node: 0, partition: 0 };
+        let sc = StepCtx::new(0, 0, 2);
         let a = m.fwd_bwd(&sc, &[0.1, 0.2, 0.0], &samples, &[0, 1]).unwrap();
         let b = m.fwd_bwd(&sc, &[0.1, 0.2, 0.0], &samples, &[0, 1]).unwrap();
         assert_eq!(a.0.to_bits(), b.0.to_bits());

@@ -6,12 +6,13 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use super::builtin::StepCtx;
 use super::module::Module;
 use super::sample::{assemble_predict_inputs, Sample};
 use super::serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
-use crate::sparklet::Rdd;
+use crate::sparklet::{Rdd, SparkletContext};
 use crate::tensor::Tensor;
 
 /// A [`BatchScorer`] over an AOT module's `predict` entry: batches the
@@ -43,6 +44,31 @@ pub fn module_scorer(module: &Module) -> Result<BatchScorer<Sample>> {
     }))
 }
 
+/// A [`BatchScorer`] over a [`super::BuiltinModel`]'s forward pass,
+/// routed through the intra-task parallel kernels. Scorer closures carry
+/// no task context, so the kernel-thread budget — a cluster-wide static
+/// (`ClusterSpec::task_cores`) — is captured at construction.
+pub fn builtin_scorer(ctx: &SparkletContext, module: &Module) -> Result<BatchScorer<Sample>> {
+    let model = module
+        .builtin_model()
+        .with_context(|| format!("{} is not a builtin module", module.name))?;
+    let threads = ctx.cluster().spec().task_cores();
+    Ok(Arc::new(move |weights: &Arc<Vec<f32>>, samples: &[Sample]| {
+        let step = StepCtx::local(threads);
+        model.predict(&step, weights, samples)
+    }))
+}
+
+/// Backend dispatch: builtin modules score through [`builtin_scorer`]
+/// (kernel-backed forward), AOT modules through [`module_scorer`].
+pub fn scorer_for(ctx: &SparkletContext, module: &Module) -> Result<BatchScorer<Sample>> {
+    if module.is_builtin() {
+        builtin_scorer(ctx, module)
+    } else {
+        module_scorer(module)
+    }
+}
+
 /// A throwaway serving instance for the one-shot convenience entry points
 /// below. Replication is off — the service lives for exactly one scoring
 /// job, so the extra shard copies buy nothing; long-lived callers should
@@ -55,7 +81,7 @@ fn one_shot_service(
 ) -> Result<PredictService<Sample>> {
     let svc = PredictService::new(
         data.context(),
-        module_scorer(module)?,
+        scorer_for(data.context(), module)?,
         ServingConfig { replicate: false, ..Default::default() },
     );
     svc.deploy(weights)?;

@@ -21,6 +21,7 @@ pub mod builtin;
 pub mod checkpoint;
 pub mod inference;
 pub mod metrics;
+pub mod mlp;
 pub mod module;
 pub mod optim;
 pub mod optimizer;
@@ -32,6 +33,7 @@ pub mod trigger;
 
 pub use builtin::{BuiltinModel, ComputeSim, LinReg, SimOptim, StepCtx};
 pub use metrics::{IterMetrics, TrainReport};
+pub use mlp::{mlp_rdd, Mlp};
 pub use module::Module;
 pub use optim::{Adagrad, Adam, Lars, OptimMethod, Sgd};
 pub use optimizer::{DistributedOptimizer, SyncMode, TrainConfig};

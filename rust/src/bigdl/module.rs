@@ -47,6 +47,15 @@ impl Module {
         matches!(self.backend, Backend::Builtin(_))
     }
 
+    /// The wrapped builtin model, if any (serving routes builtin scoring
+    /// through the model's kernel-backed `predict`).
+    pub fn builtin_model(&self) -> Option<Arc<dyn BuiltinModel>> {
+        match &self.backend {
+            Backend::Builtin(m) => Some(Arc::clone(m)),
+            Backend::Aot { .. } => None,
+        }
+    }
+
     pub fn meta(&self) -> Result<&ArtifactMeta> {
         match &self.backend {
             Backend::Aot { meta, .. } => Ok(meta),

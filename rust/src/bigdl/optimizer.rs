@@ -615,7 +615,7 @@ impl DistributedOptimizer {
             let idx = draw_batch_indices(&mut rng, samples.len(), batch);
             // (line 6) local gradients on the model replica.
             let t1 = Instant::now();
-            let step_ctx = StepCtx { node: tc.node, partition: tc.partition };
+            let step_ctx = StepCtx::for_task(tc);
             let (loss, grads) = module.train_step(&step_ctx, weights, samples, &idx)?;
             let compute_s = t1.elapsed().as_secs_f64();
             // Slice N ways and publish (input to Algorithm 2) as views:

@@ -5,7 +5,7 @@
 use anyhow::{ensure, Result};
 
 use crate::runtime::EntryMeta;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use crate::util::prng::Rng;
 
 /// One record of the distributed dataset.
@@ -39,6 +39,42 @@ pub fn draw_batch_indices(rng: &mut Rng, partition_len: usize, batch: usize) -> 
     } else {
         (0..batch).map(|_| rng.gen_usize(partition_len)).collect()
     }
+}
+
+/// Gather `samples[idx]`'s f32 feature `feat` into a preallocated
+/// `[idx.len(), dim]` row-major matrix — the builtin backend's batch
+/// assembly. Writing into caller-owned scratch replaces the per-column
+/// `Tensor::stack` temporaries the scalar path allocated every step.
+pub fn gather_features(
+    samples: &[Sample],
+    idx: &[usize],
+    feat: usize,
+    dim: usize,
+    buf: &mut [f32],
+) -> Result<()> {
+    ensure!(buf.len() == idx.len() * dim, "gather buffer {} != {}x{dim}", buf.len(), idx.len());
+    for (row, &i) in buf.chunks_exact_mut(dim).zip(idx) {
+        ensure!(
+            samples[i].features.len() > feat,
+            "sample has {} features, need index {feat}",
+            samples[i].features.len()
+        );
+        let x = samples[i].features[feat].as_f32()?;
+        ensure!(x.len() == dim, "feature dim {} != {dim}", x.len());
+        row.copy_from_slice(x);
+    }
+    Ok(())
+}
+
+/// Class index from a scalar label tensor (f32 or i32).
+pub fn class_label(label: &Tensor) -> Result<usize> {
+    ensure!(label.numel() == 1, "class label must be a scalar, got {:?}", label.shape);
+    let v = match label.dtype() {
+        DType::F32 => label.as_f32()?[0] as i64,
+        DType::I32 => label.as_i32()?[0] as i64,
+    };
+    ensure!(v >= 0, "negative class label {v}");
+    Ok(v as usize)
 }
 
 /// Stack `samples[idx]` into the `fwd_bwd` input layout:

@@ -10,11 +10,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use bigdl::bigdl::{inference, optim, DistributedOptimizer, Module, Sample, TrainConfig};
+use bigdl::bigdl::{
+    inference, mlp_rdd, optim, DistributedOptimizer, LinReg, Mlp, Module, Sample, TrainConfig,
+};
 use bigdl::config::Config;
 use bigdl::data;
 use bigdl::runtime::{default_artifacts_dir, RuntimeHandle};
-use bigdl::sparklet::{FailurePolicy, Rdd, SchedulePolicy, SparkletContext};
+use bigdl::sparklet::{ClusterSpec, FailurePolicy, Rdd, SchedulePolicy, SparkletContext};
 
 use crate::cli::Opts;
 
@@ -27,6 +29,8 @@ fn dataset_for(
     seed: u64,
 ) -> Result<Rdd<Sample>> {
     Ok(match model {
+        "mlp" => mlp_rdd(ctx, 16, 4, parts, per_part, seed),
+        "linreg" => bigdl::bigdl::builtin::linreg_rdd(ctx, 64, parts, per_part, seed),
         "ncf" => data::movielens_rdd(ctx, Default::default(), parts, per_part, seed),
         "inception_lite" => data::imagenet_lite_rdd(ctx, Default::default(), parts, per_part, seed),
         "transformer" => data::corpus_rdd(
@@ -61,6 +65,17 @@ struct Settings {
     fail_prob: f64,
     gang: bool,
     shards: Option<usize>,
+    kernel_threads: usize,
+}
+
+/// Builtin (pure-Rust) models trainable without AOT artifacts, on the
+/// intra-task parallel kernels.
+fn builtin_module(model: &str) -> Option<Module> {
+    match model {
+        "mlp" => Some(Module::builtin(Arc::new(Mlp::new(vec![16, 64, 32, 4], 32)))),
+        "linreg" => Some(Module::builtin(Arc::new(LinReg::new(64, 32)))),
+        _ => None,
+    }
 }
 
 fn settings(opts: &Opts) -> Result<Settings> {
@@ -95,11 +110,18 @@ fn settings(opts: &Opts) -> Result<Settings> {
         fail_prob: pick_f64("fail-prob", 0.0)?,
         gang: opts.get_flag("gang") || file.get_bool("train.gang", false)?,
         shards: opts.get("shards").map(|s| s.parse()).transpose()?,
+        // --kernel-threads N: per-slot intra-task kernel width for builtin
+        // models (0 = auto from the machine's cores).
+        kernel_threads: pick_usize("kernel-threads", 0)?,
     })
 }
 
 fn build_ctx(s: &Settings) -> SparkletContext {
-    let ctx = SparkletContext::local(s.nodes);
+    let ctx = SparkletContext::new(ClusterSpec {
+        nodes: s.nodes,
+        slots_per_node: 1,
+        cores_per_slot: s.kernel_threads,
+    });
     if s.fail_prob > 0.0 {
         ctx.set_failure_policy(FailurePolicy {
             task_fail_prob: s.fail_prob,
@@ -116,9 +138,14 @@ fn build_ctx(s: &Settings) -> SparkletContext {
 
 pub fn train(opts: &Opts) -> Result<()> {
     let s = settings(opts)?;
-    let rt = RuntimeHandle::load(&default_artifacts_dir())?;
     let ctx = build_ctx(&s);
-    let module = Module::load(&rt, &s.model)?;
+    let (module, rt) = match builtin_module(&s.model) {
+        Some(m) => (m, None),
+        None => {
+            let rt = RuntimeHandle::load(&default_artifacts_dir())?;
+            (Module::load(&rt, &s.model)?, Some(rt))
+        }
+    };
     let dataset = dataset_for(&s.model, &ctx, s.partitions, s.records_per_partition, s.seed)?;
     let optim = optim::by_name(&s.optim, s.lr as f32)?;
     println!(
@@ -182,15 +209,22 @@ pub fn train(opts: &Opts) -> Result<()> {
     );
     let (blocks, bytes) = ctx.blocks().usage();
     println!("block store at exit: {blocks} blocks / {}", bigdl::util::fmt_bytes(bytes as u64));
-    rt.shutdown();
+    if let Some(rt) = rt {
+        rt.shutdown();
+    }
     Ok(())
 }
 
 pub fn predict(opts: &Opts) -> Result<()> {
     let s = settings(opts)?;
-    let rt = RuntimeHandle::load(&default_artifacts_dir())?;
     let ctx = build_ctx(&s);
-    let module = Module::load(&rt, &s.model)?;
+    let (module, rt) = match builtin_module(&s.model) {
+        Some(m) => (m, None),
+        None => {
+            let rt = RuntimeHandle::load(&default_artifacts_dir())?;
+            (Module::load(&rt, &s.model)?, Some(rt))
+        }
+    };
     let records = opts.get_usize("records", 2048)?;
     let per_part = records.div_ceil(s.partitions);
     let dataset = dataset_for(&s.model, &ctx, s.partitions, per_part, s.seed ^ 0xE7A1)?;
@@ -205,6 +239,8 @@ pub fn predict(opts: &Opts) -> Result<()> {
         rows.len() as f64 / wall,
         &rows[0][..rows[0].len().min(8)]
     );
-    rt.shutdown();
+    if let Some(rt) = rt {
+        rt.shutdown();
+    }
     Ok(())
 }

@@ -31,11 +31,31 @@ pub struct ClusterSpec {
     /// per node per iteration (§4.4), so 1 slot is the faithful default;
     /// more slots exercise the scheduler's contention paths.
     pub slots_per_node: usize,
+    /// Per-slot core budget for the intra-task tensor kernels
+    /// ([`crate::tensor::kernels`]). `0` (the default) resolves
+    /// automatically: the machine's cores divided evenly over every slot
+    /// of this (in-process) cluster, so multi-slot nodes don't
+    /// oversubscribe. The resolved width is a cluster-wide static — a
+    /// retried task on another node gets the identical kernel split,
+    /// preserving lineage determinism.
+    pub cores_per_slot: usize,
 }
 
 impl Default for ClusterSpec {
     fn default() -> Self {
-        ClusterSpec { nodes: 4, slots_per_node: 1 }
+        ClusterSpec { nodes: 4, slots_per_node: 1, cores_per_slot: 0 }
+    }
+}
+
+impl ClusterSpec {
+    /// Resolved kernel width for one task slot (always ≥ 1): the
+    /// `cores_per_slot` override, or cores / total slots.
+    pub fn task_cores(&self) -> usize {
+        if self.cores_per_slot > 0 {
+            return self.cores_per_slot;
+        }
+        let avail = std::thread::available_parallelism().map_or(1, |n| n.get());
+        (avail / (self.nodes * self.slots_per_node).max(1)).max(1)
     }
 }
 
@@ -395,7 +415,7 @@ mod tests {
 
     #[test]
     fn runs_tasks_on_correct_nodes() {
-        let c = Cluster::start(ClusterSpec { nodes: 3, slots_per_node: 1 });
+        let c = Cluster::start(ClusterSpec { nodes: 3, slots_per_node: 1, ..Default::default() });
         let (tx, rx) = mpsc::channel();
         for n in 0..3 {
             let tx = tx.clone();
@@ -409,7 +429,7 @@ mod tests {
 
     #[test]
     fn dead_node_rejects_submissions() {
-        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1 });
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1, ..Default::default() });
         c.kill_node(1);
         assert!(c.submit(1, Box::new(|_| {})).is_err());
         assert!(c.node_alive(0));
@@ -420,7 +440,7 @@ mod tests {
 
     #[test]
     fn least_loaded_prefers_idle() {
-        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1 });
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1, ..Default::default() });
         let gate = Arc::new(AtomicU32::new(0));
         let _guard = GateGuard(Arc::clone(&gate));
         // Occupy node 0 with a spinning task.
@@ -441,7 +461,7 @@ mod tests {
 
     #[test]
     fn batch_submit_runs_all_tasks_in_order() {
-        let c = Cluster::start(ClusterSpec { nodes: 1, slots_per_node: 1 });
+        let c = Cluster::start(ClusterSpec { nodes: 1, slots_per_node: 1, ..Default::default() });
         let (tx, rx) = mpsc::channel();
         let batch: Vec<TaskFn> = (0..5)
             .map(|i| {
@@ -469,7 +489,7 @@ mod tests {
     /// thread before returning.
     #[test]
     fn shutdown_quiesces_executor_threads() {
-        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 2 });
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 2, ..Default::default() });
         let done = Arc::new(AtomicU32::new(0));
         for n in 0..2 {
             for _ in 0..3 {
@@ -513,7 +533,7 @@ mod tests {
 
     #[test]
     fn slot_accounting_and_imbalance() {
-        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 2 });
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 2, ..Default::default() });
         assert_eq!(c.free_slots(0), 2);
         assert!(c.has_capacity(0));
         assert_eq!(c.load_imbalance(), 0);

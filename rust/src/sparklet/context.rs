@@ -55,7 +55,7 @@ impl SparkletContext {
 
     /// Convenience: local cluster with `nodes` single-slot nodes.
     pub fn local(nodes: usize) -> SparkletContext {
-        SparkletContext::new(ClusterSpec { nodes, slots_per_node: 1 })
+        SparkletContext::new(ClusterSpec { nodes, slots_per_node: 1, ..Default::default() })
     }
 
     pub fn cluster(&self) -> Arc<Cluster> {
@@ -210,5 +210,12 @@ impl TaskContext {
     /// invariant that makes fine-grained recovery exact.
     pub fn rng(&self) -> Rng {
         Rng::new(0xB16D1 ^ self.job.wrapping_mul(0x9E3779B97F4A7C15)).fork(self.partition as u64)
+    }
+
+    /// This slot's core budget for intra-task kernels
+    /// ([`ClusterSpec::task_cores`]). Cluster-wide static: the same on
+    /// every node, so a retried task's kernel work split is identical.
+    pub fn core_budget(&self) -> usize {
+        self.ctx.cluster().spec().task_cores()
     }
 }

@@ -1,0 +1,745 @@
+//! Intra-task parallel CPU kernels for the builtin backend — the
+//! reproduction's stand-in for the paper's "one multi-threaded compute
+//! task per node" (§4.4: BigDL gets CPU throughput from Intel MKL inside
+//! each task, not from more tasks).
+//!
+//! Three pieces:
+//!
+//! * [`KernelPool`] — a persistent per-executor-thread worker pool. The
+//!   pool's width is the slot's *core budget* (see
+//!   `ClusterSpec::task_cores`), so a node running S slots on a C-core
+//!   machine gives each task C/S threads instead of oversubscribing.
+//!   Workers claim fixed-size chunks from an atomic counter and the
+//!   caller participates, so a `parallel_for` costs one channel send per
+//!   helper and no allocation beyond a small `Arc`.
+//! * the kernels — blocked GEMM/GEMV variants, fused bias+activation,
+//!   and tree-parallel reductions. Inner loops are plain chunked `f32`
+//!   iterator code the compiler autovectorizes; no intrinsics, so the
+//!   same source runs on any target.
+//! * [`Scratch`] — a thread-local recycled-buffer arena that removes the
+//!   per-step allocation churn of the builtin hot path (gradient and
+//!   batch-assembly temporaries live for one `fwd_bwd` call but are
+//!   requested every iteration).
+//!
+//! Determinism: a kernel's work split depends only on `(len, width)`, and
+//! the width is a cluster-wide static — so a retried task re-running on
+//! another node produces byte-identical results, preserving the
+//! lineage-determinism invariant the recovery machinery relies on.
+
+use std::cell::RefCell;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+use super::partition_ranges;
+
+// ---------------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------------
+
+/// One dispatched parallel region. Workers and the caller claim chunk
+/// indices from `next` until exhausted; `pending` counts helpers that have
+/// not yet finished draining.
+struct Job {
+    /// The region body. The `'static` is a lie told to the channel: see
+    /// the safety argument in [`KernelPool::parallel_for`].
+    task: &'static (dyn Fn(usize) + Sync),
+    chunks: usize,
+    next: AtomicUsize,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+fn drain(job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.chunks {
+            return;
+        }
+        (job.task)(c);
+    }
+}
+
+fn worker_loop(rx: mpsc::Receiver<Arc<Job>>) {
+    while let Ok(job) = rx.recv() {
+        if catch_unwind(AssertUnwindSafe(|| drain(&job))).is_err() {
+            job.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut pending = job.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            job.done.notify_all();
+        }
+    }
+}
+
+/// A persistent intra-task worker pool of `width - 1` helper threads; the
+/// dispatching thread is the `width`-th worker. `width = 1` runs
+/// everything inline with zero threads.
+pub struct KernelPool {
+    width: usize,
+    txs: Vec<mpsc::Sender<Arc<Job>>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl KernelPool {
+    pub fn new(width: usize) -> KernelPool {
+        let width = width.max(1);
+        let mut txs = Vec::with_capacity(width - 1);
+        let mut handles = Vec::with_capacity(width - 1);
+        for w in 0..width - 1 {
+            let (tx, rx) = mpsc::channel::<Arc<Job>>();
+            txs.push(tx);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("kernel-{w}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn kernel worker"),
+            );
+        }
+        KernelPool { width, txs, handles }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Run `f(0), …, f(chunk_count - 1)` across the pool (caller included).
+    /// Blocks until every chunk has run; a panic in any chunk propagates
+    /// to the caller after all helpers have stopped touching `f`.
+    pub fn parallel_for(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if self.txs.is_empty() || chunks == 1 {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+        let helpers = self.txs.len().min(chunks - 1);
+        // SAFETY: the `'static` transmute erases `f`'s borrow so the job
+        // can cross the worker channel. It is sound because this function
+        // does not return — normally or by unwind — until `pending`
+        // reaches 0, i.e. until every helper has finished its last call
+        // into `f`; the borrow therefore strictly outlives all uses.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            task,
+            chunks,
+            next: AtomicUsize::new(0),
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for tx in &self.txs[..helpers] {
+            tx.send(Arc::clone(&job)).expect("kernel worker exited");
+        }
+        // The caller drains too; if its chunk panics it must still wait
+        // for the helpers (they borrow `f`'s captures) before unwinding.
+        let mine = catch_unwind(AssertUnwindSafe(|| drain(&job)));
+        let mut pending = job.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = job.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        if let Err(p) = mine {
+            resume_unwind(p);
+        }
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("kernel worker panicked");
+        }
+    }
+
+    /// Split `rows` rows of the row-major `out` (`rows * row_len` long)
+    /// into at most `width` contiguous blocks and run `f(row_range,
+    /// block)` on each in parallel. The split depends only on
+    /// `(rows, width)` — deterministic across retries.
+    pub fn par_row_chunks<F>(&self, out: &mut [f32], rows: usize, row_len: usize, f: F)
+    where
+        F: Fn(Range<usize>, &mut [f32]) + Sync,
+    {
+        assert_eq!(out.len(), rows * row_len, "par_row_chunks shape mismatch");
+        if rows == 0 {
+            return;
+        }
+        let ranges = partition_ranges(rows, self.width.min(rows));
+        let base = SendPtr(out.as_mut_ptr());
+        self.parallel_for(ranges.len(), &|c| {
+            let r = ranges[c].clone();
+            // SAFETY: the ranges are disjoint, so each chunk gets an
+            // exclusive sub-slice of `out`; `parallel_for` does not return
+            // while any chunk body runs.
+            let block = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r.start * row_len), r.len() * row_len)
+            };
+            f(r, block);
+        });
+    }
+
+    /// Tree-parallel reduction: `chunk_fn` reduces each range to a partial
+    /// and the partials are combined in chunk order on the caller (a fixed
+    /// association for a fixed width — deterministic across retries).
+    pub fn reduce<F>(&self, len: usize, chunk_fn: F) -> f32
+    where
+        F: Fn(Range<usize>) -> f32 + Sync,
+    {
+        if len == 0 {
+            return 0.0;
+        }
+        let ranges = partition_ranges(len, self.width.min(len));
+        let mut partials = vec![0.0f32; ranges.len()];
+        let base = SendPtr(partials.as_mut_ptr());
+        self.parallel_for(ranges.len(), &|c| {
+            let v = chunk_fn(ranges[c].clone());
+            // SAFETY: each chunk writes only its own partial slot.
+            unsafe { *base.0.add(c) = v };
+        });
+        partials.iter().sum()
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        self.txs.clear(); // closes the channels; workers observe Err and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A raw pointer blessed for cross-thread use; every use site carries its
+/// own disjointness argument.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+thread_local! {
+    static TL_POOL: RefCell<Option<Arc<KernelPool>>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with the calling thread's cached kernel pool, (re)building it
+/// if the requested width changed. Executor threads are long-lived, so
+/// the helper threads amortize across every task the slot ever runs; the
+/// pool dies with the executor thread (TLS destructor).
+pub fn with_pool<R>(width: usize, f: impl FnOnce(&KernelPool) -> R) -> R {
+    let width = width.max(1);
+    let pool = TL_POOL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        match slot.as_ref() {
+            Some(p) if p.width() == width => Arc::clone(p),
+            _ => {
+                let p = Arc::new(KernelPool::new(width));
+                *slot = Some(Arc::clone(&p));
+                p
+            }
+        }
+    });
+    f(&pool)
+}
+
+// ---------------------------------------------------------------------------
+// Serial building blocks (autovectorizable)
+// ---------------------------------------------------------------------------
+
+/// Dot product with 8 independent accumulator lanes (breaks the serial
+/// FP-add dependency chain so the compiler can vectorize + unroll).
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % 8;
+    let mut acc = [0.0f32; 8];
+    for (ca, cb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for ((s, x), y) in acc.iter_mut().zip(ca).zip(cb) {
+            *s += x * y;
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        s += x * y;
+    }
+    s
+}
+
+/// Sum with 8 accumulator lanes.
+#[inline]
+pub fn sum8(a: &[f32]) -> f32 {
+    let split = a.len() - a.len() % 8;
+    let mut acc = [0.0f32; 8];
+    for ca in a[..split].chunks_exact(8) {
+        for (s, x) in acc.iter_mut().zip(ca) {
+            *s += x;
+        }
+    }
+    acc.iter().sum::<f32>() + a[split..].iter().sum::<f32>()
+}
+
+/// `y += a * x`, elementwise (contiguous — vectorizes).
+#[inline]
+fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel kernels
+// ---------------------------------------------------------------------------
+
+/// `C[m,n] = A[m,k] · B[k,n]` (all row-major). Rows of `C` are split
+/// across the pool; each block runs an ikj loop with 4-row register
+/// blocking (each streamed row of `B` feeds 4 output rows).
+pub fn gemm_nn(pool: &KernelPool, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm_nn: A shape");
+    assert_eq!(b.len(), k * n, "gemm_nn: B shape");
+    assert_eq!(c.len(), m * n, "gemm_nn: C shape");
+    pool.par_row_chunks(c, m, n, |rows, cblk| gemm_nn_block(a, b, cblk, rows, k, n));
+}
+
+fn gemm_nn_block(a: &[f32], b: &[f32], cblk: &mut [f32], rows: Range<usize>, k: usize, n: usize) {
+    cblk.fill(0.0);
+    let mut i = rows.start;
+    while i + 4 <= rows.end {
+        let off = (i - rows.start) * n;
+        let (r0, rest) = cblk[off..off + 4 * n].split_at_mut(n);
+        let (r1, rest) = rest.split_at_mut(n);
+        let (r2, r3) = rest.split_at_mut(n);
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for ((((c0, c1), c2), c3), bv) in r0
+                .iter_mut()
+                .zip(r1.iter_mut())
+                .zip(r2.iter_mut())
+                .zip(r3.iter_mut())
+                .zip(brow)
+            {
+                *c0 += x0 * bv;
+                *c1 += x1 * bv;
+                *c2 += x2 * bv;
+                *c3 += x3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while i < rows.end {
+        let off = (i - rows.start) * n;
+        let crow = &mut cblk[off..off + n];
+        for (kk, &x) in a[i * k..(i + 1) * k].iter().enumerate() {
+            axpy(crow, x, &b[kk * n..(kk + 1) * n]);
+        }
+        i += 1;
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` — B stores one k-vector per *row*, so each
+/// output element is a contiguous dot product (the MLP forward layout:
+/// `Z = X · Wᵀ` with `W[out,in]`).
+pub fn gemm_nt(pool: &KernelPool, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm_nt: A shape");
+    assert_eq!(b.len(), n * k, "gemm_nt: B shape");
+    assert_eq!(c.len(), m * n, "gemm_nt: C shape");
+    pool.par_row_chunks(c, m, n, |rows, cblk| {
+        for (i, crow) in rows.clone().zip(cblk.chunks_exact_mut(n)) {
+            let arow = &a[i * k..(i + 1) * k];
+            for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
+                *cv = dot8(arow, brow);
+            }
+        }
+    });
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]` — the gradient GEMM (`dW = δᵀ · X` with the
+/// batch as the reduction dim). r-outer axpy order: each streamed row of
+/// `B` is reused across the block's output rows.
+pub fn gemm_tn(pool: &KernelPool, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), k * m, "gemm_tn: A shape");
+    assert_eq!(b.len(), k * n, "gemm_tn: B shape");
+    assert_eq!(c.len(), m * n, "gemm_tn: C shape");
+    pool.par_row_chunks(c, m, n, |rows, cblk| {
+        cblk.fill(0.0);
+        for r in 0..k {
+            let brow = &b[r * n..(r + 1) * n];
+            let acol = &a[r * m..(r + 1) * m];
+            for (i, crow) in rows.clone().zip(cblk.chunks_exact_mut(n)) {
+                axpy(crow, acol[i], brow);
+            }
+        }
+    });
+}
+
+/// `y[m] = A[m,k] · x[k]`.
+pub fn gemv(pool: &KernelPool, a: &[f32], x: &[f32], y: &mut [f32], m: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "gemv: A shape");
+    assert_eq!(x.len(), k, "gemv: x len");
+    assert_eq!(y.len(), m, "gemv: y len");
+    pool.par_row_chunks(y, m, 1, |rows, yblk| {
+        for (i, yv) in rows.clone().zip(yblk.iter_mut()) {
+            *yv = dot8(&a[i * k..(i + 1) * k], x);
+        }
+    });
+}
+
+/// `y[n] = A[m,n]ᵀ · x[m]` — columns of `y` split across the pool, rows of
+/// `A` accumulated in order (so per-column accumulation order is the
+/// sample order, matching the scalar path bit-for-bit).
+pub fn gemv_t(pool: &KernelPool, a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
+    assert_eq!(a.len(), m * n, "gemv_t: A shape");
+    assert_eq!(x.len(), m, "gemv_t: x len");
+    assert_eq!(y.len(), n, "gemv_t: y len");
+    pool.par_row_chunks(y, n, 1, |cols, yblk| {
+        yblk.fill(0.0);
+        for (row, &xv) in a.chunks_exact(n).zip(x) {
+            axpy(yblk, xv, &row[cols.start..cols.end]);
+        }
+    });
+}
+
+/// Fused `z[r, :] = relu(z[r, :] + bias)` over a `[rows, cols]` matrix.
+pub fn bias_relu_rows(pool: &KernelPool, z: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(bias.len(), cols, "bias_relu_rows: bias len");
+    pool.par_row_chunks(z, rows, cols, |_r, blk| {
+        for row in blk.chunks_exact_mut(cols) {
+            for (v, b) in row.iter_mut().zip(bias) {
+                *v = (*v + b).max(0.0);
+            }
+        }
+    });
+}
+
+/// `z[r, :] += bias` over a `[rows, cols]` matrix.
+pub fn bias_rows(pool: &KernelPool, z: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(bias.len(), cols, "bias_rows: bias len");
+    pool.par_row_chunks(z, rows, cols, |_r, blk| {
+        for row in blk.chunks_exact_mut(cols) {
+            for (v, b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    });
+}
+
+/// Row-wise max-shifted softmax in place over a `[rows, cols]` matrix.
+pub fn softmax_rows(pool: &KernelPool, z: &mut [f32], rows: usize, cols: usize) {
+    pool.par_row_chunks(z, rows, cols, |_r, blk| {
+        for row in blk.chunks_exact_mut(cols) {
+            let mut mx = f32::NEG_INFINITY;
+            for v in row.iter() {
+                mx = mx.max(*v);
+            }
+            let mut s = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                s += *v;
+            }
+            let inv = 1.0 / s;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    });
+}
+
+/// ReLU backward: `dx[i] = 0` wherever the post-activation `act[i] <= 0`.
+pub fn relu_mask(pool: &KernelPool, dx: &mut [f32], act: &[f32]) {
+    assert_eq!(dx.len(), act.len(), "relu_mask: shape");
+    let len = dx.len();
+    pool.par_row_chunks(dx, len, 1, |r, blk| {
+        for (v, a) in blk.iter_mut().zip(&act[r.start..r.end]) {
+            if *a <= 0.0 {
+                *v = 0.0;
+            }
+        }
+    });
+}
+
+/// `out[j] = Σ_r a[r, j]` over a `[rows, cols]` matrix (bias gradients).
+pub fn col_sums(pool: &KernelPool, a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), rows * cols, "col_sums: A shape");
+    assert_eq!(out.len(), cols, "col_sums: out len");
+    pool.par_row_chunks(out, cols, 1, |cr, blk| {
+        blk.fill(0.0);
+        for row in a.chunks_exact(cols) {
+            for (o, v) in blk.iter_mut().zip(&row[cr.start..cr.end]) {
+                *o += v;
+            }
+        }
+    });
+}
+
+/// Tree-parallel `Σ x`.
+pub fn sum(pool: &KernelPool, x: &[f32]) -> f32 {
+    pool.reduce(x.len(), |r| sum8(&x[r]))
+}
+
+/// Tree-parallel `a · b`.
+pub fn dot(pool: &KernelPool, a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: len");
+    pool.reduce(a.len(), |r| dot8(&a[r.clone()], &b[r]))
+}
+
+/// `x *= s`, split across the pool.
+pub fn scale(pool: &KernelPool, x: &mut [f32], s: f32) {
+    let len = x.len();
+    pool.par_row_chunks(x, len, 1, |_r, blk| {
+        for v in blk {
+            *v *= s;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scalar references
+// ---------------------------------------------------------------------------
+
+/// Naive single-thread scalar kernels: the parity oracle for the tests and
+/// the bench baseline (this is exactly what the builtin path computed
+/// before the kernel layer existed).
+pub mod reference {
+    #![allow(clippy::needless_range_loop)] // the naive indexed form IS the point
+
+    pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+    }
+
+    pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[j * k + kk];
+                }
+                c[i * n + j] = s;
+            }
+        }
+    }
+
+    pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += a[kk * m + i] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+    }
+
+    pub fn gemv(a: &[f32], x: &[f32], y: &mut [f32], m: usize, k: usize) {
+        for i in 0..m {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a[i * k + kk] * x[kk];
+            }
+            y[i] = s;
+        }
+    }
+
+    pub fn sum(x: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for v in x {
+            s += v;
+        }
+        s
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            s += x * y;
+        }
+        s
+    }
+
+    pub fn col_sums(a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        for r in 0..rows {
+            for j in 0..cols {
+                out[j] += a[r * cols + j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct ArenaInner {
+    free: Vec<Vec<f32>>,
+    allocs: usize,
+    reuses: usize,
+}
+
+/// A recycled-buffer arena for the builtin hot path: `take` hands out a
+/// zeroed `Vec<f32>`, `put` returns it for the next step. One arena lives
+/// per executor thread ([`Scratch::thread_local`]), so after the first
+/// iteration a steady-state `fwd_bwd` allocates only the gradient buffer
+/// it must hand to the shuffle (everything else is recycled).
+#[derive(Clone, Debug)]
+pub struct Scratch(Rc<RefCell<ArenaInner>>);
+
+thread_local! {
+    static TL_SCRATCH: Rc<RefCell<ArenaInner>> = Rc::new(RefCell::new(ArenaInner::default()));
+}
+
+impl Scratch {
+    /// The calling thread's arena (executor threads keep one for life).
+    pub fn thread_local() -> Scratch {
+        Scratch(TL_SCRATCH.with(Rc::clone))
+    }
+
+    /// A fresh private arena (tests measure churn against one of these).
+    pub fn fresh() -> Scratch {
+        Scratch(Rc::new(RefCell::new(ArenaInner::default())))
+    }
+
+    /// A zeroed buffer of `len` f32s, recycled from the free list when a
+    /// returned buffer has enough capacity.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let mut inner = self.0.borrow_mut();
+        match inner.free.iter().position(|b| b.capacity() >= len) {
+            Some(p) => {
+                inner.reuses += 1;
+                let mut b = inner.free.swap_remove(p);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                inner.allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the arena for reuse.
+    pub fn put(&self, buf: Vec<f32>) {
+        let mut inner = self.0.borrow_mut();
+        if inner.free.len() < 64 && buf.capacity() > 0 {
+            inner.free.push(buf);
+        }
+    }
+
+    /// `(fresh allocations, recycled takes)` — the churn probe the
+    /// alloc-reuse tests assert on.
+    pub fn stats(&self) -> (usize, usize) {
+        let inner = self.0.borrow();
+        (inner.allocs, inner.reuses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_for_covers_every_chunk_once() {
+        let pool = KernelPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(hits.len(), &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_row_chunks_partitions_exactly() {
+        for width in [1, 2, 3, 7] {
+            let pool = KernelPool::new(width);
+            let rows = 11;
+            let row_len = 5;
+            let mut out = vec![0.0f32; rows * row_len];
+            pool.par_row_chunks(&mut out, rows, row_len, |rows_r, blk| {
+                assert_eq!(blk.len(), rows_r.len() * row_len);
+                for (i, row) in rows_r.clone().zip(blk.chunks_exact_mut(row_len)) {
+                    row.fill(i as f32);
+                }
+            });
+            for (i, row) in out.chunks_exact(row_len).enumerate() {
+                assert!(row.iter().all(|&v| v == i as f32), "row {i}: {row:?}");
+            }
+        }
+    }
+
+    // No expected-message: depending on who claims chunk 3 the payload is
+    // either the chunk's own panic (caller) or "kernel worker panicked".
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates_to_caller() {
+        let pool = KernelPool::new(3);
+        pool.parallel_for(8, &|c| {
+            if c == 3 {
+                panic!("kernel chunk {c}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = KernelPool::new(2);
+        let poisoned = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(4, &|_c| panic!("boom"));
+        }));
+        assert!(poisoned.is_err());
+        // The pool still works after a panicked region.
+        let count = AtomicUsize::new(0);
+        pool.parallel_for(6, &|_c| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn with_pool_caches_per_width() {
+        with_pool(3, |p| assert_eq!(p.width(), 3));
+        with_pool(3, |p| assert_eq!(p.width(), 3));
+        with_pool(2, |p| assert_eq!(p.width(), 2));
+        with_pool(0, |p| assert_eq!(p.width(), 1, "width clamps to >= 1"));
+    }
+
+    #[test]
+    fn reduce_matches_serial_sum() {
+        let xs: Vec<f32> = (0..1037).map(|i| (i as f32 * 0.37).sin()).collect();
+        for width in [1, 2, 5] {
+            let pool = KernelPool::new(width);
+            let got = sum(&pool, &xs);
+            assert!((got - reference::sum(&xs)).abs() < 1e-3, "width {width}");
+        }
+    }
+
+    #[test]
+    fn scratch_recycles_buffers() {
+        let s = Scratch::fresh();
+        let a = s.take(100);
+        s.put(a);
+        let b = s.take(80); // fits in the recycled 100-cap buffer
+        assert_eq!(b.len(), 80);
+        assert!(b.iter().all(|&v| v == 0.0), "recycled buffers are zeroed");
+        assert_eq!(s.stats(), (1, 1));
+        let c = s.take(200); // too big for anything on the free list
+        assert_eq!(s.stats(), (2, 1));
+        s.put(b);
+        s.put(c);
+    }
+}

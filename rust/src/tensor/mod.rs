@@ -7,6 +7,8 @@
 
 use anyhow::{bail, ensure, Result};
 
+pub mod kernels;
+
 /// Element type of a [`Tensor`]. Matches the dtypes the AOT exporter emits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
@@ -192,9 +194,15 @@ pub fn scale(acc: &mut [f32], s: f32) {
 }
 
 /// Evenly split `len` into `n` contiguous ranges (first `len % n` ranges get
-/// one extra element) — the gradient/weight partitioning of Algorithm 2.
+/// one extra element) — the gradient/weight partitioning of Algorithm 2 and
+/// the kernel layer's work splitting. Edge cases are total, not panics:
+/// `n > len` yields empty trailing ranges, `len == 0` yields `n` empty
+/// ranges, and `n == 0` yields no ranges at all.
 pub fn partition_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
-    assert!(n > 0);
+    if n == 0 {
+        debug_assert_eq!(len, 0, "partition_ranges: cannot split {len} items 0 ways");
+        return Vec::new();
+    }
     let base = len / n;
     let extra = len % n;
     let mut out = Vec::with_capacity(n);
@@ -246,6 +254,25 @@ mod tests {
             let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
             assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
         }
+    }
+
+    #[test]
+    fn partition_ranges_edge_cases() {
+        // n > len: the first `len` ranges hold one element, the rest are empty.
+        let rs = partition_ranges(3, 7);
+        assert_eq!(rs.len(), 7);
+        assert!(rs[..3].iter().all(|r| r.len() == 1));
+        assert!(rs[3..].iter().all(|r| r.is_empty()));
+        // len == 0: n empty ranges anchored at 0.
+        let rs = partition_ranges(0, 4);
+        assert_eq!(rs.len(), 4);
+        assert!(rs.iter().all(|r| r.is_empty() && r.start == 0));
+        // n == 0 with nothing to split: no ranges.
+        assert!(partition_ranges(0, 0).is_empty());
+        // Single element, many ways.
+        let rs = partition_ranges(1, 5);
+        assert_eq!(rs[0], 0..1);
+        assert!(rs[1..].iter().all(|r| r.is_empty()));
     }
 
     #[test]

@@ -68,7 +68,7 @@ fn sim_optimizer(
 /// never see more than one round at a time.
 #[test]
 fn two_gradient_rounds_genuinely_in_flight_at_staleness_2() {
-    let spec = ClusterSpec { nodes: 4, slots_per_node: 1 };
+    let spec = ClusterSpec { nodes: 4, slots_per_node: 1, ..Default::default() };
     let base = Duration::from_millis(8);
     let straggle = Duration::from_millis(20);
 
@@ -111,7 +111,7 @@ fn two_gradient_rounds_genuinely_in_flight_at_staleness_2() {
 /// staleness bound holds, and training converges.
 #[test]
 fn deep_pipeline_runs_on_multislot_nodes() {
-    let spec = ClusterSpec { nodes: 2, slots_per_node: 2 };
+    let spec = ClusterSpec { nodes: 2, slots_per_node: 2, ..Default::default() };
     let (_ctx, model, mut opt) = sim_optimizer(
         spec,
         25,
@@ -142,7 +142,7 @@ fn deep_pipeline_runs_on_multislot_nodes() {
 /// the plan across slots without abandoning locality on an idle cluster.
 #[test]
 fn planned_dispatch_works_on_multislot_nodes() {
-    let ctx = SparkletContext::new(ClusterSpec { nodes: 2, slots_per_node: 2 });
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 2, slots_per_node: 2, ..Default::default() });
     let runner = ctx.runner();
     let preferred = ctx.default_preferred(8);
     let plan = runner.plan_group(&preferred).unwrap();
@@ -164,7 +164,7 @@ fn planned_dispatch_works_on_multislot_nodes() {
 /// node), planned dispatch included.
 #[test]
 fn retries_resolve_on_multislot_nodes() {
-    let ctx = SparkletContext::new(ClusterSpec { nodes: 3, slots_per_node: 2 });
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 3, slots_per_node: 2, ..Default::default() });
     ctx.set_failure_policy(FailurePolicy {
         task_fail_prob: 0.3,
         max_attempts: 30,
@@ -209,7 +209,7 @@ fn retries_resolve_on_multislot_nodes() {
 /// the external backlog persists (plan-aware skew, no churn).
 #[test]
 fn round_loop_replans_on_load_skew() {
-    let ctx = SparkletContext::new(ClusterSpec { nodes: 3, slots_per_node: 1 });
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 3, slots_per_node: 1, ..Default::default() });
     ctx.set_schedule_policy(SchedulePolicy {
         skew_replan_threshold: Some(0),
         ..Default::default()
@@ -289,7 +289,7 @@ fn round_loop_replans_on_load_skew() {
 /// capacity, and counts no delay-scheduling misses.
 #[test]
 fn planning_on_a_busy_cluster_does_not_block() {
-    let ctx = SparkletContext::new(ClusterSpec { nodes: 2, slots_per_node: 1 });
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 2, slots_per_node: 1, ..Default::default() });
     ctx.set_schedule_policy(SchedulePolicy {
         locality_wait: Duration::from_millis(250),
         ..Default::default()

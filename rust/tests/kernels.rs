@@ -1,0 +1,330 @@
+//! Intra-task kernel suite: parity of the parallel kernels against the
+//! naive scalar references across odd shapes and pool widths, exact-
+//! gradient checks for the [`Mlp`] builtin model (finite differences +
+//! bitwise determinism), scratch-arena churn accounting, and the Mlp
+//! end-to-end through the full distributed stack (Sync AND Pipelined)
+//! including kernel-backed serving.
+
+use std::sync::Arc;
+
+use bigdl::bigdl::{
+    inference, mlp_rdd, BuiltinModel, DistributedOptimizer, LinReg, Mlp, Module, Sample, Sgd,
+    StepCtx, SyncMode, TrainConfig,
+};
+use bigdl::sparklet::SparkletContext;
+use bigdl::tensor::kernels::{self, reference, KernelPool, Scratch};
+use bigdl::tensor::Tensor;
+use bigdl::util::prng::Rng;
+
+const WIDTHS: [usize; 4] = [1, 2, 3, 8];
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gen_f32() * 2.0 - 1.0).collect()
+}
+
+/// Parallel and scalar paths reassociate f32 sums differently; the bound
+/// scales with magnitude but a genuine indexing bug produces O(1) errors.
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+            "{what}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+/// Scalar oracle for `gemv_t` (the only kernel without a module-level
+/// reference: `y[n] = A[m,n]ᵀ · x[m]`).
+fn ref_gemv_t(a: &[f32], x: &[f32], y: &mut [f32], n: usize) {
+    y.fill(0.0);
+    for (row, xv) in a.chunks_exact(n).zip(x) {
+        for (yv, av) in y.iter_mut().zip(row) {
+            *yv += av * xv;
+        }
+    }
+}
+
+#[test]
+fn gemm_variants_match_reference_across_widths_and_odd_shapes() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (17, 23, 9), (32, 40, 33), (5, 1, 4)] {
+        let a_nn = rand_vec(&mut rng, m * k);
+        let b_nn = rand_vec(&mut rng, k * n);
+        let b_nt = rand_vec(&mut rng, n * k);
+        let a_tn = rand_vec(&mut rng, k * m);
+        let mut want_nn = vec![0.0f32; m * n];
+        reference::gemm_nn(&a_nn, &b_nn, &mut want_nn, m, k, n);
+        let mut want_nt = vec![0.0f32; m * n];
+        reference::gemm_nt(&a_nn, &b_nt, &mut want_nt, m, k, n);
+        let mut want_tn = vec![0.0f32; m * n];
+        reference::gemm_tn(&a_tn, &b_nn, &mut want_tn, m, k, n);
+        for &w in &WIDTHS {
+            let pool = KernelPool::new(w);
+            let mut c = vec![0.0f32; m * n];
+            kernels::gemm_nn(&pool, &a_nn, &b_nn, &mut c, m, k, n);
+            assert_close(&c, &want_nn, &format!("gemm_nn {m}x{k}x{n} w{w}"));
+            kernels::gemm_nt(&pool, &a_nn, &b_nt, &mut c, m, k, n);
+            assert_close(&c, &want_nt, &format!("gemm_nt {m}x{k}x{n} w{w}"));
+            kernels::gemm_tn(&pool, &a_tn, &b_nn, &mut c, m, k, n);
+            assert_close(&c, &want_tn, &format!("gemm_tn {m}x{k}x{n} w{w}"));
+        }
+    }
+}
+
+#[test]
+fn gemv_reductions_and_col_sums_match_reference() {
+    let mut rng = Rng::new(0xBEEF);
+    for &(m, n) in &[(1usize, 1usize), (7, 5), (33, 17), (64, 3)] {
+        let a = rand_vec(&mut rng, m * n);
+        let x_n = rand_vec(&mut rng, n);
+        let x_m = rand_vec(&mut rng, m);
+        let mut want_gemv = vec![0.0f32; m];
+        reference::gemv(&a, &x_n, &mut want_gemv, m, n);
+        let mut want_gemv_t = vec![0.0f32; n];
+        ref_gemv_t(&a, &x_m, &mut want_gemv_t, n);
+        let mut want_cols = vec![0.0f32; n];
+        reference::col_sums(&a, m, n, &mut want_cols);
+        for &w in &WIDTHS {
+            let pool = KernelPool::new(w);
+            let mut y = vec![0.0f32; m];
+            kernels::gemv(&pool, &a, &x_n, &mut y, m, n);
+            assert_close(&y, &want_gemv, &format!("gemv {m}x{n} w{w}"));
+            let mut yt = vec![0.0f32; n];
+            kernels::gemv_t(&pool, &a, &x_m, &mut yt, m, n);
+            assert_close(&yt, &want_gemv_t, &format!("gemv_t {m}x{n} w{w}"));
+            let mut cols = vec![0.0f32; n];
+            kernels::col_sums(&pool, &a, m, n, &mut cols);
+            assert_close(&cols, &want_cols, &format!("col_sums {m}x{n} w{w}"));
+            let s = kernels::sum(&pool, &a);
+            assert_close(&[s], &[reference::sum(&a)], &format!("sum w{w}"));
+            let d = kernels::dot(&pool, &a, &a);
+            assert_close(&[d], &[reference::dot(&a, &a)], &format!("dot w{w}"));
+        }
+    }
+}
+
+#[test]
+fn fused_bias_activation_kernels_match_serial() {
+    let mut rng = Rng::new(0xFACE);
+    let (rows, cols) = (13, 7);
+    let z0 = rand_vec(&mut rng, rows * cols);
+    let bias = rand_vec(&mut rng, cols);
+    // Serial oracles.
+    let mut want_relu = z0.clone();
+    for row in want_relu.chunks_exact_mut(cols) {
+        for (v, b) in row.iter_mut().zip(&bias) {
+            *v = (*v + b).max(0.0);
+        }
+    }
+    let mut want_soft = z0.clone();
+    for row in want_soft.chunks_exact_mut(cols) {
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    for &w in &WIDTHS {
+        let pool = KernelPool::new(w);
+        let mut z = z0.clone();
+        kernels::bias_relu_rows(&pool, &mut z, &bias, rows, cols);
+        assert_close(&z, &want_relu, &format!("bias_relu_rows w{w}"));
+        assert!(z.iter().all(|&v| v >= 0.0));
+
+        let mut zs = z0.clone();
+        kernels::softmax_rows(&pool, &mut zs, rows, cols);
+        assert_close(&zs, &want_soft, &format!("softmax_rows w{w}"));
+        for row in zs.chunks_exact(cols) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "softmax row sums to {s}");
+        }
+
+        // relu_mask zeroes dx exactly where the activation was clamped.
+        let mut dx = vec![1.0f32; rows * cols];
+        kernels::relu_mask(&pool, &mut dx, &z);
+        for (d, a) in dx.iter().zip(&z) {
+            assert_eq!(*d, if *a > 0.0 { 1.0 } else { 0.0 });
+        }
+    }
+}
+
+fn mlp_samples(dim: usize, classes: usize, n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            Sample::new(
+                vec![Tensor::from_f32(vec![dim], rand_vec(&mut rng, dim))],
+                Tensor::from_i32(vec![], vec![(i % classes) as i32]),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn mlp_gradient_matches_finite_difference() {
+    let m = Mlp::new(vec![4, 6, 3], 5);
+    let samples = mlp_samples(4, 3, 5, 0xD1FF);
+    let idx: Vec<usize> = (0..5).collect();
+    let w = m.initial_params();
+    let sc = StepCtx::new(0, 0, 2);
+    let (_, grad) = m.fwd_bwd(&sc, &w, &samples, &idx).unwrap();
+    assert_eq!(grad.len(), m.param_count());
+    let eps = 1e-2f32;
+    for p in 0..w.len() {
+        let mut wp = w.clone();
+        wp[p] += eps;
+        let (lp, _) = m.fwd_bwd(&sc, &wp, &samples, &idx).unwrap();
+        let mut wm = w.clone();
+        wm[p] -= eps;
+        let (lm, _) = m.fwd_bwd(&sc, &wm, &samples, &idx).unwrap();
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (grad[p] - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+            "param {p}: analytic {} vs finite-difference {fd}",
+            grad[p]
+        );
+    }
+}
+
+#[test]
+fn mlp_fwd_bwd_is_deterministic_and_width_stable() {
+    let m = Mlp::new(vec![6, 9, 4], 7);
+    let samples = mlp_samples(6, 4, 9, 0xABCD);
+    let idx = [0usize, 3, 1, 8, 2, 5, 7];
+    let w = m.initial_params();
+    // Same width → bitwise identical (the retry-determinism invariant).
+    let sc = StepCtx::new(0, 0, 3);
+    let (l1, g1) = m.fwd_bwd(&sc, &w, &samples, &idx).unwrap();
+    let (l2, g2) = m.fwd_bwd(&sc, &w, &samples, &idx).unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits());
+    assert_eq!(
+        g1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        g2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+    // Different widths reassociate partials → equal within tolerance.
+    for threads in [1usize, 4, 8] {
+        let sc_w = StepCtx::new(0, 0, threads);
+        let (lw, gw) = m.fwd_bwd(&sc_w, &w, &samples, &idx).unwrap();
+        assert!((lw - l1).abs() < 1e-4, "loss at width {threads}: {lw} vs {l1}");
+        assert_close(&gw, &g1, &format!("mlp grad at width {threads}"));
+    }
+}
+
+/// Steady state allocates exactly one buffer per step — the gradient that
+/// escapes into the shuffle; every temporary is recycled by the arena.
+#[test]
+fn scratch_steady_state_allocates_only_the_escaping_gradient() {
+    // LinReg: temporaries are the batch matrix and the residual vector.
+    let lin = LinReg::new(8, 4);
+    let lin_samples: Vec<Sample> = (0..6)
+        .map(|i| {
+            Sample::new(
+                vec![Tensor::from_f32(vec![8], vec![0.1 * i as f32; 8])],
+                Tensor::from_f32(vec![], vec![i as f32]),
+            )
+        })
+        .collect();
+    let sc = StepCtx { node: 0, partition: 0, threads: 2, scratch: Scratch::fresh() };
+    let w = vec![0.05f32; 9];
+    for _ in 0..3 {
+        lin.fwd_bwd(&sc, &w, &lin_samples, &[0, 1, 2, 3]).unwrap();
+    }
+    let (a0, _) = sc.scratch.stats();
+    for _ in 0..4 {
+        lin.fwd_bwd(&sc, &w, &lin_samples, &[0, 1, 2, 3]).unwrap();
+    }
+    let (a1, reuses) = sc.scratch.stats();
+    assert_eq!(a1 - a0, 4, "LinReg steady state: 1 allocation (the gradient) per step");
+    assert!(reuses > 0, "the arena must actually recycle");
+
+    // Mlp: activations, deltas and the batch matrix all recycle.
+    let mlp = Mlp::new(vec![4, 6, 3], 5);
+    let samples = mlp_samples(4, 3, 5, 0x5CA7);
+    let idx: Vec<usize> = (0..5).collect();
+    let wm = mlp.initial_params();
+    let sc2 = StepCtx { node: 0, partition: 0, threads: 2, scratch: Scratch::fresh() };
+    for _ in 0..3 {
+        mlp.fwd_bwd(&sc2, &wm, &samples, &idx).unwrap();
+    }
+    let (b0, _) = sc2.scratch.stats();
+    for _ in 0..4 {
+        mlp.fwd_bwd(&sc2, &wm, &samples, &idx).unwrap();
+    }
+    let (b1, _) = sc2.scratch.stats();
+    assert_eq!(b1 - b0, 4, "Mlp steady state: 1 allocation (the gradient) per step");
+}
+
+fn mlp_optimizer(
+    nodes: usize,
+    iterations: usize,
+    sync_mode: SyncMode,
+) -> (SparkletContext, Module, DistributedOptimizer) {
+    let ctx = SparkletContext::local(nodes);
+    let module = Module::builtin(Arc::new(Mlp::new(vec![8, 16, 4], 16).with_seed(7)));
+    let data = mlp_rdd(&ctx, 8, 4, nodes, 120, 19);
+    let opt = DistributedOptimizer::new(
+        &ctx,
+        module.clone(),
+        data,
+        Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.1) }),
+        TrainConfig { iterations, log_every: 0, sync_mode, ..Default::default() },
+    )
+    .unwrap();
+    (ctx, module, opt)
+}
+
+#[test]
+fn mlp_trains_end_to_end_sync() {
+    let (ctx, module, mut opt) = mlp_optimizer(3, 60, SyncMode::Sync);
+    let report = opt.optimize().unwrap();
+    let (first, last) = (report.losses[0], report.final_loss);
+    assert!(first.is_finite() && last.is_finite());
+    // Uniform softmax starts near ln(4) ≈ 1.386 on 4 classes; momentum
+    // SGD on the separable teacher data drives it to ~0.2.
+    assert!(last < first * 0.5, "loss should drop: {first} -> {last}");
+    assert!(last < 0.7, "loss should fall well below ln(4): {last}");
+    // Kernel-backed distributed evaluation on the trained weights.
+    let w = Arc::new(opt.weights().unwrap());
+    let eval = mlp_rdd(&ctx, 8, 4, 2, 100, 91);
+    let acc = inference::evaluate_top1(&module, w, &eval).unwrap();
+    assert!(
+        acc > 0.55,
+        "trained MLP should beat 4-class chance comfortably, got {acc}"
+    );
+}
+
+#[test]
+fn mlp_trains_end_to_end_pipelined() {
+    let (_ctx, _module, mut opt) =
+        mlp_optimizer(3, 60, SyncMode::Pipelined { staleness: 1 });
+    let report = opt.optimize().unwrap();
+    let (first, last) = (report.losses[0], report.final_loss);
+    assert!(
+        last < first * 0.6,
+        "pipelined loss should drop: {first} -> {last}"
+    );
+    assert!(last < 0.9, "pipelined loss should fall well below ln(4): {last}");
+}
+
+/// Serving routes builtin modules through the kernel-backed forward; the
+/// distributed rows must equal a local single-process `predict` exactly
+/// (forward is row-independent, so batching cannot perturb it).
+#[test]
+fn builtin_serving_matches_local_predict() {
+    let ctx = SparkletContext::local(2);
+    let mlp = Arc::new(Mlp::new(vec![6, 10, 3], 8));
+    let module = Module::builtin(Arc::clone(&mlp) as Arc<dyn BuiltinModel>);
+    let data = mlp_rdd(&ctx, 6, 3, 2, 40, 23);
+    let weights = Arc::new(module.initial_params().unwrap());
+    let distributed = inference::predict(&module, Arc::clone(&weights), &data).unwrap();
+    let local_samples = data.collect().unwrap();
+    let step = StepCtx::local(2);
+    let want = mlp.predict(&step, &weights, &local_samples).unwrap();
+    assert_eq!(distributed.len(), 80);
+    assert_eq!(distributed, want, "distributed scoring must match local rows");
+}

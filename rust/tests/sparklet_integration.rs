@@ -100,7 +100,7 @@ fn injected_task_failures_are_retried_transparently() {
 
 #[test]
 fn node_death_reroutes_and_recomputes_cache() {
-    let ctx = SparkletContext::new(ClusterSpec { nodes: 4, slots_per_node: 1 });
+    let ctx = SparkletContext::new(ClusterSpec { nodes: 4, slots_per_node: 1, ..Default::default() });
     let rdd = ctx.parallelize((0..80).collect::<Vec<i64>>(), 8).cache();
     assert_eq!(rdd.count().unwrap(), 80);
 
