@@ -10,7 +10,7 @@ mod common;
 
 use std::sync::Arc;
 
-use bigdl::bigdl::allreduce::{central_ps_reduce, ring_allreduce, traffic, Algo};
+use bigdl::bigdl::allreduce::{central_ps_reduce, ring_allreduce, traffic, SyncAlgo};
 use bigdl::bigdl::{DistributedOptimizer, Module, Sgd, TrainConfig};
 use bigdl::data::movielens::{movielens_rdd, MovielensConfig};
 use bigdl::sparklet::{FailurePolicy, SchedulePolicy, SparkletContext};
@@ -27,7 +27,7 @@ fn ablation_allreduce() {
         "N", "shuffle-bcast out/node", "ring out/node (meas.)", "PS server in (meas.)"
     );
     for n in [4, 8, 16, 32] {
-        let model = traffic(Algo::ShuffleBroadcast, n, (k * 4) as f64);
+        let model = traffic(SyncAlgo::ShuffleBroadcast, n, (k * 4) as f64);
         let mut rng = Rng::new(n as u64);
         let grads: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..k).map(|_| rng.gen_f32()).collect())
@@ -54,7 +54,10 @@ fn ablation_allreduce() {
             ps_traffic[0].1 as f64 / 1024.0,
         );
     }
-    println!("steps/round: shuffle-bcast = 2; ring(32) = {}; PS = 2", traffic(Algo::Ring, 32, 1.0).steps);
+    println!(
+        "steps/round: shuffle-bcast = 2; ring(32) = {}; PS = 2",
+        traffic(SyncAlgo::Ring, 32, 1.0).steps
+    );
 }
 
 fn ablation_failure_recovery() {

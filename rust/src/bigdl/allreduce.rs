@@ -21,19 +21,40 @@ pub struct Traffic {
     pub steps: usize,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algo {
+/// Synchronization algorithm — the ONE shared type between the executable
+/// data paths (`ParameterManager`) and the netsim analytic model, so the
+/// two cannot drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncAlgo {
     /// BigDL Algorithm 2: slice → shuffle → aggregate → task-side broadcast.
+    #[default]
     ShuffleBroadcast,
     /// Baidu-style Ring AllReduce: 2(N-1) steps of K/N-sized transfers.
     Ring,
     /// Centralized PS: every worker sends K to the server, receives K back.
+    /// Modeled baseline only — not an executable data path.
     CentralPs,
 }
 
+impl SyncAlgo {
+    /// Parse a CLI spelling: `shuffle`, `ring`, or `ps`.
+    pub fn parse(s: &str) -> anyhow::Result<SyncAlgo> {
+        match s {
+            "shuffle" | "shuffle-broadcast" => Ok(SyncAlgo::ShuffleBroadcast),
+            "ring" => Ok(SyncAlgo::Ring),
+            "ps" | "central-ps" => Ok(SyncAlgo::CentralPs),
+            other => anyhow::bail!("unknown sync algo {other:?} (expected shuffle|ring|ps)"),
+        }
+    }
+}
+
+/// Former name of [`SyncAlgo`] — kept so old call sites keep compiling.
+#[deprecated(note = "renamed to SyncAlgo (shared with netsim)")]
+pub type Algo = SyncAlgo;
+
 /// Closed-form worst-case per-node traffic for reducing `k_bytes` of
 /// parameters across `n` nodes (paper §3.3).
-pub fn traffic(algo: Algo, n: usize, k_bytes: f64) -> Traffic {
+pub fn traffic(algo: SyncAlgo, n: usize, k_bytes: f64) -> Traffic {
     assert!(n > 0);
     let nf = n as f64;
     match algo {
@@ -41,19 +62,19 @@ pub fn traffic(algo: Algo, n: usize, k_bytes: f64) -> Traffic {
         // (N-1) foreign slices of its shard in (phase 1), then sends its
         // updated K/N shard to N-1 peers and fetches the other shards
         // (phase 2): 2K(N-1)/N in and out; 2 bulk steps.
-        Algo::ShuffleBroadcast => Traffic {
+        SyncAlgo::ShuffleBroadcast => Traffic {
             out_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
             in_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
             steps: 2,
         },
         // Classic ring: 2(N-1) steps, K/N bytes per step each way.
-        Algo::Ring => Traffic {
+        SyncAlgo::Ring => Traffic {
             out_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
             in_bytes: 2.0 * k_bytes * (nf - 1.0) / nf,
             steps: 2 * (n.saturating_sub(1)),
         },
         // The server is the hot node: receives N·K, sends N·K.
-        Algo::CentralPs => Traffic {
+        SyncAlgo::CentralPs => Traffic {
             out_bytes: nf * k_bytes,
             in_bytes: nf * k_bytes,
             steps: 2,
@@ -161,7 +182,7 @@ mod tests {
         let k = 400; // divisible by n → exact chunks
         let grads = random_grads(n, k, 9);
         let (_, measured) = ring_allreduce(&grads);
-        let expect = super::traffic(Algo::Ring, n, (k * 4) as f64);
+        let expect = super::traffic(SyncAlgo::Ring, n, (k * 4) as f64);
         for &(out, inn) in &measured {
             assert_eq!(out as f64, expect.out_bytes, "out bytes");
             assert_eq!(inn as f64, expect.in_bytes, "in bytes");
@@ -186,12 +207,12 @@ mod tests {
     fn shuffle_broadcast_traffic_is_2k() {
         // The paper's headline: ~2K per node, independent of N.
         let k = 1e6;
-        let t16 = traffic(Algo::ShuffleBroadcast, 16, k);
-        let t256 = traffic(Algo::ShuffleBroadcast, 256, k);
+        let t16 = traffic(SyncAlgo::ShuffleBroadcast, 16, k);
+        let t256 = traffic(SyncAlgo::ShuffleBroadcast, 256, k);
         assert!(t16.out_bytes < 2.0 * k && t16.out_bytes > 1.8 * k);
         assert!(t256.out_bytes < 2.0 * k && t256.out_bytes > 1.99 * k);
         // Ring pays the same bandwidth but Θ(N) latency steps.
-        assert_eq!(traffic(Algo::Ring, 64, k).steps, 126);
+        assert_eq!(traffic(SyncAlgo::Ring, 64, k).steps, 126);
         assert_eq!(t256.steps, 2);
     }
 }

@@ -333,6 +333,10 @@ impl OptimMethod for SimOptim {
         "sim"
     }
 
+    fn base_lr(&self) -> f32 {
+        self.inner.base_lr()
+    }
+
     fn state_bufs(&self) -> usize {
         self.inner.state_bufs()
     }

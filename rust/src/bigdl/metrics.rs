@@ -37,6 +37,11 @@ pub struct IterMetrics {
     pub fwd_overlap: usize,
     /// Driver dispatch time spent this iteration (ns).
     pub dispatch_ns: u64,
+    /// Remote bytes moved by this iteration's committed sync round, as
+    /// measured on the block store's traffic meters — compressed rounds
+    /// report codec (wire) bytes, not f32 bytes. 0 until the round
+    /// commits (filled in place, like `loss`, in pipelined mode).
+    pub sync_wire_bytes: u64,
     /// Block-store traffic this iteration.
     pub traffic: TrafficSnapshot,
     pub sched: SchedSnapshot,

@@ -13,12 +13,18 @@
 //!   reductions;
 //! * [`inference`] — distributed `predict` over a Sample RDD (built on
 //!   the serving subsystem);
-//! * [`allreduce`] — Ring/PS baselines + the §3.3 traffic models;
+//! * [`allreduce`] — [`SyncAlgo`] + the §3.3 traffic models and the
+//!   executable Ring/PS references;
+//! * [`compress`] — gradient wire codecs (int8, top-k) with
+//!   error-feedback residuals;
+//! * [`schedule`] — the declarative [`SyncStrategy`] (algorithm, codec,
+//!   mode, clipping, LR schedule);
 //! * [`metrics`] — per-iteration breakdowns and evaluation metrics.
 
 pub mod allreduce;
 pub mod builtin;
 pub mod checkpoint;
+pub mod compress;
 pub mod inference;
 pub mod metrics;
 pub mod mlp;
@@ -36,10 +42,14 @@ pub use metrics::{IterMetrics, TrainReport};
 pub use mlp::{mlp_rdd, Mlp};
 pub use module::Module;
 pub use optim::{Adagrad, Adam, Lars, OptimMethod, Sgd};
-pub use optimizer::{DistributedOptimizer, SyncMode, TrainConfig};
+pub use allreduce::SyncAlgo;
+pub use compress::Compression;
+pub use optimizer::{DistributedOptimizer, TrainConfig};
 pub use checkpoint::Checkpoint;
-pub use param_mgr::{GradPolicy, ParameterManager, PendingSync};
-pub use schedule::LrSchedule;
+pub use param_mgr::{
+    GradPolicy, GradPublisher, ParameterManager, PendingSync, RoundOp, SyncOpts,
+};
+pub use schedule::{LrSchedule, SyncMode, SyncStrategy};
 pub use serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
 pub use trigger::{TrainState, Trigger};
 pub use sample::Sample;

@@ -14,6 +14,9 @@
 /// A shard-wise optimizer. Implementations must be deterministic.
 pub trait OptimMethod: Send + Sync {
     fn name(&self) -> &'static str;
+    /// Base learning rate (before any schedule multiplier) — local-SGD
+    /// tasks reuse it for their plain-SGD inner steps.
+    fn base_lr(&self) -> f32;
     /// Number of per-shard f32 state buffers (same length as the shard).
     fn state_bufs(&self) -> usize;
     /// Apply one update. `step` is 1-based; `lr_mult` is the schedule's
@@ -40,6 +43,10 @@ impl Sgd {
 impl OptimMethod for Sgd {
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn base_lr(&self) -> f32 {
+        self.lr
     }
 
     fn state_bufs(&self) -> usize {
@@ -83,6 +90,10 @@ impl OptimMethod for Adagrad {
         "adagrad"
     }
 
+    fn base_lr(&self) -> f32 {
+        self.lr
+    }
+
     fn state_bufs(&self) -> usize {
         1
     }
@@ -115,6 +126,10 @@ impl Adam {
 impl OptimMethod for Adam {
     fn name(&self) -> &'static str {
         "adam"
+    }
+
+    fn base_lr(&self) -> f32 {
+        self.lr
     }
 
     fn state_bufs(&self) -> usize {
@@ -161,6 +176,10 @@ impl Lars {
 impl OptimMethod for Lars {
     fn name(&self) -> &'static str {
         "lars"
+    }
+
+    fn base_lr(&self) -> f32 {
+        self.lr
     }
 
     fn state_bufs(&self) -> usize {

@@ -5,9 +5,11 @@
 //!    task reads the latest weights (task-side broadcast shards), draws a
 //!    random local minibatch, runs the model's `fwd_bwd` (AOT executable
 //!    or builtin), slices its local gradient N ways and publishes the
-//!    slices (shuffle write);
-//! 2. **parameter synchronization** — [`ParameterManager::sync_round`]
-//!    (Algorithm 2).
+//!    slices (shuffle write, through the strategy's
+//!    [`super::param_mgr::GradPublisher`] — raw views or codec blocks);
+//! 2. **parameter synchronization** — [`ParameterManager::begin_sync`]
+//!    (Algorithm 2, or the ring reduce-scatter when the
+//!    [`SyncStrategy`] selects [`super::allreduce::SyncAlgo::Ring`]).
 //!
 //! With [`SyncMode::Pipelined`] BOTH jobs are dispatched asynchronously —
 //! the deep pipeline. Each iteration's forward-backward is submitted via
@@ -40,55 +42,19 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{ensure, Result};
 
 use super::builtin::StepCtx;
 use super::checkpoint::Checkpoint;
 use super::metrics::{IterMetrics, TrainReport};
 use super::module::Module;
 use super::optim::OptimMethod;
-use super::param_mgr::{ParameterManager, PendingSync};
+use super::param_mgr::{ParameterManager, PendingSync, SyncOpts};
 use super::sample::{draw_batch_indices, Sample};
+use super::schedule::{SyncMode, SyncStrategy};
 use super::serving::PredictService;
 use super::trigger::{TrainState, Trigger};
 use crate::sparklet::{Broadcast, GroupPlan, JobHandle, Rdd, Shuffle, SparkletContext};
-
-/// How the parameter-synchronization job is scheduled relative to the
-/// next iteration's forward-backward.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SyncMode {
-    /// Algorithm 1 as written: a full driver barrier after every sync
-    /// round (iteration k+1 starts only after round k committed).
-    Sync,
-    /// Overlap iteration k+1's forward-backward with round k's sync.
-    /// `staleness` is the max number of un-committed sync rounds allowed
-    /// to be outstanding when a forward-backward reads the weights — a
-    /// task therefore never reads a weights broadcast missing more than
-    /// `staleness` updates (`staleness: 0` ≡ `Sync`, bit-for-bit).
-    Pipelined { staleness: usize },
-}
-
-impl SyncMode {
-    /// Parse a `--sync-mode` CLI value: `sync`, `pipelined` (staleness 1)
-    /// or `pipelined:<staleness>`.
-    pub fn parse(s: &str) -> Result<SyncMode> {
-        match s {
-            "sync" => Ok(SyncMode::Sync),
-            "pipelined" => Ok(SyncMode::Pipelined { staleness: 1 }),
-            other => match other.strip_prefix("pipelined:") {
-                Some(n) => Ok(SyncMode::Pipelined { staleness: n.parse()? }),
-                None => bail!("unknown sync mode {other:?} (sync | pipelined[:<staleness>])"),
-            },
-        }
-    }
-
-    fn staleness(&self) -> usize {
-        match self {
-            SyncMode::Sync => 0,
-            SyncMode::Pipelined { staleness } => *staleness,
-        }
-    }
-}
 
 /// Training-run configuration.
 #[derive(Debug, Clone)]
@@ -101,8 +67,11 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Drizzle group size (>1 pre-plans placements for whole groups).
     pub group_size: usize,
-    /// Sync scheduling: barrier per round, or bounded-staleness pipelining.
-    pub sync_mode: SyncMode,
+    /// The declarative synchronization strategy: wire algorithm
+    /// (shuffle+broadcast or ring), gradient codec, scheduling mode
+    /// (barrier / bounded-staleness pipeline / local SGD), clipping and
+    /// LR schedule — validated once at construction.
+    pub sync: SyncStrategy,
     /// Custom end condition (e.g. `MaxEpoch(5).or(MinLoss(0.1))`).
     pub end_trigger: Option<Trigger>,
     /// Checkpoint cadence + directory (BigDL `setCheckpoint`).
@@ -117,7 +86,7 @@ impl Default for TrainConfig {
             n_shards: None,
             log_every: 5,
             group_size: 1,
-            sync_mode: SyncMode::Sync,
+            sync: SyncStrategy::default(),
             end_trigger: None,
             checkpoint_dir: None,
             checkpoint_trigger: Trigger::Never,
@@ -219,9 +188,11 @@ impl DistributedOptimizer {
             counts.iter().all(|&c| c > 0),
             "every partition needs data; got {counts:?}"
         );
+        cfg.sync.validate()?;
         let initial = module.initial_params()?;
         let n_shards = cfg.n_shards.unwrap_or(dataset.num_partitions());
         let pm = ParameterManager::init(ctx, &initial, n_shards, optim)?;
+        pm.set_strategy(cfg.sync.clone());
         // Compile executables off the training path.
         module.warmup()?;
         Ok(DistributedOptimizer {
@@ -295,8 +266,13 @@ impl DistributedOptimizer {
     }
 
     /// Global batch = per-replica batch × partitions (paper §2 of Fig 3).
+    /// A local-SGD iteration consumes `period` minibatches per replica.
     pub fn global_batch(&self) -> usize {
-        self.module.train_batch().unwrap_or(0) * self.dataset.num_partitions()
+        let per_round = self.module.train_batch().unwrap_or(0) * self.dataset.num_partitions();
+        match self.cfg.sync.mode {
+            SyncMode::LocalSgd { period } => per_round * period,
+            _ => per_round,
+        }
     }
 
     /// Rounds whose weight update hasn't committed yet.
@@ -363,9 +339,12 @@ impl DistributedOptimizer {
         let sync_plan = self.plans.as_ref().map(|(_, s)| s.clone());
         let front = self.pipeline.rounds.front_mut().expect("front round exists");
         debug_assert!(matches!(front.stage, RoundStage::Ready));
-        let begun = match &sync_plan {
-            Some(p) => self.pm.sync_round_async_planned(&front.shuffle, front.replicas, p),
-            None => self.pm.sync_round_async(&front.shuffle, front.replicas),
+        let begun = {
+            let opts = SyncOpts::new(&front.shuffle, front.replicas);
+            match &sync_plan {
+                Some(p) => self.pm.begin_sync(opts.with_plan(p)),
+                None => self.pm.begin_sync(opts),
+            }
         };
         match begun {
             Ok(p) => {
@@ -400,10 +379,12 @@ impl DistributedOptimizer {
         let RoundStage::Syncing(pending) = front.stage else {
             unreachable!("commit_front_sync requires a Syncing front");
         };
+        let iter = front.iter;
         let t0 = Instant::now();
         match self.pm.sync_wait_deferred(pending) {
             Ok((_committed, replaced)) => {
                 self.exposed_sync_s += t0.elapsed().as_secs_f64();
+                self.history[iter].sync_wire_bytes = self.pm.last_sync_wire_bytes();
                 self.pipeline.retired.push(replaced);
                 self.release_retired();
                 Ok(())
@@ -545,9 +526,12 @@ impl DistributedOptimizer {
     /// latest by `drain()`). With `Sync` (or `staleness: 0`) the round is
     /// fully settled before returning and the metrics are final.
     pub fn step(&mut self) -> Result<IterMetrics> {
+        if let SyncMode::LocalSgd { period } = self.cfg.sync.mode {
+            return self.step_local_sgd(period);
+        }
         let m = self.dataset.num_partitions();
         let n = self.pm.n_shards;
-        let staleness = self.cfg.sync_mode.staleness();
+        let staleness = self.cfg.sync.mode.staleness();
         let bm = self.ctx.blocks();
         let traffic0 = bm.stats.snapshot();
         let sched0 = self.ctx.scheduler().stats.snapshot();
@@ -597,7 +581,9 @@ impl DistributedOptimizer {
         let bcast = self.pm.weights_broadcast();
         let shuffle = Shuffle::new(self.ctx.next_shuffle_id(), m, n);
         let module = self.module.clone();
-        let ranges: Arc<Vec<std::ops::Range<usize>>> = Arc::new(self.pm.ranges().to_vec());
+        // The strategy's map-side publisher: raw zero-copy views, or codec
+        // blocks + error-feedback residual when compression is on.
+        let publisher = Arc::new(self.pm.grad_publisher(&shuffle));
         let batch = self.module.train_batch()?;
 
         let t_submit = Instant::now();
@@ -618,12 +604,8 @@ impl DistributedOptimizer {
             let step_ctx = StepCtx::for_task(tc);
             let (loss, grads) = module.train_step(&step_ctx, weights, samples, &idx)?;
             let compute_s = t1.elapsed().as_secs_f64();
-            // Slice N ways and publish (input to Algorithm 2) as views:
-            // one shared allocation, zero per-shard copies (§Perf P2).
-            let grads = Arc::new(grads);
-            for (slot, r) in ranges.iter().enumerate() {
-                shuffle.write_view(&bm, tc.node, tc.partition, slot, &grads, r.clone());
-            }
+            // Slice N ways and publish (input to Algorithm 2 / the ring).
+            publisher.publish(&bm, tc.node, tc.partition, grads)?;
             Ok((loss, fetch_s, compute_s))
         };
         let submitted = match &self.plans {
@@ -666,6 +648,7 @@ impl DistributedOptimizer {
             sync_lag,
             fwd_overlap,
             dispatch_ns: 0,
+            sync_wire_bytes: 0, // filled when this round's sync commits
             traffic: Default::default(),
             sched: sched0,
         });
@@ -707,6 +690,109 @@ impl DistributedOptimizer {
             );
         }
         Ok(metrics)
+    }
+
+    /// One SparkNet-style local-SGD iteration ([`SyncMode::LocalSgd`]):
+    /// every partition fetches the committed weights, runs `period` plain
+    /// SGD steps on its private replica (base LR × the schedule's current
+    /// multiplier), publishes the locally-updated weights sliced N ways,
+    /// and one [`SyncOpts::averaging`] round means the replicas. The
+    /// averaging round IS the barrier — this path never pipelines.
+    fn step_local_sgd(&mut self, period: usize) -> Result<IterMetrics> {
+        let m = self.dataset.num_partitions();
+        let n = self.pm.n_shards;
+        let bm = self.ctx.blocks();
+        let traffic0 = bm.stats.snapshot();
+        let sched0 = self.ctx.scheduler().stats.snapshot();
+        let t_iter = Instant::now();
+        let iter_idx = self.history.len();
+
+        let bcast = self.pm.weights_broadcast();
+        let shuffle = Shuffle::new(self.ctx.next_shuffle_id(), m, n);
+        let module = self.module.clone();
+        let ranges: Arc<Vec<std::ops::Range<usize>>> = Arc::new(self.pm.ranges().to_vec());
+        let batch = self.module.train_batch()?;
+        let lr = self.pm.base_lr() * self.pm.next_lr_mult();
+
+        let task = move |tc: &crate::sparklet::TaskContext, samples: &[Sample]| {
+            let bm = tc.blocks();
+            let t0 = Instant::now();
+            let mut weights = bcast.fetch_all_concat(&bm, tc.node)?;
+            let fetch_s = t0.elapsed().as_secs_f64();
+            let mut rng = tc.rng();
+            let step_ctx = StepCtx::for_task(tc);
+            let t1 = Instant::now();
+            let mut loss_sum = 0.0f32;
+            for _ in 0..period {
+                let idx = draw_batch_indices(&mut rng, samples.len(), batch);
+                let (loss, grads) =
+                    module.train_step(&step_ctx, weights.clone(), samples, &idx)?;
+                loss_sum += loss;
+                for (w, g) in weights.iter_mut().zip(&grads) {
+                    *w -= lr * g;
+                }
+            }
+            // Publish the locally-updated weights, sliced N ways — the
+            // averaging round's input (zero-copy views, like gradients).
+            let weights = Arc::new(weights);
+            for (slot, r) in ranges.iter().enumerate() {
+                shuffle.write_view(&bm, tc.node, tc.partition, slot, &weights, r.clone());
+            }
+            Ok((loss_sum / period as f32, fetch_s, t1.elapsed().as_secs_f64()))
+        };
+        let results = match self.dataset.run_partition_job(task) {
+            Ok(r) => r,
+            Err(e) => {
+                shuffle.cleanup(&bm);
+                return Err(e);
+            }
+        };
+        let loss = results.iter().map(|r| r.0).sum::<f32>() / results.len().max(1) as f32;
+        let fetch_s = results.iter().map(|r| r.1).fold(0.0, f64::max);
+        let compute_s = results.iter().map(|r| r.2).fold(0.0, f64::max);
+        let fwdbwd_s = t_iter.elapsed().as_secs_f64();
+
+        let t_sync = Instant::now();
+        let committed = self
+            .pm
+            .begin_sync(SyncOpts::new(&shuffle, m).averaging())
+            .and_then(|p| self.pm.sync_wait(p));
+        if let Err(e) = committed {
+            // begin_sync's entry guards fail before touching blocks;
+            // cleanup is idempotent on its later failure paths.
+            shuffle.cleanup(&bm);
+            return Err(e);
+        }
+        let sync_s = t_sync.elapsed().as_secs_f64();
+
+        self.completed_iters = iter_idx + 1;
+        let sched1 = self.ctx.scheduler().stats.snapshot();
+        let entry = IterMetrics {
+            iteration: iter_idx,
+            loss,
+            total_s: t_iter.elapsed().as_secs_f64(),
+            fwdbwd_s,
+            compute_s,
+            fetch_s,
+            sync_s,
+            sync_lag: 0,
+            fwd_overlap: 1,
+            dispatch_ns: sched1.dispatch_ns - sched0.dispatch_ns,
+            sync_wire_bytes: self.pm.last_sync_wire_bytes(),
+            traffic: bm.stats.snapshot().delta(traffic0),
+            sched: sched1,
+        };
+        self.history.push(entry.clone());
+        if self.cfg.log_every > 0 && iter_idx % self.cfg.log_every == 0 {
+            log::info!(
+                "iter {iter_idx}: loss={:.4} ({period} local steps) compute={:.1}ms sync={:.1}ms ({:.1}%)",
+                entry.loss,
+                entry.compute_s * 1e3,
+                entry.sync_s * 1e3,
+                entry.sync_overhead_frac() * 100.0
+            );
+        }
+        Ok(entry)
     }
 
     /// Algorithm 1's outer loop: run until the end trigger fires
@@ -809,32 +895,5 @@ impl Drop for DistributedOptimizer {
             }
         }
         self.abort_pipeline();
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn sync_mode_parses() {
-        assert_eq!(SyncMode::parse("sync").unwrap(), SyncMode::Sync);
-        assert_eq!(
-            SyncMode::parse("pipelined").unwrap(),
-            SyncMode::Pipelined { staleness: 1 }
-        );
-        assert_eq!(
-            SyncMode::parse("pipelined:3").unwrap(),
-            SyncMode::Pipelined { staleness: 3 }
-        );
-        assert!(SyncMode::parse("async").is_err());
-        assert!(SyncMode::parse("pipelined:x").is_err());
-    }
-
-    #[test]
-    fn staleness_zero_means_barrier() {
-        assert_eq!(SyncMode::Sync.staleness(), 0);
-        assert_eq!(SyncMode::Pipelined { staleness: 0 }.staleness(), 0);
-        assert_eq!(SyncMode::Pipelined { staleness: 2 }.staleness(), 2);
     }
 }

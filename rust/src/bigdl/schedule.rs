@@ -1,7 +1,181 @@
-//! Learning-rate schedules (BigDL's `SGD.LearningRateSchedule`): the
-//! standard large-batch training recipes — constant, step decay,
-//! polynomial decay, and linear warmup (the warmup+poly combination is
-//! what the paper-era ImageNet-scale BigDL runs used).
+//! Declarative training-schedule configuration:
+//!
+//! * [`LrSchedule`] — learning-rate schedules (BigDL's
+//!   `SGD.LearningRateSchedule`): constant, step decay, polynomial decay,
+//!   and linear warmup (the warmup+poly combination is what the
+//!   paper-era ImageNet-scale BigDL runs used);
+//! * [`SyncMode`] — how the sync job is scheduled relative to the next
+//!   forward-backward (barrier, bounded-staleness pipeline, or
+//!   SparkNet-style local SGD);
+//! * [`SyncStrategy`] — the one declarative value that selects the sync
+//!   algorithm, wire codec, scheduling mode, gradient policy and LR
+//!   schedule for a training run (`TrainConfig::sync`).
+
+use anyhow::{bail, Result};
+
+use super::allreduce::SyncAlgo;
+use super::compress::Compression;
+
+/// Gradient post-processing applied to the aggregated gradient during a
+/// sync round, before the optimizer update (BigDL's
+/// `ConstantClipping` / `L2NormClipping`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GradPolicy {
+    /// Clamp every component into `[-c, c]`.
+    pub clip_const: Option<f32>,
+    /// Scale the whole gradient so its global L2 norm is at most `n`.
+    pub clip_l2: Option<f32>,
+}
+
+/// How the parameter-synchronization job is scheduled relative to the
+/// next iteration's forward-backward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncMode {
+    /// Algorithm 1 as written: a full driver barrier after every sync
+    /// round (iteration k+1 starts only after round k committed).
+    #[default]
+    Sync,
+    /// Overlap iteration k+1's forward-backward with round k's sync.
+    /// `staleness` is the max number of un-committed sync rounds allowed
+    /// to be outstanding when a forward-backward reads the weights — a
+    /// task therefore never reads a weights broadcast missing more than
+    /// `staleness` updates (`staleness: 0` ≡ `Sync`, bit-for-bit).
+    Pipelined { staleness: usize },
+    /// SparkNet-style local SGD (arxiv 1511.06051): each partition runs
+    /// `period` plain-SGD steps on its local replica, then the replicas'
+    /// weights are averaged in one sync round. Trades sync rounds (and
+    /// wire bytes) for extra local steps; `period: 1` ≈ `Sync` with plain
+    /// SGD (weight-averaging after the update instead of
+    /// gradient-averaging before it).
+    LocalSgd { period: usize },
+}
+
+impl SyncMode {
+    /// Parse a `--sync-mode` CLI value: `sync`, `pipelined` (staleness 1),
+    /// `pipelined:<staleness>`, or `local-sgd:<period>`.
+    pub fn parse(s: &str) -> Result<SyncMode> {
+        match s {
+            "sync" => Ok(SyncMode::Sync),
+            "pipelined" => Ok(SyncMode::Pipelined { staleness: 1 }),
+            other => {
+                if let Some(n) = other.strip_prefix("pipelined:") {
+                    return Ok(SyncMode::Pipelined { staleness: n.parse()? });
+                }
+                if let Some(p) = other.strip_prefix("local-sgd:") {
+                    return Ok(SyncMode::LocalSgd { period: p.parse()? });
+                }
+                bail!("unknown sync mode {other:?} (sync | pipelined[:<staleness>] | local-sgd:<period>)")
+            }
+        }
+    }
+
+    /// Max un-committed rounds outstanding when a forward reads weights.
+    pub fn staleness(&self) -> usize {
+        match self {
+            SyncMode::Sync | SyncMode::LocalSgd { .. } => 0,
+            SyncMode::Pipelined { staleness } => *staleness,
+        }
+    }
+}
+
+/// The full synchronization strategy of a training run — algorithm, wire
+/// codec, scheduling mode, gradient policy, LR schedule — as ONE
+/// declarative value (`TrainConfig::sync`), replacing the old scattered
+/// `sync_mode` field + `set_grad_policy`/`set_lr_schedule` setters.
+///
+/// ```
+/// use bigdl::bigdl::{SyncAlgo, SyncStrategy};
+/// let strat = SyncStrategy::default().algo(SyncAlgo::Ring).clip_l2(1.0);
+/// assert!(strat.validate().is_ok());
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct SyncStrategy {
+    /// Which wire-level reduction moves the gradients.
+    pub algo: SyncAlgo,
+    /// Wire codec applied to gradient slices before any algorithm.
+    pub compression: Compression,
+    /// Barrier / bounded-staleness pipeline / local SGD.
+    pub mode: SyncMode,
+    /// Gradient clipping applied to the aggregated gradient.
+    pub grad_policy: GradPolicy,
+    /// Learning-rate schedule (multiplier on the optimizer's base LR).
+    pub lr_schedule: LrSchedule,
+}
+
+impl SyncStrategy {
+    pub fn algo(mut self, algo: SyncAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn compression(mut self, c: Compression) -> Self {
+        self.compression = c;
+        self
+    }
+
+    pub fn mode(mut self, mode: SyncMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn pipelined(mut self, staleness: usize) -> Self {
+        self.mode = SyncMode::Pipelined { staleness };
+        self
+    }
+
+    pub fn local_sgd(mut self, period: usize) -> Self {
+        self.mode = SyncMode::LocalSgd { period };
+        self
+    }
+
+    pub fn clip_const(mut self, c: f32) -> Self {
+        self.grad_policy.clip_const = Some(c);
+        self
+    }
+
+    pub fn clip_l2(mut self, max_norm: f32) -> Self {
+        self.grad_policy.clip_l2 = Some(max_norm);
+        self
+    }
+
+    pub fn lr_schedule(mut self, s: LrSchedule) -> Self {
+        self.lr_schedule = s;
+        self
+    }
+
+    /// Reject combinations the data paths cannot honor. Called once by
+    /// `DistributedOptimizer::new` (and by `begin_sync` for the algo).
+    pub fn validate(&self) -> Result<()> {
+        if self.algo == SyncAlgo::CentralPs {
+            bail!("CentralPs is a modeled baseline, not an executable data path (use shuffle|ring)");
+        }
+        if self.compression != Compression::None && self.mode.staleness() > 0 {
+            // Error-feedback residuals form a serial chain keyed by the
+            // committed round a forward read; overlapped rounds would
+            // race on them.
+            bail!("gradient compression requires a serial round chain (sync or staleness 0), not {:?}", self.mode);
+        }
+        match self.mode {
+            SyncMode::LocalSgd { period: 0 } => bail!("local-sgd period must be >= 1"),
+            SyncMode::LocalSgd { .. } => {
+                if self.compression != Compression::None {
+                    bail!("local SGD averages weights, not gradients — compression does not apply");
+                }
+                if self.grad_policy != GradPolicy::default() {
+                    bail!("gradient clipping does not apply to local-SGD weight averaging");
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+impl From<SyncMode> for SyncStrategy {
+    fn from(mode: SyncMode) -> SyncStrategy {
+        SyncStrategy { mode, ..SyncStrategy::default() }
+    }
+}
 
 /// A learning-rate schedule: maps a 1-based step to a multiplier applied
 /// to the optimizer's base learning rate.
@@ -108,6 +282,41 @@ mod tests {
         assert_eq!(s.multiplier(10), 1.0);
         assert_eq!(s.multiplier(15), 1.0); // inner step 5 of step-schedule
         assert_eq!(s.multiplier(21), 0.5); // inner step 11
+    }
+
+    #[test]
+    fn sync_mode_parses() {
+        assert_eq!(SyncMode::parse("sync").unwrap(), SyncMode::Sync);
+        assert_eq!(SyncMode::parse("pipelined").unwrap(), SyncMode::Pipelined { staleness: 1 });
+        assert_eq!(SyncMode::parse("pipelined:3").unwrap(), SyncMode::Pipelined { staleness: 3 });
+        assert_eq!(SyncMode::parse("local-sgd:4").unwrap(), SyncMode::LocalSgd { period: 4 });
+        assert!(SyncMode::parse("async").is_err());
+        assert!(SyncMode::parse("pipelined:x").is_err());
+    }
+
+    #[test]
+    fn staleness_zero_means_barrier() {
+        assert_eq!(SyncMode::Sync.staleness(), 0);
+        assert_eq!(SyncMode::Pipelined { staleness: 0 }.staleness(), 0);
+        assert_eq!(SyncMode::Pipelined { staleness: 2 }.staleness(), 2);
+        assert_eq!(SyncMode::LocalSgd { period: 4 }.staleness(), 0);
+    }
+
+    #[test]
+    fn strategy_validation_rejects_bad_combos() {
+        assert!(SyncStrategy::default().validate().is_ok());
+        assert!(SyncStrategy::default().algo(SyncAlgo::Ring).validate().is_ok());
+        assert!(SyncStrategy::default().algo(SyncAlgo::CentralPs).validate().is_err());
+        // Compression needs a serial round chain.
+        let c = SyncStrategy::default().compression(Compression::Int8);
+        assert!(c.clone().validate().is_ok());
+        assert!(c.clone().pipelined(0).validate().is_ok());
+        assert!(c.clone().pipelined(2).validate().is_err());
+        assert!(c.local_sgd(4).validate().is_err());
+        // Local SGD: no period-0, no clipping.
+        assert!(SyncStrategy::default().local_sgd(0).validate().is_err());
+        assert!(SyncStrategy::default().local_sgd(4).validate().is_ok());
+        assert!(SyncStrategy::default().local_sgd(4).clip_l2(1.0).validate().is_err());
     }
 
     #[test]

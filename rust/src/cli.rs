@@ -73,6 +73,9 @@ COMMANDS:
           [--nodes 4] [--iterations 50] [--lr 0.01] [--optim sgd|adagrad|adam]
           [--partitions N] [--seed 42] [--group N]
           [--sync-mode sync|pipelined|pipelined:<staleness>]
+          [--sync-algo shuffle|ring] [--compress none|int8|topk:<k>]
+          [--local-sgd <period>] [--lr-schedule SPEC]
+          [--clip-const C] [--clip-l2 NORM]
   predict --model ncf        distributed inference over synthetic samples
           [--nodes 4] [--records 8192]
   help                       this message

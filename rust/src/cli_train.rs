@@ -11,7 +11,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use bigdl::bigdl::{
-    inference, mlp_rdd, optim, DistributedOptimizer, LinReg, Mlp, Module, Sample, TrainConfig,
+    inference, mlp_rdd, optim, Compression, DistributedOptimizer, LinReg, Mlp, Module, Sample,
+    SyncAlgo, SyncMode, SyncStrategy, TrainConfig,
 };
 use bigdl::config::Config;
 use bigdl::data;
@@ -116,6 +117,34 @@ fn settings(opts: &Opts) -> Result<Settings> {
     })
 }
 
+/// Assemble the declarative [`SyncStrategy`] from CLI flags:
+/// `--sync-algo shuffle|ring`, `--compress none|int8|topk:<k>`,
+/// `--sync-mode sync|pipelined|pipelined:<staleness>` or
+/// `--local-sgd <period>` (SparkNet-style periodic averaging), plus the
+/// LR-schedule and gradient-clipping knobs.
+fn sync_strategy(opts: &Opts) -> Result<SyncStrategy> {
+    let mut strategy = SyncStrategy::default()
+        .algo(SyncAlgo::parse(opts.get_or("sync-algo", "shuffle"))?)
+        .compression(Compression::parse(opts.get_or("compress", "none"))?);
+    // --local-sgd N is sugar for --sync-mode local-sgd:N; explicit
+    // --sync-mode wins when both are given.
+    strategy.mode = match opts.get("sync-mode") {
+        Some(m) => SyncMode::parse(m)?,
+        None => match opts.get_usize("local-sgd", 0)? {
+            0 => SyncMode::Sync,
+            period => SyncMode::LocalSgd { period },
+        },
+    };
+    if let Some(sched) = opts.get("lr-schedule") {
+        strategy = strategy.lr_schedule(bigdl::bigdl::LrSchedule::parse(sched)?);
+    }
+    strategy.grad_policy = bigdl::bigdl::GradPolicy {
+        clip_const: opts.get("clip-const").map(|v| v.parse()).transpose()?,
+        clip_l2: opts.get("clip-l2").map(|v| v.parse()).transpose()?,
+    };
+    Ok(strategy)
+}
+
 fn build_ctx(s: &Settings) -> SparkletContext {
     let ctx = SparkletContext::new(ClusterSpec {
         nodes: s.nodes,
@@ -170,10 +199,7 @@ pub fn train(opts: &Opts) -> Result<()> {
             // Drizzle group pre-assignment (--group N): plan placements
             // once per N iterations, dispatch as bare batched enqueues.
             group_size: opts.get_usize("group", 1)?,
-            // --sync-mode sync|pipelined|pipelined:<staleness> — overlap
-            // iteration k+1's forward-backward with round k's parameter
-            // sync (bounded-staleness SGD).
-            sync_mode: bigdl::bigdl::SyncMode::parse(opts.get_or("sync-mode", "sync"))?,
+            sync: sync_strategy(opts)?,
             checkpoint_dir: opts.get("checkpoint-dir").map(Into::into),
             checkpoint_trigger: match opts.get_usize("checkpoint-every", 0)? {
                 0 => bigdl::bigdl::Trigger::Never,
@@ -182,19 +208,6 @@ pub fn train(opts: &Opts) -> Result<()> {
             ..Default::default()
         },
     )?;
-    // Optional knobs: LR schedule + gradient clipping (BigDL surface).
-    if let Some(sched) = opts.get("lr-schedule") {
-        optimizer
-            .parameter_manager()
-            .set_lr_schedule(bigdl::bigdl::LrSchedule::parse(sched)?);
-    }
-    let clip = bigdl::bigdl::GradPolicy {
-        clip_const: opts.get("clip-const").map(|v| v.parse()).transpose()?,
-        clip_l2: opts.get("clip-l2").map(|v| v.parse()).transpose()?,
-    };
-    if clip.clip_const.is_some() || clip.clip_l2.is_some() {
-        optimizer.parameter_manager().set_grad_policy(clip);
-    }
     if opts.get_flag("resume") {
         if let Some(dir) = opts.get("checkpoint-dir") {
             optimizer.resume_from(Path::new(dir))?;

@@ -1,8 +1,13 @@
 //! Analytic + stochastic iteration model for synchronous data-parallel
 //! training on an N-node cluster (the paper's Algorithm 1 loop).
 
-use crate::bigdl::allreduce::{traffic, Algo};
+use crate::bigdl::allreduce::traffic;
 use crate::util::prng::Rng;
+
+/// Which synchronization algorithm to model — the SAME type the
+/// executable data paths select on (`bigdl::allreduce::SyncAlgo`), so the
+/// analytic model and the real system cannot drift.
+pub use crate::bigdl::allreduce::SyncAlgo;
 
 /// Network parameters (defaults = the paper's testbed: 10GbE).
 #[derive(Debug, Clone, Copy)]
@@ -43,24 +48,6 @@ impl ComputeModel {
         }
         // Lognormal with median = mean_s (mild right tail → stragglers).
         self.mean_s * (self.jitter_sigma * rng.gen_normal()).exp()
-    }
-}
-
-/// Which synchronization algorithm to model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SyncAlgo {
-    ShuffleBroadcast,
-    Ring,
-    CentralPs,
-}
-
-impl SyncAlgo {
-    fn algo(self) -> Algo {
-        match self {
-            SyncAlgo::ShuffleBroadcast => Algo::ShuffleBroadcast,
-            SyncAlgo::Ring => Algo::Ring,
-            SyncAlgo::CentralPs => Algo::CentralPs,
-        }
     }
 }
 
@@ -118,7 +105,7 @@ fn phase_time(net: &NetConfig, bytes_per_node: f64, peers: usize) -> f64 {
 /// Synchronization time for one round of `cfg.sync` on `n` nodes.
 pub fn sync_time(cfg: &SimConfig) -> f64 {
     let n = cfg.nodes;
-    let t = traffic(cfg.sync.algo(), n, cfg.param_bytes);
+    let t = traffic(cfg.sync, n, cfg.param_bytes);
     let per_node = t.out_bytes.max(t.in_bytes);
     match cfg.sync {
         // Two bulk phases (gradient shuffle; weight re-broadcast), each

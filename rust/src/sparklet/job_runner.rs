@@ -1,7 +1,7 @@
 //! `JobRunner` — the single job-dispatch façade of the stage-graph engine.
 //!
 //! Every consumer that used to hand-roll its own dispatch loop — RDD
-//! actions, the pair-RDD shuffle stages, `ParameterManager::sync_round`
+//! actions, the pair-RDD shuffle stages, `ParameterManager::begin_sync`
 //! (Algorithm 2), the `DistributedOptimizer` iteration loop (Algorithm 1)
 //! and streaming micro-batches — now drives jobs through this one API:
 //!

@@ -54,7 +54,7 @@ fn sim_optimizer(
         module,
         data,
         Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.05) }),
-        TrainConfig { iterations, log_every: 0, sync_mode, ..Default::default() },
+        TrainConfig { iterations, log_every: 0, sync: sync_mode.into(), ..Default::default() },
     )
     .unwrap();
     (ctx, model, opt)

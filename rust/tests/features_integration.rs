@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use bigdl::bigdl::{
-    inference, metrics, Adam, DistributedOptimizer, GradPolicy, LrSchedule, Module, Sgd,
+    inference, metrics, Adam, DistributedOptimizer, LrSchedule, Module, Sgd, SyncStrategy,
     TrainConfig, Trigger,
 };
 use bigdl::data::movielens::{movielens_rdd, MovielensConfig};
@@ -180,20 +180,23 @@ fn lr_schedule_and_clipping_apply_in_training() {
         module.clone(),
         data.clone(),
         Arc::new(Sgd::new(1.0)), // absurd base lr...
-        TrainConfig { iterations: 5, log_every: 0, ..Default::default() },
+        TrainConfig {
+            iterations: 5,
+            log_every: 0,
+            // ...tamed by a warmup schedule + aggressive clipping, all
+            // declared up-front on the strategy: training must stay
+            // finite where the raw configuration would explode.
+            sync: SyncStrategy::default()
+                .lr_schedule(LrSchedule::Warmup {
+                    warmup: 100,
+                    after: Box::new(LrSchedule::Constant),
+                })
+                .clip_const(0.1)
+                .clip_l2(1.0),
+            ..Default::default()
+        },
     )
     .unwrap();
-    // ...tamed by a tiny poly schedule + aggressive L2 clipping: training
-    // must stay finite where the raw configuration would explode.
-    opt.parameter_manager()
-        .set_lr_schedule(LrSchedule::Warmup {
-            warmup: 100,
-            after: Box::new(LrSchedule::Constant),
-        });
-    opt.parameter_manager().set_grad_policy(GradPolicy {
-        clip_const: Some(0.1),
-        clip_l2: Some(1.0),
-    });
     let report = opt.optimize().unwrap();
     assert!(report.final_loss.is_finite());
     assert!(opt.weights().unwrap().iter().all(|x| x.is_finite()));

@@ -272,7 +272,7 @@ fn mlp_optimizer(
         module.clone(),
         data,
         Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.1) }),
-        TrainConfig { iterations, log_every: 0, sync_mode, ..Default::default() },
+        TrainConfig { iterations, log_every: 0, sync: sync_mode.into(), ..Default::default() },
     )
     .unwrap();
     (ctx, module, opt)

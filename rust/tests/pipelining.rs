@@ -37,7 +37,7 @@ fn optimizer(
             iterations,
             log_every: 0,
             group_size,
-            sync_mode,
+            sync: sync_mode.into(),
             ..Default::default()
         },
     )

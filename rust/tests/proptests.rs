@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use bigdl::bigdl::allreduce::{central_ps_reduce, ring_allreduce};
 use bigdl::bigdl::optim::{Adagrad, Adam, OptimMethod, Sgd};
-use bigdl::bigdl::ParameterManager;
+use bigdl::bigdl::{ParameterManager, SyncOpts};
 use bigdl::sparklet::{Broadcast, FailurePolicy, Shuffle, SparkletContext};
 use bigdl::tensor::partition_ranges;
 use bigdl::util::json::Value;
@@ -95,7 +95,8 @@ fn prop_alg2_sync_equals_serial_update() {
                     sh.write(&bm, m % nodes, m, s, Arc::new(g[r.clone()].to_vec()));
                 }
             }
-            pm.sync_round(&sh, replicas).unwrap();
+            let pending = pm.begin_sync(SyncOpts::new(&sh, replicas)).unwrap();
+            pm.sync_wait(pending).unwrap();
         }
         let distributed = pm.current_weights().unwrap();
 

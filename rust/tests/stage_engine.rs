@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use bigdl::bigdl::allreduce::{central_ps_reduce, ring_allreduce};
 use bigdl::bigdl::optim::Sgd;
-use bigdl::bigdl::ParameterManager;
+use bigdl::bigdl::{ParameterManager, SyncOpts};
 use bigdl::sparklet::{
     FailurePolicy, SchedulePolicy, Shuffle, SparkletContext, TaskContext,
 };
@@ -190,7 +190,8 @@ fn sync_algorithms_agree_under_failures_and_gang_restarts() {
             sh.write(&bm, m % 3, m, s, Arc::new(g[r.clone()].to_vec()));
         }
     }
-    pm.sync_round(&sh, replicas).unwrap();
+    let pending = pm.begin_sync(SyncOpts::new(&sh, replicas)).unwrap();
+    pm.sync_wait(pending).unwrap();
     // SGD lr=1 from zero weights: w = -mean(grad) = -(ring_sum / replicas).
     let w = pm.current_weights().unwrap();
     for (wi, si) in w.iter().zip(&ring) {
