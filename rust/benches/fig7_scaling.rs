@@ -11,13 +11,70 @@
 
 mod common;
 
+use std::sync::Arc;
+use std::time::Instant;
+
+use bigdl::bigdl::{ParameterManager, Sgd};
 use bigdl::netsim::{simulate_training, ComputeModel, NetConfig, SchedMode, SimConfig, SyncAlgo};
+use bigdl::sparklet::SparkletContext;
+
+/// Drive reshard rounds until the owners have caught up with the
+/// membership epoch; returns (rounds that actually moved data, ms).
+fn reshard_to_convergence(pm: &ParameterManager) -> (usize, f64) {
+    let t = Instant::now();
+    let mut moved_rounds = 0usize;
+    while pm.needs_reshard() {
+        if pm.reshard().expect("reshard round").moved > 0 {
+            moved_rounds += 1;
+        }
+    }
+    (moved_rounds, t.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Elastic-membership cost on a REAL Sparklet cluster (not the netsim):
+/// time one staged-commit reshard round after a runtime join and after a
+/// graceful drain, and check both converge in a single data-moving round.
+fn bench_elastic_reshard(rec: &mut common::Recorder) {
+    const PARAMS: usize = 1 << 15; // 32K f32 = 128 KB of weights
+    println!("\nelastic membership: staged-commit reshard cost (real cluster, {PARAMS} params)");
+    println!("{:>8} {:>8} {:>16} {:>16}", "nodes", "shards", "join ms/epochs", "drain ms/epochs");
+    for nodes in [2usize, 4, 8] {
+        let shards = 2 * nodes;
+        let ctx = SparkletContext::local(nodes);
+        let weights = vec![0.5f32; PARAMS];
+        let pm = ParameterManager::init(&ctx, &weights, shards, Arc::new(Sgd::new(0.1))).unwrap();
+
+        ctx.add_node();
+        let (join_epochs, join_ms) = reshard_to_convergence(&pm);
+
+        // Two-phase drain: shards move OFF the draining node while it
+        // still serves block reads, then retirement is a no-op round.
+        ctx.cluster().begin_drain(0);
+        let t = Instant::now();
+        let (mut drain_epochs, _) = reshard_to_convergence(&pm);
+        ctx.cluster().finish_drain(0);
+        drain_epochs += reshard_to_convergence(&pm).0;
+        let drain_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        println!(
+            "{:>8} {:>8} {:>11.2}/{:<4} {:>11.2}/{:<4}",
+            nodes, shards, join_ms, join_epochs, drain_ms, drain_epochs
+        );
+        let base = [("nodes", nodes as f64), ("shards", shards as f64), ("params", PARAMS as f64)];
+        rec.add("reshard_round_ms", &[base[0], base[1], base[2], ("join", 1.0)], join_ms, "ms");
+        rec.add("reshard_round_ms", &[base[0], base[1], base[2], ("join", 0.0)], drain_ms, "ms");
+        rec.add("epochs_to_rebalance", &[("nodes", nodes as f64), ("join", 1.0)], join_epochs as f64, "rounds");
+        rec.add("epochs_to_rebalance", &[("nodes", nodes as f64), ("join", 0.0)], drain_epochs as f64, "rounds");
+    }
+    println!("(staged commit catches the owners up to the epoch in one data-moving round)");
+}
 
 fn main() {
     common::banner(
         "Figure 7: Inception-v1 training throughput scaling (16→256 nodes)",
         "~5.3x speedup at 96 nodes vs 16; reasonable scaling to 256",
     );
+    let mut rec = common::Recorder::new("fig7_scaling");
     let dispatch = common::measure_dispatch_cost(4, 64, common::iters(20, 5));
     println!("calibration: measured Sparklet dispatch cost = {:.1} µs/task\n", dispatch * 1e6);
 
@@ -54,4 +111,7 @@ fn main() {
     }
     println!("\nshape check: speedup@96 should land near the paper's ~5.3x;");
     println!("256 nodes stays well below the ideal 16x (stragglers + sync latency).");
+
+    bench_elastic_reshard(&mut rec);
+    rec.flush();
 }

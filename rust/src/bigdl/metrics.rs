@@ -4,7 +4,7 @@
 use crate::sparklet::{SchedSnapshot, TrafficSnapshot};
 
 /// Timing/traffic breakdown of one training iteration (two jobs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct IterMetrics {
     pub iteration: usize,
     /// Mean loss across replicas.
@@ -45,6 +45,12 @@ pub struct IterMetrics {
     /// Block-store traffic this iteration.
     pub traffic: TrafficSnapshot,
     pub sched: SchedSnapshot,
+    /// Elastic-membership reshard rounds committed by this iteration
+    /// (parameter shards re-balanced onto the current alive set before
+    /// the iteration's jobs dispatched; almost always 0).
+    pub reshard_rounds: usize,
+    /// Cluster membership epoch this iteration's jobs were planned under.
+    pub membership_epoch: u64,
 }
 
 impl IterMetrics {

@@ -47,7 +47,7 @@ pub use compress::Compression;
 pub use optimizer::{DistributedOptimizer, TrainConfig};
 pub use checkpoint::Checkpoint;
 pub use param_mgr::{
-    GradPolicy, GradPublisher, ParameterManager, PendingSync, RoundOp, SyncOpts,
+    GradPolicy, GradPublisher, ParameterManager, PendingSync, ReshardReport, RoundOp, SyncOpts,
 };
 pub use schedule::{LrSchedule, SyncMode, SyncStrategy};
 pub use serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};

@@ -542,6 +542,22 @@ impl DistributedOptimizer {
         // this is what keeps rounds flowing through the pipe while the
         // driver is elsewhere.
         self.pump()?;
+        // Elastic membership: a join/drain/death since the shard owners
+        // were computed makes the parameter placement stale. The reshard
+        // round swaps the weights round id and holds the sync-inflight
+        // slot, so every outstanding pipelined round is drained first —
+        // then training resumes against the re-balanced owners (a joined
+        // node starts taking shard traffic mid-run, a draining node sheds
+        // its shards before retiring).
+        let reshard_rounds = if self.pm.needs_reshard() {
+            self.drain()?;
+            let report = self.pm.reshard()?;
+            // The group plans were placed for the old owners.
+            self.plans = None;
+            usize::from(report.moved > 0)
+        } else {
+            0
+        };
         let iter_idx = self.history.len();
 
         // Drizzle group scheduling (§4.4 / Fig 8): plan placements for the
@@ -566,7 +582,9 @@ impl DistributedOptimizer {
             if boundary || stale {
                 let runner = self.ctx.runner();
                 let fwd = runner.plan_group(self.dataset.preferred_nodes())?;
-                let sync = runner.plan_group(&self.ctx.default_preferred(n))?;
+                // Sync tasks go where the shards live — the owners map,
+                // which tracks elastic re-balances, not a static index.
+                let sync = runner.plan_group(&self.pm.preferred_owners())?;
                 self.plans = Some((fwd, sync));
             }
         } else {
@@ -651,6 +669,8 @@ impl DistributedOptimizer {
             sync_wire_bytes: 0, // filled when this round's sync commits
             traffic: Default::default(),
             sched: sched0,
+            reshard_rounds,
+            membership_epoch: self.pm.owners_epoch(),
         });
 
         // ---- job 2: parameter synchronization (pipelined) -----------------
@@ -699,6 +719,12 @@ impl DistributedOptimizer {
     /// and one [`SyncOpts::averaging`] round means the replicas. The
     /// averaging round IS the barrier — this path never pipelines.
     fn step_local_sgd(&mut self, period: usize) -> Result<IterMetrics> {
+        // Elastic membership (this path never pipelines, so no drain).
+        let reshard_rounds = if self.pm.needs_reshard() {
+            usize::from(self.pm.reshard()?.moved > 0)
+        } else {
+            0
+        };
         let m = self.dataset.num_partitions();
         let n = self.pm.n_shards;
         let bm = self.ctx.blocks();
@@ -781,6 +807,8 @@ impl DistributedOptimizer {
             sync_wire_bytes: self.pm.last_sync_wire_bytes(),
             traffic: bm.stats.snapshot().delta(traffic0),
             sched: sched1,
+            reshard_rounds,
+            membership_epoch: self.pm.owners_epoch(),
         };
         self.history.push(entry.clone());
         if self.cfg.log_every > 0 && iter_idx % self.cfg.log_every == 0 {

@@ -127,8 +127,23 @@ pub struct ParameterManager {
     last_wire_bytes: AtomicU64,
     /// Guards the async path: at most one un-waited sync round at a time
     /// (the round chain is serial — round k+1's old weights are round k's
-    /// output).
+    /// output). A [`ParameterManager::reshard`] round holds the same slot.
     sync_inflight: Arc<AtomicBool>,
+    /// Shard → owning node. Owners are drawn from the alive set of the
+    /// membership epoch in `owners_epoch`; a membership change makes them
+    /// stale until a [`ParameterManager::reshard`] round re-balances.
+    owners: RwLock<Vec<usize>>,
+    /// Membership epoch the current `owners` were computed under.
+    owners_epoch: AtomicU64,
+}
+
+/// What a committed [`ParameterManager::reshard`] round did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReshardReport {
+    /// Shards whose owner changed (blocks moved).
+    pub moved: usize,
+    /// Membership epoch the new owners were computed under.
+    pub epoch: u64,
 }
 
 /// A parameter-synchronization round whose update job is still running on
@@ -207,8 +222,11 @@ impl Drop for PendingSync {
 }
 
 impl ParameterManager {
-    /// Seed the store with the initial weights, sharded N ways
-    /// (shard `n` published from node `n % nodes`, its future owner).
+    /// Seed the store with the initial weights, sharded N ways: shard `n`
+    /// is published on (and owned by) the `n % |alive|`-th ALIVE node of
+    /// the current membership — owners come from the membership view, not
+    /// a raw dense node index, so a manager created after joins/drains
+    /// places shards only on live capacity.
     pub fn init(
         ctx: &SparkletContext,
         initial: &[f32],
@@ -221,9 +239,13 @@ impl ParameterManager {
         let round0 = ctx.next_broadcast_id();
         let bm = ctx.blocks();
         let bcast = Broadcast::new(round0, n_shards);
-        let nodes = ctx.nodes();
+        let membership = ctx.membership();
+        ensure!(!membership.alive.is_empty(), "no alive nodes to shard onto");
+        let owners: Vec<usize> = (0..n_shards)
+            .map(|n| membership.alive[n % membership.alive.len()])
+            .collect();
         for (n, r) in ranges.iter().enumerate() {
-            let owner = n % nodes;
+            let owner = owners[n];
             bcast.publish(&bm, owner, n, Arc::new(initial[r.clone()].to_vec()));
             for b in 0..optim.state_bufs() {
                 bm.put(
@@ -245,6 +267,8 @@ impl ParameterManager {
             strategy: RwLock::new(SyncStrategy::default()),
             last_wire_bytes: AtomicU64::new(0),
             sync_inflight: Arc::new(AtomicBool::new(false)),
+            owners: RwLock::new(owners),
+            owners_epoch: AtomicU64::new(membership.epoch),
         })
     }
 
@@ -360,9 +384,9 @@ impl ParameterManager {
         let old = self.weights_broadcast();
         let new_round = self.ctx.next_broadcast_id();
         let bcast = Broadcast::new(new_round, self.n_shards);
-        let nodes = self.ctx.nodes();
+        let owners = self.owners.read().unwrap().clone();
         for (n, r) in self.ranges.iter().enumerate() {
-            let owner = n % nodes;
+            let owner = owners[n];
             bcast.publish(&bm, owner, n, Arc::new(weights[r.clone()].to_vec()));
             for (b, buf) in state.iter().enumerate() {
                 bm.put(owner, Self::state_key(self.instance, new_round, n, b), BlockData::F32(Arc::new(buf[r.clone()].to_vec())));
@@ -386,41 +410,141 @@ impl ParameterManager {
         self.step.load(Ordering::SeqCst)
     }
 
-    /// Run one synchronization round to completion:
-    /// `begin_sync` + `sync_wait` (the barrier path).
-    #[deprecated(note = "use begin_sync(SyncOpts::new(..)) + sync_wait")]
-    pub fn sync_round(&self, shuffle: &Shuffle, n_replicas: usize) -> Result<Broadcast> {
-        let pending = self.begin_sync(SyncOpts::new(shuffle, n_replicas))?;
-        self.sync_wait(pending)
+    /// Current shard → owner map (the node each shard's blocks live on
+    /// and its sync task prefers).
+    pub fn owners(&self) -> Vec<usize> {
+        self.owners.read().unwrap().clone()
     }
 
-    /// `begin_sync` with a Drizzle plan + `sync_wait`.
-    #[deprecated(note = "use begin_sync(SyncOpts::new(..).with_plan(..)) + sync_wait")]
-    pub fn sync_round_planned(
-        &self,
-        shuffle: &Shuffle,
-        n_replicas: usize,
-        plan: &GroupPlan,
-    ) -> Result<Broadcast> {
-        let pending = self.begin_sync(SyncOpts::new(shuffle, n_replicas).with_plan(plan))?;
-        self.sync_wait(pending)
+    /// Membership epoch the current owners were computed under.
+    pub fn owners_epoch(&self) -> u64 {
+        self.owners_epoch.load(Ordering::SeqCst)
     }
 
-    /// Start a round without waiting it.
-    #[deprecated(note = "use begin_sync(SyncOpts::new(..))")]
-    pub fn sync_round_async(&self, shuffle: &Shuffle, n_replicas: usize) -> Result<PendingSync> {
-        self.begin_sync(SyncOpts::new(shuffle, n_replicas))
+    /// Whether the cluster membership has changed since the owners were
+    /// last (re)computed — i.e. a [`ParameterManager::reshard`] round is
+    /// due.
+    pub fn needs_reshard(&self) -> bool {
+        self.ctx.epoch() != self.owners_epoch()
     }
 
-    /// Start a planned round without waiting it.
-    #[deprecated(note = "use begin_sync(SyncOpts::new(..).with_plan(..))")]
-    pub fn sync_round_async_planned(
-        &self,
-        shuffle: &Shuffle,
-        n_replicas: usize,
-        plan: &GroupPlan,
-    ) -> Result<PendingSync> {
-        self.begin_sync(SyncOpts::new(shuffle, n_replicas).with_plan(plan))
+    /// Owner-preferred placement for shard-width jobs: sync task `n` on
+    /// shard `n`'s owner (the parameter-server co-location of Algorithm
+    /// 2). Used by every sync round and by the optimizer's sync group
+    /// plan.
+    pub fn preferred_owners(&self) -> Vec<Option<usize>> {
+        self.owners.read().unwrap().iter().map(|&o| Some(o)).collect()
+    }
+
+    /// Re-balance the parameter shards onto the CURRENT membership as one
+    /// staged-commit **reshard round** — the elastic-membership analogue
+    /// of a sync round, reusing the same copy-on-write machinery:
+    ///
+    /// * New owners are `alive[n % |alive|]` over the current alive set
+    ///   (so a joined node picks up shards and a draining node sheds
+    ///   all of its).
+    /// * One task per shard stages the shard's weights AND optimizer
+    ///   state under a fresh round id on the shard's NEW owner. The
+    ///   destination is the captured owner, not `tc.node` — a retried
+    ///   task on another node still lands the blocks correctly. Source
+    ///   blocks are read cluster-wide, so a draining node (which still
+    ///   serves reads) hands its shards off remotely.
+    /// * Commit-on-success: only after every task succeeded do round id,
+    ///   owners and owners-epoch swap and the old round's blocks retire —
+    ///   the step counter is untouched (a reshard moves state, it does
+    ///   not train). A mid-round failure rolls back every staged block
+    ///   ([`remove_staged_round`]) and leaves round, owners and placement
+    ///   exactly as they were.
+    ///
+    /// Error-feedback residuals are invalidated like on a checkpoint
+    /// restore — they were accumulated against the replaced round id and
+    /// losing them is safe (they reset to zero).
+    ///
+    /// Holds the same single-inflight slot as a sync round: resharding
+    /// with a sync in flight errors (drain the pipeline first).
+    pub fn reshard(&self) -> Result<ReshardReport> {
+        let membership = self.ctx.membership();
+        ensure!(!membership.alive.is_empty(), "no alive nodes to reshard onto");
+        let new_owners: Vec<usize> = (0..self.n_shards)
+            .map(|n| membership.alive[n % membership.alive.len()])
+            .collect();
+        let old_owners = self.owners();
+        if new_owners == old_owners {
+            // Membership changed but the balance is unaffected (e.g. a
+            // revival of a node that never owned shards): just adopt the
+            // epoch — no blocks move, no round runs.
+            self.owners_epoch.store(membership.epoch, Ordering::SeqCst);
+            return Ok(ReshardReport { moved: 0, epoch: membership.epoch });
+        }
+        ensure!(
+            self.sync_inflight
+                .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok(),
+            "a sync round is in flight (drain it before resharding)"
+        );
+        let release = || self.sync_inflight.store(false, Ordering::SeqCst);
+
+        let old_round = self.round.load(Ordering::SeqCst);
+        let new_round = self.ctx.next_broadcast_id();
+        let old_bcast = Broadcast::new(old_round, self.n_shards);
+        let new_bcast = Broadcast::new(new_round, self.n_shards);
+        let state_bufs = self.optim.state_bufs();
+        let instance = self.instance;
+        let owners_cap = Arc::new(new_owners.clone());
+        let preferred: Vec<Option<usize>> = new_owners.iter().map(|&o| Some(o)).collect();
+        let move_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> = {
+            let owners = Arc::clone(&owners_cap);
+            Arc::new(move |tc| {
+                let bm = tc.blocks();
+                let n = tc.partition;
+                let dst = owners[n];
+                let weights = old_bcast.fetch(&bm, tc.node, n)?;
+                for b in 0..state_bufs {
+                    let state = bm
+                        .get(tc.node, &Self::state_key(instance, old_round, n, b))
+                        .ok_or_else(|| anyhow!("optimizer state {n}/{b} missing"))?;
+                    bm.put(dst, Self::state_key(instance, new_round, n, b), state);
+                }
+                new_bcast.publish(&bm, dst, n, weights);
+                Ok(())
+            })
+        };
+        if let Err(e) = self.ctx.runner().run(&preferred, move_task) {
+            // Roll back the staged copy; the old round id, owners and
+            // placement are untouched. (No shuffle is consumed by a
+            // reshard — the fresh unused id makes that sweep a no-op.)
+            let no_shuffle = Shuffle::new(self.ctx.next_shuffle_id(), 0, 0);
+            remove_staged_round(
+                &self.ctx.blocks(),
+                new_round,
+                self.n_shards,
+                state_bufs,
+                instance,
+                &no_shuffle,
+            );
+            release();
+            return Err(e);
+        }
+        // Commit: swap round + owners under the new epoch, retire the old
+        // round's weight/state blocks, invalidate residuals.
+        let bm = self.ctx.blocks();
+        let moved = new_owners
+            .iter()
+            .zip(&old_owners)
+            .filter(|(a, b)| a != b)
+            .count();
+        self.round.store(new_round, Ordering::SeqCst);
+        *self.owners.write().unwrap() = new_owners;
+        self.owners_epoch.store(membership.epoch, Ordering::SeqCst);
+        old_bcast.cleanup(&bm);
+        for n in 0..self.n_shards {
+            for b in 0..state_bufs {
+                bm.remove(&Self::state_key(instance, old_round, n, b));
+            }
+        }
+        Self::remove_prefix(&bm, &format!("resid/{}/{}/", instance, old_round));
+        release();
+        Ok(ReshardReport { moved, epoch: membership.epoch })
     }
 
     /// The map-side publisher matching this manager's current
@@ -510,7 +634,10 @@ impl ParameterManager {
         let scale = 1.0f32 / opts.replicas as f32;
         let state_bufs = self.optim.state_bufs();
         let instance = self.instance;
-        let preferred = self.ctx.default_preferred(self.n_shards);
+        // Owner-preferred: sync task `n` runs where shard `n`'s blocks
+        // live (the parameter-server co-location — after a reshard this
+        // follows the rebalanced owners, not a static index map).
+        let preferred = self.preferred_owners();
         let runner = self.ctx.runner();
         // Dispatch through the JobRunner: pre-assigned (bare batched
         // enqueues) when the caller planned a group, placed per-task

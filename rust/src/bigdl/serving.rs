@@ -5,11 +5,15 @@
 //! * **Weights** live as sharded broadcast blocks in the
 //!   [`BlockManager`](crate::sparklet::BlockManager), placed exactly like
 //!   [`ParameterManager`](super::param_mgr::ParameterManager) shards
-//!   (shard `n` owned by node `n % nodes`), optionally replicated on a
-//!   second node so serving survives single-node death. Deployment is
-//!   copy-on-write: a new round is published and swapped in, and the
+//!   (shard `n` owned by the `n % |alive|`-th alive node of the
+//!   membership the deployment was placed under), optionally replicated
+//!   on a second node so serving survives single-node death. Deployment
+//!   is copy-on-write: a new round is published and swapped in, and the
 //!   outgoing round survives one more deployment cycle so in-flight
-//!   serves finish against intact blocks. Tasks read weights through a
+//!   serves finish against intact blocks. A membership change (elastic
+//!   join, drain, death) marks the placement stale; the serve loop runs
+//!   one [`PredictService::reshard`] round — the same staged-commit
+//!   hot-redeploy — before the next batch. Tasks read weights through a
 //!   per-node assembled cache — one shard-concat per node per deployment,
 //!   zero-copy `Arc` clones after that.
 //! * **Dispatch**: incoming requests are micro-batched and driven through
@@ -124,6 +128,8 @@ pub struct ServingStats {
     /// Placement plans computed (group boundaries + dead-node refreshes).
     pub replans: AtomicU64,
     pub deploys: AtomicU64,
+    /// Serving reshard rounds committed (membership-change re-balances).
+    pub reshards: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -132,6 +138,7 @@ pub struct ServingSnapshot {
     pub requests: u64,
     pub replans: u64,
     pub deploys: u64,
+    pub reshards: u64,
 }
 
 impl ServingStats {
@@ -141,6 +148,7 @@ impl ServingStats {
             requests: self.requests.load(Ordering::Relaxed),
             replans: self.replans.load(Ordering::Relaxed),
             deploys: self.deploys.load(Ordering::Relaxed),
+            reshards: self.reshards.load(Ordering::Relaxed),
         }
     }
 }
@@ -152,6 +160,10 @@ struct Deployment {
     bcast: Broadcast,
     param_count: usize,
     prev: Option<Broadcast>,
+    /// Membership epoch this deployment's shard placement was computed
+    /// under — a later epoch means the placement is stale and the serve
+    /// loop runs a [`PredictService::reshard`] before dispatching.
+    epoch: u64,
 }
 
 /// Per-node cache of the assembled (concatenated) weight vector for one
@@ -246,7 +258,8 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// must not park a shard on a dead store.
     pub fn deploy(&self, weights: &[f32]) -> Result<()> {
         ensure!(!weights.is_empty(), "empty weight vector");
-        let alive = self.ctx.cluster().alive_nodes();
+        let membership = self.ctx.membership();
+        let alive = &membership.alive;
         ensure!(!alive.is_empty(), "no alive nodes to deploy onto");
         let parts = self.cfg.n_shards.unwrap_or(self.ctx.nodes()).max(1).min(weights.len());
         let bcast = Broadcast::new(self.ctx.next_broadcast_id(), parts);
@@ -259,7 +272,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
                 bcast.publish(&bm, alive[(n + 1) % alive.len()], n, shard);
             }
         }
-        self.swap(bcast, weights.len());
+        self.swap(bcast, weights.len(), membership.epoch);
         Ok(())
     }
 
@@ -270,6 +283,10 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// `DistributedOptimizer::deploy_to`.
     pub fn deploy_sharded(&self, src: &Broadcast, param_count: usize) -> Result<()> {
         ensure!(src.parts > 0, "source broadcast has no shards");
+        // Epoch read BEFORE placement: a membership change racing the
+        // deploy leaves the new round marked stale, so the next serve
+        // reshards it.
+        let epoch = self.ctx.epoch();
         let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
         let src = *src;
         let replicate = self.cfg.replicate;
@@ -295,16 +312,85 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
                 }
                 Ok(())
             });
-        self.runner.run(&self.ctx.default_preferred(src.parts), task)?;
-        self.swap(dst, param_count);
+        if let Err(e) = self.runner.run(&self.ctx.default_preferred(src.parts), task) {
+            // Staged-commit: a failed re-publish must not leak its
+            // partially published shards — the deployed round is
+            // untouched, so just drop the staging.
+            dst.cleanup(&self.ctx.blocks());
+            return Err(e);
+        }
+        self.swap(dst, param_count, epoch);
         Ok(())
+    }
+
+    /// Whether the deployed round's shard placement predates the current
+    /// membership — i.e. a [`PredictService::reshard`] is due. False when
+    /// nothing is deployed.
+    pub fn needs_reshard(&self) -> bool {
+        self.deployed
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|d| d.epoch != self.ctx.epoch())
+    }
+
+    /// Re-balance the deployed serving shards onto the CURRENT membership
+    /// as one staged-commit re-publish round: one task per shard reads the
+    /// deployed shard (cluster-wide, so a draining owner hands it off
+    /// remotely and a dead owner's replica is found) and publishes it
+    /// under a fresh round id on the shard's new owner (plus a replica
+    /// when configured). Commit is the usual hot-redeploy swap — the
+    /// outgoing round keeps serving in-flight rounds for one more
+    /// deployment cycle. A mid-round failure drops every staged shard and
+    /// leaves the deployed round and its placement untouched.
+    ///
+    /// Returns `true` if a reshard round ran, `false` if there was nothing
+    /// to do (no deployment, or placement already current).
+    pub fn reshard(&self) -> Result<bool> {
+        let (src, param_count) = {
+            let guard = self.deployed.lock().unwrap();
+            match guard.as_ref() {
+                Some(d) if d.epoch != self.ctx.epoch() => (d.bcast, d.param_count),
+                _ => return Ok(false),
+            }
+        };
+        let membership = self.ctx.membership();
+        ensure!(!membership.alive.is_empty(), "no alive nodes to reshard onto");
+        let alive = Arc::new(membership.alive);
+        let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
+        let replicate = self.cfg.replicate;
+        let preferred: Vec<Option<usize>> =
+            (0..src.parts).map(|n| Some(alive[n % alive.len()])).collect();
+        let task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> = {
+            let alive = Arc::clone(&alive);
+            Arc::new(move |tc: &TaskContext| {
+                let bm = tc.blocks();
+                let n = tc.partition;
+                // Publish to the CAPTURED owner, not tc.node — a retried
+                // task on a fallback node still lands the shard correctly.
+                let i = n % alive.len();
+                let shard = src.fetch(&bm, tc.node, n)?;
+                dst.publish(&bm, alive[i], n, Arc::clone(&shard));
+                if replicate && alive.len() > 1 {
+                    dst.publish(&bm, alive[(i + 1) % alive.len()], n, shard);
+                }
+                Ok(())
+            })
+        };
+        if let Err(e) = self.runner.run(&preferred, task) {
+            dst.cleanup(&self.ctx.blocks());
+            return Err(e);
+        }
+        self.swap(dst, param_count, membership.epoch);
+        self.stats.reshards.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
     }
 
     /// Install a new round. The outgoing round is kept alive as `prev`
     /// until the NEXT deployment retires it, so a serve that captured the
     /// old round before a hot redeploy completes against intact blocks
     /// (only two redeploys inside one in-flight serve can starve it).
-    fn swap(&self, bcast: Broadcast, param_count: usize) {
+    fn swap(&self, bcast: Broadcast, param_count: usize, epoch: u64) {
         let bm = self.ctx.blocks();
         let mut guard = self.deployed.lock().unwrap();
         let prev = match guard.take() {
@@ -318,7 +404,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         };
         let mut keep = vec![bcast.id];
         keep.extend(prev.map(|p| p.id));
-        *guard = Some(Deployment { bcast, param_count, prev });
+        *guard = Some(Deployment { bcast, param_count, prev, epoch });
         drop(guard);
         sweep_assembled(&bm, self.instance, &keep);
         self.stats.deploys.fetch_add(1, Ordering::Relaxed);
@@ -350,6 +436,12 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     fn dispatch(&self, requests: &[T], red: Reduction, planned: bool) -> Result<Vec<Reduced>> {
         if requests.is_empty() {
             return Ok(Vec::new());
+        }
+        // Elastic membership: a join/drain/death since the last deploy
+        // makes the shard placement stale — re-balance before serving so
+        // this batch reads owner-local shards on the current alive set.
+        if self.needs_reshard() {
+            self.reshard()?;
         }
         let bcast = self.weights_round()?;
         let width = self.ctx.nodes();
@@ -428,6 +520,9 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         R: Send + 'static,
         F: Fn(Vec<Vec<f32>>, &[T]) -> Result<R> + Send + Sync + 'static,
     {
+        if self.needs_reshard() {
+            self.reshard()?;
+        }
         let bcast = self.weights_round()?;
         let scorer = Arc::clone(&self.scorer);
         let instance = self.instance;

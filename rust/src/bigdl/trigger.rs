@@ -77,20 +77,7 @@ mod tests {
 
     #[test]
     fn min_loss_uses_metrics() {
-        let mut m = IterMetrics {
-            iteration: 0,
-            loss: 0.5,
-            total_s: 0.0,
-            fwdbwd_s: 0.0,
-            compute_s: 0.0,
-            fetch_s: 0.0,
-            sync_s: 0.0,
-            sync_lag: 0,
-            fwd_overlap: 1,
-            dispatch_ns: 0,
-            traffic: Default::default(),
-            sched: Default::default(),
-        };
+        let mut m = IterMetrics { loss: 0.5, fwd_overlap: 1, ..Default::default() };
         let t = Trigger::MinLoss(0.4);
         assert!(!t.fired(&TrainState { iteration: 1, epoch: 0, last: Some(&m) }));
         m.loss = 0.39;

@@ -76,6 +76,9 @@ COMMANDS:
           [--sync-algo shuffle|ring] [--compress none|int8|topk:<k>]
           [--local-sgd <period>] [--lr-schedule SPEC]
           [--clip-const C] [--clip-l2 NORM]
+          [--elastic-script join@5,drain@10]   scripted elastic membership:
+              op@iter[:node] events (join | drain | kill), applied between
+              iterations; drain/kill default to the highest-id alive node
   predict --model ncf        distributed inference over synthetic samples
           [--nodes 4] [--records 8192]
   help                       this message

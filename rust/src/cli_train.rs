@@ -8,11 +8,11 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use bigdl::bigdl::{
     inference, mlp_rdd, optim, Compression, DistributedOptimizer, LinReg, Mlp, Module, Sample,
-    SyncAlgo, SyncMode, SyncStrategy, TrainConfig,
+    SyncAlgo, SyncMode, SyncStrategy, TrainConfig, TrainReport,
 };
 use bigdl::config::Config;
 use bigdl::data;
@@ -145,6 +145,87 @@ fn sync_strategy(opts: &Opts) -> Result<SyncStrategy> {
     Ok(strategy)
 }
 
+/// One scripted elastic-membership event (`--elastic-script`).
+struct ElasticEvent {
+    /// Iteration BEFORE which the event is applied.
+    iter: usize,
+    op: ElasticOp,
+}
+
+enum ElasticOp {
+    /// `join@N`: a new node joins the cluster.
+    Join,
+    /// `drain@N[:node]`: graceful drain-and-retire (defaults to the
+    /// highest-id alive node).
+    Drain(Option<usize>),
+    /// `kill@N[:node]`: crash the node's executors (its block store stays
+    /// readable — a compute failure, not data loss).
+    Kill(Option<usize>),
+}
+
+/// Parse `join@5,drain@10,kill@12:0` — comma-separated `op@iter[:node]`.
+fn parse_elastic_script(s: &str) -> Result<Vec<ElasticEvent>> {
+    let mut events = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (op, rest) = part
+            .split_once('@')
+            .with_context(|| format!("elastic event {part:?}: expected op@iter[:node]"))?;
+        let (iter, node) = match rest.split_once(':') {
+            Some((i, n)) => (i.parse()?, Some(n.parse()?)),
+            None => (rest.parse()?, None),
+        };
+        let op = match op {
+            "join" => {
+                ensure!(node.is_none(), "join takes no node: {part:?}");
+                ElasticOp::Join
+            }
+            "drain" => ElasticOp::Drain(node),
+            "kill" => ElasticOp::Kill(node),
+            other => bail!("unknown elastic op {other:?} in {part:?} (join|drain|kill)"),
+        };
+        events.push(ElasticEvent { iter, op });
+    }
+    events.sort_by_key(|e| e.iter);
+    Ok(events)
+}
+
+fn apply_elastic(ctx: &SparkletContext, ev: &ElasticEvent) -> Result<()> {
+    let cluster = ctx.cluster();
+    match ev.op {
+        ElasticOp::Join => {
+            let id = ctx.add_node();
+            println!(
+                "elastic @ iter {}: node {id} joined (epoch {})",
+                ev.iter,
+                cluster.epoch()
+            );
+        }
+        ElasticOp::Drain(node) => {
+            let alive = cluster.alive_nodes();
+            ensure!(alive.len() > 1, "elastic: refusing to drain the last alive node");
+            let n = node.unwrap_or(*alive.last().unwrap());
+            cluster.drain_node(n);
+            println!(
+                "elastic @ iter {}: node {n} drained and retired (epoch {})",
+                ev.iter,
+                cluster.epoch()
+            );
+        }
+        ElasticOp::Kill(node) => {
+            let alive = cluster.alive_nodes();
+            ensure!(alive.len() > 1, "elastic: refusing to kill the last alive node");
+            let n = node.unwrap_or(*alive.last().unwrap());
+            cluster.kill_node(n);
+            println!(
+                "elastic @ iter {}: node {n} killed (epoch {})",
+                ev.iter,
+                cluster.epoch()
+            );
+        }
+    }
+    Ok(())
+}
+
 fn build_ctx(s: &Settings) -> SparkletContext {
     let ctx = SparkletContext::new(ClusterSpec {
         nodes: s.nodes,
@@ -213,8 +294,33 @@ pub fn train(opts: &Opts) -> Result<()> {
             optimizer.resume_from(Path::new(dir))?;
         }
     }
-    let report = optimizer.optimize()?;
+    let elastic = opts
+        .get("elastic-script")
+        .map(parse_elastic_script)
+        .transpose()?
+        .unwrap_or_default();
+    let report = if elastic.is_empty() {
+        optimizer.optimize()?
+    } else {
+        // Step-driven loop with scripted membership changes injected
+        // between iterations; resharding happens inside `step()`.
+        for it in 0..s.iterations {
+            for ev in elastic.iter().filter(|e| e.iter == it) {
+                apply_elastic(&ctx, ev)?;
+            }
+            optimizer.step()?;
+        }
+        optimizer.drain()?;
+        TrainReport::from_history(&optimizer.history, optimizer.global_batch())
+    };
     println!("\n{report}");
+    if !elastic.is_empty() {
+        let reshards: usize = optimizer.history.iter().map(|m| m.reshard_rounds).sum();
+        println!(
+            "elastic: {reshards} reshard rounds, final membership epoch {}",
+            ctx.epoch()
+        );
+    }
     let sched = ctx.scheduler().stats.snapshot();
     println!(
         "scheduler: {} jobs, {} tasks, {} retries, {} gang restarts",

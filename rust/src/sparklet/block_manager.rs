@@ -11,7 +11,7 @@
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
@@ -123,35 +123,49 @@ struct NodeStore {
     alive: AtomicBool,
 }
 
-/// Cluster-wide in-memory storage: one [`NodeStore`] per node.
+impl NodeStore {
+    fn new() -> NodeStore {
+        NodeStore { blocks: Mutex::new(HashMap::new()), alive: AtomicBool::new(true) }
+    }
+}
+
+/// Cluster-wide in-memory storage: one [`NodeStore`] per node. The store
+/// table is growable in lock-step with elastic cluster joins
+/// (`Cluster::add_node` ↔ [`BlockManager::add_node`]); node ids are
+/// stable dense indices and the table never shrinks — a retired node's
+/// store just stops being written to.
 pub struct BlockManager {
-    stores: Vec<NodeStore>,
+    stores: RwLock<Vec<NodeStore>>,
     pub stats: TrafficStats,
 }
 
 impl BlockManager {
     pub fn new(nodes: usize) -> Arc<BlockManager> {
         Arc::new(BlockManager {
-            stores: (0..nodes)
-                .map(|_| NodeStore {
-                    blocks: Mutex::new(HashMap::new()),
-                    alive: AtomicBool::new(true),
-                })
-                .collect(),
+            stores: RwLock::new((0..nodes).map(|_| NodeStore::new()).collect()),
             stats: TrafficStats::default(),
         })
     }
 
     pub fn nodes(&self) -> usize {
-        self.stores.len()
+        self.stores.read().unwrap().len()
+    }
+
+    /// Grow the store table for a node that joined at runtime; returns
+    /// the new node id.
+    pub fn add_node(&self) -> usize {
+        let mut stores = self.stores.write().unwrap();
+        stores.push(NodeStore::new());
+        stores.len() - 1
     }
 
     /// Store a block on `node`'s store.
     pub fn put(&self, node: usize, id: BlockId, data: BlockData) {
-        debug_assert!(node < self.stores.len());
+        let stores = self.stores.read().unwrap();
+        debug_assert!(node < stores.len());
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats.put_bytes.fetch_add(data.bytes() as u64, Ordering::Relaxed);
-        self.stores[node].blocks.lock().unwrap().insert(id, data);
+        stores[node].blocks.lock().unwrap().insert(id, data);
     }
 
     /// Read a block as seen from `reader_node`: local store first, then the
@@ -162,7 +176,8 @@ impl BlockManager {
             self.stats.local_bytes.fetch_add(d.bytes() as u64, Ordering::Relaxed);
             return Some(d);
         }
-        for n in 0..self.stores.len() {
+        let n_stores = self.nodes();
+        for n in 0..n_stores {
             if n == reader_node {
                 continue;
             }
@@ -177,7 +192,8 @@ impl BlockManager {
 
     /// Read from one specific node's store (no metering, no fallback).
     pub fn get_on(&self, node: usize, id: &BlockId) -> Option<BlockData> {
-        let store = &self.stores[node];
+        let stores = self.stores.read().unwrap();
+        let store = &stores[node];
         if !store.alive.load(Ordering::Relaxed) {
             return None;
         }
@@ -185,7 +201,7 @@ impl BlockManager {
     }
 
     pub fn remove(&self, id: &BlockId) {
-        for s in &self.stores {
+        for s in self.stores.read().unwrap().iter() {
             s.blocks.lock().unwrap().remove(id);
         }
     }
@@ -193,32 +209,40 @@ impl BlockManager {
     /// Drop blocks matching a predicate on every node (e.g. a finished
     /// shuffle round's slices).
     pub fn remove_matching(&self, pred: impl Fn(&BlockId) -> bool) {
-        for s in &self.stores {
+        for s in self.stores.read().unwrap().iter() {
             s.blocks.lock().unwrap().retain(|id, _| !pred(id));
         }
+    }
+
+    /// Drop blocks matching a predicate on ONE node (a drained node's
+    /// resharded-away blocks — scoped so other replicas survive).
+    pub fn remove_matching_on(&self, node: usize, pred: impl Fn(&BlockId) -> bool) {
+        let stores = self.stores.read().unwrap();
+        stores[node].blocks.lock().unwrap().retain(|id, _| !pred(id));
     }
 
     /// Simulate node failure: mark dead and drop all of its blocks
     /// (cached partitions are lost → lineage recompute; shuffle outputs
     /// are lost → map task re-run).
     pub fn kill_node(&self, node: usize) {
-        self.stores[node].alive.store(false, Ordering::Relaxed);
-        self.stores[node].blocks.lock().unwrap().clear();
+        let stores = self.stores.read().unwrap();
+        stores[node].alive.store(false, Ordering::Relaxed);
+        stores[node].blocks.lock().unwrap().clear();
     }
 
     pub fn revive_node(&self, node: usize) {
-        self.stores[node].alive.store(true, Ordering::Relaxed);
+        self.stores.read().unwrap()[node].alive.store(true, Ordering::Relaxed);
     }
 
     pub fn node_alive(&self, node: usize) -> bool {
-        self.stores[node].alive.load(Ordering::Relaxed)
+        self.stores.read().unwrap()[node].alive.load(Ordering::Relaxed)
     }
 
     /// Total blocks and bytes currently resident (for memory accounting).
     pub fn usage(&self) -> (usize, usize) {
         let mut blocks = 0;
         let mut bytes = 0;
-        for s in &self.stores {
+        for s in self.stores.read().unwrap().iter() {
             let m = s.blocks.lock().unwrap();
             blocks += m.len();
             bytes += m.values().map(|b| b.bytes()).sum::<usize>();

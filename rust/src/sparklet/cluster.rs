@@ -10,14 +10,24 @@
 //! on it fail fast and the scheduler re-runs them elsewhere (paper §3.4
 //! fine-grained recovery).
 //!
+//! **Elastic membership** (shared-cluster operation, paper §5): the node
+//! set is no longer fixed at [`Cluster::start`]. [`Cluster::add_node`]
+//! appends a fresh executor pool at runtime; [`Cluster::begin_drain`] /
+//! [`Cluster::finish_drain`] retire one gracefully — placements stop
+//! immediately, in-flight tasks finish and still count as successes
+//! (unlike [`Cluster::kill_node`]'s crash path, which stays). Every
+//! membership transition bumps a cluster-wide **epoch**; consumers
+//! snapshot [`Cluster::membership`] and treat an epoch change as a
+//! staleness signal, exactly like node death or backlog skew.
+//!
 //! The pool also exposes a slot-availability signal
 //! ([`Cluster::wait_for_slot`]) so delay scheduling can block on a condvar
 //! instead of spinning.
 
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -37,7 +47,9 @@ pub struct ClusterSpec {
     /// of this (in-process) cluster, so multi-slot nodes don't
     /// oversubscribe. The resolved width is a cluster-wide static — a
     /// retried task on another node gets the identical kernel split,
-    /// preserving lineage determinism.
+    /// preserving lineage determinism. Elastic joins do NOT re-resolve it:
+    /// the split is pinned to the *initial* topology so a task retried
+    /// after a join still produces bit-identical partials.
     pub cores_per_slot: usize,
 }
 
@@ -57,6 +69,46 @@ impl ClusterSpec {
         let avail = std::thread::available_parallelism().map_or(1, |n| n.get());
         (avail / (self.nodes * self.slots_per_node).max(1)).max(1)
     }
+}
+
+/// Lifecycle of one node. Transitions: `Alive → Draining → Retired`
+/// (graceful scale-down), `Alive|Draining → Dead` (crash), `Dead → Alive`
+/// (revival). `Retired` is terminal — its executor threads have exited.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum NodeState {
+    /// Accepts placements and executes tasks.
+    Alive = 0,
+    /// No new placements; already-queued tasks still run to completion
+    /// and its block store still serves reads.
+    Draining = 1,
+    /// Crashed: results from it count as failures, blocks are lost.
+    Dead = 2,
+    /// Drained and gone; the slot id is a permanent tombstone (node ids
+    /// are stable dense indices — they are never reused).
+    Retired = 3,
+}
+
+impl NodeState {
+    fn from_u8(v: u8) -> NodeState {
+        match v {
+            0 => NodeState::Alive,
+            1 => NodeState::Draining,
+            2 => NodeState::Dead,
+            _ => NodeState::Retired,
+        }
+    }
+}
+
+/// A consistent snapshot of cluster membership: the epoch counter plus the
+/// node ids that were strictly [`NodeState::Alive`] at that epoch.
+/// Planning layers key their staleness checks on `epoch` — any join,
+/// drain, kill, retire or revival bumps it, so a plan stamped with an old
+/// epoch knows to replace itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    pub epoch: u64,
+    pub alive: Vec<usize>,
 }
 
 /// A task closure, given the node id it landed on.
@@ -149,23 +201,87 @@ impl CompletionHub {
 }
 
 struct Node {
-    /// Task queue sender; `None` once the cluster has shut down (taking
-    /// the sender closes the channel, which is what lets the executor
-    /// threads observe shutdown and exit).
+    /// Task queue sender; `None` once the node has retired or the cluster
+    /// has shut down (taking the sender closes the channel, which is what
+    /// lets the executor threads observe shutdown and exit).
     tx: Mutex<Option<mpsc::Sender<Vec<TaskFn>>>>,
-    alive: Arc<AtomicBool>,
+    state: Arc<AtomicU8>,
     /// Tasks queued or running on this node (placement load signal).
     inflight: Arc<AtomicUsize>,
     /// Notified every time a task finishes (slot-availability signal).
     slot_signal: Arc<(Mutex<()>, Condvar)>,
 }
 
+impl Node {
+    fn state(&self) -> NodeState {
+        NodeState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+}
+
 /// The running cluster.
 pub struct Cluster {
     spec: ClusterSpec,
-    nodes: Vec<Node>,
+    /// Growable node table: ids are stable dense indices, retired slots
+    /// are tombstones (the vec only ever grows).
+    nodes: RwLock<Vec<Arc<Node>>>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     completions: Arc<CompletionHub>,
+    /// Membership epoch: bumped on every join/drain/retire/kill/revival.
+    epoch: AtomicU64,
+}
+
+/// Spawn the executor pool for one node: `slots` threads pulling batches
+/// from a shared receiver until the channel closes.
+fn spawn_executors(
+    node_id: usize,
+    slots: usize,
+    rx: mpsc::Receiver<Vec<TaskFn>>,
+    inflight: &Arc<AtomicUsize>,
+    slot_signal: &Arc<(Mutex<()>, Condvar)>,
+    threads: &mut Vec<JoinHandle<()>>,
+) {
+    let rx = Arc::new(Mutex::new(rx));
+    for slot in 0..slots {
+        let rx = Arc::clone(&rx);
+        let inflight = Arc::clone(inflight);
+        let slot_signal = Arc::clone(slot_signal);
+        let handle = std::thread::Builder::new()
+            .name(format!("node{node_id}-slot{slot}"))
+            .spawn(move || loop {
+                // Take one batch; exit when the channel closes.
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match batch {
+                    Ok(tasks) => {
+                        for f in tasks {
+                            f(node_id);
+                            inflight.fetch_sub(1, Ordering::Relaxed);
+                            let (lock, cv) = &*slot_signal;
+                            let _g = lock.lock().unwrap();
+                            cv.notify_all();
+                        }
+                    }
+                    Err(_) => break,
+                }
+            })
+            .expect("spawning executor thread");
+        threads.push(handle);
+    }
+}
+
+fn make_node(node_id: usize, slots: usize, threads: &mut Vec<JoinHandle<()>>) -> Arc<Node> {
+    let (tx, rx) = mpsc::channel::<Vec<TaskFn>>();
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let slot_signal = Arc::new((Mutex::new(()), Condvar::new()));
+    spawn_executors(node_id, slots, rx, &inflight, &slot_signal, threads);
+    Arc::new(Node {
+        tx: Mutex::new(Some(tx)),
+        state: Arc::new(AtomicU8::new(NodeState::Alive as u8)),
+        inflight,
+        slot_signal,
+    })
 }
 
 impl Cluster {
@@ -174,46 +290,14 @@ impl Cluster {
         let mut nodes = Vec::with_capacity(spec.nodes);
         let mut threads = Vec::new();
         for node_id in 0..spec.nodes {
-            let (tx, rx) = mpsc::channel::<Vec<TaskFn>>();
-            let rx = Arc::new(Mutex::new(rx));
-            let alive = Arc::new(AtomicBool::new(true));
-            let inflight = Arc::new(AtomicUsize::new(0));
-            let slot_signal = Arc::new((Mutex::new(()), Condvar::new()));
-            for slot in 0..spec.slots_per_node {
-                let rx = Arc::clone(&rx);
-                let inflight = Arc::clone(&inflight);
-                let slot_signal = Arc::clone(&slot_signal);
-                let handle = std::thread::Builder::new()
-                    .name(format!("node{node_id}-slot{slot}"))
-                    .spawn(move || loop {
-                        // Take one batch; exit when the channel closes.
-                        let batch = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match batch {
-                            Ok(tasks) => {
-                                for f in tasks {
-                                    f(node_id);
-                                    inflight.fetch_sub(1, Ordering::Relaxed);
-                                    let (lock, cv) = &*slot_signal;
-                                    let _g = lock.lock().unwrap();
-                                    cv.notify_all();
-                                }
-                            }
-                            Err(_) => break,
-                        }
-                    })
-                    .expect("spawning executor thread");
-                threads.push(handle);
-            }
-            nodes.push(Node { tx: Mutex::new(Some(tx)), alive, inflight, slot_signal });
+            nodes.push(make_node(node_id, spec.slots_per_node, &mut threads));
         }
         Arc::new(Cluster {
             spec,
-            nodes,
+            nodes: RwLock::new(nodes),
             threads: Mutex::new(threads),
             completions: Arc::new(CompletionHub::new()),
+            epoch: AtomicU64::new(0),
         })
     }
 
@@ -221,8 +305,14 @@ impl Cluster {
         self.spec
     }
 
+    /// Total node slots ever allocated (alive + draining + dead +
+    /// retired). Node ids are `0..nodes()` and are never reused.
     pub fn nodes(&self) -> usize {
-        self.spec.nodes
+        self.nodes.read().unwrap().len()
+    }
+
+    fn node(&self, node: usize) -> Arc<Node> {
+        Arc::clone(&self.nodes.read().unwrap()[node])
     }
 
     /// The cluster-wide completion queue shared by all jobs.
@@ -230,17 +320,57 @@ impl Cluster {
         Arc::clone(&self.completions)
     }
 
+    /// Current lifecycle state of a node.
+    pub fn node_state(&self, node: usize) -> NodeState {
+        self.node(node).state()
+    }
+
+    /// Strictly [`NodeState::Alive`]: eligible for NEW placements. A
+    /// draining node is deliberately excluded — placement layers stop
+    /// routing to it the moment the drain begins.
     pub fn node_alive(&self, node: usize) -> bool {
-        self.nodes[node].alive.load(Ordering::Relaxed)
+        self.node_state(node) == NodeState::Alive
+    }
+
+    /// Whether a node still executes already-queued work (alive OR
+    /// draining). The scheduler fails results from nodes outside this set
+    /// — so a drain, unlike a kill, never invalidates in-flight tasks.
+    pub fn node_executing(&self, node: usize) -> bool {
+        matches!(self.node_state(node), NodeState::Alive | NodeState::Draining)
     }
 
     pub fn alive_nodes(&self) -> Vec<usize> {
-        (0..self.nodes()).filter(|&n| self.node_alive(n)).collect()
+        let nodes = self.nodes.read().unwrap();
+        (0..nodes.len()).filter(|&n| nodes[n].state() == NodeState::Alive).collect()
+    }
+
+    /// Current membership epoch. Bumped by every join/drain/retire/kill/
+    /// revival; plan-time consumers stamp it and treat a mismatch as
+    /// staleness.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// A consistent `(epoch, alive set)` snapshot: retried until the epoch
+    /// is stable across the alive-set read, so the pair can never mix two
+    /// membership generations.
+    pub fn membership(&self) -> Membership {
+        loop {
+            let epoch = self.epoch();
+            let alive = self.alive_nodes();
+            if self.epoch() == epoch {
+                return Membership { epoch, alive };
+            }
+        }
     }
 
     /// Queued + running task count on a node.
     pub fn inflight(&self, node: usize) -> usize {
-        self.nodes[node].inflight.load(Ordering::Relaxed)
+        self.node(node).inflight.load(Ordering::Relaxed)
     }
 
     /// Block until `node` has a free task slot, up to `timeout`. Returns
@@ -255,7 +385,8 @@ impl Cluster {
             return false;
         }
         let deadline = Instant::now() + timeout;
-        let (lock, cv) = &*self.nodes[node].slot_signal;
+        let slot_signal = Arc::clone(&self.node(node).slot_signal);
+        let (lock, cv) = &*slot_signal;
         let mut guard = lock.lock().unwrap();
         while !self.has_capacity(node) {
             let now = Instant::now();
@@ -314,13 +445,100 @@ impl Cluster {
     /// the scheduler treats every result from a dead node as failed and
     /// stops placing work there.
     pub fn kill_node(&self, node: usize) {
-        self.nodes[node].alive.store(false, Ordering::Relaxed);
+        let n = self.node(node);
+        if matches!(n.state(), NodeState::Alive | NodeState::Draining) {
+            n.state.store(NodeState::Dead as u8, Ordering::SeqCst);
+            self.bump_epoch();
+        }
     }
 
-    /// Bring a node back (cluster scale-up / recovered machine). Lost
-    /// blocks stay lost — recovery is by lineage, not by resurrection.
+    /// Bring a dead node back (recovered machine). Lost blocks stay lost —
+    /// recovery is by lineage, not by resurrection. Bumps the membership
+    /// epoch so in-flight `GroupPlan`s go stale and the next round spreads
+    /// back onto the revived node (previously a revival was invisible to
+    /// planning until an unrelated death or skew event). Retired nodes
+    /// cannot be revived — their executor threads are gone; grow with
+    /// [`Cluster::add_node`] instead.
     pub fn revive_node(&self, node: usize) {
-        self.nodes[node].alive.store(true, Ordering::Relaxed);
+        let n = self.node(node);
+        if n.state
+            .compare_exchange(
+                NodeState::Dead as u8,
+                NodeState::Alive as u8,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+        {
+            self.bump_epoch();
+        }
+    }
+
+    /// Join a fresh node at runtime: spins up a new executor pool with
+    /// the spec's `slots_per_node` and announces it via an epoch bump.
+    /// Returns the new node id (always `nodes() - 1`; ids are dense and
+    /// stable). The kernel split ([`ClusterSpec::task_cores`]) stays
+    /// pinned to the initial topology for lineage determinism.
+    pub fn add_node(&self) -> usize {
+        let mut nodes = self.nodes.write().unwrap();
+        let node_id = nodes.len();
+        let mut threads = self.threads.lock().unwrap();
+        nodes.push(make_node(node_id, self.spec.slots_per_node, &mut threads));
+        drop(threads);
+        drop(nodes);
+        self.bump_epoch();
+        node_id
+    }
+
+    /// Start a graceful drain: the node stops receiving NEW placements
+    /// (it leaves the alive set and the epoch bump makes plans stale) but
+    /// keeps executing already-queued tasks and serving block reads.
+    /// Complete the retirement with [`Cluster::finish_drain`].
+    pub fn begin_drain(&self, node: usize) {
+        let n = self.node(node);
+        if n.state
+            .compare_exchange(
+                NodeState::Alive as u8,
+                NodeState::Draining as u8,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+        {
+            self.bump_epoch();
+        }
+    }
+
+    /// Wait for a draining node's in-flight tasks to finish, then retire
+    /// it: its queue closes, its executor threads exit, and the slot id
+    /// becomes a permanent tombstone. No-op unless the node is Draining.
+    pub fn finish_drain(&self, node: usize) {
+        let n = self.node(node);
+        if n.state() != NodeState::Draining {
+            return;
+        }
+        // Quiesce: the slot signal fires after every task completion.
+        {
+            let slot_signal = Arc::clone(&n.slot_signal);
+            let (lock, cv) = &*slot_signal;
+            let mut guard = lock.lock().unwrap();
+            while n.inflight.load(Ordering::SeqCst) > 0 {
+                let (g, _) = cv.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+                guard = g;
+            }
+        }
+        n.state.store(NodeState::Retired as u8, Ordering::SeqCst);
+        n.tx.lock().unwrap().take();
+        self.bump_epoch();
+    }
+
+    /// Graceful scale-down in one call: [`Cluster::begin_drain`] then
+    /// [`Cluster::finish_drain`]. Callers that must reshard state off the
+    /// node first (ParameterManager / PredictService) use the two-phase
+    /// form so the draining node can still serve block reads in between.
+    pub fn drain_node(&self, node: usize) {
+        self.begin_drain(node);
+        self.finish_drain(node);
     }
 
     /// Submit one closure to a node's queue.
@@ -334,14 +552,19 @@ impl Cluster {
     /// whole batch. Multi-slot nodes fall back to one send per task so
     /// free slot threads pull work dynamically (a statically-chunked
     /// batch would head-of-line block behind a straggler).
+    ///
+    /// Draining nodes still accept submissions: a dispatch racing a
+    /// `begin_drain` stays a success (the plan goes stale for the NEXT
+    /// round), rather than turning a graceful drain into a job error.
     pub(crate) fn submit_batch(&self, node: usize, batch: Vec<TaskFn>) -> Result<()> {
         if batch.is_empty() {
             return Ok(());
         }
-        if !self.node_alive(node) {
-            bail!("node {node} is dead");
+        if !self.node_executing(node) {
+            bail!("node {node} is dead or retired");
         }
-        let tx = match self.nodes[node].tx.lock().unwrap().clone() {
+        let n = self.node(node);
+        let tx = match n.tx.lock().unwrap().clone() {
             Some(tx) => tx,
             None => bail!("node {node} executor is gone (cluster shut down)"),
         };
@@ -352,9 +575,9 @@ impl Cluster {
         };
         for chunk in sends {
             let k = chunk.len();
-            self.nodes[node].inflight.fetch_add(k, Ordering::Relaxed);
+            n.inflight.fetch_add(k, Ordering::Relaxed);
             if tx.send(chunk).is_err() {
-                self.nodes[node].inflight.fetch_sub(k, Ordering::Relaxed);
+                n.inflight.fetch_sub(k, Ordering::Relaxed);
                 bail!("node {node} executor is gone");
             }
         }
@@ -382,7 +605,7 @@ impl Cluster {
     /// thread's own handle is skipped instead of self-joining into a
     /// deadlock.
     pub fn shutdown(&self) {
-        for node in &self.nodes {
+        for node in self.nodes.read().unwrap().iter() {
             node.tx.lock().unwrap().take();
         }
         let me = std::thread::current().id();
@@ -402,7 +625,7 @@ impl Drop for Cluster {
         // must not turn teardown (including panic unwinding) into an
         // indefinite hang. Explicit `shutdown()` is the blocking,
         // fully-joined path.
-        for node in &self.nodes {
+        for node in self.nodes.read().unwrap().iter() {
             node.tx.lock().unwrap().take();
         }
     }
@@ -584,5 +807,70 @@ mod tests {
         // harmless: the orphaned inbox absorbs it and drops with the Arc.
         ib1.push(Completion { job: 1, partition: 9, generation: 1, attempt: 1, node: 0, payload: Box::new(()) });
         assert_eq!(ib1.wait().partition, 9);
+    }
+
+    #[test]
+    fn add_node_joins_and_executes() {
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1, ..Default::default() });
+        let e0 = c.epoch();
+        let id = c.add_node();
+        assert_eq!(id, 2);
+        assert_eq!(c.nodes(), 3);
+        assert!(c.epoch() > e0, "join must bump the membership epoch");
+        assert_eq!(c.alive_nodes(), vec![0, 1, 2]);
+        let (tx, rx) = mpsc::channel();
+        c.submit(id, Box::new(move |node| tx.send(node).unwrap())).unwrap();
+        assert_eq!(rx.recv().unwrap(), 2, "joined node runs tasks");
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_finishes_inflight_then_retires() {
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1, ..Default::default() });
+        let gate = Arc::new(AtomicU32::new(0));
+        let _guard = GateGuard(Arc::clone(&gate));
+        let done = Arc::new(AtomicU32::new(0));
+        let (g, d) = (Arc::clone(&gate), Arc::clone(&done));
+        c.submit(1, Box::new(move |_| {
+            while g.load(Ordering::Relaxed) == 0 {
+                std::thread::yield_now();
+            }
+            d.fetch_add(1, Ordering::SeqCst);
+        }))
+        .unwrap();
+        let e0 = c.epoch();
+        c.begin_drain(1);
+        assert_eq!(c.node_state(1), NodeState::Draining);
+        assert!(c.epoch() > e0, "drain start bumps epoch");
+        assert_eq!(c.alive_nodes(), vec![0], "draining node leaves the alive set");
+        assert!(c.node_executing(1), "draining node still executes");
+        // Draining nodes still accept racing submissions.
+        c.submit(1, Box::new(|_| {})).unwrap();
+        gate.store(1, Ordering::Relaxed);
+        c.finish_drain(1);
+        assert_eq!(c.node_state(1), NodeState::Retired);
+        assert_eq!(done.load(Ordering::SeqCst), 1, "in-flight task ran to completion");
+        assert!(c.submit(1, Box::new(|_| {})).is_err(), "retired node rejects work");
+        // Retired nodes cannot be revived.
+        c.revive_node(1);
+        assert_eq!(c.node_state(1), NodeState::Retired);
+        c.shutdown();
+    }
+
+    #[test]
+    fn revive_bumps_membership_epoch() {
+        let c = Cluster::start(ClusterSpec { nodes: 2, slots_per_node: 1, ..Default::default() });
+        let m0 = c.membership();
+        c.kill_node(1);
+        let m1 = c.membership();
+        assert!(m1.epoch > m0.epoch);
+        assert_eq!(m1.alive, vec![0]);
+        c.revive_node(1);
+        let m2 = c.membership();
+        assert!(m2.epoch > m1.epoch, "revival is a visible membership change");
+        assert_eq!(m2.alive, vec![0, 1]);
+        // Double revive is a no-op (no spurious staleness).
+        c.revive_node(1);
+        assert_eq!(c.epoch(), m2.epoch);
     }
 }

@@ -10,7 +10,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::Result;
 
 use super::block_manager::BlockManager;
-use super::cluster::{Cluster, ClusterSpec};
+use super::cluster::{Cluster, ClusterSpec, Membership};
 use super::fault::FailurePolicy;
 use super::job_runner::JobRunner;
 use super::rdd::Rdd;
@@ -183,11 +183,40 @@ impl SparkletContext {
             .run_job(self, job_id, preferred, &policy, Some(assignment), task_fn)
     }
 
-    /// Default placement: partition `p` prefers node `p % nodes` — which is
-    /// what co-partitions and co-locates every RDD of the same width
-    /// (paper §3.2: model RDD zip Sample RDD at no extra cost).
+    /// Default placement over the CURRENT membership: partition `p`
+    /// prefers the `p % |alive|`-th alive node — which is what
+    /// co-partitions and co-locates every RDD of the same width (paper
+    /// §3.2: model RDD zip Sample RDD at no extra cost). Before elastic
+    /// membership this was a raw `p % nodes()` over a static universe;
+    /// routing through the alive set keeps the same co-location property
+    /// while never preferring a draining/dead/retired node, and spreads
+    /// onto joined nodes automatically.
     pub fn default_preferred(&self, parts: usize) -> Vec<Option<usize>> {
-        (0..parts).map(|p| Some(p % self.nodes())).collect()
+        let alive = self.0.cluster.alive_nodes();
+        if alive.is_empty() {
+            return vec![None; parts];
+        }
+        (0..parts).map(|p| Some(alive[p % alive.len()])).collect()
+    }
+
+    /// Current membership snapshot (epoch + alive node set).
+    pub fn membership(&self) -> Membership {
+        self.0.cluster.membership()
+    }
+
+    /// Current membership epoch (see [`Cluster::epoch`]).
+    pub fn epoch(&self) -> u64 {
+        self.0.cluster.epoch()
+    }
+
+    /// Elastic join: grow the cluster AND the block-store table by one
+    /// node, atomically from the driver's perspective. Returns the new
+    /// node id.
+    pub fn add_node(&self) -> usize {
+        let id = self.0.blocks.add_node();
+        let cid = self.0.cluster.add_node();
+        debug_assert_eq!(id, cid, "cluster and block manager grew out of step");
+        cid
     }
 }
 

@@ -41,6 +41,12 @@ pub struct JobRunner {
 pub struct GroupPlan {
     pub assignment: Assignment,
     pub preferred: Vec<Option<usize>>,
+    /// Membership epoch the placements were computed under. Any
+    /// membership change — join, drain, retire, kill, revival — bumps the
+    /// cluster epoch and makes this plan stale, so round loops pick up
+    /// new capacity (and route off draining nodes) at the next round
+    /// instead of waiting for a death or skew event.
+    pub epoch: u64,
 }
 
 impl GroupPlan {
@@ -93,6 +99,7 @@ impl GroupPlan {
     }
 
     /// Combined staleness check used by round loops: a plan is stale when
+    /// the membership epoch moved (join/drain/kill/revive — always), when
     /// a planned node died (always) or, with
     /// `SchedulePolicy::skew_replan_threshold` configured, when inflight
     /// imbalance crossed the threshold. Returns `(stale, skew)` so the
@@ -102,7 +109,7 @@ impl GroupPlan {
         cluster: &Cluster,
         policy: &super::scheduler::SchedulePolicy,
     ) -> (bool, bool) {
-        if !self.live(cluster) {
+        if cluster.epoch() != self.epoch || !self.live(cluster) {
             return (true, false);
         }
         let skew = policy
@@ -252,13 +259,17 @@ impl JobRunner {
     }
 
     /// Compute placements for a job width once (the Drizzle planning pass).
+    /// The plan is stamped with the membership epoch read BEFORE placement
+    /// — a membership change racing the planning pass makes the plan
+    /// immediately stale rather than silently outdated.
     pub fn plan_group(&self, preferred: &[Option<usize>]) -> Result<GroupPlan> {
         let policy = self.ctx.schedule_policy();
+        let epoch = self.ctx.epoch();
         let assignment = self
             .ctx
             .scheduler()
             .plan(&self.ctx.cluster(), preferred, &policy)?;
-        Ok(GroupPlan { assignment, preferred: preferred.to_vec() })
+        Ok(GroupPlan { assignment, preferred: preferred.to_vec(), epoch })
     }
 
     /// Drive an N-round loop with group pre-assignment: placements are

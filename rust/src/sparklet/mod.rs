@@ -35,7 +35,7 @@ pub mod stage;
 
 pub use block_manager::{BlockData, BlockId, BlockManager, TrafficSnapshot};
 pub use broadcast::Broadcast;
-pub use cluster::{Cluster, ClusterSpec, Completion, CompletionHub, JobInbox};
+pub use cluster::{Cluster, ClusterSpec, Completion, CompletionHub, JobInbox, Membership, NodeState};
 pub use context::{SparkletContext, TaskContext};
 pub use fault::FailurePolicy;
 pub use job_runner::{GroupPlan, JobHandle, JobRunner, RoundInfo};

@@ -257,7 +257,10 @@ impl Scheduler {
     ) -> Result<usize> {
         self.stats.placements.fetch_add(1, Ordering::Relaxed);
         let slots = cluster.spec().slots_per_node;
-        let load = |n: usize| cluster.inflight(n) + planned[n];
+        // `planned` was sized when the plan pass began; a node joining
+        // mid-pass simply counts as unplanned-upon (load 0) until the
+        // next pass.
+        let load = |n: usize| cluster.inflight(n) + planned.get(n).copied().unwrap_or(0);
         if let Some(p) = preferred {
             if cluster.node_alive(p) && load(p) < slots {
                 return Ok(p);
@@ -622,7 +625,10 @@ fn make_task<R: Send + 'static>(
             attempt,
             node: node_id,
         };
-        let result: Result<R> = if !tc.ctx.cluster().node_alive(node_id) {
+        // Alive OR draining: a graceful drain lets already-queued tasks
+        // finish and count as successes — only a dead/retired executor's
+        // results are failures.
+        let result: Result<R> = if !tc.ctx.cluster().node_executing(node_id) {
             Err(anyhow!("node {node_id} died"))
         } else if fail.should_fail(job_id, part, attempt) {
             Err(anyhow!(

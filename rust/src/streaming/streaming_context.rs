@@ -59,7 +59,7 @@ impl StreamingContext {
         F: FnMut(usize, Rdd<T>) -> Result<()>,
     {
         let runner = self.ctx.runner();
-        let plan: Arc<GroupPlan> =
+        let mut plan: Arc<GroupPlan> =
             Arc::new(runner.plan_group(&self.ctx.default_preferred(self.partitions))?);
         let mut stats = Vec::with_capacity(batches);
         for batch_index in 0..batches {
@@ -67,6 +67,19 @@ impl StreamingContext {
             let records = source.poll(self.max_batch);
             let n = records.len();
             if n > 0 {
+                // Refresh the group plan ONLY when it went stale — a
+                // membership change (elastic join/drain/death) or skew
+                // since it was planned. Steady-state micro-batches keep
+                // the one-plan-per-loop amortization.
+                {
+                    let cluster = self.ctx.cluster();
+                    let policy = self.ctx.schedule_policy();
+                    if plan.staleness(&cluster, &policy).0 {
+                        plan = Arc::new(
+                            runner.plan_group(&self.ctx.default_preferred(self.partitions))?,
+                        );
+                    }
+                }
                 let parts = self.partitions.min(n.max(1));
                 let rdd = self
                     .ctx

@@ -1,0 +1,300 @@
+//! Elastic-membership integration suite: runtime join and graceful
+//! drain-and-retire across the whole stack.
+//!
+//! Covers: training (Sync AND Pipelined) surviving a node join and a
+//! drain mid-run with automatic staged-commit resharding, sharded serving
+//! surviving the same elastic events with byte-identical predictions, a
+//! reshard failing mid-round rolling back fully before recommitting, the
+//! shard-count invariant across epoch changes, the revive-node staleness
+//! regression (a revival must make in-flight plans stale), and draining
+//! nodes taking no new placements while still serving block reads.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bigdl::bigdl::builtin::{linreg_rdd, LinReg};
+use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction, ServingConfig};
+use bigdl::bigdl::{
+    DistributedOptimizer, Module, ParameterManager, Sgd, SyncMode, TrainConfig,
+};
+use bigdl::sparklet::{Broadcast, FailurePolicy, SparkletContext, TaskContext};
+use bigdl::streaming::{KafkaSim, StreamingContext};
+use bigdl::util::prng::Rng;
+
+const DIM: usize = 24;
+const BATCH: usize = 8;
+/// More shards than the starting node count, so a join actually moves a
+/// shard ([0,1,2,0] -> [0,1,2,3]) instead of committing a no-op round.
+const SHARDS: usize = 4;
+
+fn optimizer(nodes: usize, sync_mode: SyncMode) -> (SparkletContext, DistributedOptimizer) {
+    let ctx = SparkletContext::local(nodes);
+    let module = Module::builtin(Arc::new(LinReg::new(DIM, BATCH)));
+    let data = linreg_rdd(&ctx, DIM, nodes, 40, 11);
+    let opt = DistributedOptimizer::new(
+        &ctx,
+        module,
+        data,
+        Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.05) }),
+        TrainConfig {
+            iterations: 1,
+            n_shards: Some(SHARDS),
+            log_every: 0,
+            sync: sync_mode.into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (ctx, opt)
+}
+
+/// Linear scorer: `classes` rows of `row[c] = w[c*dim..(c+1)*dim] · x`.
+fn linear_scorer(dim: usize, classes: usize) -> BatchScorer<Vec<f32>> {
+    Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+        anyhow::ensure!(w.len() == dim * classes, "bad weight length {}", w.len());
+        Ok(items
+            .iter()
+            .map(|x| {
+                (0..classes)
+                    .map(|c| x.iter().zip(&w[c * dim..(c + 1) * dim]).map(|(a, b)| a * b).sum())
+                    .collect()
+            })
+            .collect())
+    })
+}
+
+fn random_requests(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.gen_f32() - 0.5).collect())
+        .collect()
+}
+
+/// Training must survive a runtime join AND a graceful drain-and-retire
+/// mid-run: the optimizer reshards parameter state onto the new
+/// membership at the next step boundary, every round still commits, and
+/// the shard-count invariant holds across both epoch changes.
+fn elastic_training_survives_join_and_drain(mode: SyncMode) {
+    let (ctx, mut opt) = optimizer(3, mode);
+    for iter in 0..12 {
+        if iter == 3 {
+            assert_eq!(ctx.add_node(), 3, "node ids are dense and stable");
+        }
+        if iter == 7 {
+            ctx.cluster().drain_node(1);
+        }
+        opt.step().unwrap();
+    }
+    opt.drain().unwrap();
+
+    assert_eq!(opt.parameter_manager().optimizer_step(), 12, "every round must commit");
+    assert!(opt.history.iter().all(|m| m.loss.is_finite()));
+    let reshards: usize = opt.history.iter().map(|m| m.reshard_rounds).sum();
+    assert_eq!(reshards, 2, "the join and the drain must each commit one reshard round");
+
+    let alive = ctx.cluster().alive_nodes();
+    assert_eq!(alive, vec![0, 2, 3], "node 3 joined, node 1 retired");
+    let pm = opt.parameter_manager();
+    let owners = pm.owners();
+    assert_eq!(owners.len(), SHARDS, "shard count is invariant across epoch changes");
+    assert!(
+        owners.iter().all(|o| alive.contains(o)),
+        "every shard owner must be alive: owners {owners:?}, alive {alive:?}"
+    );
+    assert!(!pm.needs_reshard());
+    assert_eq!(opt.history.last().unwrap().membership_epoch, ctx.epoch());
+
+    let w = opt.weights().unwrap();
+    assert_eq!(w.len(), DIM + 1);
+    assert!(w.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn sync_training_survives_join_and_drain() {
+    elastic_training_survives_join_and_drain(SyncMode::Sync);
+}
+
+#[test]
+fn pipelined_training_survives_join_and_drain() {
+    elastic_training_survives_join_and_drain(SyncMode::Pipelined { staleness: 1 });
+}
+
+/// Sharded serving must survive the same elastic events: the serve loop
+/// auto-reshards weight shards onto the new membership and predictions
+/// stay byte-identical through both the join and the drain.
+#[test]
+fn sharded_serving_survives_join_and_drain() {
+    let (dim, classes) = (6, 4);
+    let ctx = SparkletContext::local(3);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingConfig { n_shards: Some(SHARDS), max_batch: 16, ..Default::default() },
+    );
+    let mut rng = Rng::new(0xE1A57);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let requests = random_requests(&mut rng, 128, dim);
+    let before = svc.serve(&requests, Reduction::Argmax).unwrap();
+
+    ctx.add_node();
+    assert!(svc.needs_reshard(), "a join must mark the deployment stale");
+    let after_join = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(before, after_join, "predictions must not change across a join");
+    assert!(!svc.needs_reshard(), "serve must have resharded onto the joined node");
+
+    ctx.cluster().drain_node(1);
+    let after_drain = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(before, after_drain, "predictions must not change across a drain");
+    assert_eq!(svc.current_weights().unwrap(), weights);
+    assert_eq!(svc.stats.snapshot().reshards, 2);
+}
+
+/// A reshard failing mid-round must roll back FULLY — block count, shard
+/// placement and weight round all unchanged, the epoch gap still visible —
+/// and then recommit cleanly once the fault clears, with bit-exact
+/// parameter state.
+#[test]
+fn failed_reshard_rolls_back_fully_then_recommits() {
+    let ctx = SparkletContext::local(3);
+    let mut rng = Rng::new(0x0111B4C);
+    let weights: Vec<f32> = (0..25).map(|_| rng.gen_f32() - 0.5).collect();
+    let pm = ParameterManager::init(
+        &ctx,
+        &weights,
+        SHARDS,
+        Arc::new(Sgd { momentum: 0.9, ..Sgd::new(0.1) }),
+    )
+    .unwrap();
+    let owners0 = pm.owners();
+    let round0 = pm.weights_broadcast().id;
+    let blocks0 = ctx.blocks().usage().0;
+
+    ctx.add_node();
+    assert!(pm.needs_reshard());
+
+    ctx.set_failure_policy(FailurePolicy {
+        task_fail_prob: 1.0,
+        max_attempts: 2,
+        ..Default::default()
+    });
+    assert!(pm.reshard().is_err(), "with every attempt failing the round must error");
+    assert_eq!(ctx.blocks().usage().0, blocks0, "rollback must remove every staged block");
+    assert_eq!(pm.owners(), owners0, "rollback must leave the old placement in force");
+    assert_eq!(pm.weights_broadcast().id, round0, "rollback must keep the old weight round");
+    assert!(pm.needs_reshard(), "the epoch gap must persist after rollback");
+
+    ctx.set_failure_policy(FailurePolicy::default());
+    let report = pm.reshard().unwrap();
+    assert!(report.moved >= 1, "the recommit must actually move a shard");
+    assert_eq!(report.epoch, ctx.epoch());
+    assert!(!pm.needs_reshard());
+    let alive = ctx.cluster().alive_nodes();
+    let owners = pm.owners();
+    assert_eq!(owners.len(), SHARDS, "shard count is invariant across the epoch change");
+    assert!(owners.iter().all(|o| alive.contains(o)));
+    assert_eq!(pm.current_weights().unwrap(), weights, "reshard must be bit-exact");
+    assert_eq!(
+        ctx.blocks().usage().0,
+        blocks0,
+        "a committed reshard replaces blocks one-for-one"
+    );
+}
+
+/// Regression (revive visibility): reviving a dead node bumps the
+/// membership epoch, so a plan made while it was dead goes stale and the
+/// next planning pass spreads back onto it. Before epoch-based staleness
+/// a revival was invisible until an unrelated death or skew event.
+#[test]
+fn revived_node_makes_plans_stale() {
+    let ctx = SparkletContext::local(3);
+    let runner = ctx.runner();
+    let cluster = ctx.cluster();
+    let policy = ctx.schedule_policy();
+
+    let plan = runner.plan_group(&ctx.default_preferred(3)).unwrap();
+    assert!(!plan.staleness(&cluster, &policy).0, "fresh plan must not be stale");
+
+    cluster.kill_node(1);
+    assert!(plan.staleness(&cluster, &policy).0, "a planned node died -> stale");
+
+    let plan2 = runner.plan_group(&ctx.default_preferred(3)).unwrap();
+    assert!(!plan2.staleness(&cluster, &policy).0, "replanned off the dead node");
+    assert!(!ctx.default_preferred(3).contains(&Some(1)));
+
+    cluster.revive_node(1);
+    assert!(
+        plan2.staleness(&cluster, &policy).0,
+        "a revival must surface through the epoch, not wait for the next failure"
+    );
+    let plan3 = runner.plan_group(&ctx.default_preferred(3)).unwrap();
+    assert!(!plan3.staleness(&cluster, &policy).0);
+    assert!(
+        ctx.default_preferred(3).contains(&Some(1)),
+        "refreshed placement must spread back onto the revived node"
+    );
+}
+
+/// A draining node leaves the placement universe immediately (no new
+/// preferred placements) but keeps serving block reads — both while
+/// Draining and after retirement — which is exactly what lets the
+/// reshard round copy its shards off before `finish_drain`.
+#[test]
+fn draining_node_takes_no_new_placements_but_serves_reads() {
+    let ctx = SparkletContext::local(3);
+    let e0 = ctx.epoch();
+    let b = Broadcast::new(ctx.next_broadcast_id(), 1);
+    b.publish(&ctx.blocks(), 1, 0, Arc::new(vec![1.0, 2.0]));
+
+    ctx.cluster().begin_drain(1);
+    let preferred = ctx.default_preferred(6);
+    assert!(
+        preferred.iter().all(|p| *p != Some(1)),
+        "a draining node must not take new placements: {preferred:?}"
+    );
+    let task: Arc<dyn Fn(&TaskContext) -> anyhow::Result<usize> + Send + Sync> =
+        Arc::new(|tc| Ok(tc.partition * 2));
+    let out = ctx.run_job(&preferred, task).unwrap();
+    assert_eq!(out, vec![0, 2, 4, 6, 8, 10]);
+    assert_eq!(*b.fetch(&ctx.blocks(), 0, 0).unwrap(), vec![1.0, 2.0]);
+
+    ctx.cluster().finish_drain(1);
+    assert_eq!(ctx.cluster().alive_nodes(), vec![0, 2]);
+    assert_eq!(ctx.epoch(), e0 + 2, "begin_drain and finish_drain each bump the epoch");
+    assert_eq!(
+        *b.fetch(&ctx.blocks(), 0, 0).unwrap(),
+        vec![1.0, 2.0],
+        "retirement is executor-level only; the block store survives"
+    );
+}
+
+/// The streaming micro-batch loop must refresh its group plan when the
+/// membership epoch moves mid-stream — one replan for the join, not one
+/// per batch.
+#[test]
+fn streaming_loop_replans_on_membership_change() {
+    let ctx = SparkletContext::local(2);
+    let sc = StreamingContext::new(&ctx, Duration::from_millis(1), 10);
+    let k = KafkaSim::new(1000);
+    for i in 0..100 {
+        k.produce(i as i64);
+    }
+    k.close();
+    let before = ctx.scheduler().stats.snapshot();
+    let ctx2 = ctx.clone();
+    let mut seen = 0usize;
+    sc.run(&k, 20, |i, rdd| {
+        if i == 3 {
+            ctx2.add_node();
+        }
+        seen += rdd.count()?;
+        Ok(())
+    })
+    .unwrap();
+    let after = ctx.scheduler().stats.snapshot();
+    assert_eq!(seen, 100, "every record must be processed across the join");
+    assert_eq!(
+        after.placements - before.placements,
+        2 * sc.partitions as u64,
+        "exactly one initial plan plus one stale-triggered replan"
+    );
+}

@@ -124,6 +124,51 @@ fn prop_alg2_sync_equals_serial_update() {
     });
 }
 
+/// Elastic-membership placement invariants: under ANY sequence of
+/// join / drain / kill events, after each reshard
+/// * the shard count never changes (one owner per shard, structurally),
+/// * every owner is drawn from the CURRENT alive set — never a draining,
+///   dead or retired node,
+/// * the owners map is current (`needs_reshard` false), and
+/// * the weights survive every move bit-exactly.
+#[test]
+fn prop_reshard_placement_invariants() {
+    forall("reshard_placement", 12, |rng| {
+        let nodes = 2 + rng.gen_usize(3);
+        let n_shards = 1 + rng.gen_usize(6);
+        let k = 10 + rng.gen_usize(100);
+        let ctx = SparkletContext::local(nodes);
+        let init: Vec<f32> = (0..k).map(|_| rng.gen_f32() - 0.5).collect();
+        let pm = ParameterManager::init(&ctx, &init, n_shards, Arc::new(Sgd::new(0.1))).unwrap();
+        for _ in 0..1 + rng.gen_usize(5) {
+            let cluster = ctx.cluster();
+            let alive = cluster.alive_nodes();
+            match rng.gen_usize(3) {
+                1 if alive.len() > 1 => cluster.drain_node(alive[rng.gen_usize(alive.len())]),
+                // Executor-level kill: the node's block store stays
+                // readable (as after a process crash with replicated
+                // storage), so the reshard can still move its shards off.
+                2 if alive.len() > 1 => cluster.kill_node(alive[rng.gen_usize(alive.len())]),
+                _ => {
+                    ctx.add_node();
+                }
+            }
+            pm.reshard().unwrap();
+            let alive_now = ctx.cluster().alive_nodes();
+            let owners = pm.owners();
+            assert_eq!(owners.len(), n_shards, "shard count must never change");
+            for (s, o) in owners.iter().enumerate() {
+                assert!(
+                    alive_now.contains(o),
+                    "shard {s} owned by non-alive node {o} (alive: {alive_now:?})"
+                );
+            }
+            assert!(!pm.needs_reshard(), "owners must be current after a reshard");
+            assert_eq!(pm.current_weights().unwrap(), init, "weights must survive bit-exactly");
+        }
+    });
+}
+
 #[test]
 fn prop_rdd_transforms_match_vec_semantics() {
     forall("rdd_vs_vec", 25, |rng| {
