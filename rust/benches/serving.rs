@@ -1,37 +1,29 @@
-//! Serving dispatch cost: planned micro-batch rounds
-//! (`PredictService::serve` over `JobRunner::run_rounds`) vs ad-hoc
-//! per-request jobs (the pre-PredictService inference path).
+//! Serving benches, two parts:
 //!
-//! Measures the driver's per-request dispatch cost (`SchedStats.dispatch_ns`
-//! + placement counts) for both paths on an identical workload and checks
-//! the predictions are identical. Acceptance: planned dispatch is ≥2×
-//! cheaper on driver dispatch cost. Runs entirely on a closure model —
-//! no AOT artifacts needed.
+//! 1. Dispatch cost: planned micro-batch rounds (`PredictService::serve`
+//!    over group pre-assignment) vs ad-hoc per-request jobs. Acceptance:
+//!    planned dispatch is >=2x cheaper on driver dispatch cost.
+//! 2. SLO serving under a straggler: `Batching::Adaptive` vs the best
+//!    fixed batch when one node pays a per-round delay. Acceptance:
+//!    adaptive holds p99 <= SLO and <= the fixed path's p99, at >= 0.8x
+//!    the fixed path's throughput; `Replication::Auto` re-replicates the
+//!    hot shard within 2 dispatch cycles. All gated in CI from the
+//!    recorded series.
+//!
+//! Runs entirely on closure models — no AOT artifacts needed.
 
 mod common;
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction, ServingConfig};
+use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction};
+use bigdl::bigdl::serving_strategy::ServingStrategy;
 use bigdl::sparklet::SparkletContext;
 use bigdl::util::prng::Rng;
 
-fn main() {
-    common::banner(
-        "Serving: planned (run_rounds) vs ad-hoc per-request dispatch",
-        "group-planned serving amortizes driver dispatch >=2x at identical predictions",
-    );
-
-    let mut rec = common::Recorder::new("serving");
-    let nodes = 8;
-    let (dim, classes) = (32, 10);
-    let n_requests = common::iters(4096, 1024);
-    let max_batch = 64;
-    let reps = common::iters(5, 2);
-
-    let ctx = SparkletContext::local(nodes);
-    let scorer: BatchScorer<Vec<f32>> = Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+fn linear_scorer(dim: usize, classes: usize) -> BatchScorer<Vec<f32>> {
+    Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
         Ok(items
             .iter()
             .map(|x| {
@@ -40,18 +32,63 @@ fn main() {
                     .collect()
             })
             .collect())
-    });
+    })
+}
+
+/// Scorer that spins `per_item` of wall clock per scored item — a
+/// deterministic stand-in for real model compute, so round latency scales
+/// with batch size the way the adaptive controller assumes.
+fn spinning_scorer(dim: usize, classes: usize, per_item: Duration) -> BatchScorer<Vec<f32>> {
+    let inner = linear_scorer(dim, classes);
+    Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+        let deadline = Instant::now() + per_item * items.len() as u32;
+        let rows = inner(w, items)?;
+        while Instant::now() < deadline {
+            std::hint::spin_loop();
+        }
+        Ok(rows)
+    })
+}
+
+fn random_requests(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.gen_f32() - 0.5).collect())
+        .collect()
+}
+
+fn main() {
+    let mut rec = common::Recorder::new("serving");
+    dispatch_bench(&mut rec);
+    slo_bench(&mut rec);
+    hot_reshard_bench(&mut rec);
+    rec.flush();
+}
+
+fn dispatch_bench(rec: &mut common::Recorder) {
+    common::banner(
+        "Serving: planned (run_rounds) vs ad-hoc per-request dispatch",
+        "group-planned serving amortizes driver dispatch >=2x at identical predictions",
+    );
+
+    let nodes = 8;
+    let (dim, classes) = (32, 10);
+    let n_requests = common::iters(4096, 1024);
+    let max_batch = 64;
+    let reps = common::iters(5, 2);
+
+    let ctx = SparkletContext::local(nodes);
     let svc = PredictService::new(
         &ctx,
-        scorer,
-        ServingConfig { max_batch, group_size: n_requests / max_batch, ..Default::default() },
-    );
+        linear_scorer(dim, classes),
+        ServingStrategy::default()
+            .fixed_batch(max_batch)
+            .group(n_requests / max_batch),
+    )
+    .expect("service");
     let mut rng = Rng::new(0x5E11E);
     let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
     svc.deploy(&weights).expect("deploy");
-    let requests: Vec<Vec<f32>> = (0..n_requests)
-        .map(|_| (0..dim).map(|_| rng.gen_f32() - 0.5).collect())
-        .collect();
+    let requests = random_requests(&mut rng, n_requests, dim);
 
     // Warm-up both paths (thread pools, allocator).
     let planned_out = svc.serve(&requests, Reduction::Argmax).expect("planned serve");
@@ -108,5 +145,147 @@ fn main() {
     rec.add("adhoc_dispatch_per_req_ns", &params, adhoc_disp * 1e9, "ns");
     rec.add("planned_dispatch_per_req_ns", &params, planned_disp * 1e9, "ns");
     rec.add("planned_dispatch_ratio", &params, ratio, "x");
-    rec.flush();
+}
+
+/// Straggler sim: one node pays a fixed per-round delay, compute scales
+/// with batch size. The adaptive controller must find a batch whose round
+/// latency sits inside the SLO band — under the fixed comparator's p99 —
+/// while keeping throughput within 20% of the large fixed batch.
+fn slo_bench(rec: &mut common::Recorder) {
+    common::banner(
+        "SLO serving: adaptive batching vs best fixed batch under a straggler",
+        "adaptive holds p99 <= SLO at >= 0.8x the fixed path's throughput",
+    );
+
+    let nodes = 4;
+    let (dim, classes) = (16, 8);
+    let slo_ms = 10.0;
+    let (min_batch, max_batch) = (64, 1024);
+    let straggle = Duration::from_millis(2);
+    // ~31us/item: a full 1024 batch costs ~8ms of compute across 4 nodes
+    // — over the SLO once the 2ms straggler delay is added, so the
+    // controller must settle below the fixed comparator's batch.
+    let per_item = Duration::from_micros(31);
+    let n = common::iters(4096, 2048);
+
+    let ctx = SparkletContext::local(nodes);
+    let mut rng = Rng::new(0x51013);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    let requests = random_requests(&mut rng, n, dim);
+
+    let fixed = PredictService::new(
+        &ctx,
+        spinning_scorer(dim, classes, per_item),
+        ServingStrategy::default().fixed_batch(max_batch),
+    )
+    .expect("fixed service");
+    let adaptive = PredictService::new(
+        &ctx,
+        spinning_scorer(dim, classes, per_item),
+        ServingStrategy::default().adaptive(slo_ms, min_batch, max_batch),
+    )
+    .expect("adaptive service");
+    fixed.deploy(&weights).expect("deploy");
+    adaptive.deploy(&weights).expect("deploy");
+    fixed.inject_node_delay(0, straggle);
+    adaptive.inject_node_delay(0, straggle);
+
+    // Warm-up: let the controller climb out of its min batch (and both
+    // paths fault in their thread pools) before measuring.
+    let f_out = fixed.serve(&requests, Reduction::Argmax).expect("fixed warm-up");
+    let a_out = adaptive.serve(&requests, Reduction::Argmax).expect("adaptive warm-up");
+    assert_eq!(f_out, a_out, "adaptive batching must not change predictions");
+
+    let t0 = Instant::now();
+    fixed.serve(&requests, Reduction::Argmax).expect("fixed serve");
+    let fixed_wall = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    adaptive.serve(&requests, Reduction::Argmax).expect("adaptive serve");
+    let adaptive_wall = t1.elapsed().as_secs_f64();
+
+    let f = fixed.stats.snapshot();
+    let a = adaptive.stats.snapshot();
+    let p99_ratio = a.p99_ms / f.p99_ms.max(1e-9);
+    let tput_ratio = (n as f64 / adaptive_wall) / (n as f64 / fixed_wall).max(1e-9);
+
+    println!(
+        "workload: {n} requests, {nodes} nodes, {straggle:?} straggler on node 0, \
+         ~{}us/item compute\n\
+         {:>22} {:>10} {:>10} {:>12} {:>12}\n\
+         {:>22} {:>10.2} {:>10.2} {:>12} {:>12.0}\n\
+         {:>22} {:>10.2} {:>10.2} {:>12} {:>12.0}\n\
+         adaptive vs fixed: p99 {p99_ratio:.2}x (target <= 1.0), \
+         throughput {tput_ratio:.2}x (target >= 0.8)",
+        per_item.as_micros(),
+        "", "p50 ms", "p99 ms", "final batch", "req/s",
+        format!("fixed({max_batch}):"), f.p50_ms, f.p99_ms, max_batch,
+        n as f64 / fixed_wall,
+        format!("adaptive(slo {slo_ms}):"), a.p50_ms, a.p99_ms, adaptive.batch_size(),
+        n as f64 / adaptive_wall,
+    );
+    if a.p99_ms > slo_ms {
+        println!("  WARNING: adaptive p99 {:.2}ms exceeds the {slo_ms}ms SLO", a.p99_ms);
+    }
+    if p99_ratio > 1.0 {
+        println!("  WARNING: adaptive p99 above the fixed comparator's");
+    }
+    if tput_ratio < 0.8 {
+        println!("  WARNING: adaptive throughput below 0.8x fixed");
+    }
+
+    let params = [
+        ("nodes", nodes as f64),
+        ("requests", n as f64),
+        ("slo_ms", slo_ms),
+        ("min_batch", min_batch as f64),
+        ("max_batch", max_batch as f64),
+    ];
+    rec.add("serving_p50_ms", &params, a.p50_ms, "ms");
+    rec.add("serving_p99_ms", &params, a.p99_ms, "ms");
+    rec.add("fixed_p99_ms", &params, f.p99_ms, "ms");
+    rec.add("adaptive_vs_fixed_p99_ratio", &params, p99_ratio, "x");
+    rec.add("adaptive_vs_fixed_throughput_ratio", &params, tput_ratio, "x");
+}
+
+/// Hot-shard autoscale: with `Replication::Auto`, a sustained straggler
+/// on one shard's owner must trigger a re-replication within 2 dispatch
+/// cycles (the policy's sustain window).
+fn hot_reshard_bench(rec: &mut common::Recorder) {
+    common::banner(
+        "Autoscale: hot-shard re-replication latency",
+        "a sustained hot shard re-replicates within 2 dispatch cycles",
+    );
+
+    let nodes = 4;
+    let (dim, classes) = (16, 8);
+    let ctx = SparkletContext::local(nodes);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().fixed_batch(64).auto_scale(1.8),
+    )
+    .expect("service");
+    let mut rng = Rng::new(0x407B);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).expect("deploy");
+    let requests = random_requests(&mut rng, 64, dim);
+    svc.serve(&requests, Reduction::Argmax).expect("warm-up");
+
+    let hot_owner = svc.shard_owners()[0];
+    svc.inject_node_delay(hot_owner, Duration::from_millis(5));
+    let mut cycles = 0u64;
+    while cycles < 6 && svc.stats.snapshot().re_replications == 0 {
+        svc.serve(&requests, Reduction::Argmax).expect("serve");
+        cycles += 1;
+    }
+    let fired = svc.stats.snapshot().re_replications > 0;
+    println!(
+        "hot shard 0 (owner node {hot_owner}): re-replication after {cycles} dispatch \
+         cycles (target <= 2, fired: {fired})"
+    );
+    if !fired || cycles > 2 {
+        println!("  WARNING: hot-shard re-replication missed the 2-cycle target");
+    }
+    let params = [("nodes", nodes as f64), ("hot_watermark", 1.8)];
+    rec.add("hot_reshard_cycles", &params, cycles as f64, "cycles");
 }

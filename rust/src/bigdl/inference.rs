@@ -11,7 +11,8 @@ use anyhow::{Context, Result};
 use super::builtin::StepCtx;
 use super::module::Module;
 use super::sample::{assemble_predict_inputs, Sample};
-use super::serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
+use super::serving::{BatchScorer, PredictService, Reduced, Reduction};
+use super::serving_strategy::ServingStrategy;
 use crate::sparklet::{Rdd, SparkletContext};
 use crate::tensor::Tensor;
 
@@ -82,8 +83,8 @@ fn one_shot_service(
     let svc = PredictService::new(
         data.context(),
         scorer_for(data.context(), module)?,
-        ServingConfig { replicate: false, ..Default::default() },
-    );
+        ServingStrategy::default().replicas(1),
+    )?;
     svc.deploy(weights)?;
     Ok(svc)
 }

@@ -1,7 +1,74 @@
-//! Per-iteration training metrics (the timing breakdown behind Figs 6-8)
-//! and evaluation helpers (accuracy, hit-rate).
+//! Per-iteration training metrics (the timing breakdown behind Figs 6-8),
+//! evaluation helpers (accuracy, hit-rate), and the lock-free
+//! [`LatencyHistogram`] behind serving's p50/p99 SLO accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sparklet::{SchedSnapshot, TrafficSnapshot};
+
+/// Exponential bucket layout: 96 buckets starting at 0.01 ms growing by
+/// ×1.15 per bucket covers ~0.01 ms .. ~6 s, with quantile upper-edge
+/// bias bounded by the 15% bucket width.
+const HIST_BUCKETS: usize = 96;
+const HIST_BASE_MS: f64 = 0.01;
+const HIST_GROWTH: f64 = 1.15;
+
+/// Fixed-bucket latency histogram, safe to record into from concurrent
+/// serving tasks (plain atomic adds, no locks). Quantiles report the
+/// upper edge of the containing bucket, so they never under-state the
+/// tail — the property SLO enforcement needs.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample in milliseconds. Non-finite or negative
+    /// samples are dropped.
+    pub fn record_ms(&self, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        let idx = if ms <= HIST_BASE_MS {
+            0
+        } else {
+            let raw = ((ms / HIST_BASE_MS).ln() / HIST_GROWTH.ln()).floor();
+            (raw as usize).min(HIST_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Latency (ms) at quantile `q` in [0,1]: the upper edge of the
+    /// bucket holding the q-th sample. 0.0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return HIST_BASE_MS * HIST_GROWTH.powi(i as i32 + 1);
+            }
+        }
+        HIST_BASE_MS * HIST_GROWTH.powi(HIST_BUCKETS as i32)
+    }
+}
 
 /// Timing/traffic breakdown of one training iteration (two jobs).
 #[derive(Debug, Clone, Default)]
@@ -180,6 +247,32 @@ mod tests {
         let rows = vec![vec![0.1, 0.9], vec![0.8, 0.2]];
         assert_eq!(top1_accuracy(&rows, &[1, 0]), 1.0);
         assert_eq!(top1_accuracy(&rows, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_never_understate() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+        for _ in 0..99 {
+            h.record_ms(1.0);
+        }
+        h.record_ms(100.0);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.50);
+        let p99 = h.quantile_ms(0.99);
+        // Upper-edge reporting: at least the sample, at most +15% bucket width.
+        assert!((1.0..=1.3).contains(&p50), "p50 {p50}");
+        assert!((1.0..=1.3).contains(&p99), "p99 {p99} (the 100ms sample is p100)");
+        let p100 = h.quantile_ms(1.0);
+        assert!((100.0..=120.0).contains(&p100), "p100 {p100}");
+        // Garbage samples are dropped, extremes are clamped into range.
+        h.record_ms(f64::NAN);
+        h.record_ms(-3.0);
+        assert_eq!(h.count(), 100);
+        h.record_ms(0.0);
+        h.record_ms(1e12);
+        assert_eq!(h.count(), 102);
     }
 
     #[test]

@@ -9,8 +9,12 @@
 //!   broadcast over in-memory block storage);
 //! * [`optim`] — shard-wise optimization methods (SGD/Adagrad/Adam/LARS);
 //! * [`serving`] — `PredictService`: sharded weight deployment + planned
-//!   micro-batch serving on `JobRunner::run_rounds` with task-side
-//!   reductions;
+//!   micro-batch serving with task-side reductions, governed by a
+//!   declarative [`ServingStrategy`] (SLO-adaptive batching, deadline
+//!   admission, load-driven autoscaling);
+//! * [`serving_strategy`] — the [`ServingStrategy`] types: `Batching`,
+//!   `Replication`, `Admission`, the `AdaptiveBatch` SLO controller and
+//!   the `ScalePolicy` autoscaler;
 //! * [`inference`] — distributed `predict` over a Sample RDD (built on
 //!   the serving subsystem);
 //! * [`allreduce`] — [`SyncAlgo`] + the §3.3 traffic models and the
@@ -35,6 +39,7 @@ pub mod param_mgr;
 pub mod sample;
 pub mod schedule;
 pub mod serving;
+pub mod serving_strategy;
 pub mod trigger;
 
 pub use builtin::{BuiltinModel, ComputeSim, LinReg, SimOptim, StepCtx};
@@ -50,6 +55,15 @@ pub use param_mgr::{
     GradPolicy, GradPublisher, ParameterManager, PendingSync, ReshardReport, RoundOp, SyncOpts,
 };
 pub use schedule::{LrSchedule, SyncMode, SyncStrategy};
-pub use serving::{BatchScorer, PredictService, Reduced, Reduction, ServingConfig};
+pub use serving::{
+    BatchScorer, PredictService, Reduced, Reduction, Request, ServeOutcome, ServingSnapshot,
+    ServingStats, ShedReason,
+};
+#[allow(deprecated)]
+pub use serving::ServingConfig;
+pub use serving_strategy::{
+    AdaptiveBatch, Admission, Batching, LoadSample, Replication, ScaleAction, ScalePolicy,
+    ScaleState, ServingStrategy,
+};
 pub use trigger::{TrainState, Trigger};
 pub use sample::Sample;

@@ -1,14 +1,20 @@
-//! `PredictService` — sharded model serving on the stage-graph engine
-//! (the piece that makes `model.predict(rdd)` ride the same machinery as
-//! training, instead of ad-hoc one-off jobs).
+//! `PredictService` — sharded, SLO-aware model serving on the stage-graph
+//! engine (the piece that makes `model.predict(rdd)` ride the same
+//! machinery as training, instead of ad-hoc one-off jobs).
 //!
+//! * **Strategy**: everything the service does is declared up front in a
+//!   [`ServingStrategy`] — [`Batching`] (fixed, or SLO-adaptive),
+//!   [`Replication`] (fixed copies, or load-driven auto-scale) and
+//!   [`Admission`] (queue bound + default deadline) — validated once at
+//!   construction. The flat [`ServingConfig`] knob struct survives only
+//!   as a deprecated `From` migration shim.
 //! * **Weights** live as sharded broadcast blocks in the
 //!   [`BlockManager`](crate::sparklet::BlockManager), placed exactly like
 //!   [`ParameterManager`](super::param_mgr::ParameterManager) shards
 //!   (shard `n` owned by the `n % |alive|`-th alive node of the
-//!   membership the deployment was placed under), optionally replicated
-//!   on a second node so serving survives single-node death. Deployment
-//!   is copy-on-write: a new round is published and swapped in, and the
+//!   membership the deployment was placed under), replicated per the
+//!   strategy so serving survives single-node death. Deployment is
+//!   copy-on-write: a new round is published and swapped in, and the
 //!   outgoing round survives one more deployment cycle so in-flight
 //!   serves finish against intact blocks. A membership change (elastic
 //!   join, drain, death) marks the placement stale; the serve loop runs
@@ -17,10 +23,25 @@
 //!   per-node assembled cache — one shard-concat per node per deployment,
 //!   zero-copy `Arc` clones after that.
 //! * **Dispatch**: incoming requests are micro-batched and driven through
-//!   [`JobRunner::run_rounds_with`] with a Drizzle [`GroupPlan`] —
-//!   placements planned once per serving group, each round a bare batched
-//!   enqueue (the same amortization the training loop gets). A planned
-//!   node dying mid-group triggers a replan, not a fallback.
+//!   a Drizzle [`GroupPlan`] — placements planned once per serving group,
+//!   each round a bare batched enqueue (the same amortization the
+//!   training loop gets). A planned node dying mid-group triggers a
+//!   replan, not a fallback; group-boundary and fault replans meter into
+//!   distinct counters. Every round's wall latency lands in the stats
+//!   histogram (p50/p99 in each [`ServingSnapshot`]) and feeds the
+//!   [`AdaptiveBatch`] controller when batching is adaptive.
+//! * **Admission**: [`PredictService::serve_with_deadlines`] takes
+//!   [`Request`]s carrying optional deadlines. Requests that cannot make
+//!   their deadline — already expired, over the admission queue bound, or
+//!   infeasible at the measured drain rate — are shed with an explicit
+//!   [`ShedReason`], metered, never silently dropped.
+//! * **Autoscale**: with [`Replication::Auto`], a
+//!   [`ScalePolicy`] folds per-round load samples (task busy time per
+//!   node, attributed to shards through the owner map, plus queue
+//!   backlog) and the dispatch loop applies its actions: publish an extra
+//!   copy of a hot shard on a cool node, `Cluster::add_node` past the up
+//!   watermark, drain the idlest node under the down watermark — the
+//!   policy layer on top of the elastic-membership mechanism.
 //! * **Results** are reduced task-side ([`Reduction`]: argmax / top-k /
 //!   threshold), so only small [`Reduced`] rows travel to the driver.
 //!
@@ -29,13 +50,21 @@
 //! it serves AOT modules (see `inference::module_scorer`) and plain
 //! closure models (tests, benches) through one path.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
+use super::metrics::LatencyHistogram;
+use super::serving_strategy::{
+    AdaptiveBatch, Admission, Batching, LoadSample, Replication, ScaleAction, ScalePolicy,
+    ScaleState, ServingStrategy,
+};
 use crate::sparklet::{
-    BlockData, BlockId, BlockManager, Broadcast, JobRunner, Rdd, SparkletContext, TaskContext,
+    BlockData, BlockId, BlockManager, Broadcast, GroupPlan, JobRunner, Rdd, SparkletContext,
+    TaskContext,
 };
 use crate::tensor::partition_ranges;
 
@@ -99,7 +128,12 @@ impl Reduction {
     }
 }
 
-/// Serving knobs.
+/// Flat serving knobs, superseded by the declarative [`ServingStrategy`]
+/// (which also expresses adaptive batching, admission control and
+/// autoscaled replication — none of which fit a flat struct). Converts
+/// losslessly: `max_batch` → [`Batching::Fixed`], `replicate` →
+/// [`Replication::Fixed`] (2 copies when true, 1 when false).
+#[deprecated(note = "use ServingStrategy: declarative batching/replication/admission")]
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
     /// Weight shards; defaults to the node count (one owner per node).
@@ -114,10 +148,67 @@ pub struct ServingConfig {
     pub replicate: bool,
 }
 
+#[allow(deprecated)]
 impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig { n_shards: None, group_size: 32, max_batch: 256, replicate: true }
     }
+}
+
+#[allow(deprecated)]
+impl From<ServingConfig> for ServingStrategy {
+    fn from(cfg: ServingConfig) -> ServingStrategy {
+        ServingStrategy {
+            n_shards: cfg.n_shards,
+            group_size: cfg.group_size,
+            batching: Batching::Fixed(cfg.max_batch),
+            replication: Replication::Fixed(if cfg.replicate { 2 } else { 1 }),
+            admission: Admission::default(),
+        }
+    }
+}
+
+/// A serving request with an optional absolute deadline for the
+/// admission-controlled [`PredictService::serve_with_deadlines`] path.
+#[derive(Debug, Clone)]
+pub struct Request<T> {
+    pub payload: T,
+    /// Hard deadline: the request is shed ([`ShedReason::Expired`] /
+    /// [`ShedReason::Infeasible`]) rather than served late. `None` falls
+    /// back to the strategy's [`Admission::default_deadline_ms`].
+    pub deadline: Option<Instant>,
+}
+
+impl<T> Request<T> {
+    pub fn new(payload: T) -> Request<T> {
+        Request { payload, deadline: None }
+    }
+
+    pub fn with_deadline(payload: T, deadline: Instant) -> Request<T> {
+        Request { payload, deadline: Some(deadline) }
+    }
+}
+
+/// Why admission control refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The admission queue bound ([`Admission::queue_cap`]) was reached.
+    QueueFull,
+    /// The queue ahead of this request cannot drain before its deadline
+    /// at the measured drain rate.
+    Infeasible,
+    /// The deadline had already passed (at admission, or while queued
+    /// before its round dispatched).
+    Expired,
+}
+
+/// Per-request outcome of the deadline-aware serve path: every admitted
+/// request is either served or shed with a reason — never silently
+/// dropped.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeOutcome {
+    Served(Reduced),
+    Shed(ShedReason),
 }
 
 /// Cumulative serving counters.
@@ -125,31 +216,96 @@ impl Default for ServingConfig {
 pub struct ServingStats {
     pub rounds: AtomicU64,
     pub requests: AtomicU64,
-    /// Placement plans computed (group boundaries + dead-node refreshes).
-    pub replans: AtomicU64,
+    /// Placement plans computed at serving-group boundaries (the
+    /// scheduled Drizzle amortization refresh).
+    pub group_replans: AtomicU64,
+    /// Placement plans forced mid-group by a stale plan — membership
+    /// epoch moved, a planned node died, or load skew crossed the
+    /// threshold. Autoscale membership changes surface here.
+    pub fault_replans: AtomicU64,
     pub deploys: AtomicU64,
     /// Serving reshard rounds committed (membership-change re-balances).
     pub reshards: AtomicU64,
-}
-
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ServingSnapshot {
-    pub rounds: u64,
-    pub requests: u64,
-    pub replans: u64,
-    pub deploys: u64,
-    pub reshards: u64,
+    /// Extra shard copies published by the autoscale policy (hot shards).
+    pub re_replications: AtomicU64,
+    /// Nodes joined by the autoscale policy (up-watermark crossings).
+    pub scale_ups: AtomicU64,
+    /// Nodes drained by the autoscale policy (down-watermark crossings).
+    pub scale_downs: AtomicU64,
+    pub shed_queue_full: AtomicU64,
+    pub shed_infeasible: AtomicU64,
+    pub shed_expired: AtomicU64,
+    /// Per-round serve latencies (ms); p50/p99 surface in the snapshot.
+    latency: LatencyHistogram,
+    /// Per-node busy nanoseconds since the last autoscale tick, recorded
+    /// by serving tasks (the load signal behind [`ScalePolicy`]).
+    node_busy: Mutex<HashMap<usize, u64>>,
 }
 
 impl ServingStats {
+    /// Record `ns` of task busy time against `node` (called task-side).
+    pub fn note_busy(&self, node: usize, ns: u64) {
+        *self.node_busy.lock().unwrap().entry(node).or_insert(0) += ns;
+    }
+
+    /// Drain the per-node busy meters (one autoscale tick's window).
+    fn take_busy(&self) -> HashMap<usize, u64> {
+        std::mem::take(&mut *self.node_busy.lock().unwrap())
+    }
+
+    fn record_latency_ms(&self, ms: f64) {
+        self.latency.record_ms(ms);
+    }
+
     pub fn snapshot(&self) -> ServingSnapshot {
         ServingSnapshot {
             rounds: self.rounds.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
-            replans: self.replans.load(Ordering::Relaxed),
+            group_replans: self.group_replans.load(Ordering::Relaxed),
+            fault_replans: self.fault_replans.load(Ordering::Relaxed),
             deploys: self.deploys.load(Ordering::Relaxed),
             reshards: self.reshards.load(Ordering::Relaxed),
+            re_replications: self.re_replications.load(Ordering::Relaxed),
+            scale_ups: self.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.scale_downs.load(Ordering::Relaxed),
+            shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
+            shed_infeasible: self.shed_infeasible.load(Ordering::Relaxed),
+            shed_expired: self.shed_expired.load(Ordering::Relaxed),
+            p50_ms: self.latency.quantile_ms(0.50),
+            p99_ms: self.latency.quantile_ms(0.99),
         }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServingSnapshot {
+    pub rounds: u64,
+    pub requests: u64,
+    pub group_replans: u64,
+    pub fault_replans: u64,
+    pub deploys: u64,
+    pub reshards: u64,
+    pub re_replications: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub shed_queue_full: u64,
+    pub shed_infeasible: u64,
+    pub shed_expired: u64,
+    /// Round-latency quantiles (ms, histogram upper edge — never
+    /// under-stated). 0.0 before any round ran.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ServingSnapshot {
+    /// All placement plans (group boundaries + fault refreshes).
+    pub fn replans(&self) -> u64 {
+        self.group_replans + self.fault_replans
+    }
+
+    /// All shed requests, any reason.
+    pub fn shed(&self) -> u64 {
+        self.shed_queue_full + self.shed_infeasible + self.shed_expired
     }
 }
 
@@ -160,6 +316,9 @@ struct Deployment {
     bcast: Broadcast,
     param_count: usize,
     prev: Option<Broadcast>,
+    /// Primary owner of each shard under the placement membership — the
+    /// autoscale policy attributes per-node load to shards through this.
+    owners: Vec<usize>,
     /// Membership epoch this deployment's shard placement was computed
     /// under — a later epoch means the placement is stale and the serve
     /// loop runs a [`PredictService::reshard`] before dispatching.
@@ -208,38 +367,123 @@ fn sweep_assembled(bm: &BlockManager, instance: u64, keep: &[u64]) {
     });
 }
 
-/// The serving subsystem: sharded weights + planned micro-batch dispatch.
+/// One admitted request waiting for its dispatch round.
+struct Admitted<T> {
+    index: usize,
+    payload: T,
+    deadline: Option<Instant>,
+}
+
+/// The serving subsystem: sharded weights + planned micro-batch dispatch,
+/// governed end to end by a [`ServingStrategy`].
 pub struct PredictService<T> {
     ctx: SparkletContext,
     runner: JobRunner,
     scorer: BatchScorer<T>,
-    cfg: ServingConfig,
+    strategy: ServingStrategy,
     /// Unique id namespacing this service's cache blocks (two services on
     /// one context must not collide).
     instance: u64,
     deployed: Mutex<Option<Deployment>>,
-    pub stats: ServingStats,
+    /// SLO controller, present iff batching is [`Batching::Adaptive`].
+    controller: Option<Mutex<AdaptiveBatch>>,
+    /// EWMA drain rate (requests/s) over past serves; 0.0 = unknown.
+    /// Feeds admission feasibility checks.
+    drain_rate: Mutex<f64>,
+    /// Straggler injection (tests/benches): per-node artificial task
+    /// delay, applied inside serving round tasks.
+    chaos: Arc<Mutex<HashMap<usize, Duration>>>,
+    scale_policy: Mutex<Option<ScalePolicy>>,
+    scale_state: Mutex<ScaleState>,
+    pub stats: Arc<ServingStats>,
 }
 
 impl<T: Clone + Send + Sync + 'static> PredictService<T> {
-    pub fn new(ctx: &SparkletContext, scorer: BatchScorer<T>, cfg: ServingConfig) -> PredictService<T> {
-        PredictService {
+    /// Build a service from a [`ServingStrategy`] (or anything convertible
+    /// into one — the deprecated [`ServingConfig`] still works through its
+    /// `From` shim). Fails when the strategy does not validate.
+    pub fn new(
+        ctx: &SparkletContext,
+        scorer: BatchScorer<T>,
+        strategy: impl Into<ServingStrategy>,
+    ) -> Result<PredictService<T>> {
+        let strategy = strategy.into();
+        strategy.validate()?;
+        let controller = match strategy.batching {
+            Batching::Adaptive { slo_ms, min, max } => {
+                Some(Mutex::new(AdaptiveBatch::new(slo_ms, min, max)))
+            }
+            Batching::Fixed(_) => None,
+        };
+        let scale_policy = match strategy.replication {
+            Replication::Auto { hot_watermark } => {
+                Some(ScalePolicy { hot_watermark, ..Default::default() })
+            }
+            Replication::Fixed(_) => None,
+        };
+        Ok(PredictService {
             ctx: ctx.clone(),
             runner: ctx.runner(),
             scorer,
-            cfg,
+            strategy,
             instance: ctx.next_broadcast_id(),
             deployed: Mutex::new(None),
-            stats: ServingStats::default(),
-        }
+            controller,
+            drain_rate: Mutex::new(0.0),
+            chaos: Arc::new(Mutex::new(HashMap::new())),
+            scale_policy: Mutex::new(scale_policy),
+            scale_state: Mutex::new(ScaleState::default()),
+            stats: Arc::new(ServingStats::default()),
+        })
     }
 
     pub fn context(&self) -> &SparkletContext {
         &self.ctx
     }
 
+    pub fn strategy(&self) -> &ServingStrategy {
+        &self.strategy
+    }
+
+    /// The batch size the next dispatch round will use (the adaptive
+    /// controller's current operating point; the fixed size otherwise).
+    pub fn batch_size(&self) -> usize {
+        self.current_batch()
+    }
+
+    /// EWMA drain rate (requests/s) measured over past serves; 0.0 until
+    /// a serve completes. Admission feasibility judges against this.
+    pub fn drain_rate_per_s(&self) -> f64 {
+        *self.drain_rate.lock().unwrap()
+    }
+
+    /// Replace the autoscale policy (None disables). `Replication::Auto`
+    /// installs a default-windows policy at construction; tests and
+    /// benches tune watermarks/windows through this. Resets streak state.
+    pub fn set_scale_policy(&self, policy: Option<ScalePolicy>) {
+        *self.scale_policy.lock().unwrap() = policy;
+        *self.scale_state.lock().unwrap() = ScaleState::default();
+    }
+
+    /// Straggler injection for tests/benches: serving tasks on `node`
+    /// sleep `delay` before scoring.
+    pub fn inject_node_delay(&self, node: usize, delay: Duration) {
+        self.chaos.lock().unwrap().insert(node, delay);
+    }
+
+    pub fn clear_node_delay(&self, node: usize) {
+        self.chaos.lock().unwrap().remove(&node);
+    }
+
     pub fn param_count(&self) -> usize {
         self.deployed.lock().unwrap().as_ref().map(|d| d.param_count).unwrap_or(0)
+    }
+
+    /// Primary owner node of each deployed weight shard (empty before any
+    /// deploy). The autoscale load attribution uses this; tests use it to
+    /// aim stragglers at a shard's owner.
+    pub fn shard_owners(&self) -> Vec<usize> {
+        self.deployed.lock().unwrap().as_ref().map(|d| d.owners.clone()).unwrap_or_default()
     }
 
     /// The broadcast round serving tasks read weights from.
@@ -249,30 +493,31 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             .unwrap()
             .as_ref()
             .map(|d| d.bcast)
-            .ok_or_else(|| anyhow::anyhow!("no weights deployed (call deploy / deploy_sharded first)"))
+            .ok_or_else(|| anyhow!("no weights deployed (call deploy / deploy_sharded first)"))
     }
 
     /// Driver-side deployment: shard `weights` N ways, publish shard `n`
-    /// on its owner (plus a replica), swap the round. Owners and replicas
-    /// are chosen among ALIVE nodes only — a redeploy after a node death
-    /// must not park a shard on a dead store.
+    /// on its owner (plus replicas per the strategy), swap the round.
+    /// Owners and replicas are chosen among ALIVE nodes only — a redeploy
+    /// after a node death must not park a shard on a dead store.
     pub fn deploy(&self, weights: &[f32]) -> Result<()> {
         ensure!(!weights.is_empty(), "empty weight vector");
         let membership = self.ctx.membership();
         let alive = &membership.alive;
         ensure!(!alive.is_empty(), "no alive nodes to deploy onto");
-        let parts = self.cfg.n_shards.unwrap_or(self.ctx.nodes()).max(1).min(weights.len());
+        let parts = self.strategy.n_shards.unwrap_or(self.ctx.nodes()).max(1).min(weights.len());
         let bcast = Broadcast::new(self.ctx.next_broadcast_id(), parts);
         let bm = self.ctx.blocks();
+        let copies = self.strategy.replication.copies(alive.len());
+        let mut owners = Vec::with_capacity(parts);
         for (n, r) in partition_ranges(weights.len(), parts).iter().enumerate() {
             let shard = Arc::new(weights[r.clone()].to_vec());
-            let owner = alive[n % alive.len()];
-            bcast.publish(&bm, owner, n, Arc::clone(&shard));
-            if self.cfg.replicate && alive.len() > 1 {
-                bcast.publish(&bm, alive[(n + 1) % alive.len()], n, shard);
+            owners.push(alive[n % alive.len()]);
+            for c in 0..copies {
+                bcast.publish(&bm, alive[(n + c) % alive.len()], n, Arc::clone(&shard));
             }
         }
-        self.swap(bcast, weights.len(), membership.epoch);
+        self.swap(bcast, weights.len(), membership.epoch, owners);
         Ok(())
     }
 
@@ -289,38 +534,44 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         let epoch = self.ctx.epoch();
         let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
         let src = *src;
-        let replicate = self.cfg.replicate;
-        let task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> =
+        let replication = self.strategy.replication;
+        let task: Arc<dyn Fn(&TaskContext) -> Result<usize> + Send + Sync> =
             Arc::new(move |tc: &TaskContext| {
                 let bm = tc.blocks();
                 let shard = src.fetch(&bm, tc.node, tc.partition)?;
                 dst.publish(&bm, tc.node, tc.partition, Arc::clone(&shard));
-                if replicate {
-                    // Replica on the next ALIVE node after this one (the
-                    // task itself runs on an alive node, so only the
-                    // replica placement needs the liveness check).
-                    let alive = tc.ctx.cluster().alive_nodes();
-                    let next = alive
+                // Replicas on the next ALIVE nodes after this one (the
+                // task itself runs on an alive node, so only the replica
+                // placement needs the liveness check).
+                let alive = tc.ctx.cluster().alive_nodes();
+                let copies = replication.copies(alive.len());
+                if copies > 1 {
+                    let pos = alive
                         .iter()
-                        .copied()
-                        .find(|&x| x > tc.node)
-                        .or_else(|| alive.first().copied())
-                        .filter(|&x| x != tc.node);
-                    if let Some(r) = next {
-                        dst.publish(&bm, r, tc.partition, shard);
+                        .position(|&x| x == tc.node)
+                        .unwrap_or(tc.partition % alive.len());
+                    for c in 1..copies {
+                        let r = alive[(pos + c) % alive.len()];
+                        if r != tc.node {
+                            dst.publish(&bm, r, tc.partition, Arc::clone(&shard));
+                        }
                     }
                 }
-                Ok(())
+                Ok(tc.node)
             });
-        if let Err(e) = self.runner.run(&self.ctx.default_preferred(src.parts), task) {
-            // Staged-commit: a failed re-publish must not leak its
-            // partially published shards — the deployed round is
-            // untouched, so just drop the staging.
-            dst.cleanup(&self.ctx.blocks());
-            return Err(e);
+        match self.runner.run(&self.ctx.default_preferred(src.parts), task) {
+            Ok(owners) => {
+                self.swap(dst, param_count, epoch, owners);
+                Ok(())
+            }
+            Err(e) => {
+                // Staged-commit: a failed re-publish must not leak its
+                // partially published shards — the deployed round is
+                // untouched, so just drop the staging.
+                dst.cleanup(&self.ctx.blocks());
+                Err(e)
+            }
         }
-        self.swap(dst, param_count, epoch);
-        Ok(())
     }
 
     /// Whether the deployed round's shard placement predates the current
@@ -338,8 +589,8 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// as one staged-commit re-publish round: one task per shard reads the
     /// deployed shard (cluster-wide, so a draining owner hands it off
     /// remotely and a dead owner's replica is found) and publishes it
-    /// under a fresh round id on the shard's new owner (plus a replica
-    /// when configured). Commit is the usual hot-redeploy swap — the
+    /// under a fresh round id on the shard's new owner (plus replicas per
+    /// the strategy). Commit is the usual hot-redeploy swap — the
     /// outgoing round keeps serving in-flight rounds for one more
     /// deployment cycle. A mid-round failure drops every staged shard and
     /// leaves the deployed round and its placement untouched.
@@ -358,9 +609,9 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         ensure!(!membership.alive.is_empty(), "no alive nodes to reshard onto");
         let alive = Arc::new(membership.alive);
         let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
-        let replicate = self.cfg.replicate;
-        let preferred: Vec<Option<usize>> =
-            (0..src.parts).map(|n| Some(alive[n % alive.len()])).collect();
+        let copies = self.strategy.replication.copies(alive.len());
+        let owners: Vec<usize> = (0..src.parts).map(|n| alive[n % alive.len()]).collect();
+        let preferred: Vec<Option<usize>> = owners.iter().map(|&o| Some(o)).collect();
         let task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync> = {
             let alive = Arc::clone(&alive);
             Arc::new(move |tc: &TaskContext| {
@@ -370,9 +621,8 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
                 // task on a fallback node still lands the shard correctly.
                 let i = n % alive.len();
                 let shard = src.fetch(&bm, tc.node, n)?;
-                dst.publish(&bm, alive[i], n, Arc::clone(&shard));
-                if replicate && alive.len() > 1 {
-                    dst.publish(&bm, alive[(i + 1) % alive.len()], n, shard);
+                for c in 0..copies {
+                    dst.publish(&bm, alive[(i + c) % alive.len()], n, Arc::clone(&shard));
                 }
                 Ok(())
             })
@@ -381,7 +631,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             dst.cleanup(&self.ctx.blocks());
             return Err(e);
         }
-        self.swap(dst, param_count, membership.epoch);
+        self.swap(dst, param_count, membership.epoch, owners);
         self.stats.reshards.fetch_add(1, Ordering::Relaxed);
         Ok(true)
     }
@@ -390,7 +640,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// until the NEXT deployment retires it, so a serve that captured the
     /// old round before a hot redeploy completes against intact blocks
     /// (only two redeploys inside one in-flight serve can starve it).
-    fn swap(&self, bcast: Broadcast, param_count: usize, epoch: u64) {
+    fn swap(&self, bcast: Broadcast, param_count: usize, epoch: u64, owners: Vec<usize>) {
         let bm = self.ctx.blocks();
         let mut guard = self.deployed.lock().unwrap();
         let prev = match guard.take() {
@@ -404,7 +654,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         };
         let mut keep = vec![bcast.id];
         keep.extend(prev.map(|p| p.id));
-        *guard = Some(Deployment { bcast, param_count, prev, epoch });
+        *guard = Some(Deployment { bcast, param_count, prev, owners, epoch });
         drop(guard);
         sweep_assembled(&bm, self.instance, &keep);
         self.stats.deploys.fetch_add(1, Ordering::Relaxed);
@@ -416,11 +666,12 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         self.weights_round()?.fetch_all_concat(&self.ctx.blocks(), 0)
     }
 
-    /// Serve a request batch: micro-batched into rounds of
-    /// `cfg.max_batch`, dispatched through `JobRunner::run_rounds_with`
-    /// with a serving [`GroupPlan`](crate::sparklet::GroupPlan) — planned
-    /// once per `cfg.group_size` rounds, every round a bare batched
-    /// enqueue. Results come back task-side reduced, in request order.
+    /// Serve a request batch: micro-batched into rounds sized by the
+    /// strategy's [`Batching`], dispatched against a serving
+    /// [`GroupPlan`] — planned once per `group_size` rounds, every round a
+    /// bare batched enqueue. Results come back task-side reduced, in
+    /// request order. No admission control: every request is served (use
+    /// [`PredictService::serve_with_deadlines`] for the SLO path).
     pub fn serve(&self, requests: &[T], red: Reduction) -> Result<Vec<Reduced>> {
         self.dispatch(requests, red, true)
     }
@@ -433,6 +684,74 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         self.dispatch(requests, red, false)
     }
 
+    /// The admission-controlled serve path: every request either comes
+    /// back [`ServeOutcome::Served`] or is shed with an explicit
+    /// [`ShedReason`], in request order. Sheds happen at admission
+    /// (expired deadline; queue over [`Admission::queue_cap`]; deadline
+    /// infeasible at the measured drain rate) or at round assembly (the
+    /// deadline passed while the request sat queued). Requests without a
+    /// deadline inherit [`Admission::default_deadline_ms`] when set.
+    pub fn serve_with_deadlines(
+        &self,
+        requests: &[Request<T>],
+        red: Reduction,
+    ) -> Result<Vec<ServeOutcome>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.needs_reshard() {
+            self.reshard()?;
+        }
+        let adm = self.strategy.admission;
+        let now = Instant::now();
+        let default_deadline =
+            adm.default_deadline_ms.map(|ms| now + Duration::from_secs_f64(ms / 1e3));
+        let rate = self.drain_rate_per_s();
+        let mut outcomes: Vec<Option<ServeOutcome>> = vec![None; requests.len()];
+        let mut queue: Vec<Admitted<T>> = Vec::with_capacity(requests.len());
+        let mut shed_at_admission = 0u64;
+        for (index, r) in requests.iter().enumerate() {
+            let deadline = r.deadline.or(default_deadline);
+            let shed = if deadline.is_some_and(|d| d <= now) {
+                Some(ShedReason::Expired)
+            } else if adm.queue_cap > 0 && queue.len() >= adm.queue_cap {
+                Some(ShedReason::QueueFull)
+            } else {
+                match deadline {
+                    // Feasibility: can the queue ahead of this request
+                    // (plus itself) drain before the deadline at the EWMA
+                    // rate measured over past serves? Unknown rate (first
+                    // serve) admits optimistically.
+                    Some(d) if rate > 0.0 => {
+                        let eta =
+                            now + Duration::from_secs_f64((queue.len() + 1) as f64 / rate);
+                        if eta > d {
+                            Some(ShedReason::Infeasible)
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                }
+            };
+            match shed {
+                Some(reason) => {
+                    self.meter_shed(reason);
+                    shed_at_admission += 1;
+                    outcomes[index] = Some(ServeOutcome::Shed(reason));
+                }
+                None => queue.push(Admitted { index, payload: r.payload.clone(), deadline }),
+            }
+        }
+        // Admission-shed requests still count as requests (they arrived).
+        self.stats.requests.fetch_add(shed_at_admission, Ordering::Relaxed);
+        self.run_queue(queue, red, true, &mut outcomes)?;
+        outcomes
+            .into_iter()
+            .map(|o| o.ok_or_else(|| anyhow!("internal: request left unresolved")))
+            .collect()
+    }
+
     fn dispatch(&self, requests: &[T], red: Reduction, planned: bool) -> Result<Vec<Reduced>> {
         if requests.is_empty() {
             return Ok(Vec::new());
@@ -443,45 +762,232 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         if self.needs_reshard() {
             self.reshard()?;
         }
+        let queue: Vec<Admitted<T>> = requests
+            .iter()
+            .enumerate()
+            .map(|(index, payload)| Admitted { index, payload: payload.clone(), deadline: None })
+            .collect();
+        let mut outcomes: Vec<Option<ServeOutcome>> = vec![None; requests.len()];
+        self.run_queue(queue, red, planned, &mut outcomes)?;
+        outcomes
+            .into_iter()
+            .map(|o| match o {
+                Some(ServeOutcome::Served(r)) => Ok(r),
+                _ => Err(anyhow!("internal: deadline-free serve shed a request")),
+            })
+            .collect()
+    }
+
+    /// The current per-round batch bound: the adaptive controller's
+    /// operating point, or the fixed size.
+    fn current_batch(&self) -> usize {
+        match &self.controller {
+            Some(c) => c.lock().unwrap().batch(),
+            None => self.strategy.batching.max_batch().max(1),
+        }
+    }
+
+    /// The dispatch loop: drain `queue` in rounds of the current batch
+    /// size, planned (Drizzle group pre-assignment with distinct
+    /// group-boundary / fault replan metering) or ad-hoc (per-task
+    /// placement each round). Each finished round feeds the latency
+    /// histogram, the adaptive-batch controller and the autoscale tick;
+    /// requests whose deadline passed while queued are shed at assembly.
+    fn run_queue(
+        &self,
+        queue: Vec<Admitted<T>>,
+        red: Reduction,
+        planned: bool,
+        outcomes: &mut [Option<ServeOutcome>],
+    ) -> Result<()> {
+        let total = queue.len() as u64;
+        let mut pending: VecDeque<Admitted<T>> = queue.into();
+        if pending.is_empty() {
+            return Ok(());
+        }
         let bcast = self.weights_round()?;
         let width = self.ctx.nodes();
-        let chunk = self.cfg.max_batch.max(1);
-        let batches: Vec<Arc<Vec<T>>> =
-            requests.chunks(chunk).map(|c| Arc::new(c.to_vec())).collect();
         let preferred = self.ctx.default_preferred(width);
-        let rounds = batches.len();
-        let round_results = if planned {
-            let replans = &self.stats.replans;
-            self.runner.run_rounds_with(
-                &preferred,
-                rounds,
-                self.cfg.group_size,
-                |r| self.round_task(Arc::clone(&batches[r]), width, red, bcast),
-                |info, _| {
-                    if info.replanned {
-                        replans.fetch_add(1, Ordering::Relaxed);
-                    }
-                },
-            )?
-        } else {
-            let mut out = Vec::with_capacity(rounds);
-            for b in &batches {
-                out.push(
-                    self.runner
-                        .run(&preferred, self.round_task(Arc::clone(b), width, red, bcast))?,
-                );
+        let group = self.strategy.group_size.max(1) as u64;
+        let mut plan: Option<GroupPlan> = None;
+        let mut rounds = 0u64;
+        let serve_t0 = Instant::now();
+        while !pending.is_empty() {
+            // Assemble one round, shedding requests that expired while
+            // queued (metered — never silently dropped).
+            let cap = self.current_batch();
+            let mut batch: Vec<T> = Vec::with_capacity(cap.min(pending.len()));
+            let mut indices: Vec<usize> = Vec::with_capacity(cap.min(pending.len()));
+            let now = Instant::now();
+            while batch.len() < cap {
+                let Some(item) = pending.pop_front() else { break };
+                if item.deadline.is_some_and(|d| d <= now) {
+                    self.meter_shed(ShedReason::Expired);
+                    outcomes[item.index] = Some(ServeOutcome::Shed(ShedReason::Expired));
+                    continue;
+                }
+                indices.push(item.index);
+                batch.push(item.payload);
             }
-            out
+            if batch.is_empty() {
+                continue;
+            }
+            let task = self.round_task(Arc::new(batch), width, red, bcast);
+            let t0 = Instant::now();
+            let results = if planned {
+                // The serving analogue of `JobRunner::run_rounds_with`,
+                // inlined so the batch size can move between rounds and
+                // boundary vs fault replans meter into distinct counters.
+                let boundary = rounds % group == 0;
+                let stale = if boundary {
+                    false
+                } else {
+                    match plan.as_ref() {
+                        Some(p) => {
+                            let cluster = self.ctx.cluster();
+                            let policy = self.ctx.schedule_policy();
+                            p.staleness(&cluster, &policy).0
+                        }
+                        None => true,
+                    }
+                };
+                if boundary || stale {
+                    plan = Some(self.runner.plan_group(&preferred)?);
+                    if boundary {
+                        self.stats.group_replans.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.stats.fault_replans.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                self.runner.run_planned(plan.as_ref().expect("plan set above"), task)?
+            } else {
+                self.runner.run(&preferred, task)?
+            };
+            let round_wall = t0.elapsed();
+            let round_ms = round_wall.as_secs_f64() * 1e3;
+            self.stats.record_latency_ms(round_ms);
+            if let Some(c) = &self.controller {
+                c.lock().unwrap().observe(round_ms);
+            }
+            rounds += 1;
+            let mut flat = results.into_iter().flatten();
+            for idx in &indices {
+                let Some(r) = flat.next() else {
+                    bail!("serving round produced fewer rows than requests");
+                };
+                outcomes[*idx] = Some(ServeOutcome::Served(r));
+            }
+            if planned {
+                self.autoscale_tick(round_wall, pending.len());
+            }
+        }
+        self.stats.rounds.fetch_add(rounds, Ordering::Relaxed);
+        self.stats.requests.fetch_add(total, Ordering::Relaxed);
+        // EWMA drain rate over this serve, feeding admission feasibility.
+        let wall = serve_t0.elapsed().as_secs_f64();
+        if wall > 0.0 {
+            let fresh = total as f64 / wall;
+            let mut dr = self.drain_rate.lock().unwrap();
+            *dr = if *dr > 0.0 { 0.7 * *dr + 0.3 * fresh } else { fresh };
+        }
+        Ok(())
+    }
+
+    fn meter_shed(&self, reason: ShedReason) {
+        let counter = match reason {
+            ShedReason::QueueFull => &self.stats.shed_queue_full,
+            ShedReason::Infeasible => &self.stats.shed_infeasible,
+            ShedReason::Expired => &self.stats.shed_expired,
         };
-        self.stats.rounds.fetch_add(rounds as u64, Ordering::Relaxed);
-        self.stats.requests.fetch_add(requests.len() as u64, Ordering::Relaxed);
-        // Rounds in order, partitions in order, items in slice order ==
-        // request order.
-        Ok(round_results.into_iter().flatten().flatten().collect())
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One autoscale step after a planned round: attribute task busy time
+    /// to shards through the owner map, fold the sample into the policy,
+    /// apply the actions it returns. Actions are advisory — a failed
+    /// re-replication must not fail the serve that triggered it.
+    fn autoscale_tick(&self, round_wall: Duration, backlog: usize) {
+        let Some(policy) = self.scale_policy.lock().unwrap().clone() else { return };
+        let busy = self.stats.take_busy();
+        let wall_ns = round_wall.as_nanos() as f64;
+        if wall_ns <= 0.0 {
+            return;
+        }
+        let owners = self.shard_owners();
+        if owners.is_empty() {
+            return;
+        }
+        let alive = self.ctx.membership().alive;
+        if alive.is_empty() {
+            return;
+        }
+        let util =
+            |n: usize| (busy.get(&n).copied().unwrap_or(0) as f64 / wall_ns).clamp(0.0, 1.0);
+        let sample = LoadSample {
+            shard_load: owners.iter().map(|&o| util(o)).collect(),
+            mean_util: alive.iter().map(|&n| util(n)).sum::<f64>() / alive.len() as f64,
+            backlog,
+            alive: alive.len(),
+        };
+        let actions = policy.observe(&mut self.scale_state.lock().unwrap(), &sample);
+        for action in actions {
+            match action {
+                ScaleAction::ReplicateShard(shard) => {
+                    let _ = self.replicate_shard(shard, &busy);
+                }
+                ScaleAction::AddNode => {
+                    // The epoch bump makes the group plan stale (next
+                    // round replans onto the new capacity) and the shard
+                    // placement stale (next serve reshards onto it).
+                    self.ctx.add_node();
+                    self.stats.scale_ups.fetch_add(1, Ordering::Relaxed);
+                }
+                ScaleAction::DrainNode => {
+                    // Drain the idlest alive node; shards re-balance at
+                    // the next serve's reshard (a draining node's blocks
+                    // stay readable until executor retirement).
+                    let target =
+                        alive.iter().copied().min_by(|&a, &b| util(a).total_cmp(&util(b)));
+                    if let Some(n) = target {
+                        self.ctx.cluster().drain_node(n);
+                        self.stats.scale_downs.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Publish one extra copy of `shard` on the least-busy alive node that
+    /// is not its owner. The copy rides the EXISTING broadcast round —
+    /// fetched cluster-wide, published on the cool target — so subsequent
+    /// rounds resolve the shard without crossing the hot owner, and the
+    /// usual retire/sweep lifecycle cleans it up with the round.
+    fn replicate_shard(&self, shard: usize, busy: &HashMap<usize, u64>) -> Result<()> {
+        let (bcast, owner) = {
+            let guard = self.deployed.lock().unwrap();
+            match guard.as_ref() {
+                Some(d) if shard < d.owners.len() => (d.bcast, d.owners[shard]),
+                _ => return Ok(()),
+            }
+        };
+        let alive = self.ctx.membership().alive;
+        let target = alive
+            .iter()
+            .copied()
+            .filter(|&n| n != owner)
+            .min_by_key(|n| busy.get(n).copied().unwrap_or(0));
+        let Some(target) = target else { return Ok(()) };
+        let bm = self.ctx.blocks();
+        let data = bcast.fetch(&bm, target, shard)?;
+        bcast.publish(&bm, target, shard, data);
+        self.stats.re_replications.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// One serving round's task: score this partition's slice of the
     /// micro-batch against the deployed shards and reduce task-side.
+    /// Records the node's busy time into the stats (the autoscale load
+    /// signal) and applies any injected straggler delay.
     fn round_task(
         &self,
         batch: Arc<Vec<T>>,
@@ -491,11 +997,18 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     ) -> Arc<dyn Fn(&TaskContext) -> Result<Vec<Reduced>> + Send + Sync> {
         let scorer = Arc::clone(&self.scorer);
         let instance = self.instance;
+        let stats = Arc::clone(&self.stats);
+        let chaos = Arc::clone(&self.chaos);
         let ranges = partition_ranges(batch.len(), width);
         Arc::new(move |tc: &TaskContext| {
             let items = &batch[ranges[tc.partition].clone()];
             if items.is_empty() {
                 return Ok(Vec::new());
+            }
+            let t0 = Instant::now();
+            let delay = chaos.lock().unwrap().get(&tc.node).copied();
+            if let Some(d) = delay {
+                std::thread::sleep(d);
             }
             let weights = fetch_assembled(&tc.blocks(), instance, bcast, tc.node)?;
             let rows = scorer(&weights, items)?;
@@ -505,6 +1018,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
                 rows.len(),
                 items.len()
             );
+            stats.note_busy(tc.node, t0.elapsed().as_nanos() as u64);
             Ok(rows.iter().map(|r| red.apply(r)).collect())
         })
     }
@@ -596,14 +1110,52 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn serving_config_shim_maps_to_strategy() {
+        let s: ServingStrategy =
+            ServingConfig { n_shards: Some(3), group_size: 8, max_batch: 64, replicate: true }
+                .into();
+        assert_eq!(s.n_shards, Some(3));
+        assert_eq!(s.group_size, 8);
+        assert_eq!(s.batching, Batching::Fixed(64));
+        assert_eq!(s.replication, Replication::Fixed(2));
+        assert_eq!(s.admission, Admission::default());
+        let solo: ServingStrategy =
+            ServingConfig { replicate: false, ..Default::default() }.into();
+        assert_eq!(solo.replication, Replication::Fixed(1));
+        // The shim's default maps onto the strategy's default exactly.
+        let via_shim: ServingStrategy = ServingConfig::default().into();
+        assert_eq!(via_shim, ServingStrategy::default());
+    }
+
+    #[test]
+    fn new_rejects_invalid_strategy() {
+        let ctx = SparkletContext::local(2);
+        assert!(PredictService::new(
+            &ctx,
+            linear_scorer(4, 2),
+            ServingStrategy::default().fixed_batch(0)
+        )
+        .is_err());
+        assert!(PredictService::new(
+            &ctx,
+            linear_scorer(4, 2),
+            ServingStrategy::default().adaptive(10.0, 64, 8)
+        )
+        .is_err());
+    }
+
+    #[test]
     fn deploy_shards_and_reassembles() {
         let ctx = SparkletContext::local(3);
-        let svc = PredictService::new(&ctx, linear_scorer(4, 2), ServingConfig::default());
+        let svc =
+            PredictService::new(&ctx, linear_scorer(4, 2), ServingStrategy::default()).unwrap();
         assert!(svc.current_weights().is_err(), "undeployed service must refuse");
         let w: Vec<f32> = (0..8).map(|i| i as f32).collect();
         svc.deploy(&w).unwrap();
         assert_eq!(svc.current_weights().unwrap(), w);
         assert_eq!(svc.param_count(), 8);
+        assert_eq!(svc.shard_owners().len(), 3.min(w.len()));
         // Redeploy keeps exactly ONE previous round alive (hot-redeploy
         // grace); a further deploy retires it — usage stays bounded.
         svc.deploy(&w).unwrap();
@@ -620,7 +1172,8 @@ mod tests {
     fn service_drop_retires_weight_blocks() {
         let ctx = SparkletContext::local(2);
         let baseline = ctx.blocks().usage().0;
-        let svc = PredictService::new(&ctx, linear_scorer(4, 2), ServingConfig::default());
+        let svc =
+            PredictService::new(&ctx, linear_scorer(4, 2), ServingStrategy::default()).unwrap();
         svc.deploy(&[1.0; 8]).unwrap();
         assert!(ctx.blocks().usage().0 > baseline);
         drop(svc);
@@ -634,8 +1187,9 @@ mod tests {
         let svc = PredictService::new(
             &ctx,
             linear_scorer(dim, 2),
-            ServingConfig { max_batch: 4, ..Default::default() },
-        );
+            ServingStrategy::default().fixed_batch(4),
+        )
+        .unwrap();
         // Class 0 scores x[0], class 1 scores x[1].
         let mut w = vec![0.0f32; dim * 2];
         w[0] = 1.0;

@@ -1,0 +1,577 @@
+//! Declarative serving configuration — the serving analogue of
+//! [`SyncStrategy`](super::schedule::SyncStrategy):
+//!
+//! * [`ServingStrategy`] — ONE declarative value selecting how a
+//!   [`PredictService`](super::serving::PredictService) batches
+//!   ([`Batching`]), replicates ([`Replication`]) and admits requests
+//!   ([`Admission`]), with consuming builders and a [`ServingStrategy::validate`]
+//!   called at service construction;
+//! * [`AdaptiveBatch`] — the SLO controller behind
+//!   [`Batching::Adaptive`]: grows the micro-batch while the measured
+//!   tail latency has headroom against the SLO, shrinks it under queue
+//!   pressure (a pure state machine, unit-testable without a cluster);
+//! * [`ScalePolicy`] / [`ScaleState`] — the autoscaling *policy* on top
+//!   of the elastic-membership *mechanism*: watches per-shard dispatch
+//!   load and queue backlog ([`LoadSample`]) and emits [`ScaleAction`]s —
+//!   re-replicate a hot shard, `Cluster::add_node`, `Cluster::drain_node`
+//!   — that the serving dispatch loop applies.
+//!
+//! ```
+//! use bigdl::bigdl::{Batching, Replication, ServingStrategy};
+//! let strat = ServingStrategy::default()
+//!     .adaptive(25.0, 16, 512)
+//!     .auto_scale(2.0)
+//!     .queue_cap(4096);
+//! assert!(strat.validate().is_ok());
+//! assert!(matches!(strat.batching, Batching::Adaptive { .. }));
+//! assert!(matches!(strat.replication, Replication::Auto { .. }));
+//! ```
+
+use anyhow::{bail, Result};
+
+/// How serving micro-batches requests into dispatch rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Batching {
+    /// A constant `n` requests per round (the classic fixed path — with
+    /// no deadlines configured this is bitwise-identical to the
+    /// pre-strategy `ServingConfig { max_batch: n, .. }` behavior).
+    Fixed(usize),
+    /// SLO-driven batch sizing: start at `min`, grow multiplicatively
+    /// while the measured round tail latency stays under 70% of
+    /// `slo_ms`, halve when it crosses 90% (queue pressure shows up as
+    /// tail latency), always clamped into `[min, max]`.
+    Adaptive { slo_ms: f64, min: usize, max: usize },
+}
+
+impl Default for Batching {
+    fn default() -> Self {
+        Batching::Fixed(256)
+    }
+}
+
+impl Batching {
+    /// Upper bound on the per-round batch size under this policy.
+    pub fn max_batch(&self) -> usize {
+        match *self {
+            Batching::Fixed(n) => n,
+            Batching::Adaptive { max, .. } => max,
+        }
+    }
+}
+
+/// How many nodes hold a copy of each weight shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Replication {
+    /// A constant number of copies per shard: `1` = owner only (the old
+    /// `replicate: false`), `2` = owner + one replica (the old
+    /// `replicate: true`). Always clamped to the alive-node count.
+    Fixed(usize),
+    /// Load-driven: deploy with 2 copies, then let the dispatch loop's
+    /// [`ScalePolicy`] publish extra copies of shards whose owner's
+    /// measured dispatch load exceeds `hot_watermark` × the mean shard
+    /// load for a sustained window (and add/drain nodes on cluster-wide
+    /// watermarks).
+    Auto { hot_watermark: f64 },
+}
+
+impl Default for Replication {
+    fn default() -> Self {
+        Replication::Fixed(2)
+    }
+}
+
+impl Replication {
+    /// Copies each shard is deployed with, clamped to the alive set.
+    pub fn copies(&self, alive: usize) -> usize {
+        match *self {
+            Replication::Fixed(n) => n.clamp(1, alive.max(1)),
+            Replication::Auto { .. } => 2.clamp(1, alive.max(1)),
+        }
+    }
+}
+
+/// Admission control for the deadline-aware serve path
+/// (`PredictService::serve_with_deadlines`). Requests shed at admission
+/// or at round assembly are metered (`ServingStats::shed_*`) and reported
+/// per request — never silently dropped. The deadline-free `serve` /
+/// `serve_adhoc` paths bypass admission entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Admission {
+    /// Max requests admitted per `serve_with_deadlines` call (the burst
+    /// bound); overflow is shed as `ShedReason::QueueFull`. 0 = unbounded.
+    pub queue_cap: usize,
+    /// Deadline attached to requests that don't carry their own, in ms
+    /// from admission. `None` = no implicit deadline.
+    pub default_deadline_ms: Option<f64>,
+}
+
+/// The full serving strategy of a [`PredictService`](super::serving::PredictService)
+/// — sharding, group planning, batching, replication and admission — as
+/// ONE declarative value, replacing the flat `ServingConfig` knob struct
+/// (kept only as a deprecated `From` migration shim).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingStrategy {
+    /// Weight shards; defaults to the node count (one owner per node).
+    pub n_shards: Option<usize>,
+    /// Serving group size: rounds dispatched per placement plan.
+    pub group_size: usize,
+    pub batching: Batching,
+    pub replication: Replication,
+    pub admission: Admission,
+}
+
+impl Default for ServingStrategy {
+    fn default() -> Self {
+        ServingStrategy {
+            n_shards: None,
+            group_size: 32,
+            batching: Batching::default(),
+            replication: Replication::default(),
+            admission: Admission::default(),
+        }
+    }
+}
+
+impl ServingStrategy {
+    pub fn shards(mut self, n: usize) -> Self {
+        self.n_shards = Some(n);
+        self
+    }
+
+    pub fn group(mut self, rounds: usize) -> Self {
+        self.group_size = rounds;
+        self
+    }
+
+    pub fn fixed_batch(mut self, n: usize) -> Self {
+        self.batching = Batching::Fixed(n);
+        self
+    }
+
+    pub fn adaptive(mut self, slo_ms: f64, min: usize, max: usize) -> Self {
+        self.batching = Batching::Adaptive { slo_ms, min, max };
+        self
+    }
+
+    /// Copies per shard: `1` = owner only, `2` = owner + replica.
+    pub fn replicas(mut self, copies: usize) -> Self {
+        self.replication = Replication::Fixed(copies);
+        self
+    }
+
+    pub fn auto_scale(mut self, hot_watermark: f64) -> Self {
+        self.replication = Replication::Auto { hot_watermark };
+        self
+    }
+
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.admission.queue_cap = cap;
+        self
+    }
+
+    pub fn default_deadline_ms(mut self, ms: f64) -> Self {
+        self.admission.default_deadline_ms = Some(ms);
+        self
+    }
+
+    /// Reject combinations the serving paths cannot honor. Called once by
+    /// `PredictService::new`.
+    pub fn validate(&self) -> Result<()> {
+        if self.group_size == 0 {
+            bail!("serving group_size must be >= 1");
+        }
+        match self.batching {
+            Batching::Fixed(0) => bail!("Batching::Fixed batch size must be >= 1"),
+            Batching::Adaptive { slo_ms, min, max } => {
+                if !slo_ms.is_finite() || slo_ms <= 0.0 {
+                    bail!("Batching::Adaptive slo_ms must be a positive finite number");
+                }
+                if min == 0 {
+                    bail!("Batching::Adaptive min batch must be >= 1");
+                }
+                if min > max {
+                    bail!("Batching::Adaptive min batch {min} exceeds max {max}");
+                }
+            }
+            Batching::Fixed(_) => {}
+        }
+        match self.replication {
+            Replication::Fixed(0) => {
+                bail!("Replication::Fixed needs >= 1 copy (the shard must live somewhere)")
+            }
+            Replication::Auto { hot_watermark } => {
+                if !hot_watermark.is_finite() || hot_watermark <= 1.0 {
+                    // At exactly the mean every shard is "hot" — the
+                    // policy would re-replicate the whole deployment.
+                    bail!("Replication::Auto hot_watermark must be > 1.0 (multiple of mean load)");
+                }
+            }
+            Replication::Fixed(_) => {}
+        }
+        if let Some(d) = self.admission.default_deadline_ms {
+            if !d.is_finite() || d <= 0.0 {
+                bail!("Admission default_deadline_ms must be a positive finite number");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The [`Batching::Adaptive`] controller: a pure state machine over
+/// observed per-round latencies. Tail latency is tracked as a decaying
+/// max (reacts to a spike in one round, forgets it geometrically); the
+/// batch grows ×1.2 while the tail sits under 70% of the SLO and halves
+/// when it crosses 90% — queue pressure surfaces as round latency, so
+/// backlog-induced slowdowns shrink the batch the same way stragglers do.
+#[derive(Debug, Clone)]
+pub struct AdaptiveBatch {
+    slo_ms: f64,
+    min: usize,
+    max: usize,
+    batch: usize,
+    tail_ms: f64,
+}
+
+impl AdaptiveBatch {
+    pub fn new(slo_ms: f64, min: usize, max: usize) -> AdaptiveBatch {
+        AdaptiveBatch {
+            slo_ms,
+            min: min.max(1),
+            max: max.max(min.max(1)),
+            batch: min.max(1),
+            tail_ms: 0.0,
+        }
+    }
+
+    /// The batch size the next round should use.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Decaying-max estimate of the recent round tail latency (ms).
+    pub fn tail_ms(&self) -> f64 {
+        self.tail_ms
+    }
+
+    /// Feed one finished round's wall latency into the controller.
+    pub fn observe(&mut self, round_ms: f64) {
+        if !round_ms.is_finite() || round_ms < 0.0 {
+            return;
+        }
+        self.tail_ms = (self.tail_ms * 0.85).max(round_ms);
+        if self.tail_ms < 0.7 * self.slo_ms {
+            self.batch = (((self.batch as f64) * 1.2).ceil() as usize).min(self.max);
+        } else if self.tail_ms > 0.9 * self.slo_ms {
+            self.batch = (self.batch / 2).max(self.min);
+        }
+        self.batch = self.batch.clamp(self.min, self.max);
+    }
+}
+
+/// One autoscale observation, built by the serving dispatch loop after
+/// each round: per-node busy time over the round wall gives utilization,
+/// attributed to shards through the deployment's owner map.
+#[derive(Debug, Clone)]
+pub struct LoadSample {
+    /// Utilization (busy/wall, clamped to [0,1]) of each shard's owner.
+    pub shard_load: Vec<f64>,
+    /// Mean utilization across the alive nodes.
+    pub mean_util: f64,
+    /// Requests still queued in the current serve when the round ended.
+    pub backlog: usize,
+    /// Alive-node count at sampling time.
+    pub alive: usize,
+}
+
+/// What the policy asks the serving layer to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Publish one extra copy of this shard on a lightly-loaded node.
+    ReplicateShard(usize),
+    /// Cluster-wide load crossed the up watermark: `Cluster::add_node`.
+    AddNode,
+    /// Cluster-wide load sat under the down watermark: drain one node.
+    DrainNode,
+}
+
+/// Autoscaling policy: hot-shard re-replication plus cluster-wide
+/// add/drain watermarks. Pure — [`ScalePolicy::observe`] folds a
+/// [`LoadSample`] into a [`ScaleState`] and returns the actions due, so
+/// the whole decision surface is unit-testable without a cluster.
+#[derive(Debug, Clone)]
+pub struct ScalePolicy {
+    /// A shard is hot when its owner's utilization exceeds this multiple
+    /// of the mean shard load.
+    pub hot_watermark: f64,
+    /// Consecutive hot samples before a shard's re-replication fires.
+    /// Edge-triggered: one action per sustained hot window — the shard
+    /// must cool down before it can fire again.
+    pub hot_window: usize,
+    /// Mean cluster utilization above which a node join is requested.
+    pub up_watermark: f64,
+    /// Mean cluster utilization below which a node drain is requested.
+    /// 0.0 disables scale-down.
+    pub down_watermark: f64,
+    /// Queued requests per alive node that also count as up pressure
+    /// (admission backlog the current width cannot drain). 0 disables.
+    pub backlog_watermark: usize,
+    /// Consecutive high/low samples before add/drain fires.
+    pub node_window: usize,
+    /// Samples to suppress further add/drain after one fires (lets the
+    /// membership change take effect before re-judging).
+    pub cooldown: usize,
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy {
+            hot_watermark: 2.0,
+            hot_window: 2,
+            up_watermark: 0.9,
+            down_watermark: 0.0,
+            backlog_watermark: 0,
+            node_window: 3,
+            cooldown: 4,
+            min_nodes: 1,
+            max_nodes: 64,
+        }
+    }
+}
+
+/// Streak counters the policy folds samples into.
+#[derive(Debug, Clone, Default)]
+pub struct ScaleState {
+    hot_streak: Vec<usize>,
+    fired: Vec<bool>,
+    high_streak: usize,
+    low_streak: usize,
+    cooldown: usize,
+}
+
+impl ScalePolicy {
+    /// Fold one sample into `state`; returns the actions that came due.
+    pub fn observe(&self, state: &mut ScaleState, sample: &LoadSample) -> Vec<ScaleAction> {
+        let shards = sample.shard_load.len();
+        state.hot_streak.resize(shards, 0);
+        state.fired.resize(shards, false);
+        let mut actions = Vec::new();
+
+        // Hot shards: owner load vs the mean shard load, edge-triggered
+        // once per sustained hot window.
+        let mean_shard = if shards == 0 {
+            0.0
+        } else {
+            sample.shard_load.iter().sum::<f64>() / shards as f64
+        };
+        for (i, &load) in sample.shard_load.iter().enumerate() {
+            let hot = mean_shard > 0.0 && load > self.hot_watermark * mean_shard;
+            if hot {
+                state.hot_streak[i] += 1;
+            } else {
+                state.hot_streak[i] = 0;
+                state.fired[i] = false;
+            }
+            if state.hot_streak[i] >= self.hot_window.max(1) && !state.fired[i] {
+                state.fired[i] = true;
+                actions.push(ScaleAction::ReplicateShard(i));
+            }
+        }
+
+        // Cluster-wide watermarks, behind a cooldown so one membership
+        // change settles before the next is judged.
+        if state.cooldown > 0 {
+            state.cooldown -= 1;
+            return actions;
+        }
+        let backlog_high = self.backlog_watermark > 0
+            && sample.backlog > self.backlog_watermark * sample.alive.max(1);
+        if sample.mean_util > self.up_watermark || backlog_high {
+            state.high_streak += 1;
+        } else {
+            state.high_streak = 0;
+        }
+        if self.down_watermark > 0.0 && sample.mean_util < self.down_watermark {
+            state.low_streak += 1;
+        } else {
+            state.low_streak = 0;
+        }
+        if state.high_streak >= self.node_window.max(1) && sample.alive < self.max_nodes {
+            state.high_streak = 0;
+            state.cooldown = self.cooldown;
+            actions.push(ScaleAction::AddNode);
+        } else if state.low_streak >= self.node_window.max(1) && sample.alive > self.min_nodes {
+            state.low_streak = 0;
+            state.cooldown = self.cooldown;
+            actions.push(ScaleAction::DrainNode);
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_validation_rejects_bad_combos() {
+        assert!(ServingStrategy::default().validate().is_ok());
+        assert!(ServingStrategy::default().adaptive(25.0, 16, 512).validate().is_ok());
+        assert!(ServingStrategy::default().auto_scale(2.0).queue_cap(100).validate().is_ok());
+        // Batching.
+        assert!(ServingStrategy::default().fixed_batch(0).validate().is_err());
+        assert!(ServingStrategy::default().adaptive(0.0, 16, 512).validate().is_err());
+        assert!(ServingStrategy::default().adaptive(-5.0, 16, 512).validate().is_err());
+        assert!(ServingStrategy::default().adaptive(25.0, 0, 512).validate().is_err());
+        assert!(ServingStrategy::default().adaptive(25.0, 64, 8).validate().is_err());
+        // Replication.
+        assert!(ServingStrategy::default().replicas(0).validate().is_err());
+        assert!(ServingStrategy::default().replicas(1).validate().is_ok());
+        assert!(ServingStrategy::default().auto_scale(1.0).validate().is_err());
+        assert!(ServingStrategy::default().auto_scale(0.5).validate().is_err());
+        // Admission + group.
+        assert!(ServingStrategy::default().default_deadline_ms(-1.0).validate().is_err());
+        assert!(ServingStrategy::default().default_deadline_ms(10.0).validate().is_ok());
+        assert!(ServingStrategy::default().group(0).validate().is_err());
+    }
+
+    #[test]
+    fn replication_copies_clamp_to_alive() {
+        assert_eq!(Replication::Fixed(1).copies(4), 1);
+        assert_eq!(Replication::Fixed(2).copies(4), 2);
+        assert_eq!(Replication::Fixed(2).copies(1), 1);
+        assert_eq!(Replication::Fixed(9).copies(3), 3);
+        assert_eq!(Replication::Auto { hot_watermark: 2.0 }.copies(4), 2);
+        assert_eq!(Replication::Auto { hot_watermark: 2.0 }.copies(1), 1);
+    }
+
+    /// Deterministic convergence against a linear latency model: the
+    /// controller must settle on a batch whose modeled round latency
+    /// respects the SLO, well above the minimum.
+    #[test]
+    fn adaptive_batch_converges_under_latency_model() {
+        let slo = 20.0;
+        // round_ms = 2ms fixed overhead + 0.02ms per request.
+        let model = |batch: usize| 2.0 + 0.02 * batch as f64;
+        let mut c = AdaptiveBatch::new(slo, 8, 4096);
+        for _ in 0..200 {
+            let ms = model(c.batch());
+            c.observe(ms);
+        }
+        let settled = c.batch();
+        assert!(settled > 8, "controller never grew: {settled}");
+        assert!(
+            model(settled) <= slo,
+            "settled batch {settled} models {}ms > SLO {slo}ms",
+            model(settled)
+        );
+        // Growth stops near the 70% threshold: (0.7*20 - 2) / 0.02 = 600.
+        assert!(settled >= 300, "settled far below the headroom bound: {settled}");
+    }
+
+    /// Latency pressure (a straggler dominating every round) must pin the
+    /// batch at the minimum, and clearing it must let the batch regrow.
+    #[test]
+    fn adaptive_batch_shrinks_under_pressure_and_recovers() {
+        let mut c = AdaptiveBatch::new(10.0, 4, 1024);
+        for _ in 0..30 {
+            c.observe(1.0); // plenty of headroom: grow
+        }
+        assert!(c.batch() > 100, "should have grown: {}", c.batch());
+        for _ in 0..30 {
+            c.observe(50.0); // 5x the SLO: shrink hard
+        }
+        assert_eq!(c.batch(), 4, "sustained overload must pin the batch at min");
+        for _ in 0..60 {
+            c.observe(1.0); // decaying max forgets the spike, batch regrows
+        }
+        assert!(c.batch() > 100, "controller never recovered: {}", c.batch());
+    }
+
+    fn flat_sample(load: f64, shards: usize, alive: usize) -> LoadSample {
+        LoadSample { shard_load: vec![load; shards], mean_util: load, backlog: 0, alive }
+    }
+
+    /// One hot shard fires exactly once per sustained hot window, and can
+    /// fire again only after cooling down.
+    #[test]
+    fn hot_shard_fires_once_per_window() {
+        let policy = ScalePolicy { hot_watermark: 2.0, hot_window: 2, ..Default::default() };
+        let mut state = ScaleState::default();
+        let mut hot = flat_sample(0.1, 4, 4);
+        hot.shard_load[2] = 1.0; // mean 0.325, 1.0 > 2*0.325
+        assert_eq!(policy.observe(&mut state, &hot), vec![]); // streak 1
+        assert_eq!(
+            policy.observe(&mut state, &hot),
+            vec![ScaleAction::ReplicateShard(2)] // streak 2 == window
+        );
+        for _ in 0..10 {
+            assert_eq!(policy.observe(&mut state, &hot), vec![], "must not re-fire while hot");
+        }
+        let cool = flat_sample(0.1, 4, 4);
+        assert_eq!(policy.observe(&mut state, &cool), vec![]); // streak resets
+        assert_eq!(policy.observe(&mut state, &hot), vec![]);
+        assert_eq!(
+            policy.observe(&mut state, &hot),
+            vec![ScaleAction::ReplicateShard(2)],
+            "a fresh sustained hot window must fire again"
+        );
+    }
+
+    /// Cluster-wide watermarks: sustained high load requests a join (once
+    /// per cooldown), sustained low load requests a drain, and the
+    /// min/max node bounds are honored.
+    #[test]
+    fn cluster_watermarks_drive_add_and_drain() {
+        let policy = ScalePolicy {
+            up_watermark: 0.8,
+            down_watermark: 0.2,
+            node_window: 2,
+            cooldown: 3,
+            min_nodes: 2,
+            max_nodes: 4,
+            ..Default::default()
+        };
+        let mut state = ScaleState::default();
+        let high = flat_sample(0.95, 2, 3);
+        assert_eq!(policy.observe(&mut state, &high), vec![]);
+        assert_eq!(policy.observe(&mut state, &high), vec![ScaleAction::AddNode]);
+        // Cooldown suppresses the next decisions entirely.
+        for _ in 0..3 {
+            assert_eq!(policy.observe(&mut state, &high), vec![]);
+        }
+        // At max_nodes the add is refused even under sustained load.
+        let high_at_max = flat_sample(0.95, 2, 4);
+        for _ in 0..6 {
+            assert_eq!(policy.observe(&mut state, &high_at_max), vec![]);
+        }
+        // Low side: fires after the window, bounded by min_nodes.
+        let mut state = ScaleState::default();
+        let low = flat_sample(0.05, 2, 3);
+        assert_eq!(policy.observe(&mut state, &low), vec![]);
+        assert_eq!(policy.observe(&mut state, &low), vec![ScaleAction::DrainNode]);
+        let mut state = ScaleState::default();
+        let low_at_min = flat_sample(0.05, 2, 2);
+        for _ in 0..6 {
+            assert_eq!(policy.observe(&mut state, &low_at_min), vec![]);
+        }
+    }
+
+    /// Admission backlog the current width cannot drain counts as up
+    /// pressure even when CPU utilization looks moderate.
+    #[test]
+    fn backlog_counts_as_up_pressure() {
+        let policy = ScalePolicy {
+            up_watermark: 0.9,
+            backlog_watermark: 100,
+            node_window: 2,
+            ..Default::default()
+        };
+        let mut state = ScaleState::default();
+        let mut s = flat_sample(0.4, 2, 2); // util well under the watermark
+        s.backlog = 500; // > 100 * 2 alive
+        assert_eq!(policy.observe(&mut state, &s), vec![]);
+        assert_eq!(policy.observe(&mut state, &s), vec![ScaleAction::AddNode]);
+    }
+}

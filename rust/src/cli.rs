@@ -81,6 +81,15 @@ COMMANDS:
               iterations; drain/kill default to the highest-id alive node
   predict --model ncf        distributed inference over synthetic samples
           [--nodes 4] [--records 8192]
+          [--max-batch 256] [--group N]      fixed micro-batch serving
+          [--slo-ms D [--min-batch 16]]      SLO-adaptive batching: grow the
+              micro-batch while measured p99 has headroom, shrink past 90%
+              of the SLO (--max-batch caps the growth)
+          [--deadline-ms D]                  per-request deadline; late
+              requests are shed (metered), never silently dropped
+          [--admission-queue N]              bound the admission queue
+          [--autoscale hot:<watermark>]      re-replicate a shard whose
+              load exceeds <watermark> x the mean shard load
   help                       this message
 
 ENV: BIGDL_ARTIFACTS (default ./artifacts), BIGDL_LOG (info)";

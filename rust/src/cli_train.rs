@@ -11,8 +11,9 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use bigdl::bigdl::{
-    inference, mlp_rdd, optim, Compression, DistributedOptimizer, LinReg, Mlp, Module, Sample,
-    SyncAlgo, SyncMode, SyncStrategy, TrainConfig, TrainReport,
+    inference, mlp_rdd, optim, Compression, DistributedOptimizer, LinReg, Mlp, Module,
+    PredictService, Reduction, Request, Sample, ServeOutcome, ServingStrategy, SyncAlgo,
+    SyncMode, SyncStrategy, TrainConfig, TrainReport,
 };
 use bigdl::config::Config;
 use bigdl::data;
@@ -142,6 +143,38 @@ fn sync_strategy(opts: &Opts) -> Result<SyncStrategy> {
         clip_const: opts.get("clip-const").map(|v| v.parse()).transpose()?,
         clip_l2: opts.get("clip-l2").map(|v| v.parse()).transpose()?,
     };
+    Ok(strategy)
+}
+
+/// Assemble the declarative [`ServingStrategy`] from CLI flags (the
+/// serving mirror of [`sync_strategy`]): `--slo-ms D` switches batching
+/// from `Fixed(--max-batch)` to `Adaptive` (growing from `--min-batch`
+/// while p99 has SLO headroom), `--deadline-ms` / `--admission-queue`
+/// configure admission control, and `--autoscale hot:<watermark>` turns
+/// on load-driven shard re-replication.
+fn serving_strategy(opts: &Opts) -> Result<ServingStrategy> {
+    let max_batch = opts.get_usize("max-batch", 256)?;
+    let mut strategy = ServingStrategy::default().group(opts.get_usize("group", 32)?);
+    strategy = match opts.get_f64("slo-ms", 0.0)? {
+        slo if slo > 0.0 => strategy.adaptive(slo, opts.get_usize("min-batch", 16)?, max_batch),
+        _ => strategy.fixed_batch(max_batch),
+    };
+    if let Some(spec) = opts.get("autoscale") {
+        let watermark = spec
+            .strip_prefix("hot:")
+            .with_context(|| format!("--autoscale {spec:?}: expected hot:<watermark>"))?;
+        strategy = strategy.auto_scale(watermark.parse()?);
+    }
+    match opts.get_usize("admission-queue", 0)? {
+        0 => {}
+        cap => strategy = strategy.queue_cap(cap),
+    }
+    if let Some(d) = opts.get("deadline-ms") {
+        strategy = strategy.default_deadline_ms(d.parse()?);
+    }
+    if let Some(shards) = opts.get("shards") {
+        strategy = strategy.shards(shards.parse()?);
+    }
     Ok(strategy)
 }
 
@@ -347,17 +380,51 @@ pub fn predict(opts: &Opts) -> Result<()> {
     let records = opts.get_usize("records", 2048)?;
     let per_part = records.div_ceil(s.partitions);
     let dataset = dataset_for(&s.model, &ctx, s.partitions, per_part, s.seed ^ 0xE7A1)?;
-    let weights = Arc::new(module.initial_params()?);
+    let weights = module.initial_params()?;
     module.warmup()?; // compile off the measured path
+    let strategy = serving_strategy(opts)?;
+    let svc = PredictService::new(&ctx, inference::scorer_for(&ctx, &module)?, strategy)?;
+    svc.deploy(&weights)?;
+    let requests: Vec<Request<Sample>> =
+        dataset.collect()?.into_iter().map(Request::new).collect();
     let t0 = std::time::Instant::now();
-    let rows = inference::predict(&module, weights, &dataset)?;
+    let outcomes = svc.serve_with_deadlines(&requests, Reduction::Full)?;
     let wall = t0.elapsed().as_secs_f64();
+    let served = outcomes
+        .iter()
+        .filter(|o| matches!(o, ServeOutcome::Served(_)))
+        .count();
+    let shed = outcomes.len() - served;
+    let first_row = outcomes.iter().find_map(|o| match o {
+        ServeOutcome::Served(bigdl::bigdl::Reduced::Row(row)) => Some(row.clone()),
+        _ => None,
+    });
+    let snap = svc.stats.snapshot();
     println!(
-        "predicted {} records in {wall:.2}s ({:.0} rec/s); first row: {:?}",
-        rows.len(),
-        rows.len() as f64 / wall,
-        &rows[0][..rows[0].len().min(8)]
+        "served {served}/{} records in {wall:.2}s ({:.0} rec/s), {shed} shed \
+         (queue_full {} / infeasible {} / expired {})",
+        outcomes.len(),
+        served as f64 / wall.max(1e-9),
+        snap.shed_queue_full,
+        snap.shed_infeasible,
+        snap.shed_expired
     );
+    println!(
+        "latency: p50 {:.2}ms p99 {:.2}ms over {} rounds (final batch {})",
+        snap.p50_ms,
+        snap.p99_ms,
+        snap.rounds,
+        svc.batch_size()
+    );
+    if snap.re_replications + snap.scale_ups + snap.scale_downs > 0 {
+        println!(
+            "autoscale: {} re-replications, {} joins, {} drains",
+            snap.re_replications, snap.scale_ups, snap.scale_downs
+        );
+    }
+    if let Some(row) = first_row {
+        println!("first row: {:?}", &row[..row.len().min(8)]);
+    }
     if let Some(rt) = rt {
         rt.shutdown();
     }

@@ -127,6 +127,11 @@ pub struct RoundInfo {
     /// True when this round re-planned placements — a group boundary, a
     /// planned node died mid-group, or load skew crossed the threshold.
     pub replanned: bool,
+    /// True when this round sat on a group boundary (`round % group == 0`)
+    /// — its replan is the scheduled amortization refresh, NOT a fault.
+    /// Observers metering replan causes split on this: `replanned &&
+    /// !boundary` is a mid-group (dead-node / epoch / skew) replan.
+    pub boundary: bool,
     /// True when the replan was triggered by inflight imbalance crossing
     /// `SchedulePolicy::skew_replan_threshold` (load-skew locality
     /// refresh) rather than a group boundary or node death.
@@ -324,7 +329,7 @@ impl JobRunner {
             }
             let p = plan.as_ref().expect("plan set above");
             let results = self.run_planned(p, round_fn(round))?;
-            on_round(RoundInfo { round, replanned, skew }, &results);
+            on_round(RoundInfo { round, replanned, boundary, skew }, &results);
             out.push(results);
         }
         Ok(out)

@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::kafka_sim::KafkaSim;
-use crate::bigdl::serving::{PredictService, Reduced, Reduction};
+use crate::bigdl::serving::{PredictService, Reduced, Reduction, Request, ServeOutcome};
 use crate::sparklet::{GroupPlan, Rdd, SparkletContext};
 
 /// Per-micro-batch outcome.
@@ -24,6 +24,9 @@ pub struct BatchStats {
     pub process_s: f64,
     /// Records still queued when the batch closed (backpressure signal).
     pub backlog: usize,
+    /// Records shed by serving admission control this batch (0 on paths
+    /// without deadlines; see [`StreamingContext::classify_stream`]).
+    pub shed: usize,
 }
 
 /// Micro-batch driver.
@@ -93,6 +96,7 @@ impl StreamingContext {
                 records: n,
                 process_s,
                 backlog: source.len(),
+                shed: 0,
             });
             if let Some(rest) = self.interval.checked_sub(t0.elapsed()) {
                 std::thread::sleep(rest);
@@ -110,6 +114,13 @@ impl StreamingContext {
     /// carry the stream's group plan, each scoring job dispatches as bare
     /// batched enqueues — the serving analogue of the training loop's
     /// Drizzle amortization.
+    ///
+    /// When the service's strategy configures a default deadline
+    /// (`Admission::default_deadline_ms`), micro-batch records INHERIT it:
+    /// each batch flows through the admission-controlled
+    /// [`PredictService::serve_with_deadlines`] path, shed records are
+    /// counted in [`BatchStats::shed`] (and the service's shed meters),
+    /// and only served predictions reach `sink`.
     pub fn classify_stream<T, F>(
         &self,
         source: &Arc<KafkaSim<T>>,
@@ -122,7 +133,46 @@ impl StreamingContext {
         T: Clone + Send + Sync + 'static,
         F: FnMut(usize, Vec<Reduced>) -> Result<()>,
     {
-        self.run(source, batches, |i, rdd| sink(i, service.score_rdd(&rdd, red)?))
+        if service.strategy().admission.default_deadline_ms.is_none() {
+            return self.run(source, batches, |i, rdd| sink(i, service.score_rdd(&rdd, red)?));
+        }
+        // Deadline-inheriting loop: serving admission owns batching and
+        // placement amortization, so records go straight to the service
+        // (no batch RDD) and the usual interval pacing applies.
+        let mut stats = Vec::with_capacity(batches);
+        for batch_index in 0..batches {
+            let t0 = Instant::now();
+            let records = source.poll(self.max_batch);
+            let n = records.len();
+            let mut shed = 0usize;
+            if n > 0 {
+                let requests: Vec<Request<T>> = records.into_iter().map(Request::new).collect();
+                let outcomes = service.serve_with_deadlines(&requests, red)?;
+                let mut served = Vec::with_capacity(outcomes.len());
+                for o in outcomes {
+                    match o {
+                        ServeOutcome::Served(r) => served.push(r),
+                        ServeOutcome::Shed(_) => shed += 1,
+                    }
+                }
+                sink(batch_index, served)?;
+            }
+            let process_s = t0.elapsed().as_secs_f64();
+            stats.push(BatchStats {
+                batch_index,
+                records: n,
+                process_s,
+                backlog: source.len(),
+                shed,
+            });
+            if let Some(rest) = self.interval.checked_sub(t0.elapsed()) {
+                std::thread::sleep(rest);
+            }
+            if source.is_closed() && source.is_empty() {
+                break;
+            }
+        }
+        Ok(stats)
     }
 }
 
@@ -154,7 +204,8 @@ mod tests {
 
     #[test]
     fn classify_stream_scores_microbatches_through_service() {
-        use crate::bigdl::serving::{BatchScorer, ServingConfig};
+        use crate::bigdl::serving::BatchScorer;
+        use crate::bigdl::serving_strategy::ServingStrategy;
 
         let ctx = SparkletContext::local(2);
         // Two-class linear model over 2-dim requests: row[c] = w[c*2..] · x.
@@ -171,8 +222,9 @@ mod tests {
         let svc = crate::bigdl::serving::PredictService::new(
             &ctx,
             scorer,
-            ServingConfig::default(),
-        );
+            ServingStrategy::default(),
+        )
+        .unwrap();
         svc.deploy(&[1.0, 0.0, 0.0, 1.0]).unwrap();
 
         let k = KafkaSim::new(1000);
@@ -198,6 +250,48 @@ mod tests {
         for (i, c) in classes.iter().enumerate() {
             assert_eq!(*c, i % 2, "record {i} routed to the wrong class");
         }
+    }
+
+    #[test]
+    fn classify_stream_inherits_deadlines_and_meters_shed() {
+        use crate::bigdl::serving::BatchScorer;
+        use crate::bigdl::serving_strategy::ServingStrategy;
+
+        let ctx = SparkletContext::local(2);
+        let scorer: BatchScorer<Vec<f32>> =
+            Arc::new(|_w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+                Ok(items.iter().map(|_| vec![1.0f32]).collect())
+            });
+        // A default deadline far too tight for any dispatch round: every
+        // record is admitted (not yet expired at admission) and shed at
+        // round assembly — exercising the inherited-deadline path end to
+        // end without timing flakiness.
+        let svc = crate::bigdl::serving::PredictService::new(
+            &ctx,
+            scorer,
+            ServingStrategy::default().default_deadline_ms(0.0001),
+        )
+        .unwrap();
+        svc.deploy(&[1.0]).unwrap();
+        let k = KafkaSim::new(100);
+        for _ in 0..20 {
+            k.produce(vec![1.0f32]);
+        }
+        k.close();
+        let sc = StreamingContext::new(&ctx, Duration::from_millis(1), 10);
+        let mut served = 0usize;
+        let stats = sc
+            .classify_stream(&k, 10, &svc, Reduction::Argmax, |_i, preds| {
+                served += preds.len();
+                Ok(())
+            })
+            .unwrap();
+        let shed: usize = stats.iter().map(|s| s.shed).sum();
+        let records: usize = stats.iter().map(|s| s.records).sum();
+        assert_eq!(records, 20);
+        assert_eq!(served + shed, 20, "every record must be served or shed");
+        assert!(shed > 0, "a 100ns deadline cannot survive a dispatch round");
+        assert_eq!(svc.stats.snapshot().shed(), shed as u64);
     }
 
     #[test]

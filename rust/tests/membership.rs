@@ -13,7 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bigdl::bigdl::builtin::{linreg_rdd, LinReg};
-use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction, ServingConfig};
+use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction};
+use bigdl::bigdl::serving_strategy::ServingStrategy;
 use bigdl::bigdl::{
     DistributedOptimizer, Module, ParameterManager, Sgd, SyncMode, TrainConfig,
 };
@@ -128,8 +129,9 @@ fn sharded_serving_survives_join_and_drain() {
     let svc = PredictService::new(
         &ctx,
         linear_scorer(dim, classes),
-        ServingConfig { n_shards: Some(SHARDS), max_batch: 16, ..Default::default() },
-    );
+        ServingStrategy::default().shards(SHARDS).fixed_batch(16),
+    )
+    .unwrap();
     let mut rng = Rng::new(0xE1A57);
     let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
     svc.deploy(&weights).unwrap();

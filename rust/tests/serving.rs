@@ -6,7 +6,8 @@
 use std::sync::Arc;
 
 use bigdl::bigdl::optim::Sgd;
-use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction, ServingConfig};
+use bigdl::bigdl::serving::{BatchScorer, PredictService, Reduction};
+use bigdl::bigdl::serving_strategy::ServingStrategy;
 use bigdl::bigdl::ParameterManager;
 use bigdl::sparklet::SparkletContext;
 use bigdl::util::prng::Rng;
@@ -43,8 +44,9 @@ fn planned_serving_matches_adhoc_with_amortized_dispatch() {
     let svc = PredictService::new(
         &ctx,
         linear_scorer(dim, classes),
-        ServingConfig { max_batch: 32, group_size: 64, ..Default::default() },
-    );
+        ServingStrategy::default().fixed_batch(32).group(64),
+    )
+    .unwrap();
     let mut rng = Rng::new(0x5E12F);
     let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
     svc.deploy(&weights).unwrap();
@@ -88,9 +90,13 @@ fn sharded_handoff_matches_driver_deploy() {
     // "Trained" state: a ParameterManager holding the weights as shards.
     let pm = ParameterManager::init(&ctx, &weights, 3, Arc::new(Sgd::new(0.1))).unwrap();
 
-    let via_shards = PredictService::new(&ctx, linear_scorer(dim, classes), ServingConfig::default());
+    let via_shards =
+        PredictService::new(&ctx, linear_scorer(dim, classes), ServingStrategy::default())
+            .unwrap();
     via_shards.deploy_sharded(&pm.weights_broadcast(), k).unwrap();
-    let via_driver = PredictService::new(&ctx, linear_scorer(dim, classes), ServingConfig::default());
+    let via_driver =
+        PredictService::new(&ctx, linear_scorer(dim, classes), ServingStrategy::default())
+            .unwrap();
     via_driver.deploy(&weights).unwrap();
 
     assert_eq!(via_shards.current_weights().unwrap(), weights);
@@ -115,8 +121,9 @@ fn serving_survives_killed_node() {
     let svc = PredictService::new(
         &ctx,
         linear_scorer(dim, classes),
-        ServingConfig { max_batch: 16, ..Default::default() },
-    );
+        ServingStrategy::default().fixed_batch(16),
+    )
+    .unwrap();
     let mut rng = Rng::new(0xCA7);
     let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
     svc.deploy(&weights).unwrap();

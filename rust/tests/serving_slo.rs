@@ -1,0 +1,468 @@
+//! SLO-aware serving integration suite: the `ServingStrategy` API end to
+//! end — adaptive batching converging under an injected straggler with
+//! p99 under the SLO, deadline admission (expired / queue-full /
+//! infeasible sheds, all metered), hot-shard re-replication firing exactly
+//! once per sustained hot window, autoscale add/drain on cluster-wide
+//! watermarks riding the elastic-membership mechanism, and the
+//! `Batching::Fixed` path staying identical to the legacy `ServingConfig`
+//! behavior it replaces.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bigdl::bigdl::serving::{
+    BatchScorer, PredictService, Reduced, Reduction, Request, ServeOutcome, ShedReason,
+};
+use bigdl::bigdl::serving_strategy::{ScalePolicy, ServingStrategy};
+use bigdl::sparklet::SparkletContext;
+use bigdl::util::prng::Rng;
+
+/// Linear scorer: `classes` rows of `row[c] = w[c*dim..(c+1)*dim] · x`.
+fn linear_scorer(dim: usize, classes: usize) -> BatchScorer<Vec<f32>> {
+    Arc::new(move |w: &Arc<Vec<f32>>, items: &[Vec<f32>]| {
+        anyhow::ensure!(w.len() == dim * classes, "bad weight length {}", w.len());
+        Ok(items
+            .iter()
+            .map(|x| {
+                (0..classes)
+                    .map(|c| x.iter().zip(&w[c * dim..(c + 1) * dim]).map(|(a, b)| a * b).sum())
+                    .collect()
+            })
+            .collect())
+    })
+}
+
+fn random_requests(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.gen_f32() - 0.5).collect())
+        .collect()
+}
+
+/// `Batching::Fixed` must behave exactly like the legacy flat-config path
+/// it replaces: identical predictions, identical round/request accounting
+/// — and the deprecated `ServingConfig` shim must route through the same
+/// strategy machinery.
+#[test]
+#[allow(deprecated)]
+fn fixed_batching_matches_legacy_config_path() {
+    use bigdl::bigdl::serving::ServingConfig;
+
+    let (dim, classes) = (6, 3);
+    let ctx = SparkletContext::local(3);
+    let legacy = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingConfig { max_batch: 16, group_size: 8, ..Default::default() },
+    )
+    .unwrap();
+    let strategic = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().fixed_batch(16).group(8),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x510F1);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    legacy.deploy(&weights).unwrap();
+    strategic.deploy(&weights).unwrap();
+    let requests = random_requests(&mut rng, 200, dim);
+    assert_eq!(
+        legacy.serve(&requests, Reduction::TopK(2)).unwrap(),
+        strategic.serve(&requests, Reduction::TopK(2)).unwrap(),
+        "the shim and the explicit strategy must serve identical predictions"
+    );
+    let (l, s) = (legacy.stats.snapshot(), strategic.stats.snapshot());
+    assert_eq!(l.rounds, s.rounds, "identical micro-batch carving");
+    assert_eq!(l.rounds, 200u64.div_ceil(16));
+    assert_eq!(l.requests, s.requests);
+    assert_eq!(l.group_replans, s.group_replans);
+    assert_eq!(l.shed(), 0);
+    assert_eq!(s.shed(), 0);
+}
+
+/// Under a straggler, the adaptive controller must grow the batch off its
+/// minimum (the generous SLO leaves headroom) while the measured p99 stays
+/// under the SLO. Margins are deliberately fat — the precise control law
+/// is pinned by the pure `AdaptiveBatch` unit tests.
+#[test]
+fn adaptive_batch_converges_under_straggler_with_p99_under_slo() {
+    let (dim, classes) = (8, 4);
+    let slo_ms = 250.0;
+    let ctx = SparkletContext::local(4);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().adaptive(slo_ms, 8, 256),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xADA97);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    svc.inject_node_delay(0, Duration::from_millis(2));
+    assert_eq!(svc.batch_size(), 8, "adaptive batching starts at min");
+
+    let requests = random_requests(&mut rng, 1500, dim);
+    let out = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(out.len(), 1500);
+
+    let snap = svc.stats.snapshot();
+    assert!(
+        svc.batch_size() > 8,
+        "with ~2ms rounds against a {slo_ms}ms SLO the batch must grow: {}",
+        svc.batch_size()
+    );
+    assert!(snap.p99_ms > 0.0, "round latencies must land in the histogram");
+    assert!(
+        snap.p99_ms <= slo_ms,
+        "p99 {}ms must hold under the {slo_ms}ms SLO",
+        snap.p99_ms
+    );
+    assert!(snap.p50_ms <= snap.p99_ms);
+    assert!(
+        snap.rounds < 1500 / 8,
+        "a grown batch takes fewer rounds than min-batch carving: {}",
+        snap.rounds
+    );
+}
+
+/// Sustained latency pressure (a straggler pushing every round past the
+/// SLO) must pin the batch at its minimum — the shrink side of the
+/// controller, driven through real dispatch.
+#[test]
+fn adaptive_batch_shrinks_under_latency_pressure() {
+    let (dim, classes) = (4, 2);
+    let ctx = SparkletContext::local(2);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().adaptive(15.0, 4, 64),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x5171117);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    // Every round pays >= 25ms against a 15ms SLO: tail is always over
+    // the 90% shrink threshold, so the batch can never leave min.
+    svc.inject_node_delay(0, Duration::from_millis(25));
+    svc.inject_node_delay(1, Duration::from_millis(25));
+    let requests = random_requests(&mut rng, 40, dim);
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.batch_size(), 4, "sustained overload must pin the batch at min");
+    let snap = svc.stats.snapshot();
+    assert!(snap.p99_ms >= 25.0, "p99 {}ms must reflect the straggler floor", snap.p99_ms);
+}
+
+/// Requests whose deadline already passed are shed as `Expired` — in
+/// request order, metered, with the live requests still served correctly.
+#[test]
+fn expired_deadlines_shed_and_metered() {
+    let dim = 3;
+    let ctx = SparkletContext::local(2);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, 2),
+        ServingStrategy::default().fixed_batch(8),
+    )
+    .unwrap();
+    // Class 0 scores x[0], class 1 scores x[1].
+    let mut w = vec![0.0f32; dim * 2];
+    w[0] = 1.0;
+    w[dim + 1] = 1.0;
+    svc.deploy(&w).unwrap();
+
+    let now = Instant::now();
+    let expired = now.checked_sub(Duration::from_millis(5)).unwrap_or(now);
+    let live = now + Duration::from_secs(60);
+    let requests: Vec<Request<Vec<f32>>> = (0..20)
+        .map(|i| {
+            let x = if i % 2 == 0 { vec![1.0, 0.0, 0.0] } else { vec![0.0, 1.0, 0.0] };
+            // Even requests carry a dead deadline, odd a comfortable one.
+            Request::with_deadline(x, if i % 2 == 0 { expired } else { live })
+        })
+        .collect();
+    let outcomes = svc.serve_with_deadlines(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(outcomes.len(), 20);
+    for (i, o) in outcomes.iter().enumerate() {
+        if i % 2 == 0 {
+            assert_eq!(*o, ServeOutcome::Shed(ShedReason::Expired), "request {i}");
+        } else {
+            assert_eq!(
+                *o,
+                ServeOutcome::Served(Reduced::Class { class: 1, score: 1.0 }),
+                "request {i}"
+            );
+        }
+    }
+    let snap = svc.stats.snapshot();
+    assert_eq!(snap.shed_expired, 10);
+    assert_eq!(snap.shed(), 10, "only Expired sheds fired");
+    assert_eq!(snap.requests, 20, "shed requests still count as requests");
+}
+
+/// The admission queue bound sheds overflow as `QueueFull`: the first
+/// `queue_cap` requests are admitted and served, the rest shed in order.
+#[test]
+fn queue_cap_sheds_overflow_as_queue_full() {
+    let dim = 4;
+    let ctx = SparkletContext::local(2);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, 2),
+        ServingStrategy::default().fixed_batch(8).queue_cap(10),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x0F10);
+    let weights: Vec<f32> = (0..dim * 2).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let requests: Vec<Request<Vec<f32>>> = random_requests(&mut rng, 25, dim)
+        .into_iter()
+        .map(Request::new)
+        .collect();
+    let outcomes = svc.serve_with_deadlines(&requests, Reduction::Argmax).unwrap();
+    for (i, o) in outcomes.iter().enumerate() {
+        if i < 10 {
+            assert!(
+                matches!(o, ServeOutcome::Served(_)),
+                "request {i} under the cap must serve: {o:?}"
+            );
+        } else {
+            assert_eq!(*o, ServeOutcome::Shed(ShedReason::QueueFull), "request {i}");
+        }
+    }
+    let snap = svc.stats.snapshot();
+    assert_eq!(snap.shed_queue_full, 15);
+    assert_eq!(snap.requests, 25);
+}
+
+/// Once a drain rate has been measured, deadlines the queue cannot make
+/// are shed as `Infeasible` at admission: a long burst with one shared
+/// deadline serves a feasible prefix and sheds the tail.
+#[test]
+fn infeasible_deadlines_shed_at_measured_drain_rate() {
+    let dim = 4;
+    let ctx = SparkletContext::local(2);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, 2),
+        ServingStrategy::default().fixed_batch(4),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x1F8A);
+    let weights: Vec<f32> = (0..dim * 2).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    // Throttle every round to >= 10ms so the measured drain rate is
+    // bounded and the feasibility math below is deterministic-ish.
+    svc.inject_node_delay(0, Duration::from_millis(10));
+    svc.inject_node_delay(1, Duration::from_millis(10));
+
+    // Calibration serve: establishes the EWMA drain rate.
+    assert_eq!(svc.drain_rate_per_s(), 0.0, "rate unknown before any serve");
+    svc.serve(&random_requests(&mut rng, 40, dim), Reduction::Argmax).unwrap();
+    let rate = svc.drain_rate_per_s();
+    assert!(rate > 0.0, "calibration must establish a drain rate");
+
+    // 500 requests sharing a 250ms deadline: at <= 400 req/s (4 per
+    // >=10ms round) the tail can never drain in time.
+    let deadline = Instant::now() + Duration::from_millis(250);
+    let requests: Vec<Request<Vec<f32>>> = random_requests(&mut rng, 500, dim)
+        .into_iter()
+        .map(|x| Request::with_deadline(x, deadline))
+        .collect();
+    let outcomes = svc.serve_with_deadlines(&requests, Reduction::Argmax).unwrap();
+    assert!(
+        matches!(outcomes[0], ServeOutcome::Served(_)),
+        "the head of the burst is feasible: {:?}",
+        outcomes[0]
+    );
+    let infeasible = outcomes
+        .iter()
+        .filter(|o| matches!(o, ServeOutcome::Shed(ShedReason::Infeasible)))
+        .count();
+    assert!(infeasible > 0, "the tail of the burst must shed as Infeasible");
+    let snap = svc.stats.snapshot();
+    assert_eq!(snap.shed_infeasible, infeasible as u64);
+    assert_eq!(snap.shed_queue_full, 0, "no queue bound configured");
+    let served = outcomes.iter().filter(|o| matches!(o, ServeOutcome::Served(_))).count();
+    assert_eq!(served + snap.shed() as usize, 500);
+}
+
+/// `Replication::Auto`: a sustained hot shard (straggler on its owner)
+/// triggers exactly ONE re-replication per hot window — fired on the
+/// second dispatch cycle, edge-triggered until the shard cools down and
+/// heats up again.
+#[test]
+fn hot_shard_rereplication_fires_once_per_sustained_window() {
+    let (dim, classes) = (8, 4);
+    let ctx = SparkletContext::local(4);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().fixed_batch(64).auto_scale(1.8),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x407);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let owners = svc.shard_owners();
+    assert_eq!(owners.len(), 4);
+    let requests = random_requests(&mut rng, 64, dim);
+    let baseline = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.stats.snapshot().re_replications, 0);
+
+    // Make shard 0's owner the straggler: its relative load dwarfs the
+    // other shards' owners (relative, so CPU contention can't flake it).
+    let hot_owner = owners[0];
+    svc.inject_node_delay(hot_owner, Duration::from_millis(5));
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(
+        svc.stats.snapshot().re_replications,
+        0,
+        "one hot sample is below the sustain window"
+    );
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(
+        svc.stats.snapshot().re_replications,
+        1,
+        "the sustained hot window must fire on the second dispatch cycle"
+    );
+    for _ in 0..4 {
+        let out = svc.serve(&requests, Reduction::Argmax).unwrap();
+        assert_eq!(out, baseline, "re-replication must not change predictions");
+    }
+    assert_eq!(
+        svc.stats.snapshot().re_replications,
+        1,
+        "edge-triggered: a still-hot shard must not re-fire"
+    );
+
+    // Cool down (streak + latch reset), then heat up again: a FRESH
+    // sustained window fires exactly once more.
+    svc.clear_node_delay(hot_owner);
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    svc.inject_node_delay(hot_owner, Duration::from_millis(5));
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(
+        svc.stats.snapshot().re_replications,
+        2,
+        "a fresh sustained hot window must fire again"
+    );
+    assert_eq!(svc.serve(&requests, Reduction::Argmax).unwrap(), baseline);
+}
+
+/// Cluster-wide up watermark: sustained high utilization makes the policy
+/// join a node through `Cluster::add_node`; the next serve reshards onto
+/// the new capacity with byte-identical predictions.
+#[test]
+fn autoscale_adds_node_past_up_watermark() {
+    let (dim, classes) = (6, 3);
+    let ctx = SparkletContext::local(3);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().fixed_batch(48),
+    )
+    .unwrap();
+    svc.set_scale_policy(Some(ScalePolicy {
+        hot_watermark: 1e9, // hot-shard path disabled for this test
+        up_watermark: 0.3,
+        down_watermark: 0.0,
+        node_window: 2,
+        cooldown: 100, // one join, then hold still
+        min_nodes: 1,
+        max_nodes: 4,
+        ..Default::default()
+    }));
+    let mut rng = Rng::new(0xADD);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let requests = random_requests(&mut rng, 48, dim);
+    let baseline = svc.serve(&requests, Reduction::Argmax).unwrap();
+
+    // Saturate every node: 20ms of injected busy per round dwarfs the
+    // dispatch overhead, pushing mean utilization over the watermark.
+    for n in 0..3 {
+        svc.inject_node_delay(n, Duration::from_millis(20));
+    }
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.stats.snapshot().scale_ups, 0, "one high sample is below the window");
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.stats.snapshot().scale_ups, 1, "sustained high load must join a node");
+    assert_eq!(ctx.cluster().alive_nodes(), vec![0, 1, 2, 3]);
+    assert!(svc.needs_reshard(), "the join must mark the shard placement stale");
+
+    let after = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(after, baseline, "predictions must not change across the scale-up");
+    assert!(!svc.needs_reshard(), "the serve must have resharded onto the joined node");
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.stats.snapshot().scale_ups, 1, "cooldown must suppress further joins");
+}
+
+/// Cluster-wide down watermark: sustained idleness drains the idlest node
+/// (graceful — its blocks stay readable), bounded by `min_nodes`, and
+/// serving reshards onto the survivors with identical predictions.
+#[test]
+fn autoscale_drains_idle_node_under_down_watermark() {
+    let (dim, classes) = (6, 3);
+    let ctx = SparkletContext::local(3);
+    let svc = PredictService::new(
+        &ctx,
+        linear_scorer(dim, classes),
+        ServingStrategy::default().fixed_batch(48),
+    )
+    .unwrap();
+    svc.set_scale_policy(Some(ScalePolicy {
+        hot_watermark: 1e9,
+        up_watermark: 2.0, // unreachable: utilization is clamped to 1
+        down_watermark: 0.9,
+        node_window: 2,
+        cooldown: 100,
+        min_nodes: 2,
+        max_nodes: 64,
+        ..Default::default()
+    }));
+    let mut rng = Rng::new(0xD8A117);
+    let weights: Vec<f32> = (0..dim * classes).map(|_| rng.gen_f32() - 0.5).collect();
+    svc.deploy(&weights).unwrap();
+    let requests = random_requests(&mut rng, 48, dim);
+    let baseline = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.stats.snapshot().scale_downs, 0, "one idle sample is below the window");
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(svc.stats.snapshot().scale_downs, 1, "sustained idleness must drain a node");
+    assert_eq!(ctx.cluster().alive_nodes().len(), 2, "one node drained");
+
+    let after = svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(after, baseline, "predictions must not change across the scale-down");
+    assert!(!svc.needs_reshard());
+    assert_eq!(svc.current_weights().unwrap(), weights);
+    svc.serve(&requests, Reduction::Argmax).unwrap();
+    assert_eq!(
+        svc.stats.snapshot().scale_downs,
+        1,
+        "cooldown + min_nodes must suppress further drains"
+    );
+}
+
+/// Invalid strategies must be rejected at service construction, not at
+/// first serve.
+#[test]
+fn invalid_strategies_rejected_at_construction() {
+    let ctx = SparkletContext::local(2);
+    let bad = [
+        ServingStrategy::default().fixed_batch(0),
+        ServingStrategy::default().adaptive(-1.0, 8, 64),
+        ServingStrategy::default().adaptive(10.0, 0, 64),
+        ServingStrategy::default().adaptive(10.0, 65, 64),
+        ServingStrategy::default().replicas(0),
+        ServingStrategy::default().auto_scale(1.0),
+        ServingStrategy::default().default_deadline_ms(0.0),
+        ServingStrategy::default().group(0),
+    ];
+    for strategy in bad {
+        assert!(
+            PredictService::new(&ctx, linear_scorer(4, 2), strategy.clone()).is_err(),
+            "strategy must be rejected: {strategy:?}"
+        );
+    }
+}
