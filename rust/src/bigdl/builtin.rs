@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Result};
@@ -24,6 +24,7 @@ use crate::sparklet::{Rdd, SparkletContext, TaskContext};
 use crate::tensor::kernels::{self, KernelPool, Scratch};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
+use crate::util::sync::{rank, OrderedMutex};
 
 /// Where (and with what resources) a builtin forward-backward is
 /// executing: the node/partition identity compute simulators key on, the
@@ -116,9 +117,9 @@ pub struct ComputeSim {
     pub period: usize,
     /// Per-partition call counter (a retry advances it — retries only
     /// perturb timing, never results).
-    rounds: Mutex<HashMap<usize, usize>>,
+    rounds: OrderedMutex<HashMap<usize, usize>>,
     /// Round index → number of partitions currently sleeping inside it.
-    active: Mutex<HashMap<usize, usize>>,
+    active: OrderedMutex<HashMap<usize, usize>>,
     /// High-water mark of distinct rounds simultaneously active.
     max_overlap: AtomicUsize,
 }
@@ -129,8 +130,8 @@ impl ComputeSim {
             base,
             straggle,
             period: period.max(1),
-            rounds: Mutex::new(HashMap::new()),
-            active: Mutex::new(HashMap::new()),
+            rounds: OrderedMutex::new(rank::SIM_ROUNDS, HashMap::new()),
+            active: OrderedMutex::new(rank::SIM_ACTIVE, HashMap::new()),
             max_overlap: AtomicUsize::new(0),
         }
     }
@@ -147,14 +148,14 @@ impl ComputeSim {
 
     fn sleep(&self, partition: usize) {
         let round = {
-            let mut m = self.rounds.lock().unwrap();
+            let mut m = self.rounds.lock();
             let r = m.entry(partition).or_insert(0);
             let cur = *r;
             *r += 1;
             cur
         };
         {
-            let mut act = self.active.lock().unwrap();
+            let mut act = self.active.lock();
             *act.entry(round).or_insert(0) += 1;
             self.max_overlap.fetch_max(act.len(), Ordering::SeqCst);
         }
@@ -165,7 +166,7 @@ impl ComputeSim {
         if !d.is_zero() {
             std::thread::sleep(d);
         }
-        let mut act = self.active.lock().unwrap();
+        let mut act = self.active.lock();
         if let Some(c) = act.get_mut(&round) {
             *c -= 1;
             if *c == 0 {

@@ -59,7 +59,7 @@ pub use serving::{
     BatchScorer, PredictService, Reduced, Reduction, Request, ServeOutcome, ServingSnapshot,
     ServingStats, ShedReason,
 };
-#[allow(deprecated)]
+#[allow(deprecated)] // lint:allow(allow-deprecated): re-export keeps the shim importable
 pub use serving::ServingConfig;
 pub use serving_strategy::{
     AdaptiveBatch, Admission, Batching, LoadSample, Replication, ScaleAction, ScalePolicy,

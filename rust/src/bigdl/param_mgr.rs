@@ -32,9 +32,11 @@
 //! failed shuffle round.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
+
+use crate::util::sync::{rank, OrderedRwLock};
 
 use super::allreduce::SyncAlgo;
 use super::compress::{self, Compression};
@@ -121,7 +123,7 @@ pub struct ParameterManager {
     instance: u64,
     /// The declarative sync strategy (algorithm, codec, clipping, LR
     /// schedule) every round reads — see [`SyncStrategy`].
-    strategy: RwLock<SyncStrategy>,
+    strategy: OrderedRwLock<SyncStrategy>,
     /// Remote bytes moved by the most recently COMMITTED sync round
     /// (bytes-on-wire; compressed rounds meter codec bytes).
     last_wire_bytes: AtomicU64,
@@ -132,7 +134,7 @@ pub struct ParameterManager {
     /// Shard → owning node. Owners are drawn from the alive set of the
     /// membership epoch in `owners_epoch`; a membership change makes them
     /// stale until a [`ParameterManager::reshard`] round re-balances.
-    owners: RwLock<Vec<usize>>,
+    owners: OrderedRwLock<Vec<usize>>,
     /// Membership epoch the current `owners` were computed under.
     owners_epoch: AtomicU64,
 }
@@ -244,6 +246,9 @@ impl ParameterManager {
         let owners: Vec<usize> = (0..n_shards)
             .map(|n| membership.alive[n % membership.alive.len()])
             .collect();
+        // Register the seed round as committed BEFORE publishing so the
+        // block ledger tracks its blocks from the first put.
+        bm.ledger().commit_round(round0);
         for (n, r) in ranges.iter().enumerate() {
             let owner = owners[n];
             bcast.publish(&bm, owner, n, Arc::new(initial[r.clone()].to_vec()));
@@ -264,10 +269,10 @@ impl ParameterManager {
             round: AtomicU64::new(round0),
             step: AtomicUsize::new(0),
             instance,
-            strategy: RwLock::new(SyncStrategy::default()),
+            strategy: OrderedRwLock::new(rank::PARAM_STRATEGY, SyncStrategy::default()),
             last_wire_bytes: AtomicU64::new(0),
             sync_inflight: Arc::new(AtomicBool::new(false)),
-            owners: RwLock::new(owners),
+            owners: OrderedRwLock::new(rank::PARAM_OWNERS, owners),
             owners_epoch: AtomicU64::new(membership.epoch),
         })
     }
@@ -309,21 +314,21 @@ impl ParameterManager {
     /// Install the declarative sync strategy (algorithm, codec, clipping,
     /// LR schedule) used by every subsequent round.
     pub fn set_strategy(&self, s: SyncStrategy) {
-        *self.strategy.write().unwrap() = s;
+        *self.strategy.write() = s;
     }
 
     pub fn strategy(&self) -> SyncStrategy {
-        self.strategy.read().unwrap().clone()
+        self.strategy.read().clone()
     }
 
     #[deprecated(note = "set TrainConfig::sync / ParameterManager::set_strategy instead")]
     pub fn set_grad_policy(&self, p: GradPolicy) {
-        self.strategy.write().unwrap().grad_policy = p;
+        self.strategy.write().grad_policy = p;
     }
 
     #[deprecated(note = "set TrainConfig::sync / ParameterManager::set_strategy instead")]
     pub fn set_lr_schedule(&self, s: LrSchedule) {
-        self.strategy.write().unwrap().lr_schedule = s;
+        self.strategy.write().lr_schedule = s;
     }
 
     /// The optimizer's base learning rate (local-SGD inner steps).
@@ -334,7 +339,7 @@ impl ParameterManager {
     /// LR-schedule multiplier the NEXT committed step will use.
     pub fn next_lr_mult(&self) -> f32 {
         let step = self.step.load(Ordering::SeqCst) + 1;
-        self.strategy.read().unwrap().lr_schedule.multiplier(step) as f32
+        self.strategy.read().lr_schedule.multiplier(step) as f32
     }
 
     /// Remote bytes moved by the most recently committed sync round —
@@ -383,8 +388,11 @@ impl ParameterManager {
         let bm = self.ctx.blocks();
         let old = self.weights_broadcast();
         let new_round = self.ctx.next_broadcast_id();
+        // An import publishes pre-committed (no staged window): register
+        // the round before the first put so its blocks are tracked.
+        bm.ledger().commit_round(new_round);
         let bcast = Broadcast::new(new_round, self.n_shards);
-        let owners = self.owners.read().unwrap().clone();
+        let owners = self.owners.read().clone();
         for (n, r) in self.ranges.iter().enumerate() {
             let owner = owners[n];
             bcast.publish(&bm, owner, n, Arc::new(weights[r.clone()].to_vec()));
@@ -413,7 +421,7 @@ impl ParameterManager {
     /// Current shard → owner map (the node each shard's blocks live on
     /// and its sync task prefers).
     pub fn owners(&self) -> Vec<usize> {
-        self.owners.read().unwrap().clone()
+        self.owners.read().clone()
     }
 
     /// Membership epoch the current owners were computed under.
@@ -433,7 +441,7 @@ impl ParameterManager {
     /// 2). Used by every sync round and by the optimizer's sync group
     /// plan.
     pub fn preferred_owners(&self) -> Vec<Option<usize>> {
-        self.owners.read().unwrap().iter().map(|&o| Some(o)).collect()
+        self.owners.read().iter().map(|&o| Some(o)).collect()
     }
 
     /// Re-balance the parameter shards onto the CURRENT membership as one
@@ -486,6 +494,7 @@ impl ParameterManager {
 
         let old_round = self.round.load(Ordering::SeqCst);
         let new_round = self.ctx.next_broadcast_id();
+        self.ctx.blocks().ledger().begin_round(new_round);
         let old_bcast = Broadcast::new(old_round, self.n_shards);
         let new_bcast = Broadcast::new(new_round, self.n_shards);
         let state_bufs = self.optim.state_bufs();
@@ -534,7 +543,8 @@ impl ParameterManager {
             .filter(|(a, b)| a != b)
             .count();
         self.round.store(new_round, Ordering::SeqCst);
-        *self.owners.write().unwrap() = new_owners;
+        bm.ledger().commit_round(new_round);
+        *self.owners.write() = new_owners;
         self.owners_epoch.store(membership.epoch, Ordering::SeqCst);
         old_bcast.cleanup(&bm);
         for n in 0..self.n_shards {
@@ -557,7 +567,7 @@ impl ParameterManager {
         GradPublisher {
             shuffle: *shuffle,
             ranges: Arc::new(self.ranges.clone()),
-            compression: self.strategy.read().unwrap().compression,
+            compression: self.strategy.read().compression,
             instance: self.instance,
             round: self.round.load(Ordering::SeqCst),
         }
@@ -593,7 +603,7 @@ impl ParameterManager {
     pub fn begin_sync(&self, opts: SyncOpts) -> Result<PendingSync> {
         ensure!(opts.shuffle.reduces == self.n_shards, "shuffle/shard mismatch");
         ensure!(opts.shuffle.maps == opts.replicas, "shuffle writers != replicas");
-        let strategy = self.strategy.read().unwrap().clone();
+        let strategy = self.strategy.read().clone();
         // Weight averaging is one bulk mean per `period` iterations — it
         // always reduces over the plain shuffle, with no clipping, no LR
         // schedule and no codec.
@@ -621,6 +631,9 @@ impl ParameterManager {
         let compressed = gradient_op && strategy.compression != Compression::None;
         let old_round = self.round.load(Ordering::SeqCst);
         let new_round = self.ctx.next_broadcast_id();
+        // Declare the round staged before anything publishes under it —
+        // the block ledger verifies rollback leaves nothing behind.
+        self.ctx.blocks().ledger().begin_round(new_round);
         // The step this round WILL commit. It is only stored (together
         // with the round id) after the jobs succeed — a failed round must
         // leave step, round and weights exactly as they were.
@@ -877,6 +890,7 @@ impl ParameterManager {
                 // returned to the caller).
                 self.step.store(pending.step, Ordering::SeqCst);
                 self.round.store(pending.new_round, Ordering::SeqCst);
+                bm.ledger().commit_round(pending.new_round);
                 // Promote the staged error-feedback residuals (sentinel
                 // blocks in the shuffle namespace) to committed `resid/`
                 // blocks keyed by the new round — BEFORE the shuffle
@@ -981,6 +995,9 @@ fn remove_staged_round(
             if s.starts_with(&ring_prefix) || s.starts_with(&resid_prefix))
     });
     shuffle.cleanup(bm);
+    // The round is dead; mark it aborted so the ledger flags any
+    // straggler republish under its id as a leak.
+    bm.ledger().abort_round(round);
 }
 
 /// Map-side gradient publisher bound to one forward-backward job's
@@ -1142,6 +1159,7 @@ mod tests {
             baseline,
             "staged agg/state/shard blocks and consumed slices must be cleaned"
         );
+        ctx.blocks().assert_quiesced();
 
         // A subsequent round commits normally and matches serial SGD.
         let sh2 = write_grads(&ctx, &pm, &[vec![1.0f32; 12]]);
@@ -1211,6 +1229,7 @@ mod tests {
             baseline,
             "after the caller's cleanup the round replaced blocks one-for-one"
         );
+        bm.assert_quiesced();
     }
 
     /// Dropping an un-waited round rolls it back completely: no staged
@@ -1240,10 +1259,12 @@ mod tests {
             baseline,
             "abandoned round must leave no staged shards/state/slices"
         );
+        ctx.blocks().assert_quiesced();
         // The inflight slot was released: a new round runs and commits.
         let sh2 = write_grads(&ctx, &pm, &[vec![1.0f32; 10]]);
         sync(&pm, &sh2, 1).unwrap();
         assert_eq!(pm.optimizer_step(), 1);
+        ctx.blocks().assert_quiesced();
     }
 
     /// The round chain is serial: a second `sync_round_async` before the
@@ -1390,6 +1411,8 @@ mod tests {
         let after = ctx.blocks().usage().0;
         let growth_per_run = (after - baseline) / 3;
         assert!(growth_per_run > 0, "weights/state resident per manager");
+        // No ring partials or staged rounds left behind by either path.
+        ctx.blocks().assert_quiesced();
     }
 
     /// A `WeightAverage` round publishes the mean of the written vectors

@@ -52,10 +52,12 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::util::sync::{rank, OrderedMutex};
 
 use super::metrics::LatencyHistogram;
 use super::serving_strategy::{
@@ -148,14 +150,14 @@ pub struct ServingConfig {
     pub replicate: bool,
 }
 
-#[allow(deprecated)]
+#[allow(deprecated)] // lint:allow(allow-deprecated): the shim impls its own deprecated type
 impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig { n_shards: None, group_size: 32, max_batch: 256, replicate: true }
     }
 }
 
-#[allow(deprecated)]
+#[allow(deprecated)] // lint:allow(allow-deprecated): the shim impls its own deprecated type
 impl From<ServingConfig> for ServingStrategy {
     fn from(cfg: ServingConfig) -> ServingStrategy {
         ServingStrategy {
@@ -212,7 +214,7 @@ pub enum ServeOutcome {
 }
 
 /// Cumulative serving counters.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServingStats {
     pub rounds: AtomicU64,
     pub requests: AtomicU64,
@@ -239,18 +241,39 @@ pub struct ServingStats {
     latency: LatencyHistogram,
     /// Per-node busy nanoseconds since the last autoscale tick, recorded
     /// by serving tasks (the load signal behind [`ScalePolicy`]).
-    node_busy: Mutex<HashMap<usize, u64>>,
+    node_busy: OrderedMutex<HashMap<usize, u64>>,
+}
+
+impl Default for ServingStats {
+    fn default() -> ServingStats {
+        ServingStats {
+            rounds: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            group_replans: AtomicU64::new(0),
+            fault_replans: AtomicU64::new(0),
+            deploys: AtomicU64::new(0),
+            reshards: AtomicU64::new(0),
+            re_replications: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+            shed_infeasible: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            latency: LatencyHistogram::default(),
+            node_busy: OrderedMutex::new(rank::SERVING_NODE_BUSY, HashMap::new()),
+        }
+    }
 }
 
 impl ServingStats {
     /// Record `ns` of task busy time against `node` (called task-side).
     pub fn note_busy(&self, node: usize, ns: u64) {
-        *self.node_busy.lock().unwrap().entry(node).or_insert(0) += ns;
+        *self.node_busy.lock().entry(node).or_insert(0) += ns;
     }
 
     /// Drain the per-node busy meters (one autoscale tick's window).
     fn take_busy(&self) -> HashMap<usize, u64> {
-        std::mem::take(&mut *self.node_busy.lock().unwrap())
+        std::mem::take(&mut *self.node_busy.lock())
     }
 
     fn record_latency_ms(&self, ms: f64) {
@@ -384,17 +407,17 @@ pub struct PredictService<T> {
     /// Unique id namespacing this service's cache blocks (two services on
     /// one context must not collide).
     instance: u64,
-    deployed: Mutex<Option<Deployment>>,
+    deployed: OrderedMutex<Option<Deployment>>,
     /// SLO controller, present iff batching is [`Batching::Adaptive`].
-    controller: Option<Mutex<AdaptiveBatch>>,
+    controller: Option<OrderedMutex<AdaptiveBatch>>,
     /// EWMA drain rate (requests/s) over past serves; 0.0 = unknown.
     /// Feeds admission feasibility checks.
-    drain_rate: Mutex<f64>,
+    drain_rate: OrderedMutex<f64>,
     /// Straggler injection (tests/benches): per-node artificial task
     /// delay, applied inside serving round tasks.
-    chaos: Arc<Mutex<HashMap<usize, Duration>>>,
-    scale_policy: Mutex<Option<ScalePolicy>>,
-    scale_state: Mutex<ScaleState>,
+    chaos: Arc<OrderedMutex<HashMap<usize, Duration>>>,
+    scale_policy: OrderedMutex<Option<ScalePolicy>>,
+    scale_state: OrderedMutex<ScaleState>,
     pub stats: Arc<ServingStats>,
 }
 
@@ -410,9 +433,10 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         let strategy = strategy.into();
         strategy.validate()?;
         let controller = match strategy.batching {
-            Batching::Adaptive { slo_ms, min, max } => {
-                Some(Mutex::new(AdaptiveBatch::new(slo_ms, min, max)))
-            }
+            Batching::Adaptive { slo_ms, min, max } => Some(OrderedMutex::new(
+                rank::SERVING_CONTROLLER,
+                AdaptiveBatch::new(slo_ms, min, max),
+            )),
             Batching::Fixed(_) => None,
         };
         let scale_policy = match strategy.replication {
@@ -427,12 +451,12 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             scorer,
             strategy,
             instance: ctx.next_broadcast_id(),
-            deployed: Mutex::new(None),
+            deployed: OrderedMutex::new(rank::SERVING_DEPLOYED, None),
             controller,
-            drain_rate: Mutex::new(0.0),
-            chaos: Arc::new(Mutex::new(HashMap::new())),
-            scale_policy: Mutex::new(scale_policy),
-            scale_state: Mutex::new(ScaleState::default()),
+            drain_rate: OrderedMutex::new(rank::SERVING_DRAIN_RATE, 0.0),
+            chaos: Arc::new(OrderedMutex::new(rank::SERVING_CHAOS, HashMap::new())),
+            scale_policy: OrderedMutex::new(rank::SERVING_SCALE_POLICY, scale_policy),
+            scale_state: OrderedMutex::new(rank::SERVING_SCALE_STATE, ScaleState::default()),
             stats: Arc::new(ServingStats::default()),
         })
     }
@@ -454,43 +478,42 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// EWMA drain rate (requests/s) measured over past serves; 0.0 until
     /// a serve completes. Admission feasibility judges against this.
     pub fn drain_rate_per_s(&self) -> f64 {
-        *self.drain_rate.lock().unwrap()
+        *self.drain_rate.lock()
     }
 
     /// Replace the autoscale policy (None disables). `Replication::Auto`
     /// installs a default-windows policy at construction; tests and
     /// benches tune watermarks/windows through this. Resets streak state.
     pub fn set_scale_policy(&self, policy: Option<ScalePolicy>) {
-        *self.scale_policy.lock().unwrap() = policy;
-        *self.scale_state.lock().unwrap() = ScaleState::default();
+        *self.scale_policy.lock() = policy;
+        *self.scale_state.lock() = ScaleState::default();
     }
 
     /// Straggler injection for tests/benches: serving tasks on `node`
     /// sleep `delay` before scoring.
     pub fn inject_node_delay(&self, node: usize, delay: Duration) {
-        self.chaos.lock().unwrap().insert(node, delay);
+        self.chaos.lock().insert(node, delay);
     }
 
     pub fn clear_node_delay(&self, node: usize) {
-        self.chaos.lock().unwrap().remove(&node);
+        self.chaos.lock().remove(&node);
     }
 
     pub fn param_count(&self) -> usize {
-        self.deployed.lock().unwrap().as_ref().map(|d| d.param_count).unwrap_or(0)
+        self.deployed.lock().as_ref().map(|d| d.param_count).unwrap_or(0)
     }
 
     /// Primary owner node of each deployed weight shard (empty before any
     /// deploy). The autoscale load attribution uses this; tests use it to
     /// aim stragglers at a shard's owner.
     pub fn shard_owners(&self) -> Vec<usize> {
-        self.deployed.lock().unwrap().as_ref().map(|d| d.owners.clone()).unwrap_or_default()
+        self.deployed.lock().as_ref().map(|d| d.owners.clone()).unwrap_or_default()
     }
 
     /// The broadcast round serving tasks read weights from.
     pub fn weights_round(&self) -> Result<Broadcast> {
         self.deployed
             .lock()
-            .unwrap()
             .as_ref()
             .map(|d| d.bcast)
             .ok_or_else(|| anyhow!("no weights deployed (call deploy / deploy_sharded first)"))
@@ -508,6 +531,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         let parts = self.strategy.n_shards.unwrap_or(self.ctx.nodes()).max(1).min(weights.len());
         let bcast = Broadcast::new(self.ctx.next_broadcast_id(), parts);
         let bm = self.ctx.blocks();
+        bm.ledger().begin_round(bcast.id);
         let copies = self.strategy.replication.copies(alive.len());
         let mut owners = Vec::with_capacity(parts);
         for (n, r) in partition_ranges(weights.len(), parts).iter().enumerate() {
@@ -533,6 +557,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         // reshards it.
         let epoch = self.ctx.epoch();
         let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
+        self.ctx.blocks().ledger().begin_round(dst.id);
         let src = *src;
         let replication = self.strategy.replication;
         let task: Arc<dyn Fn(&TaskContext) -> Result<usize> + Send + Sync> =
@@ -568,7 +593,9 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
                 // Staged-commit: a failed re-publish must not leak its
                 // partially published shards — the deployed round is
                 // untouched, so just drop the staging.
-                dst.cleanup(&self.ctx.blocks());
+                let bm = self.ctx.blocks();
+                dst.cleanup(&bm);
+                bm.ledger().abort_round(dst.id);
                 Err(e)
             }
         }
@@ -578,11 +605,8 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// membership — i.e. a [`PredictService::reshard`] is due. False when
     /// nothing is deployed.
     pub fn needs_reshard(&self) -> bool {
-        self.deployed
-            .lock()
-            .unwrap()
-            .as_ref()
-            .is_some_and(|d| d.epoch != self.ctx.epoch())
+        // `epoch()` is an atomic read — safe under the deployed lock.
+        self.deployed.lock().as_ref().is_some_and(|d| d.epoch != self.ctx.epoch())
     }
 
     /// Re-balance the deployed serving shards onto the CURRENT membership
@@ -599,7 +623,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// to do (no deployment, or placement already current).
     pub fn reshard(&self) -> Result<bool> {
         let (src, param_count) = {
-            let guard = self.deployed.lock().unwrap();
+            let guard = self.deployed.lock();
             match guard.as_ref() {
                 Some(d) if d.epoch != self.ctx.epoch() => (d.bcast, d.param_count),
                 _ => return Ok(false),
@@ -609,6 +633,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         ensure!(!membership.alive.is_empty(), "no alive nodes to reshard onto");
         let alive = Arc::new(membership.alive);
         let dst = Broadcast::new(self.ctx.next_broadcast_id(), src.parts);
+        self.ctx.blocks().ledger().begin_round(dst.id);
         let copies = self.strategy.replication.copies(alive.len());
         let owners: Vec<usize> = (0..src.parts).map(|n| alive[n % alive.len()]).collect();
         let preferred: Vec<Option<usize>> = owners.iter().map(|&o| Some(o)).collect();
@@ -628,7 +653,9 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             })
         };
         if let Err(e) = self.runner.run(&preferred, task) {
-            dst.cleanup(&self.ctx.blocks());
+            let bm = self.ctx.blocks();
+            dst.cleanup(&bm);
+            bm.ledger().abort_round(dst.id);
             return Err(e);
         }
         self.swap(dst, param_count, membership.epoch, owners);
@@ -642,20 +669,24 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// (only two redeploys inside one in-flight serve can starve it).
     fn swap(&self, bcast: Broadcast, param_count: usize, epoch: u64, owners: Vec<usize>) {
         let bm = self.ctx.blocks();
-        let mut guard = self.deployed.lock().unwrap();
-        let prev = match guard.take() {
-            Some(mut d) => {
-                if let Some(p) = d.prev.take() {
-                    retire(&bm, self.instance, p);
-                }
-                Some(d.bcast)
-            }
-            None => None,
-        };
+        bm.ledger().commit_round(bcast.id);
+        // Swap under the lock, but retire OUTSIDE it: block-manager locks
+        // rank below serving locks, so holding `deployed` across a
+        // retire/sweep would be a lock-order inversion.
         let mut keep = vec![bcast.id];
-        keep.extend(prev.map(|p| p.id));
-        *guard = Some(Deployment { bcast, param_count, prev, owners, epoch });
-        drop(guard);
+        let to_retire = {
+            let mut guard = self.deployed.lock();
+            let (prev, retired) = match guard.take() {
+                Some(mut d) => (Some(d.bcast), d.prev.take()),
+                None => (None, None),
+            };
+            keep.extend(prev.map(|p| p.id));
+            *guard = Some(Deployment { bcast, param_count, prev, owners, epoch });
+            retired
+        };
+        if let Some(p) = to_retire {
+            retire(&bm, self.instance, p);
+        }
         sweep_assembled(&bm, self.instance, &keep);
         self.stats.deploys.fetch_add(1, Ordering::Relaxed);
     }
@@ -782,7 +813,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// operating point, or the fixed size.
     fn current_batch(&self) -> usize {
         match &self.controller {
-            Some(c) => c.lock().unwrap().batch(),
+            Some(c) => c.lock().batch(),
             None => self.strategy.batching.max_batch().max(1),
         }
     }
@@ -867,7 +898,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             let round_ms = round_wall.as_secs_f64() * 1e3;
             self.stats.record_latency_ms(round_ms);
             if let Some(c) = &self.controller {
-                c.lock().unwrap().observe(round_ms);
+                c.lock().observe(round_ms);
             }
             rounds += 1;
             let mut flat = results.into_iter().flatten();
@@ -887,7 +918,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
         let wall = serve_t0.elapsed().as_secs_f64();
         if wall > 0.0 {
             let fresh = total as f64 / wall;
-            let mut dr = self.drain_rate.lock().unwrap();
+            let mut dr = self.drain_rate.lock();
             *dr = if *dr > 0.0 { 0.7 * *dr + 0.3 * fresh } else { fresh };
         }
         Ok(())
@@ -907,7 +938,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// apply the actions it returns. Actions are advisory — a failed
     /// re-replication must not fail the serve that triggered it.
     fn autoscale_tick(&self, round_wall: Duration, backlog: usize) {
-        let Some(policy) = self.scale_policy.lock().unwrap().clone() else { return };
+        let Some(policy) = self.scale_policy.lock().clone() else { return };
         let busy = self.stats.take_busy();
         let wall_ns = round_wall.as_nanos() as f64;
         if wall_ns <= 0.0 {
@@ -929,7 +960,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             backlog,
             alive: alive.len(),
         };
-        let actions = policy.observe(&mut self.scale_state.lock().unwrap(), &sample);
+        let actions = policy.observe(&mut self.scale_state.lock(), &sample);
         for action in actions {
             match action {
                 ScaleAction::ReplicateShard(shard) => {
@@ -964,7 +995,7 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
     /// usual retire/sweep lifecycle cleans it up with the round.
     fn replicate_shard(&self, shard: usize, busy: &HashMap<usize, u64>) -> Result<()> {
         let (bcast, owner) = {
-            let guard = self.deployed.lock().unwrap();
+            let guard = self.deployed.lock();
             match guard.as_ref() {
                 Some(d) if shard < d.owners.len() => (d.bcast, d.owners[shard]),
                 _ => return Ok(()),
@@ -1005,8 +1036,10 @@ impl<T: Clone + Send + Sync + 'static> PredictService<T> {
             if items.is_empty() {
                 return Ok(Vec::new());
             }
-            let t0 = Instant::now();
-            let delay = chaos.lock().unwrap().get(&tc.node).copied();
+            let t0 = Instant::now(); // lint:allow(task-determinism): busy-time metering only
+            // Extract the delay and DROP the chaos guard before touching
+            // the block store (serving locks rank above block locks).
+            let delay = chaos.lock().get(&tc.node).copied();
             if let Some(d) = delay {
                 std::thread::sleep(d);
             }
@@ -1066,7 +1099,11 @@ impl<T> Drop for PredictService<T> {
     /// rounds the way a `ParameterManager` owns its shards).
     fn drop(&mut self) {
         let bm = self.ctx.blocks();
-        if let Some(d) = self.deployed.lock().unwrap().take() {
+        // Take first, retire after: an `if let` on the locked Option would
+        // hold the `deployed` guard (rank above the block locks) across
+        // the whole retire body — a lock-order inversion.
+        let taken = self.deployed.lock().take();
+        if let Some(d) = taken {
             retire(&bm, self.instance, d.bcast);
             if let Some(p) = d.prev {
                 retire(&bm, self.instance, p);
@@ -1110,7 +1147,7 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
+    #[allow(deprecated)] // lint:allow(allow-deprecated): shim compat test must use the shim
     fn serving_config_shim_maps_to_strategy() {
         let s: ServingStrategy =
             ServingConfig { n_shards: Some(3), group_size: 8, max_batch: 64, replicate: true }

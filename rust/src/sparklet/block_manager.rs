@@ -11,9 +11,11 @@
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
+
+use crate::util::sync::{rank, OrderedMutex, OrderedRwLock};
 
 /// Identifies a block in the cluster-wide store.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -119,15 +121,238 @@ impl TrafficSnapshot {
 }
 
 struct NodeStore {
-    blocks: Mutex<HashMap<BlockId, BlockData>>,
+    blocks: OrderedMutex<HashMap<BlockId, BlockData>>,
     alive: AtomicBool,
 }
 
 impl NodeStore {
     fn new() -> NodeStore {
-        NodeStore { blocks: Mutex::new(HashMap::new()), alive: AtomicBool::new(true) }
+        NodeStore {
+            blocks: OrderedMutex::new(rank::BLOCK_STORE, HashMap::new()),
+            alive: AtomicBool::new(true),
+        }
     }
 }
+
+/// The broadcast-round tag a block belongs to, parsed from its id. Every
+/// staged-commit round namespaces its blocks by a broadcast round id:
+/// weight shards (`Broadcast`), optimizer state (`optstate/{inst}/{round}/…`),
+/// shuffle-reduce aggregates (`agg/{round}/…`), ring hops
+/// (`ring/{inst}/{round}/…`), error-feedback residuals
+/// (`resid/{inst}/{round}/…`) and serving's assembled caches
+/// (`serving/{inst}/assembled/{round}`). Blocks outside those namespaces
+/// (shuffle buckets, RDD caches, free-form names) are not round-scoped
+/// and return `None`.
+fn round_tag(id: &BlockId) -> Option<u64> {
+    match id {
+        BlockId::Broadcast { id, .. } => Some(*id),
+        BlockId::Named(s) => {
+            let mut parts = s.split('/');
+            match parts.next()? {
+                "agg" => parts.next()?.parse().ok(),
+                "optstate" | "ring" | "resid" => {
+                    let _instance = parts.next()?;
+                    parts.next()?.parse().ok()
+                }
+                "serving" => {
+                    let _instance = parts.next()?;
+                    if parts.next()? == "assembled" {
+                        parts.next()?.parse().ok()
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Debug-mode block-lifecycle ledger: classifies every round-scoped block
+/// as belonging to a **staged**, **committed** or **aborted** round and
+/// counts its resident copies, so [`BlockLedger::assert_quiesced`] can
+/// turn the staged-commit invariant — *a rolled-back round leaves zero
+/// blocks behind, an abandoned round is never left staged* — into one
+/// reusable assertion instead of ad-hoc "block count at baseline" checks.
+///
+/// Producers drive the round lifecycle ([`begin_round`](Self::begin_round)
+/// before publishing staged blocks, then [`commit_round`](Self::commit_round)
+/// or [`abort_round`](Self::abort_round)); the [`BlockManager`] reports
+/// every put/remove automatically. Rounds never registered (e.g. an
+/// initial weight publication) are untracked. In release builds without
+/// the `lockcheck` feature this is a zero-sized no-op.
+#[cfg(any(debug_assertions, feature = "lockcheck"))]
+mod ledger {
+    use super::{round_tag, BlockId};
+    use crate::util::sync::{rank, OrderedMutex};
+    use std::collections::HashMap;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum RoundState {
+        Staged,
+        Committed,
+        Aborted,
+    }
+
+    #[derive(Debug)]
+    struct RoundEntry {
+        state: RoundState,
+        /// Resident copies of this round's blocks across all node stores.
+        live: i64,
+    }
+
+    #[derive(Debug)]
+    pub struct BlockLedger {
+        rounds: OrderedMutex<HashMap<u64, RoundEntry>>,
+    }
+
+    impl BlockLedger {
+        pub const ENABLED: bool = true;
+
+        pub fn new() -> BlockLedger {
+            BlockLedger { rounds: OrderedMutex::new(rank::BLOCK_LEDGER, HashMap::new()) }
+        }
+
+        /// Parse a block id's round tag (None when the id is not
+        /// round-scoped).
+        pub fn tag(&self, id: &BlockId) -> Option<u64> {
+            round_tag(id)
+        }
+
+        /// Declare `round` staged. Call before publishing any of its
+        /// blocks.
+        pub fn begin_round(&self, round: u64) {
+            self.rounds.lock().insert(round, RoundEntry { state: RoundState::Staged, live: 0 });
+        }
+
+        /// The round's blocks are now the live generation (they may stay
+        /// resident indefinitely).
+        pub fn commit_round(&self, round: u64) {
+            let mut m = self.rounds.lock();
+            match m.get_mut(&round) {
+                Some(e) => e.state = RoundState::Committed,
+                // Committing an unregistered round (e.g. an import that
+                // publishes pre-committed) registers it as committed.
+                None => {
+                    m.insert(round, RoundEntry { state: RoundState::Committed, live: 0 });
+                }
+            }
+        }
+
+        /// The round was rolled back; all of its blocks must already be
+        /// (or about to be) removed. A later put under this round is a
+        /// zombie leak and will fail [`Self::assert_quiesced`].
+        pub fn abort_round(&self, round: u64) {
+            let mut m = self.rounds.lock();
+            match m.get_mut(&round) {
+                Some(e) => e.state = RoundState::Aborted,
+                None => {
+                    m.insert(round, RoundEntry { state: RoundState::Aborted, live: 0 });
+                }
+            }
+        }
+
+        pub fn note_put(&self, tag: Option<u64>) {
+            let Some(round) = tag else { return };
+            let mut m = self.rounds.lock();
+            if let Some(e) = m.get_mut(&round) {
+                e.live += 1;
+            }
+        }
+
+        pub fn note_remove(&self, tag: Option<u64>) {
+            let Some(round) = tag else { return };
+            let mut m = self.rounds.lock();
+            if let Some(e) = m.get_mut(&round) {
+                e.live -= 1;
+                // A committed round whose blocks are fully retired is
+                // done; drop the entry. Staged/aborted entries stay so a
+                // late zombie put is still attributed.
+                if e.live <= 0 && e.state == RoundState::Committed {
+                    m.remove(&round);
+                }
+            }
+        }
+
+        /// Staged rounds that still have resident blocks.
+        pub fn staged_live(&self) -> usize {
+            self.rounds
+                .lock()
+                .values()
+                .filter(|e| e.state == RoundState::Staged && e.live > 0)
+                .count()
+        }
+
+        /// Assert the staged-commit machinery is quiesced: no staged
+        /// round has blocks resident, and no aborted round leaked any.
+        /// Call after every rollback and at context shutdown.
+        pub fn assert_quiesced(&self) {
+            let m = self.rounds.lock();
+            let mut leaks: Vec<String> = Vec::new();
+            for (round, e) in m.iter() {
+                match e.state {
+                    RoundState::Staged if e.live > 0 => {
+                        leaks.push(format!("round {round}: {} staged block(s) resident", e.live))
+                    }
+                    RoundState::Aborted if e.live > 0 => leaks.push(format!(
+                        "round {round}: {} block(s) survived rollback",
+                        e.live
+                    )),
+                    _ => {}
+                }
+            }
+            assert!(leaks.is_empty(), "block ledger not quiesced: {}", leaks.join("; "));
+        }
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "lockcheck")))]
+mod ledger {
+    use super::BlockId;
+
+    /// Release-build no-op twin of the debug ledger.
+    #[derive(Debug)]
+    pub struct BlockLedger;
+
+    impl BlockLedger {
+        pub const ENABLED: bool = false;
+
+        pub fn new() -> BlockLedger {
+            BlockLedger
+        }
+
+        #[inline(always)]
+        pub fn tag(&self, _id: &BlockId) -> Option<u64> {
+            None
+        }
+
+        #[inline(always)]
+        pub fn begin_round(&self, _round: u64) {}
+
+        #[inline(always)]
+        pub fn commit_round(&self, _round: u64) {}
+
+        #[inline(always)]
+        pub fn abort_round(&self, _round: u64) {}
+
+        #[inline(always)]
+        pub fn note_put(&self, _tag: Option<u64>) {}
+
+        #[inline(always)]
+        pub fn note_remove(&self, _tag: Option<u64>) {}
+
+        #[inline(always)]
+        pub fn staged_live(&self) -> usize {
+            0
+        }
+
+        #[inline(always)]
+        pub fn assert_quiesced(&self) {}
+    }
+}
+
+pub use ledger::BlockLedger;
 
 /// Cluster-wide in-memory storage: one [`NodeStore`] per node. The store
 /// table is growable in lock-step with elastic cluster joins
@@ -135,37 +360,55 @@ impl NodeStore {
 /// stable dense indices and the table never shrinks — a retired node's
 /// store just stops being written to.
 pub struct BlockManager {
-    stores: RwLock<Vec<NodeStore>>,
+    stores: OrderedRwLock<Vec<NodeStore>>,
     pub stats: TrafficStats,
+    ledger: BlockLedger,
 }
 
 impl BlockManager {
     pub fn new(nodes: usize) -> Arc<BlockManager> {
         Arc::new(BlockManager {
-            stores: RwLock::new((0..nodes).map(|_| NodeStore::new()).collect()),
+            stores: OrderedRwLock::new(rank::BLOCK_TABLE, (0..nodes).map(|_| NodeStore::new()).collect()),
             stats: TrafficStats::default(),
+            ledger: BlockLedger::new(),
         })
     }
 
+    /// The block-lifecycle leak ledger (no-op outside conformance builds).
+    pub fn ledger(&self) -> &BlockLedger {
+        &self.ledger
+    }
+
+    /// Assert no staged round left blocks behind — see
+    /// [`BlockLedger::assert_quiesced`].
+    pub fn assert_quiesced(&self) {
+        self.ledger.assert_quiesced();
+    }
+
     pub fn nodes(&self) -> usize {
-        self.stores.read().unwrap().len()
+        self.stores.read().len()
     }
 
     /// Grow the store table for a node that joined at runtime; returns
     /// the new node id.
     pub fn add_node(&self) -> usize {
-        let mut stores = self.stores.write().unwrap();
+        let mut stores = self.stores.write();
         stores.push(NodeStore::new());
         stores.len() - 1
     }
 
     /// Store a block on `node`'s store.
     pub fn put(&self, node: usize, id: BlockId, data: BlockData) {
-        let stores = self.stores.read().unwrap();
+        let stores = self.stores.read();
         debug_assert!(node < stores.len());
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
         self.stats.put_bytes.fetch_add(data.bytes() as u64, Ordering::Relaxed);
-        stores[node].blocks.lock().unwrap().insert(id, data);
+        let tag = self.ledger.tag(&id);
+        let prev = stores[node].blocks.lock().insert(id, data);
+        // Only a fresh copy (not an overwrite) raises the resident count.
+        if prev.is_none() {
+            self.ledger.note_put(tag);
+        }
     }
 
     /// Read a block as seen from `reader_node`: local store first, then the
@@ -192,58 +435,84 @@ impl BlockManager {
 
     /// Read from one specific node's store (no metering, no fallback).
     pub fn get_on(&self, node: usize, id: &BlockId) -> Option<BlockData> {
-        let stores = self.stores.read().unwrap();
+        let stores = self.stores.read();
         let store = &stores[node];
         if !store.alive.load(Ordering::Relaxed) {
             return None;
         }
-        store.blocks.lock().unwrap().get(id).cloned()
+        store.blocks.lock().get(id).cloned()
     }
 
     pub fn remove(&self, id: &BlockId) {
-        for s in self.stores.read().unwrap().iter() {
-            s.blocks.lock().unwrap().remove(id);
+        let tag = self.ledger.tag(id);
+        for s in self.stores.read().iter() {
+            if s.blocks.lock().remove(id).is_some() {
+                self.ledger.note_remove(tag);
+            }
         }
+    }
+
+    /// Retain-with-ledger: drop every block matching `pred` from one
+    /// store map, reporting round-scoped removals to the ledger.
+    fn retain_tracked(
+        &self,
+        m: &mut HashMap<BlockId, BlockData>,
+        pred: &impl Fn(&BlockId) -> bool,
+    ) {
+        m.retain(|id, _| {
+            if pred(id) {
+                self.ledger.note_remove(self.ledger.tag(id));
+                false
+            } else {
+                true
+            }
+        });
     }
 
     /// Drop blocks matching a predicate on every node (e.g. a finished
     /// shuffle round's slices).
     pub fn remove_matching(&self, pred: impl Fn(&BlockId) -> bool) {
-        for s in self.stores.read().unwrap().iter() {
-            s.blocks.lock().unwrap().retain(|id, _| !pred(id));
+        for s in self.stores.read().iter() {
+            self.retain_tracked(&mut s.blocks.lock(), &pred);
         }
     }
 
     /// Drop blocks matching a predicate on ONE node (a drained node's
     /// resharded-away blocks — scoped so other replicas survive).
     pub fn remove_matching_on(&self, node: usize, pred: impl Fn(&BlockId) -> bool) {
-        let stores = self.stores.read().unwrap();
-        stores[node].blocks.lock().unwrap().retain(|id, _| !pred(id));
+        let stores = self.stores.read();
+        self.retain_tracked(&mut stores[node].blocks.lock(), &pred);
     }
 
     /// Simulate node failure: mark dead and drop all of its blocks
     /// (cached partitions are lost → lineage recompute; shuffle outputs
     /// are lost → map task re-run).
     pub fn kill_node(&self, node: usize) {
-        let stores = self.stores.read().unwrap();
+        let stores = self.stores.read();
         stores[node].alive.store(false, Ordering::Relaxed);
-        stores[node].blocks.lock().unwrap().clear();
+        let mut m = stores[node].blocks.lock();
+        if BlockLedger::ENABLED {
+            for id in m.keys() {
+                self.ledger.note_remove(self.ledger.tag(id));
+            }
+        }
+        m.clear();
     }
 
     pub fn revive_node(&self, node: usize) {
-        self.stores.read().unwrap()[node].alive.store(true, Ordering::Relaxed);
+        self.stores.read()[node].alive.store(true, Ordering::Relaxed);
     }
 
     pub fn node_alive(&self, node: usize) -> bool {
-        self.stores.read().unwrap()[node].alive.load(Ordering::Relaxed)
+        self.stores.read()[node].alive.load(Ordering::Relaxed)
     }
 
     /// Total blocks and bytes currently resident (for memory accounting).
     pub fn usage(&self) -> (usize, usize) {
         let mut blocks = 0;
         let mut bytes = 0;
-        for s in self.stores.read().unwrap().iter() {
-            let m = s.blocks.lock().unwrap();
+        for s in self.stores.read().iter() {
+            let m = s.blocks.lock();
             blocks += m.len();
             bytes += m.values().map(|b| b.bytes()).sum::<usize>();
         }
@@ -292,6 +561,91 @@ mod tests {
                 assert_eq!(strs.len(), 2);
             }
             _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn round_tag_parses_round_scoped_ids() {
+        assert_eq!(round_tag(&BlockId::Broadcast { id: 7, part: 3 }), Some(7));
+        assert_eq!(round_tag(&BlockId::Named("agg/9/2".into())), Some(9));
+        assert_eq!(round_tag(&BlockId::Named("optstate/1/12/0".into())), Some(12));
+        assert_eq!(round_tag(&BlockId::Named("ring/0/5/1/2".into())), Some(5));
+        assert_eq!(round_tag(&BlockId::Named("resid/2/8/4".into())), Some(8));
+        assert_eq!(round_tag(&BlockId::Named("serving/3/assembled/11".into())), Some(11));
+        assert_eq!(round_tag(&BlockId::Named("serving/3/other/11".into())), None);
+        assert_eq!(round_tag(&BlockId::Named("free-form".into())), None);
+        assert_eq!(round_tag(&BlockId::Shuffle { shuffle: 1, map: 0, reduce: 0 }), None);
+        assert_eq!(round_tag(&BlockId::RddCache { rdd: 1, part: 0 }), None);
+    }
+
+    #[cfg(any(debug_assertions, feature = "lockcheck"))]
+    mod ledger_checks {
+        use super::super::*;
+
+        #[test]
+        fn committed_round_quiesces() {
+            let bm = BlockManager::new(2);
+            bm.ledger().begin_round(3);
+            bm.put(0, BlockId::Broadcast { id: 3, part: 0 }, BlockData::F32(Arc::new(vec![0.0])));
+            bm.put(1, BlockId::Broadcast { id: 3, part: 1 }, BlockData::F32(Arc::new(vec![0.0])));
+            assert_eq!(bm.ledger().staged_live(), 1);
+            bm.ledger().commit_round(3);
+            // Committed blocks may stay resident indefinitely.
+            bm.assert_quiesced();
+        }
+
+        #[test]
+        fn aborted_round_quiesces_after_cleanup() {
+            let bm = BlockManager::new(1);
+            bm.ledger().begin_round(4);
+            bm.put(0, BlockId::Broadcast { id: 4, part: 0 }, BlockData::F32(Arc::new(vec![0.0])));
+            bm.remove(&BlockId::Broadcast { id: 4, part: 0 });
+            bm.ledger().abort_round(4);
+            bm.assert_quiesced();
+        }
+
+        #[test]
+        #[should_panic(expected = "block ledger not quiesced")]
+        fn staged_leftover_is_a_leak() {
+            let bm = BlockManager::new(1);
+            bm.ledger().begin_round(5);
+            bm.put(0, BlockId::Broadcast { id: 5, part: 0 }, BlockData::F32(Arc::new(vec![0.0])));
+            bm.assert_quiesced();
+        }
+
+        #[test]
+        #[should_panic(expected = "survived rollback")]
+        fn zombie_publish_after_abort_is_a_leak() {
+            let bm = BlockManager::new(1);
+            bm.ledger().begin_round(6);
+            bm.ledger().abort_round(6);
+            // A straggler task republishing into a rolled-back round.
+            bm.put(0, BlockId::Named("agg/6/0".into()), BlockData::F32(Arc::new(vec![0.0])));
+            bm.assert_quiesced();
+        }
+
+        #[test]
+        fn kill_node_and_matching_removal_keep_ledger_consistent() {
+            let bm = BlockManager::new(2);
+            bm.ledger().begin_round(8);
+            bm.put(0, BlockId::Named("agg/8/0".into()), BlockData::F32(Arc::new(vec![0.0])));
+            bm.put(1, BlockId::Named("optstate/0/8/1".into()), BlockData::F32(Arc::new(vec![0.0])));
+            bm.kill_node(1);
+            bm.remove_matching(|id| matches!(id, BlockId::Named(s) if s.starts_with("agg/8/")));
+            bm.ledger().abort_round(8);
+            bm.assert_quiesced();
+        }
+
+        #[test]
+        fn overwrite_does_not_double_count() {
+            let bm = BlockManager::new(1);
+            bm.ledger().begin_round(9);
+            let id = BlockId::Broadcast { id: 9, part: 0 };
+            bm.put(0, id.clone(), BlockData::F32(Arc::new(vec![0.0])));
+            bm.put(0, id.clone(), BlockData::F32(Arc::new(vec![1.0])));
+            bm.remove(&id);
+            bm.ledger().abort_round(9);
+            bm.assert_quiesced();
         }
     }
 

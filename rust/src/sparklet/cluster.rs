@@ -27,11 +27,13 @@
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Condvar};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::util::sync::{rank, OrderedMutex, OrderedRwLock};
 
 /// Cluster topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,18 +136,18 @@ pub struct Completion {
 /// wakes only this job's driver. No cluster-wide lock sits on the
 /// completion hot path.
 pub struct JobInbox {
-    queue: Mutex<VecDeque<Completion>>,
+    queue: OrderedMutex<VecDeque<Completion>>,
     ready: Condvar,
 }
 
 impl JobInbox {
     fn new() -> JobInbox {
-        JobInbox { queue: Mutex::new(VecDeque::new()), ready: Condvar::new() }
+        JobInbox { queue: OrderedMutex::new(rank::JOB_INBOX, VecDeque::new()), ready: Condvar::new() }
     }
 
     /// Deliver one completion (called from executor threads).
     pub fn push(&self, c: Completion) {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock();
         q.push_back(c);
         self.ready.notify_one();
     }
@@ -153,17 +155,17 @@ impl JobInbox {
     /// Pop a completion if one is already queued (non-blocking; the poll
     /// path of [`super::JobHandle`] drains with this).
     pub fn try_pop(&self) -> Option<Completion> {
-        self.queue.lock().unwrap().pop_front()
+        self.queue.lock().pop_front()
     }
 
     /// Block until a completion arrives.
     pub fn wait(&self) -> Completion {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock();
         loop {
             if let Some(c) = q.pop_front() {
                 return c;
             }
-            q = self.ready.wait(q).unwrap();
+            q = q.wait(&self.ready);
         }
     }
 }
@@ -174,29 +176,29 @@ impl JobInbox {
 /// to it, so straggler completions arriving after `unregister` land in
 /// the orphaned inbox and vanish when the last task drops it.
 pub struct CompletionHub {
-    inboxes: Mutex<HashMap<u64, Arc<JobInbox>>>,
+    inboxes: OrderedMutex<HashMap<u64, Arc<JobInbox>>>,
 }
 
 impl CompletionHub {
     fn new() -> CompletionHub {
-        CompletionHub { inboxes: Mutex::new(HashMap::new()) }
+        CompletionHub { inboxes: OrderedMutex::new(rank::COMPLETION_HUB, HashMap::new()) }
     }
 
     /// Open an inbox for `job`. Must be called before any of its tasks run.
     pub fn register(&self, job: u64) -> Arc<JobInbox> {
         let inbox = Arc::new(JobInbox::new());
-        self.inboxes.lock().unwrap().insert(job, Arc::clone(&inbox));
+        self.inboxes.lock().insert(job, Arc::clone(&inbox));
         inbox
     }
 
     /// Drop the registry's handle on `job`'s inbox.
     pub fn unregister(&self, job: u64) {
-        self.inboxes.lock().unwrap().remove(&job);
+        self.inboxes.lock().remove(&job);
     }
 
     /// Look up a live job's inbox (None once unregistered).
     pub fn get(&self, job: u64) -> Option<Arc<JobInbox>> {
-        self.inboxes.lock().unwrap().get(&job).cloned()
+        self.inboxes.lock().get(&job).cloned()
     }
 }
 
@@ -204,12 +206,12 @@ struct Node {
     /// Task queue sender; `None` once the node has retired or the cluster
     /// has shut down (taking the sender closes the channel, which is what
     /// lets the executor threads observe shutdown and exit).
-    tx: Mutex<Option<mpsc::Sender<Vec<TaskFn>>>>,
+    tx: OrderedMutex<Option<mpsc::Sender<Vec<TaskFn>>>>,
     state: Arc<AtomicU8>,
     /// Tasks queued or running on this node (placement load signal).
     inflight: Arc<AtomicUsize>,
     /// Notified every time a task finishes (slot-availability signal).
-    slot_signal: Arc<(Mutex<()>, Condvar)>,
+    slot_signal: Arc<(OrderedMutex<()>, Condvar)>,
 }
 
 impl Node {
@@ -223,8 +225,8 @@ pub struct Cluster {
     spec: ClusterSpec,
     /// Growable node table: ids are stable dense indices, retired slots
     /// are tombstones (the vec only ever grows).
-    nodes: RwLock<Vec<Arc<Node>>>,
-    threads: Mutex<Vec<JoinHandle<()>>>,
+    nodes: OrderedRwLock<Vec<Arc<Node>>>,
+    threads: OrderedMutex<Vec<JoinHandle<()>>>,
     completions: Arc<CompletionHub>,
     /// Membership epoch: bumped on every join/drain/retire/kill/revival.
     epoch: AtomicU64,
@@ -237,10 +239,10 @@ fn spawn_executors(
     slots: usize,
     rx: mpsc::Receiver<Vec<TaskFn>>,
     inflight: &Arc<AtomicUsize>,
-    slot_signal: &Arc<(Mutex<()>, Condvar)>,
+    slot_signal: &Arc<(OrderedMutex<()>, Condvar)>,
     threads: &mut Vec<JoinHandle<()>>,
 ) {
-    let rx = Arc::new(Mutex::new(rx));
+    let rx = Arc::new(OrderedMutex::new(rank::CLUSTER_EXEC_QUEUE, rx));
     for slot in 0..slots {
         let rx = Arc::clone(&rx);
         let inflight = Arc::clone(inflight);
@@ -250,7 +252,7 @@ fn spawn_executors(
             .spawn(move || loop {
                 // Take one batch; exit when the channel closes.
                 let batch = {
-                    let guard = rx.lock().unwrap();
+                    let guard = rx.lock();
                     guard.recv()
                 };
                 match batch {
@@ -259,7 +261,7 @@ fn spawn_executors(
                             f(node_id);
                             inflight.fetch_sub(1, Ordering::Relaxed);
                             let (lock, cv) = &*slot_signal;
-                            let _g = lock.lock().unwrap();
+                            let _g = lock.lock();
                             cv.notify_all();
                         }
                     }
@@ -274,10 +276,10 @@ fn spawn_executors(
 fn make_node(node_id: usize, slots: usize, threads: &mut Vec<JoinHandle<()>>) -> Arc<Node> {
     let (tx, rx) = mpsc::channel::<Vec<TaskFn>>();
     let inflight = Arc::new(AtomicUsize::new(0));
-    let slot_signal = Arc::new((Mutex::new(()), Condvar::new()));
+    let slot_signal = Arc::new((OrderedMutex::new(rank::CLUSTER_SLOT_SIGNAL, ()), Condvar::new()));
     spawn_executors(node_id, slots, rx, &inflight, &slot_signal, threads);
     Arc::new(Node {
-        tx: Mutex::new(Some(tx)),
+        tx: OrderedMutex::new(rank::CLUSTER_NODE_TX, Some(tx)),
         state: Arc::new(AtomicU8::new(NodeState::Alive as u8)),
         inflight,
         slot_signal,
@@ -294,8 +296,8 @@ impl Cluster {
         }
         Arc::new(Cluster {
             spec,
-            nodes: RwLock::new(nodes),
-            threads: Mutex::new(threads),
+            nodes: OrderedRwLock::new(rank::CLUSTER_NODES, nodes),
+            threads: OrderedMutex::new(rank::CLUSTER_THREADS, threads),
             completions: Arc::new(CompletionHub::new()),
             epoch: AtomicU64::new(0),
         })
@@ -308,11 +310,11 @@ impl Cluster {
     /// Total node slots ever allocated (alive + draining + dead +
     /// retired). Node ids are `0..nodes()` and are never reused.
     pub fn nodes(&self) -> usize {
-        self.nodes.read().unwrap().len()
+        self.nodes.read().len()
     }
 
     fn node(&self, node: usize) -> Arc<Node> {
-        Arc::clone(&self.nodes.read().unwrap()[node])
+        Arc::clone(&self.nodes.read()[node])
     }
 
     /// The cluster-wide completion queue shared by all jobs.
@@ -340,7 +342,7 @@ impl Cluster {
     }
 
     pub fn alive_nodes(&self) -> Vec<usize> {
-        let nodes = self.nodes.read().unwrap();
+        let nodes = self.nodes.read();
         (0..nodes.len()).filter(|&n| nodes[n].state() == NodeState::Alive).collect()
     }
 
@@ -387,13 +389,13 @@ impl Cluster {
         let deadline = Instant::now() + timeout;
         let slot_signal = Arc::clone(&self.node(node).slot_signal);
         let (lock, cv) = &*slot_signal;
-        let mut guard = lock.lock().unwrap();
+        let mut guard = lock.lock();
         while !self.has_capacity(node) {
             let now = Instant::now();
             if now >= deadline {
                 return false;
             }
-            let (g, _) = cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _timed_out) = guard.wait_timeout(cv, deadline - now);
             guard = g;
         }
         true
@@ -480,9 +482,9 @@ impl Cluster {
     /// stable). The kernel split ([`ClusterSpec::task_cores`]) stays
     /// pinned to the initial topology for lineage determinism.
     pub fn add_node(&self) -> usize {
-        let mut nodes = self.nodes.write().unwrap();
+        let mut nodes = self.nodes.write();
         let node_id = nodes.len();
-        let mut threads = self.threads.lock().unwrap();
+        let mut threads = self.threads.lock();
         nodes.push(make_node(node_id, self.spec.slots_per_node, &mut threads));
         drop(threads);
         drop(nodes);
@@ -521,14 +523,14 @@ impl Cluster {
         {
             let slot_signal = Arc::clone(&n.slot_signal);
             let (lock, cv) = &*slot_signal;
-            let mut guard = lock.lock().unwrap();
+            let mut guard = lock.lock();
             while n.inflight.load(Ordering::SeqCst) > 0 {
-                let (g, _) = cv.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+                let (g, _timed_out) = guard.wait_timeout(cv, Duration::from_millis(50));
                 guard = g;
             }
         }
         n.state.store(NodeState::Retired as u8, Ordering::SeqCst);
-        n.tx.lock().unwrap().take();
+        n.tx.lock().take();
         self.bump_epoch();
     }
 
@@ -564,7 +566,7 @@ impl Cluster {
             bail!("node {node} is dead or retired");
         }
         let n = self.node(node);
-        let tx = match n.tx.lock().unwrap().clone() {
+        let tx = match n.tx.lock().clone() {
             Some(tx) => tx,
             None => bail!("node {node} executor is gone (cluster shut down)"),
         };
@@ -605,11 +607,11 @@ impl Cluster {
     /// thread's own handle is skipped instead of self-joining into a
     /// deadlock.
     pub fn shutdown(&self) {
-        for node in self.nodes.read().unwrap().iter() {
-            node.tx.lock().unwrap().take();
+        for node in self.nodes.read().iter() {
+            node.tx.lock().take();
         }
         let me = std::thread::current().id();
-        let handles: Vec<JoinHandle<()>> = self.threads.lock().unwrap().drain(..).collect();
+        let handles: Vec<JoinHandle<()>> = self.threads.lock().drain(..).collect();
         for h in handles {
             if h.thread().id() != me {
                 let _ = h.join();
@@ -625,8 +627,8 @@ impl Drop for Cluster {
         // must not turn teardown (including panic unwinding) into an
         // indefinite hang. Explicit `shutdown()` is the blocking,
         // fully-joined path.
-        for node in self.nodes.read().unwrap().iter() {
-            node.tx.lock().unwrap().take();
+        for node in self.nodes.read().iter() {
+            node.tx.lock().take();
         }
     }
 }
@@ -642,10 +644,16 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         for n in 0..3 {
             let tx = tx.clone();
-            c.submit(n, Box::new(move |node| tx.send((n, node)).unwrap())).unwrap();
+            c.submit(
+                n,
+                Box::new(move |node| {
+                    tx.send((n, node)).expect("test receiver outlives the task")
+                }),
+            )
+            .expect("submit to alive node");
         }
         for _ in 0..3 {
-            let (want, got) = rx.recv().unwrap();
+            let (want, got) = rx.recv().expect("executor delivers every result");
             assert_eq!(want, got);
         }
     }
@@ -673,7 +681,7 @@ mod tests {
                 std::thread::yield_now();
             }
         }))
-        .unwrap();
+        .expect("submit to alive node");
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert_eq!(c.least_loaded_alive(None), Some(1));
         assert_eq!(c.idle_alive(None), Some(1));
@@ -689,11 +697,14 @@ mod tests {
         let batch: Vec<TaskFn> = (0..5)
             .map(|i| {
                 let tx = tx.clone();
-                Box::new(move |_node: usize| tx.send(i).unwrap()) as TaskFn
+                Box::new(move |_node: usize| {
+                    tx.send(i).expect("test receiver outlives the task")
+                }) as TaskFn
             })
             .collect();
-        c.submit_batch(0, batch).unwrap();
-        let got: Vec<i32> = (0..5).map(|_| rx.recv().unwrap()).collect();
+        c.submit_batch(0, batch).expect("batch submit to alive node");
+        let got: Vec<i32> =
+            (0..5).map(|_| rx.recv().expect("executor delivers every result")).collect();
         assert_eq!(got, vec![0, 1, 2, 3, 4]);
         // Give the worker a moment to decrement the last inflight count.
         for _ in 0..100 {
@@ -724,7 +735,7 @@ mod tests {
                         d.fetch_add(1, Ordering::SeqCst);
                     }),
                 )
-                .unwrap();
+                .expect("submit to alive node");
             }
         }
         c.shutdown();
@@ -771,7 +782,7 @@ mod tests {
                     std::thread::yield_now();
                 }
             }))
-            .unwrap();
+            .expect("submit to alive node");
         }
         while c.inflight(0) < 4 {
             std::thread::sleep(Duration::from_millis(1));
@@ -819,8 +830,16 @@ mod tests {
         assert!(c.epoch() > e0, "join must bump the membership epoch");
         assert_eq!(c.alive_nodes(), vec![0, 1, 2]);
         let (tx, rx) = mpsc::channel();
-        c.submit(id, Box::new(move |node| tx.send(node).unwrap())).unwrap();
-        assert_eq!(rx.recv().unwrap(), 2, "joined node runs tasks");
+        c.submit(
+            id,
+            Box::new(move |node| tx.send(node).expect("test receiver outlives the task")),
+        )
+        .expect("submit to joined node");
+        assert_eq!(
+            rx.recv().expect("executor delivers every result"),
+            2,
+            "joined node runs tasks"
+        );
         c.shutdown();
     }
 
@@ -837,7 +856,7 @@ mod tests {
             }
             d.fetch_add(1, Ordering::SeqCst);
         }))
-        .unwrap();
+        .expect("submit to alive node");
         let e0 = c.epoch();
         c.begin_drain(1);
         assert_eq!(c.node_state(1), NodeState::Draining);
@@ -845,7 +864,7 @@ mod tests {
         assert_eq!(c.alive_nodes(), vec![0], "draining node leaves the alive set");
         assert!(c.node_executing(1), "draining node still executes");
         // Draining nodes still accept racing submissions.
-        c.submit(1, Box::new(|_| {})).unwrap();
+        c.submit(1, Box::new(|_| {})).expect("draining node still accepts work");
         gate.store(1, Ordering::Relaxed);
         c.finish_drain(1);
         assert_eq!(c.node_state(1), NodeState::Retired);

@@ -5,9 +5,11 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 
 use anyhow::Result;
+
+use crate::util::sync::{rank, OrderedMutex, OrderedRwLock};
 
 use super::block_manager::BlockManager;
 use super::cluster::{Cluster, ClusterSpec, Membership};
@@ -26,11 +28,11 @@ pub(crate) struct CtxInner {
     pub job_ids: AtomicU64,
     pub shuffle_ids: AtomicU64,
     pub broadcast_ids: AtomicU64,
-    pub failure: RwLock<FailurePolicy>,
-    pub default_policy: RwLock<SchedulePolicy>,
+    pub failure: OrderedRwLock<FailurePolicy>,
+    pub default_policy: OrderedRwLock<SchedulePolicy>,
     /// Lineage registry: one [`RddMeta`] per RDD created on this context,
     /// consumed by the stage planner ([`crate::sparklet::StageDag`]).
-    pub lineage: Mutex<HashMap<u64, RddMeta>>,
+    pub lineage: OrderedMutex<HashMap<u64, RddMeta>>,
 }
 
 /// Cloneable driver context.
@@ -47,9 +49,9 @@ impl SparkletContext {
             job_ids: AtomicU64::new(0),
             shuffle_ids: AtomicU64::new(0),
             broadcast_ids: AtomicU64::new(0),
-            failure: RwLock::new(FailurePolicy::default()),
-            default_policy: RwLock::new(SchedulePolicy::default()),
-            lineage: Mutex::new(HashMap::new()),
+            failure: OrderedRwLock::new(rank::CONTEXT_FAILURE, FailurePolicy::default()),
+            default_policy: OrderedRwLock::new(rank::CONTEXT_POLICY, SchedulePolicy::default()),
+            lineage: OrderedMutex::new(rank::CONTEXT_LINEAGE, HashMap::new()),
         }))
     }
 
@@ -80,19 +82,19 @@ impl SparkletContext {
     }
 
     pub fn set_failure_policy(&self, p: FailurePolicy) {
-        *self.0.failure.write().unwrap() = p;
+        *self.0.failure.write() = p;
     }
 
     pub fn failure_policy(&self) -> FailurePolicy {
-        self.0.failure.read().unwrap().clone()
+        self.0.failure.read().clone()
     }
 
     pub fn set_schedule_policy(&self, p: SchedulePolicy) {
-        *self.0.default_policy.write().unwrap() = p;
+        *self.0.default_policy.write() = p;
     }
 
     pub fn schedule_policy(&self) -> SchedulePolicy {
-        self.0.default_policy.read().unwrap().clone()
+        self.0.default_policy.read().clone()
     }
 
     pub(crate) fn next_rdd_id(&self) -> u64 {
@@ -117,17 +119,17 @@ impl SparkletContext {
     /// long-running loops (streaming micro-batches) don't accumulate
     /// lineage for dead RDDs.
     pub(crate) fn register_rdd(&self, meta: RddMeta) {
-        self.0.lineage.lock().unwrap().insert(meta.id, meta);
+        self.0.lineage.lock().insert(meta.id, meta);
     }
 
     /// Remove a dead RDD's lineage entry (called by the RDD's drop guard).
     pub(crate) fn unregister_rdd(&self, id: u64) {
-        self.0.lineage.lock().unwrap().remove(&id);
+        self.0.lineage.lock().remove(&id);
     }
 
     /// Copy of the lineage registry for the stage planner.
     pub(crate) fn lineage_snapshot(&self) -> HashMap<u64, RddMeta> {
-        self.0.lineage.lock().unwrap().clone()
+        self.0.lineage.lock().clone()
     }
 
     /// Distribute a Vec into `parts` partitions (round-robin slices).
@@ -207,6 +209,17 @@ impl SparkletContext {
     /// Current membership epoch (see [`Cluster::epoch`]).
     pub fn epoch(&self) -> u64 {
         self.0.cluster.epoch()
+    }
+
+    /// Orderly teardown: stop the cluster's executors, then verify via the
+    /// block ledger that no staged round left blocks behind (debug builds
+    /// and `--features lockcheck`; a no-op check otherwise). Dropping the
+    /// context without calling this still shuts the cluster down — this
+    /// entry point exists so tests and long-running drivers get the
+    /// leak check.
+    pub fn shutdown(&self) {
+        self.0.cluster.shutdown();
+        self.0.blocks.assert_quiesced();
     }
 
     /// Elastic join: grow the cluster AND the block-store table by one

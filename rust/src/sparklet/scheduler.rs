@@ -569,7 +569,11 @@ impl Scheduler {
         if let Some(e) = pending.error.take() {
             return Err(e);
         }
-        Ok(pending.results.iter_mut().map(|r| r.take().unwrap()).collect())
+        Ok(pending
+            .results
+            .iter_mut()
+            .map(|r| r.take().expect("every partition resolved before join returns"))
+            .collect())
     }
 
     /// Drain whatever completions have already arrived for a submitted

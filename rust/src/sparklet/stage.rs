@@ -17,9 +17,11 @@
 //!   was lost to node death.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
+
+use crate::util::sync::{rank, OrderedMutex};
 
 use super::block_manager::{BlockId, BlockManager};
 use super::context::{SparkletContext, TaskContext};
@@ -165,7 +167,8 @@ pub struct WideDep {
     pub run_map_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>,
     /// Guards the once-only map-stage run: concurrent actions on clones of
     /// the same shuffled RDD serialize here instead of double-dispatching.
-    done: Mutex<bool>,
+    /// Held across the whole map-stage dispatch, hence the bottom rank.
+    done: OrderedMutex<bool>,
     /// Block store holding this shuffle's bucket blocks (Drop cleanup).
     blocks: Arc<BlockManager>,
 }
@@ -178,7 +181,14 @@ impl WideDep {
         run_map_task: Arc<dyn Fn(&TaskContext) -> Result<()> + Send + Sync>,
         blocks: Arc<BlockManager>,
     ) -> Arc<WideDep> {
-        Arc::new(WideDep { shuffle, maps, preferred, run_map_task, done: Mutex::new(false), blocks })
+        Arc::new(WideDep {
+            shuffle,
+            maps,
+            preferred,
+            run_map_task,
+            done: OrderedMutex::new(rank::STAGE_WIDE_DEP, false),
+            blocks,
+        })
     }
 
     /// Run the map-side stage as one job, once. A concurrent caller blocks
@@ -186,7 +196,7 @@ impl WideDep {
     /// actions reuse the published buckets too (the reduce side falls back
     /// to lineage recompute for any bucket lost to node death).
     pub fn ensure(&self, runner: &JobRunner) -> Result<()> {
-        let mut done = self.done.lock().unwrap();
+        let mut done = self.done.lock();
         if *done {
             return Ok(());
         }

@@ -4,11 +4,13 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
+
+use crate::util::sync::{rank, OrderedMutex};
 
 /// A single-topic broker.
 pub struct KafkaSim<T> {
-    queue: Mutex<VecDeque<T>>,
+    queue: OrderedMutex<VecDeque<T>>,
     capacity: usize,
     not_full: Condvar,
     closed: AtomicBool,
@@ -20,7 +22,7 @@ pub struct KafkaSim<T> {
 impl<T: Send + 'static> KafkaSim<T> {
     pub fn new(capacity: usize) -> Arc<KafkaSim<T>> {
         Arc::new(KafkaSim {
-            queue: Mutex::new(VecDeque::with_capacity(capacity)),
+            queue: OrderedMutex::new(rank::STREAM_QUEUE, VecDeque::with_capacity(capacity)),
             capacity,
             not_full: Condvar::new(),
             closed: AtomicBool::new(false),
@@ -32,17 +34,15 @@ impl<T: Send + 'static> KafkaSim<T> {
 
     /// Blocking produce (backpressure: waits while the topic is full).
     pub fn produce(&self, record: T) -> bool {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock();
         while q.len() >= self.capacity {
             if self.closed.load(Ordering::Relaxed) {
                 return false;
             }
-            let (guard, timeout) = self
-                .not_full
-                .wait_timeout(q, std::time::Duration::from_millis(50))
-                .unwrap();
+            let (guard, timed_out) =
+                q.wait_timeout(&self.not_full, std::time::Duration::from_millis(50));
             q = guard;
-            if timeout.timed_out() && self.closed.load(Ordering::Relaxed) {
+            if timed_out && self.closed.load(Ordering::Relaxed) {
                 return false;
             }
         }
@@ -53,7 +53,7 @@ impl<T: Send + 'static> KafkaSim<T> {
 
     /// Non-blocking produce: drops the record when full (at-most-once).
     pub fn try_produce(&self, record: T) -> bool {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock();
         if q.len() >= self.capacity {
             self.dropped.fetch_add(1, Ordering::Relaxed);
             return false;
@@ -65,7 +65,7 @@ impl<T: Send + 'static> KafkaSim<T> {
 
     /// Poll up to `max` records.
     pub fn poll(&self, max: usize) -> Vec<T> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock();
         let take = max.min(q.len());
         let out: Vec<T> = q.drain(..take).collect();
         drop(q);
@@ -77,7 +77,7 @@ impl<T: Send + 'static> KafkaSim<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.queue.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {

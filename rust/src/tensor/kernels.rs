@@ -31,8 +31,10 @@ use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar};
 use std::thread;
+
+use crate::util::sync::{rank, OrderedMutex};
 
 use super::partition_ranges;
 
@@ -49,7 +51,7 @@ struct Job {
     task: &'static (dyn Fn(usize) + Sync),
     chunks: usize,
     next: AtomicUsize,
-    pending: Mutex<usize>,
+    pending: OrderedMutex<usize>,
     done: Condvar,
     panicked: AtomicBool,
 }
@@ -69,7 +71,7 @@ fn worker_loop(rx: mpsc::Receiver<Arc<Job>>) {
         if catch_unwind(AssertUnwindSafe(|| drain(&job))).is_err() {
             job.panicked.store(true, Ordering::SeqCst);
         }
-        let mut pending = job.pending.lock().unwrap();
+        let mut pending = job.pending.lock();
         *pending -= 1;
         if *pending == 0 {
             job.done.notify_all();
@@ -134,7 +136,7 @@ impl KernelPool {
             task,
             chunks,
             next: AtomicUsize::new(0),
-            pending: Mutex::new(helpers),
+            pending: OrderedMutex::new(rank::KERNEL_PENDING, helpers),
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
         });
@@ -144,9 +146,9 @@ impl KernelPool {
         // The caller drains too; if its chunk panics it must still wait
         // for the helpers (they borrow `f`'s captures) before unwinding.
         let mine = catch_unwind(AssertUnwindSafe(|| drain(&job)));
-        let mut pending = job.pending.lock().unwrap();
+        let mut pending = job.pending.lock();
         while *pending > 0 {
-            pending = job.done.wait(pending).unwrap();
+            pending = pending.wait(&job.done);
         }
         drop(pending);
         if let Err(p) = mine {

@@ -5,6 +5,7 @@ pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod stats;
+pub mod sync;
 pub mod timing;
 
 /// Read a little-endian f32 binary file (the `<model>.params.bin` format

@@ -1,0 +1,501 @@
+//! Lock-order-checked synchronization primitives — the concurrency
+//! conformance layer.
+//!
+//! Every `Mutex`/`RwLock` in this repo is an [`OrderedMutex`] /
+//! [`OrderedRwLock`] carrying a declared [`Rank`] (see [`rank`]). Ranks
+//! encode the repo-wide acquisition order; a thread may only acquire
+//! locks of strictly increasing rank while it holds others. In debug
+//! builds (or with `--features lockcheck`, e.g. for release-mode
+//! sanitizer runs) every acquisition is checked against the acquiring
+//! thread's held-lock stack and a global lock-order graph:
+//!
+//! * acquiring a rank **lower** than any held rank panics immediately
+//!   with the held chain (a rank inversion — the classic AB/BA deadlock
+//!   shape);
+//! * acquiring a rank **equal** to a held rank records a directed edge
+//!   `held → acquired` in the global graph and panics if the reverse
+//!   edge was ever observed (a same-rank cycle), printing both threads'
+//!   held chains; re-acquiring the *same* lock class panics outright
+//!   (recursive locking / read-read deadlock hazard under writer
+//!   priority).
+//!
+//! In release builds without `lockcheck` the wrappers compile to
+//! zero-cost newtypes around the std primitives.
+//!
+//! Poison policy: a panicking task must not turn a *retryable* failure
+//! into a driver abort, so every accessor ([`OrderedMutex::lock`],
+//! [`OrderedRwLock::read`]/[`write`](OrderedRwLock::write)) recovers
+//! from poisoning instead of unwrapping. All repo state guarded by these
+//! locks is valid under panic-at-any-point (counters, maps of owned
+//! values), and task bodies additionally run under `catch_unwind`, so
+//! clearing the poison bit is sound. `cargo xtask lint` enforces that no
+//! raw `std::sync` lock (and no `.lock().unwrap()`) appears outside this
+//! file.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// A lock's place in the repo-wide acquisition order: a numeric order
+/// plus a stable name used in diagnostics and the same-rank edge graph.
+#[derive(Debug, Clone, Copy)]
+pub struct Rank {
+    pub order: u16,
+    pub name: &'static str,
+}
+
+impl Rank {
+    pub const fn new(order: u16, name: &'static str) -> Rank {
+        Rank { order, name }
+    }
+}
+
+/// The declared lock ranks, lowest (acquired first / outermost) to
+/// highest (innermost). Subsystem order follows the dispatch flow:
+/// stage materialization < cluster < scheduler < context < block
+/// manager < param manager < streaming < serving < simulators <
+/// kernels < leaf. A lock held across a call into a *later* subsystem
+/// must rank below every lock that call can take.
+pub mod rank {
+    use super::Rank;
+
+    /// `WideDep::ensure` holds this across an entire job dispatch
+    /// (cluster + scheduler + task-side block locks), so it ranks below
+    /// everything.
+    pub const STAGE_WIDE_DEP: Rank = Rank::new(5, "stage.wide_dep");
+
+    /// Held in `wait_for_slot` while reading the node table.
+    pub const CLUSTER_SLOT_SIGNAL: Rank = Rank::new(10, "cluster.slot_signal");
+    /// Node table; held across per-node `node_tx` sends in shutdown.
+    pub const CLUSTER_NODES: Rank = Rank::new(12, "cluster.nodes");
+    pub const CLUSTER_THREADS: Rank = Rank::new(14, "cluster.threads");
+    pub const CLUSTER_NODE_TX: Rank = Rank::new(16, "cluster.node_tx");
+    pub const CLUSTER_EXEC_QUEUE: Rank = Rank::new(18, "cluster.exec_queue");
+
+    pub const COMPLETION_HUB: Rank = Rank::new(20, "scheduler.completion_hub");
+    pub const JOB_INBOX: Rank = Rank::new(22, "scheduler.job_inbox");
+
+    pub const CONTEXT_LINEAGE: Rank = Rank::new(26, "context.lineage");
+    pub const CONTEXT_FAILURE: Rank = Rank::new(27, "context.failure_policy");
+    pub const CONTEXT_POLICY: Rank = Rank::new(28, "context.schedule_policy");
+
+    /// Store table; held (read) while taking a per-node store lock.
+    pub const BLOCK_TABLE: Rank = Rank::new(40, "block_manager.stores");
+    pub const BLOCK_STORE: Rank = Rank::new(42, "block_manager.store");
+    pub const BLOCK_LEDGER: Rank = Rank::new(44, "block_manager.ledger");
+
+    pub const PARAM_STRATEGY: Rank = Rank::new(50, "param_mgr.strategy");
+    pub const PARAM_OWNERS: Rank = Rank::new(51, "param_mgr.owners");
+
+    pub const STREAM_QUEUE: Rank = Rank::new(56, "streaming.queue");
+
+    pub const SERVING_DEPLOYED: Rank = Rank::new(60, "serving.deployed");
+    pub const SERVING_CONTROLLER: Rank = Rank::new(61, "serving.controller");
+    pub const SERVING_DRAIN_RATE: Rank = Rank::new(62, "serving.drain_rate");
+    pub const SERVING_CHAOS: Rank = Rank::new(63, "serving.chaos");
+    pub const SERVING_SCALE_POLICY: Rank = Rank::new(64, "serving.scale_policy");
+    pub const SERVING_SCALE_STATE: Rank = Rank::new(65, "serving.scale_state");
+    pub const SERVING_NODE_BUSY: Rank = Rank::new(66, "serving.node_busy");
+
+    pub const SIM_ROUNDS: Rank = Rank::new(72, "builtin.sim_rounds");
+    pub const SIM_ACTIVE: Rank = Rank::new(74, "builtin.sim_active");
+
+    pub const KERNEL_PENDING: Rank = Rank::new(80, "kernels.pool_pending");
+
+    /// Innermost: safe to take while holding anything; must never be
+    /// held across a call that acquires another ordered lock.
+    pub const LEAF: Rank = Rank::new(100, "leaf");
+}
+
+// ---------------------------------------------------------------------------
+// The checker (debug / `lockcheck` builds)
+// ---------------------------------------------------------------------------
+
+#[cfg(any(debug_assertions, feature = "lockcheck"))]
+mod check {
+    use super::Rank;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    /// One held lock on the current thread: (order, name, token id).
+    type Held = (u16, &'static str, u64);
+
+    thread_local! {
+        static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+    }
+
+    static NEXT_TOKEN: AtomicU64 = AtomicU64::new(0);
+
+    /// Global same-rank edge graph: `(held, acquired)` name pairs, each
+    /// with the thread name + held chain recorded when first observed.
+    /// Raw std Mutex: this IS the lock infrastructure, and the guard is
+    /// never held across any other acquisition.
+    static EDGES: Mutex<Option<HashMap<(&'static str, &'static str), String>>> = Mutex::new(None);
+
+    fn chain(held: &[Held], acquiring: Rank) -> String {
+        let t = std::thread::current();
+        let mut s = format!("thread `{}` holds [", t.name().unwrap_or("?"));
+        for (i, (o, n, _)) in held.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("{n}({o})"));
+        }
+        s.push_str(&format!("], acquiring {}({})", acquiring.name, acquiring.order));
+        s
+    }
+
+    /// RAII record of one acquisition on the acquiring thread's stack.
+    pub struct Token {
+        id: u64,
+    }
+
+    impl Drop for Token {
+        fn drop(&mut self) {
+            // Guards can be dropped out of acquisition order; pop by id.
+            let _ = HELD.try_with(|h| {
+                let mut v = h.borrow_mut();
+                if let Some(p) = v.iter().rposition(|e| e.2 == self.id) {
+                    v.remove(p);
+                }
+            });
+        }
+    }
+
+    pub fn acquire(rank: Rank) -> Token {
+        HELD.with(|h| {
+            let held = h.borrow();
+            for &(o, n, _) in held.iter() {
+                if o > rank.order {
+                    panic!(
+                        "lock-order inversion: acquiring `{}` (rank {}) while holding \
+                         `{}` (rank {}) — ranks must be acquired in increasing order.\n  {}",
+                        rank.name,
+                        rank.order,
+                        n,
+                        o,
+                        chain(&held, rank)
+                    );
+                }
+                if o == rank.order {
+                    if n == rank.name {
+                        panic!(
+                            "same-rank re-acquisition: `{}` (rank {}) is already held by \
+                             this thread (recursive lock / read-read deadlock hazard).\n  {}",
+                            rank.name,
+                            rank.order,
+                            chain(&held, rank)
+                        );
+                    }
+                    let here = chain(&held, rank);
+                    let mut g = EDGES.lock().unwrap_or_else(|e| e.into_inner());
+                    let g = g.get_or_insert_with(HashMap::new);
+                    if let Some(other) = g.get(&(rank.name, n)) {
+                        panic!(
+                            "same-rank lock cycle between `{}` and `{}` (rank {}):\n  \
+                             earlier: {}\n  now: {}",
+                            n, rank.name, rank.order, other, here
+                        );
+                    }
+                    g.entry((n, rank.name)).or_insert(here);
+                }
+            }
+        });
+        let id = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        HELD.with(|h| h.borrow_mut().push((rank.order, rank.name, id)));
+        Token { id }
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "lockcheck")))]
+mod check {
+    use super::Rank;
+
+    pub struct Token;
+
+    #[inline(always)]
+    pub fn acquire(_rank: Rank) -> Token {
+        Token
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedMutex
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct OrderedMutex<T> {
+    rank: Rank,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub const fn new(rank: Rank, value: T) -> OrderedMutex<T> {
+        OrderedMutex { rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire, checking lock order and recovering from poison (a
+    /// panicked holder must not abort later lock users — see module
+    /// docs for why clearing the poison bit is sound here).
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T> {
+        let token = check::acquire(self.rank);
+        let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        OrderedMutexGuard { guard, _token: token }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        self.inner.get_mut().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+pub struct OrderedMutexGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    _token: check::Token,
+}
+
+impl<'a, T> OrderedMutexGuard<'a, T> {
+    /// Block on `cv` until notified. The held-rank record stays on this
+    /// thread's stack across the wait: the lock is re-held before this
+    /// returns, and a blocked thread acquires nothing in between.
+    pub fn wait(self, cv: &Condvar) -> OrderedMutexGuard<'a, T> {
+        let OrderedMutexGuard { guard, _token } = self;
+        let guard = cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
+        OrderedMutexGuard { guard, _token }
+    }
+
+    /// Block on `cv` up to `dur`; the bool is true when the wait timed
+    /// out (mirrors `WaitTimeoutResult::timed_out`).
+    pub fn wait_timeout(self, cv: &Condvar, dur: Duration) -> (OrderedMutexGuard<'a, T>, bool) {
+        let OrderedMutexGuard { guard, _token } = self;
+        let (guard, res) = match cv.wait_timeout(guard, dur) {
+            Ok((g, r)) => (g, r),
+            Err(e) => e.into_inner(),
+        };
+        (OrderedMutexGuard { guard, _token }, res.timed_out())
+    }
+}
+
+impl<T> Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedRwLock
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct OrderedRwLock<T> {
+    rank: Rank,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    pub const fn new(rank: Rank, value: T) -> OrderedRwLock<T> {
+        OrderedRwLock { rank, inner: RwLock::new(value) }
+    }
+
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        let token = check::acquire(self.rank);
+        let guard = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+        OrderedReadGuard { guard, _token: token }
+    }
+
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        let token = check::acquire(self.rank);
+        let guard = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+        OrderedWriteGuard { guard, _token: token }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        self.inner.get_mut().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+pub struct OrderedReadGuard<'a, T> {
+    guard: RwLockReadGuard<'a, T>,
+    _token: check::Token,
+}
+
+impl<T> Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+pub struct OrderedWriteGuard<'a, T> {
+    guard: RwLockWriteGuard<'a, T>,
+    _token: check::Token,
+}
+
+impl<T> Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_acquisition_is_fine() {
+        let a = OrderedMutex::new(rank::CLUSTER_NODES, 1);
+        let b = OrderedMutex::new(rank::BLOCK_TABLE, 2);
+        let c = OrderedMutex::new(rank::LEAF, 3);
+        let ga = a.lock();
+        let gb = b.lock();
+        let gc = c.lock();
+        assert_eq!(*ga + *gb + *gc, 6);
+        // Out-of-order guard drops must unwind the held stack correctly.
+        drop(ga);
+        drop(gc);
+        drop(gb);
+        let _again = c.lock();
+    }
+
+    #[test]
+    fn poisoned_lock_recovers() {
+        let m = std::sync::Arc::new(OrderedMutex::new(rank::LEAF, 7u32));
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        // A raw std Mutex would now return Err(PoisonError); the ordered
+        // accessor recovers and hands out the (still valid) value.
+        assert_eq!(*m.lock(), 7);
+        let m3 = std::sync::Arc::new(OrderedRwLock::new(rank::LEAF, 9u32));
+        let m4 = std::sync::Arc::clone(&m3);
+        let _ = std::thread::spawn(move || {
+            let _g = m4.write();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*m3.read(), 9);
+        assert_eq!(*m3.write(), 9);
+    }
+
+    #[test]
+    fn condvar_wait_roundtrip() {
+        use std::sync::Arc;
+        let pair = Arc::new((OrderedMutex::new(rank::LEAF, false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut g = m.lock();
+            while !*g {
+                g = g.wait(cv);
+            }
+            *g
+        });
+        {
+            let (m, cv) = &*pair;
+            *m.lock() = true;
+            cv.notify_all();
+        }
+        assert!(t.join().unwrap());
+        // Timeout path: nobody notifies, the wait must report a timeout.
+        let (m, cv) = &*pair;
+        let g = m.lock();
+        let (_g, timed_out) = g.wait_timeout(cv, Duration::from_millis(5));
+        assert!(timed_out);
+    }
+
+    // The checker itself only exists in debug / lockcheck builds.
+    #[cfg(any(debug_assertions, feature = "lockcheck"))]
+    mod checker {
+        use super::super::*;
+
+        #[test]
+        #[should_panic(expected = "lock-order inversion")]
+        fn rank_inversion_panics() {
+            let hi = OrderedMutex::new(rank::SERVING_DEPLOYED, ());
+            let lo = OrderedMutex::new(rank::CLUSTER_NODES, ());
+            let _g = hi.lock();
+            // Deliberately inverted: serving (60) is held, cluster (12)
+            // acquired — the AB/BA deadlock shape the checker exists for.
+            let _g2 = lo.lock();
+        }
+
+        #[test]
+        #[should_panic(expected = "lock-order inversion")]
+        fn rwlock_inversion_panics() {
+            let hi = OrderedRwLock::new(rank::BLOCK_STORE, ());
+            let lo = OrderedRwLock::new(rank::CLUSTER_SLOT_SIGNAL, ());
+            let _g = hi.read();
+            let _g2 = lo.write();
+        }
+
+        #[test]
+        #[should_panic(expected = "same-rank re-acquisition")]
+        fn same_lock_reacquire_panics() {
+            const R: Rank = Rank::new(33, "test.reacquire");
+            let m = OrderedRwLock::new(R, ());
+            let _a = m.read();
+            let _b = m.read();
+        }
+
+        #[test]
+        #[should_panic(expected = "same-rank lock cycle")]
+        fn same_rank_cycle_panics() {
+            // Unique names: the edge graph is global, shared across tests.
+            const A: Rank = Rank::new(34, "test.cycle_a");
+            const B: Rank = Rank::new(34, "test.cycle_b");
+            let a = OrderedMutex::new(A, ());
+            let b = OrderedMutex::new(B, ());
+            {
+                let _ga = a.lock();
+                let _gb = b.lock(); // records edge a → b
+            }
+            let _gb = b.lock();
+            let _ga = a.lock(); // b → a: cycle
+        }
+
+        #[test]
+        fn unwind_pops_held_stack() {
+            let hi = OrderedMutex::new(rank::KERNEL_PENDING, ());
+            let lo = OrderedMutex::new(rank::COMPLETION_HUB, ());
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _g = hi.lock();
+                let _g2 = lo.lock(); // panics: inversion
+            }));
+            assert!(r.is_err());
+            // The unwind dropped hi's guard; this thread's stack must be
+            // clean again or this (legal) acquisition would false-panic.
+            let _g = lo.lock();
+            let _g2 = hi.lock();
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Concurrency-conformance regression tests: the task-panic →
+//! poison-recovery path, concurrent histogram consistency (the test the
+//! nightly ThreadSanitizer job drives), and shutdown-time block-ledger
+//! quiescence. These pin the behaviours the `util::sync` primitives and
+//! the `BlockLedger` exist to guarantee.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use bigdl::bigdl::metrics::LatencyHistogram;
+use bigdl::sparklet::SparkletContext;
+
+/// A panic inside a task closure must be caught, retried, and — because
+/// every lock in the runtime recovers from poison instead of propagating
+/// it — the SAME cluster must keep executing jobs afterwards. Before the
+/// ordered primitives, a poisoned lock turned one task panic into
+/// `.unwrap()` panics on every thread that touched the lock next.
+#[test]
+fn task_panic_is_retried_and_cluster_survives() {
+    static PANIC_ONCE: AtomicBool = AtomicBool::new(true);
+
+    let ctx = SparkletContext::local(3);
+    let rdd = ctx.parallelize((0..60).collect::<Vec<i64>>(), 6);
+    let out = rdd
+        .map(|x| {
+            if PANIC_ONCE.swap(false, Ordering::SeqCst) {
+                panic!("injected task panic (conformance test)");
+            }
+            x * 2
+        })
+        .collect()
+        .expect("panicked task must be retried, not abort the job");
+    assert_eq!(out, (0..60).map(|x| x * 2).collect::<Vec<i64>>());
+    let sched = ctx.scheduler().stats.snapshot();
+    assert!(sched.task_retries >= 1, "the injected panic must count as a retry");
+
+    // The same cluster keeps working: no lock was left poisoned.
+    for _ in 0..3 {
+        assert_eq!(rdd.count().expect("post-panic job on same cluster"), 60);
+    }
+
+    // Shutdown runs the block-ledger quiesce check (no staged or aborted
+    // round may still have blocks resident).
+    ctx.shutdown();
+}
+
+/// N recorder threads hammer the lock-free histogram while a reader takes
+/// quantile snapshots. In-flight snapshots must stay within the recorded
+/// value range; after joining, quantiles must be monotone in q and the
+/// max quantile must never under-state the largest recorded sample. The
+/// nightly TSan job runs this test to prove the atomics are race-free.
+#[test]
+fn latency_histogram_concurrent_recording_is_consistent() {
+    const RECORDERS: usize = 4;
+    const PER_THREAD: u64 = 5_000;
+    // Five fixed values, equally weighted → known quantile layout.
+    const SAMPLES_MS: [f64; 5] = [0.05, 0.5, 1.0, 5.0, 50.0];
+    const TOTAL: u64 = RECORDERS as u64 * PER_THREAD;
+
+    let hist = Arc::new(LatencyHistogram::default());
+    let done = Arc::new(AtomicBool::new(false));
+
+    let recorders: Vec<_> = (0..RECORDERS)
+        .map(|t| {
+            let hist = Arc::clone(&hist);
+            thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    // Offset per thread so values interleave across buckets.
+                    hist.record_ms(SAMPLES_MS[(i as usize + t) % SAMPLES_MS.len()]);
+                }
+            })
+        })
+        .collect();
+
+    let reader = {
+        let hist = Arc::clone(&hist);
+        let done = Arc::clone(&done);
+        thread::spawn(move || {
+            let mut last_count = 0u64;
+            let mut snapshots = 0u64;
+            while !done.load(Ordering::Acquire) {
+                let c = hist.count();
+                assert!(c >= last_count, "count went backwards: {last_count} -> {c}");
+                assert!(c <= TOTAL, "count over-shot the recorded total");
+                last_count = c;
+                for q in [0.5, 0.99, 1.0] {
+                    let v = hist.quantile_ms(q);
+                    // In-flight bound: every recorded value is in
+                    // [0.05, 50]; upper-edge bucket bias is ≤ +15%, so no
+                    // quantile may leave [0, 57.5].
+                    assert!(
+                        (0.0..=57.5).contains(&v),
+                        "quantile_ms({q}) = {v} outside recorded range mid-run"
+                    );
+                }
+                snapshots += 1;
+            }
+            snapshots
+        })
+    };
+
+    for r in recorders {
+        r.join().expect("recorder thread");
+    }
+    done.store(true, Ordering::Release);
+    let snapshots = reader.join().expect("reader thread");
+    assert!(snapshots > 0, "reader must have observed the histogram mid-run");
+
+    // Quiescent histogram: exact count, monotone quantiles, and the tail
+    // never under-states the max recorded sample (the SLO property).
+    assert_eq!(hist.count(), TOTAL);
+    let p50 = hist.quantile_ms(0.50);
+    let p99 = hist.quantile_ms(0.99);
+    let p100 = hist.quantile_ms(1.0);
+    assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+    assert!(p99 <= p100, "p99 {p99} > p100 {p100}");
+    // Equal weights: rank(p50) lands in the 1.0 ms cohort, rank(p99) and
+    // the max in the 50 ms cohort.
+    assert!((1.0..=1.3).contains(&p50), "p50 {p50}");
+    assert!((50.0..=57.5).contains(&p99), "p99 {p99}");
+    assert!(p100 >= 50.0, "p100 {p100} under-states the 50 ms max sample");
+}
+
+/// Many concurrent jobs on one context, then shutdown: the ledger quiesce
+/// check must hold even when block puts/removes raced across worker
+/// threads for the whole run.
+#[test]
+fn shutdown_quiesces_after_concurrent_jobs() {
+    let ctx = SparkletContext::local(4);
+    let total = Arc::new(AtomicU64::new(0));
+    thread::scope(|s| {
+        for j in 0..4u64 {
+            let ctx = ctx.clone();
+            let total = Arc::clone(&total);
+            s.spawn(move || {
+                let rdd = ctx.parallelize((0..200).collect::<Vec<i64>>(), 8);
+                let sum: i64 = rdd
+                    .map(move |x| x + j as i64)
+                    .reduce(|a, b| a + b)
+                    .expect("concurrent job")
+                    .expect("non-empty rdd");
+                total.fetch_add(sum as u64, Ordering::Relaxed);
+            });
+        }
+    });
+    let expect: u64 = (0..4u64)
+        .map(|j| (0..200i64).map(|x| x + j as i64).sum::<i64>() as u64)
+        .sum();
+    assert_eq!(total.load(Ordering::Relaxed), expect);
+    ctx.shutdown();
+}

@@ -184,6 +184,8 @@ fn failed_reshard_rolls_back_fully_then_recommits() {
     assert_eq!(pm.owners(), owners0, "rollback must leave the old placement in force");
     assert_eq!(pm.weights_broadcast().id, round0, "rollback must keep the old weight round");
     assert!(pm.needs_reshard(), "the epoch gap must persist after rollback");
+    // The block ledger agrees: the aborted round left nothing resident.
+    ctx.blocks().assert_quiesced();
 
     ctx.set_failure_policy(FailurePolicy::default());
     let report = pm.reshard().unwrap();

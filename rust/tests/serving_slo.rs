@@ -43,7 +43,7 @@ fn random_requests(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
 /// — and the deprecated `ServingConfig` shim must route through the same
 /// strategy machinery.
 #[test]
-#[allow(deprecated)]
+#[allow(deprecated)] // lint:allow(allow-deprecated): shim compat test must use the shim
 fn fixed_batching_matches_legacy_config_path() {
     use bigdl::bigdl::serving::ServingConfig;
 

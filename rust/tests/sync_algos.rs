@@ -174,6 +174,9 @@ fn ring_round_rolls_back_on_injected_failure() {
         baseline,
         "failed ring round must leave no partials/staged blocks"
     );
+    // The block ledger agrees: no staged or aborted round has blocks
+    // resident after the rollback.
+    ctx.blocks().assert_quiesced();
 
     // The inflight slot was released and the store is clean: a fresh
     // round commits normally.

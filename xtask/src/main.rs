@@ -1,0 +1,593 @@
+//! Repo conformance lint: `cargo xtask lint`.
+//!
+//! A deliberately dependency-free *lexical* scanner (no `syn`, no proc
+//! macros): it strips comments and string literals, then matches a small
+//! set of token patterns. That keeps it fast, runnable on any toolchain,
+//! and immune to the "lint crate needs a newer compiler than the tree"
+//! failure mode — at the cost of being approximate. The rules are chosen
+//! so the approximation is sound for this codebase (see the fixture
+//! tests at the bottom, which pin both the hits and the non-hits).
+//!
+//! Rules:
+//!
+//! 1. `raw-lock` — the identifiers `Mutex` / `RwLock` may not appear
+//!    outside `rust/src/util/sync.rs`. All lock acquisition must go
+//!    through `OrderedMutex` / `OrderedRwLock` so the debug-build
+//!    lock-order checker sees every edge. (`OrderedMutex` itself does
+//!    not match: the identifier boundary check requires the character
+//!    before `Mutex` to not be part of an identifier.)
+//! 2. `lock-unwrap` — `.lock().unwrap()` is banned everywhere. The
+//!    ordered primitives recover from poison instead of propagating it;
+//!    a raw `.unwrap()` on a lock result turns one task panic into a
+//!    cascade across every thread that touches the lock afterwards.
+//! 3. `task-determinism` — `Instant::now`, `SystemTime::now` and
+//!    `thread_rng` are banned inside task closures (closures whose
+//!    first parameter is literally `tc`, the `TaskContext` binding used
+//!    across the codebase). Tasks must draw time/randomness from the
+//!    `TaskContext` so replays and retries are deterministic.
+//! 4. `allow-deprecated` — `#[allow(deprecated)]` is banned; deprecated
+//!    shims must be migrated, not silenced.
+//! 5. `bare-unwrap` — `.unwrap()` is banned in the scheduler and
+//!    cluster (the failure-handling core); use `.expect("invariant")`
+//!    so a violated invariant names itself in the panic message.
+//!
+//! Waivers: any *raw* source line containing the marker `lint:allow`
+//! (conventionally `// lint:allow(<rule>): <reason>`) is exempt from
+//! every rule on that line. Waivers are greppable, so the exception
+//! budget stays visible.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") | None => {}
+        Some(other) => {
+            eprintln!("unknown xtask command `{other}` (expected: lint)");
+            return ExitCode::FAILURE;
+        }
+    }
+    // xtask lives at <repo>/xtask; the tree under lint is <repo>/rust.
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask crate sits one level below the workspace root")
+        .to_path_buf();
+    let violations = lint_tree(&repo_root);
+    if violations.is_empty() {
+        println!("xtask lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn lint_tree(repo_root: &Path) -> Vec<Violation> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs_files(&repo_root.join(sub), &mut files);
+    }
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                violations.push(Violation {
+                    file: path.display().to_string(),
+                    line: 0,
+                    rule: "io",
+                    msg: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        let rel = path
+            .strip_prefix(repo_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        violations.extend(lint_file(&rel, &text));
+    }
+    violations
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return, // absent subtree (e.g. no benches/) is fine
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Lint one file. `rel` is the repo-relative path with `/` separators —
+/// rules 1 and 5 are scoped by path.
+fn lint_file(rel: &str, raw: &str) -> Vec<Violation> {
+    let stripped = strip_comments_and_strings(raw);
+    let raw_lines: Vec<&str> = raw.lines().collect();
+    let waived = |line: usize| {
+        raw_lines
+            .get(line - 1)
+            .is_some_and(|l| l.contains("lint:allow"))
+    };
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        if !waived(line) {
+            out.push(Violation { file: rel.to_string(), line, rule, msg });
+        }
+    };
+
+    let in_sync_rs = rel == "rust/src/util/sync.rs";
+    let unwrap_audited =
+        rel == "rust/src/sparklet/scheduler.rs" || rel == "rust/src/sparklet/cluster.rs";
+
+    for (idx, line) in stripped.lines().enumerate() {
+        let lineno = idx + 1;
+        if !in_sync_rs {
+            for ident in ["Mutex", "RwLock"] {
+                if contains_identifier(line, ident) {
+                    push(
+                        lineno,
+                        "raw-lock",
+                        format!(
+                            "raw `{ident}` outside util/sync.rs — use Ordered{ident} \
+                             so the lock-order checker sees this site"
+                        ),
+                    );
+                }
+            }
+        }
+        if line.contains(".lock().unwrap()") {
+            push(
+                lineno,
+                "lock-unwrap",
+                "`.lock().unwrap()` turns one poisoned lock into a panic cascade; \
+                 OrderedMutex::lock recovers from poison"
+                    .to_string(),
+            );
+        }
+        if line.contains("#[allow(deprecated)]") {
+            push(
+                lineno,
+                "allow-deprecated",
+                "`#[allow(deprecated)]` silences a migration instead of doing it".to_string(),
+            );
+        }
+        if unwrap_audited && line.contains(".unwrap()") {
+            push(
+                lineno,
+                "bare-unwrap",
+                "bare `.unwrap()` in the scheduler/cluster core — use \
+                 `.expect(\"<invariant>\")` so the panic names what broke"
+                    .to_string(),
+            );
+        }
+    }
+
+    for (lineno, token) in determinism_in_task_closures(&stripped) {
+        if !waived(lineno) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "task-determinism",
+                msg: format!(
+                    "`{token}` inside a task closure — tasks must take time/randomness \
+                     from the TaskContext so retries and replays are deterministic"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// True when `ident` appears in `line` as a standalone identifier (not a
+/// suffix of a longer one like `OrderedMutex`, and not a prefix either).
+fn contains_identifier(line: &str, ident: &str) -> bool {
+    let bytes = line.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(ident) {
+        let start = from + pos;
+        let end = start + ident.len();
+        let before_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let after_ok = end == bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// Find forbidden wall-clock / RNG tokens lexically inside closures whose
+/// first parameter is `tc` (the TaskContext binding convention). Returns
+/// (line, token) pairs. Works on stripped source: tracks brace depth, and
+/// treats `|tc|` / `|tc,` / `|tc:` as the start of a task closure whose
+/// body is the `{ ... }` block opened next at the same nesting level.
+fn determinism_in_task_closures(stripped: &str) -> Vec<(usize, &'static str)> {
+    const TOKENS: [&str; 3] = ["Instant::now", "SystemTime::now", "thread_rng"];
+    let bytes = stripped.as_bytes();
+    let mut hits = Vec::new();
+    let mut line = 1usize;
+    let mut depth = 0i32;
+    // Stack of brace depths at which a task-closure body opened; while
+    // non-empty we are (lexically) inside at least one task closure.
+    let mut task_body_depths: Vec<i32> = Vec::new();
+    // Set when `|tc...|` was seen and we are waiting for its body `{`.
+    let mut pending_body = false;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        match b {
+            b'\n' => line += 1,
+            b'{' => {
+                depth += 1;
+                if pending_body {
+                    task_body_depths.push(depth);
+                    pending_body = false;
+                }
+            }
+            b'}' => {
+                if task_body_depths.last() == Some(&depth) {
+                    task_body_depths.pop();
+                }
+                depth -= 1;
+            }
+            b'|' => {
+                // `|tc` followed by `|`, `,` or `:` — a closure binding
+                // the TaskContext. (`||` and `a | b` don't match.)
+                if bytes[i..].starts_with(b"|tc")
+                    && matches!(bytes.get(i + 3), Some(b'|' | b',' | b':'))
+                {
+                    pending_body = true;
+                }
+            }
+            // A `;` before the body `{` means the closure was braceless
+            // (e.g. `.map(|tc| tc.node);`) — nothing to track.
+            b';' => pending_body = false,
+            _ => {
+                if !task_body_depths.is_empty() {
+                    for tok in TOKENS {
+                        if bytes[i..].starts_with(tok.as_bytes())
+                            && (i == 0 || !is_ident_byte(bytes[i - 1]))
+                        {
+                            hits.push((line, tok));
+                            i += tok.len() - 1; // skip; outer loop adds 1
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    hits
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Replace the contents of comments, string/char literals and raw strings
+/// with spaces, preserving newlines so line numbers survive. This is what
+/// makes the lexical rules sound: `// Mutex` and `"Mutex"` never match.
+fn strip_comments_and_strings(src: &str) -> String {
+    let bytes = src.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0usize;
+    let blank = |out: &mut Vec<u8>, bytes: &[u8], from: usize, to: usize| {
+        for &b in &bytes[from..to] {
+            out.push(if b == b'\n' { b'\n' } else { b' ' });
+        }
+    };
+    while i < bytes.len() {
+        let b = bytes[i];
+        // Line comment.
+        if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            let end = src[i..].find('\n').map_or(bytes.len(), |p| i + p);
+            blank(&mut out, bytes, i, end);
+            i = end;
+            continue;
+        }
+        // Block comment (nestable in Rust).
+        if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < bytes.len() && depth > 0 {
+                if bytes[j] == b'/' && bytes.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if bytes[j] == b'*' && bytes.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, bytes, i, j);
+            i = j;
+            continue;
+        }
+        // Raw string: r"..." / r#"..."# / br#"..."# etc.
+        if b == b'r' || (b == b'b' && bytes.get(i + 1) == Some(&b'r')) {
+            let r_at = if b == b'r' { i } else { i + 1 };
+            // Must be a fresh token, not the tail of an identifier.
+            let fresh = i == 0 || !is_ident_byte(bytes[i - 1]);
+            let mut j = r_at + 1;
+            while fresh && bytes.get(j) == Some(&b'#') {
+                j += 1;
+            }
+            if fresh && bytes.get(j) == Some(&b'"') {
+                let hashes = j - (r_at + 1);
+                let close = format!("\"{}", "#".repeat(hashes));
+                let body_start = j + 1;
+                let end = src[body_start..]
+                    .find(&close)
+                    .map_or(bytes.len(), |p| body_start + p + close.len());
+                // Keep the delimiters visible, blank the contents.
+                for &d in &bytes[i..body_start] {
+                    out.push(d);
+                }
+                blank(&mut out, bytes, body_start, end);
+                i = end;
+                continue;
+            }
+        }
+        // Ordinary string (or byte string — the b was pushed already if
+        // it wasn't part of a raw string).
+        if b == b'"' {
+            let mut j = i + 1;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'\\' => j += 2,
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            out.push(b'"');
+            blank(&mut out, bytes, i + 1, j.saturating_sub(1).max(i + 1));
+            if j > i + 1 {
+                out.push(b'"');
+            }
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime: 'x' or '\n' is a literal; 'static is
+        // a lifetime and must be left alone (it has no closing quote).
+        if b == b'\'' {
+            let is_escape = bytes.get(i + 1) == Some(&b'\\');
+            let closes_after_one =
+                bytes.get(i + 2) == Some(&b'\'') && bytes.get(i + 1) != Some(&b'\\');
+            if is_escape {
+                // '\x' .. find closing quote
+                let mut j = i + 2;
+                while j < bytes.len() && bytes[j] != b'\'' {
+                    j += 1;
+                }
+                let end = (j + 1).min(bytes.len());
+                out.push(b'\'');
+                blank(&mut out, bytes, i + 1, end.saturating_sub(1));
+                out.push(b'\'');
+                i = end;
+                continue;
+            } else if closes_after_one {
+                out.extend_from_slice(b"' '");
+                i += 3;
+                continue;
+            }
+            // Lifetime — fall through, push the quote as-is.
+        }
+        out.push(b);
+        i += 1;
+    }
+    String::from_utf8(out).expect("stripping only substitutes ASCII spaces")
+}
+
+// ---------------------------------------------------------------------------
+// Fixture tests: prove the lint FAILS on seeded violations and PASSES on the
+// idioms the tree actually uses. CI runs these via `cargo test -p xtask`.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_file(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn raw_mutex_outside_sync_rs_is_flagged() {
+        let src = "use std::sync::Mutex;\nstatic S: Mutex<u32> = Mutex::new(0);\n";
+        let got = rules("rust/src/sparklet/cluster.rs", src);
+        assert_eq!(got, ["raw-lock", "raw-lock"]);
+    }
+
+    #[test]
+    fn raw_rwlock_is_flagged_but_ordered_variants_pass() {
+        assert_eq!(rules("rust/src/a.rs", "let x: RwLock<u8>;\n"), ["raw-lock"]);
+        let clean = "use crate::util::sync::{OrderedMutex, OrderedRwLock};\n\
+                     let m = OrderedMutex::new(rank::LEAF, 0);\n";
+        assert!(rules("rust/src/a.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn sync_rs_itself_may_use_raw_locks() {
+        let src = "use std::sync::{Mutex, RwLock};\n";
+        assert!(rules("rust/src/util/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mutex_in_comments_and_strings_is_ignored() {
+        let src = "// a Mutex in prose\nlet s = \"Mutex\"; /* RwLock */\n";
+        assert!(rules("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_is_flagged() {
+        let src = "let g = self.inner.lock().unwrap();\n";
+        assert_eq!(rules("rust/src/a.rs", src), ["lock-unwrap"]);
+    }
+
+    #[test]
+    fn allow_deprecated_is_flagged_unless_commented() {
+        assert_eq!(rules("rust/src/a.rs", "#[allow(deprecated)]\nfn f() {}\n"),
+                   ["allow-deprecated"]);
+        assert!(rules("rust/src/a.rs", "// #[allow(deprecated)]\n").is_empty());
+    }
+
+    #[test]
+    fn bare_unwrap_only_audited_in_core_files() {
+        let src = "let v = map.get(&k).unwrap();\n";
+        assert_eq!(rules("rust/src/sparklet/scheduler.rs", src), ["bare-unwrap"]);
+        assert_eq!(rules("rust/src/sparklet/cluster.rs", src), ["bare-unwrap"]);
+        assert!(rules("rust/src/bigdl/optimizer.rs", src).is_empty());
+        let expect = "let v = map.get(&k).expect(\"slot registered at join\");\n";
+        assert!(rules("rust/src/sparklet/scheduler.rs", expect).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_inside_task_closure_is_flagged() {
+        let src = "\
+fn driver() {
+    let t = Instant::now(); // driver side: fine
+    let task = move |tc: &TaskContext| {
+        let t0 = Instant::now();
+        let mut rng = thread_rng();
+        Ok(())
+    };
+}
+";
+        let got = lint_file("rust/src/a.rs", src);
+        let lines: Vec<_> = got.iter().map(|v| (v.rule, v.line)).collect();
+        assert_eq!(lines, [("task-determinism", 4), ("task-determinism", 5)]);
+    }
+
+    #[test]
+    fn task_closure_detection_handles_bare_and_two_param_forms() {
+        let src = "\
+let a = Arc::new(move |tc| {
+    let now = SystemTime::now();
+});
+let b = move |tc: &TaskContext, samples: &[Sample]| {
+    let t = Instant::now();
+};
+";
+        let got = rules("rust/src/a.rs", src);
+        assert_eq!(got, ["task-determinism", "task-determinism"]);
+    }
+
+    #[test]
+    fn wall_clock_after_closure_body_closes_is_clean() {
+        let src = "\
+fn f() {
+    run(move |tc| {
+        work(tc);
+    });
+    let t = Instant::now();
+}
+";
+        assert!(rules("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_marker_exempts_the_line() {
+        let src = "\
+let task = move |tc: &TaskContext| {
+    let t0 = Instant::now(); // lint:allow(task-determinism): metering only
+    let t1 = Instant::now();
+};
+";
+        let got = lint_file("rust/src/a.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 3);
+    }
+
+    #[test]
+    fn or_patterns_and_closures_without_tc_do_not_trigger() {
+        let src = "\
+let f = |x| x + 1;
+let y = a | b;
+match v { 1 | 2 => {} _ => {} }
+let t = Instant::now();
+";
+        assert!(rules("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn braceless_tc_closure_does_not_poison_later_blocks() {
+        let src = "\
+fn f(tasks: &[TaskContext]) {
+    let ids: Vec<_> = tasks.iter().map(|tc| tc.node).collect();
+    if !ids.is_empty() {
+        let t = Instant::now();
+    }
+}
+";
+        assert!(rules("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_stripped_safely() {
+        let src = "let s = r#\"Mutex .lock().unwrap()\"#;\nlet c = '\"'; let l: &'static str = \"RwLock\";\n";
+        assert!(rules("rust/src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stripping_preserves_line_numbers() {
+        let src = "/* multi\nline\ncomment */\nlet m: Mutex<u8>;\n";
+        let got = lint_file("rust/src/a.rs", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].line, 4);
+    }
+
+    /// The real tree must be clean — this is the same check CI runs via
+    /// `cargo xtask lint`, embedded as a test so `cargo test` alone
+    /// catches regressions too.
+    #[test]
+    fn repo_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("workspace root")
+            .to_path_buf();
+        let violations = lint_tree(&root);
+        assert!(
+            violations.is_empty(),
+            "lint violations in tree:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
